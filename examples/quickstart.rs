@@ -1,0 +1,96 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! 1. Cost a network under a dataflow with the analytic accelerator model.
+//! 2. Run a (small) EDCompress search with the surrogate oracle.
+//! 3. If artifacts are built, execute the L1 Pallas kernel through PJRT.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use edcompress::envs::{CompressionEnv, EnvConfig};
+use edcompress::coordinator::{Coordinator, SearchConfig};
+use edcompress::prelude::*;
+use edcompress::rl::sac::SacConfig;
+
+fn main() -> anyhow::Result<()> {
+    edcompress::util::logging::init();
+
+    // --- 1. Cost model: LeNet-5 under the paper's four dataflows ---
+    let net = model::zoo::lenet5();
+    let cfg = EnergyConfig::default();
+    let state = CompressionState::uniform(&net, 8.0, 1.0);
+    println!("Uncompressed LeNet-5 (8-bit weights, no pruning):");
+    for df in Dataflow::paper_four() {
+        let rep = energy::evaluate(&net, &state, df, &cfg);
+        println!(
+            "  {:<6} {:>8.3} uJ  ({:>5.1}% data movement)  {:>7.3} mm2",
+            df.label(),
+            rep.total_energy_uj(),
+            100.0 * rep.movement_energy() / rep.total_energy(),
+            rep.total_area_mm2()
+        );
+    }
+
+    // --- 2. A small EDCompress search (surrogate oracle) ---
+    let oracle = SurrogateOracle::new(&net, 0);
+    let env = CompressionEnv::new(
+        net,
+        Dataflow::FXFY,
+        Box::new(oracle),
+        EnvConfig::default(),
+        cfg,
+    );
+    let search = SearchConfig {
+        episodes: 20,
+        sac: SacConfig {
+            lr: 3e-3,
+            alpha_lr: 3e-3,
+            updates_per_step: 4,
+            warmup_steps: 96,
+            ..SacConfig::default()
+        },
+        verbose: false,
+    };
+    let outcome = Coordinator::new(env, search).run();
+    println!(
+        "\nEDCompress on FX:FY after {} episodes: {:.1}x energy, {:.1}x area",
+        outcome.episodes.len(),
+        outcome.energy_improvement(),
+        outcome.area_improvement()
+    );
+    if let Some(b) = &outcome.best {
+        println!(
+            "  best point: Q = {:?} bits, P = {:?}%, accuracy {:.3}",
+            b.state.all_bits(),
+            b.state.p.iter().map(|p| (p * 100.0).round() as i64).collect::<Vec<_>>(),
+            b.accuracy
+        );
+    }
+
+    // --- 3. PJRT: run the L1 Pallas fake-quant kernel from Rust ---
+    let path = edcompress::runtime::artifacts_dir().join("kernel_fq.hlo.txt");
+    if path.exists() {
+        use edcompress::runtime::{literal, Runtime};
+        use edcompress::tensor::Tensor;
+        let rt = Runtime::cpu()?;
+        let art = rt.load_artifact(&path)?;
+        let w = Tensor::from_vec(&[32, 128], (0..32 * 128).map(|i| (i as f32).sin()).collect());
+        let outs = art.run(&[
+            literal::tensor_to_literal(&w)?,
+            literal::scalar_literal(7.0), // 4-bit grid
+            literal::scalar_literal(0.2), // prune |w| < 0.2
+        ])?;
+        let q = literal::literal_to_tensor(&outs[0])?;
+        let distinct: std::collections::BTreeSet<i64> =
+            q.data().iter().map(|&v| (v * 1e4) as i64).collect();
+        println!(
+            "\nPJRT ({}) ran the Pallas fake-quant kernel: {} distinct levels (<= 15 + 0 expected)",
+            rt.platform(),
+            distinct.len()
+        );
+    } else {
+        println!("\n(artifacts missing — run `make artifacts` to exercise the PJRT path)");
+    }
+    Ok(())
+}

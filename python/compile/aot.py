@@ -1,0 +1,93 @@
+"""AOT pipeline: lower every network's train/infer graph to HLO **text**.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--nets lenet5,...]
+
+Outputs per network NAME:
+    NAME_infer.hlo.txt   NAME_train.hlo.txt   NAME_meta.json
+plus kernel_fq.hlo.txt (standalone fake-quant kernel, used by the
+runtime round-trip integration test).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(fn, args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def emit_kernel_demo(out_dir: str) -> None:
+    """Standalone Pallas fake-quant artifact for runtime smoke tests."""
+    from .kernels.fake_quant import fake_quant_pallas
+
+    spec = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+    s = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def fn(w, lvl, thresh):
+        return (fake_quant_pallas(w, lvl, thresh),)
+
+    emit(fn, (spec, s, s), os.path.join(out_dir, "kernel_fq.hlo.txt"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--nets",
+        default="lenet5,vgg16_cifar,mobilenet_cifar",
+        help="comma-separated subset of networks",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    emit_kernel_demo(args.out_dir)
+
+    for name in args.nets.split(","):
+        name = name.strip()
+        mod = model_lib.NETWORKS[name]
+        infer = model_lib.make_infer(mod)
+        train = model_lib.make_train_step(mod)
+        emit(
+            infer,
+            model_lib.example_args(name, train=False),
+            os.path.join(args.out_dir, f"{name}_infer.hlo.txt"),
+        )
+        emit(
+            train,
+            model_lib.example_args(name, train=True),
+            os.path.join(args.out_dir, f"{name}_train.hlo.txt"),
+        )
+        with open(os.path.join(args.out_dir, f"{name}_meta.json"), "w") as f:
+            json.dump(model_lib.meta(name), f, indent=1, sort_keys=True)
+        print(f"wrote {name}_meta.json")
+
+
+if __name__ == "__main__":
+    main()

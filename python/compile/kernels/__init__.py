@@ -1,0 +1,6 @@
+"""L1 kernels: Pallas implementations + the pure-jnp reference oracle."""
+
+from . import ref  # noqa: F401
+from .fake_quant import fake_quant_pallas  # noqa: F401
+from .quant_conv2d import quant_conv2d_pallas  # noqa: F401
+from .quant_matmul import quant_matmul_pallas  # noqa: F401

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: fused prune-mask + symmetric fake-quantization.
+
+The elementwise hot path of every compressed layer. TPU-shaped even under
+``interpret=True``: the tensor is flattened and tiled into (8, 128)
+VREG-aligned blocks (lane dim 128, sublane 8), the compression parameters
+(quantization levels, prune threshold, max-abs scale) ride along as tiny
+operands broadcast to every grid step.
+
+The global max-abs is computed *outside* the kernel (a cheap jnp reduce
+that XLA fuses) because a grid-tiled kernel cannot see the whole tensor;
+the kernel is the per-element quantize/mask work.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VREG-aligned tile: 8 sublanes x 128 lanes.
+BLOCK_ROWS = 8
+BLOCK_COLS = 128
+BLOCK = BLOCK_ROWS * BLOCK_COLS
+
+
+def _kernel(w_ref, scale_ref, o_ref):
+    """One (8, 128) tile: mask, scale to the grid, round, rescale.
+
+    scale_ref holds [max_abs, levels, thresh] broadcast to each step.
+    """
+    w = w_ref[...]
+    m = scale_ref[0]
+    lvl = scale_ref[1]
+    thresh = scale_ref[2]
+    mask = (jnp.abs(w) >= thresh).astype(w.dtype)
+    wm = w * mask
+    scaled = jnp.clip(jnp.round(wm / m * lvl), -lvl, lvl)
+    o_ref[...] = scaled / lvl * m
+
+
+def fake_quant_pallas(w: jnp.ndarray, lvl: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    """Pallas-accelerated fake-quant of an arbitrary-shape tensor.
+
+    Matches ``ref.fake_quant`` bit-for-bit (same grid, same clipping).
+    """
+    orig_shape = w.shape
+    n = w.size
+    flat = w.reshape(-1)
+    # Pad to a whole number of (8,128) tiles.
+    padded = ((n + BLOCK - 1) // BLOCK) * BLOCK
+    if padded != n:
+        flat = jnp.concatenate([flat, jnp.zeros(padded - n, w.dtype)])
+    tiles = padded // BLOCK
+    grid_w = flat.reshape(tiles * BLOCK_ROWS, BLOCK_COLS)
+
+    masked = flat[:n] * (jnp.abs(flat[:n]) >= thresh)
+    m = jnp.maximum(jnp.max(jnp.abs(masked)), 1e-12)
+    scale = jnp.stack([m, lvl, thresh]).astype(w.dtype)
+
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(grid_w.shape, w.dtype),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+            # The 3-vector of scalars is replicated to every grid step.
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        interpret=True,
+    )(grid_w, scale)
+    return out.reshape(-1)[:n].reshape(orig_shape)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: VALID conv2d with in-kernel weight compression.
+
+The conv hot path (LeNet-5's conv2 is 70% of its MACs). GPU conv kernels
+tile over threadblocks of output pixels; the TPU re-think (DESIGN.md
+Hardware-Adaptation) lowers the filter taps as FH*FW shifted **matmuls**:
+for each tap (fy, fx) the [H'*W', CI] input slab multiplies the [CI, CO]
+weight slice on the MXU, accumulating in VMEM. The grid walks the batch;
+each program holds one image slab + the whole (compressed) filter in
+VMEM — for the paper's layer sizes that is well under the ~16 MiB budget.
+
+The tap loop is a *Python* loop over static FH, FW, so it unrolls at
+trace time into FH*FW dots — exactly the unrolled-loop structure the
+paper's Algorithm 1 dataflow discussion is about.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(fh: int, fw: int, ho: int, wo: int):
+    def kernel(x_ref, w_ref, scale_ref, o_ref):
+        m = scale_ref[0]
+        lvl = scale_ref[1]
+        thresh = scale_ref[2]
+        w = w_ref[...]  # [FH, FW, CI, CO]
+        mask = (jnp.abs(w) >= thresh).astype(w.dtype)
+        wm = w * mask
+        wq = jnp.clip(jnp.round(wm / m * lvl), -lvl, lvl) / lvl * m
+
+        x = x_ref[...]  # [1, H, W, CI]
+        ci = x.shape[-1]
+        co = wq.shape[-1]
+        acc = jnp.zeros((ho * wo, co), jnp.float32)
+        for fy in range(fh):  # static unroll: FH*FW MXU dots
+            for fx in range(fw):
+                slab = x[0, fy : fy + ho, fx : fx + wo, :].reshape(ho * wo, ci)
+                acc += jnp.dot(
+                    slab, wq[fy, fx], preferred_element_type=jnp.float32
+                )
+        o_ref[...] = acc.reshape(1, ho, wo, co)
+
+    return kernel
+
+
+def quant_conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, lvl, thresh) -> jnp.ndarray:
+    """Fused mask+quant+conv2d (VALID, stride 1).
+
+    x: [B, H, W, CI] NHWC; w: [FH, FW, CI, CO] HWIO -> [B, H', W', CO].
+    """
+    b, h, wdim, ci = x.shape
+    fh, fw, ci2, co = w.shape
+    assert ci == ci2, f"channel mismatch {ci} vs {ci2}"
+    ho, wo = h - fh + 1, wdim - fw + 1
+
+    masked = w * (jnp.abs(w) >= thresh)
+    mx = jnp.maximum(jnp.max(jnp.abs(masked)), 1e-12)
+    scale = jnp.stack([mx, lvl, thresh]).astype(x.dtype)
+
+    return pl.pallas_call(
+        _make_kernel(fh, fw, ho, wo),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, co), jnp.float32),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, wdim, ci), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((fh, fw, ci, co), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, co), lambda i: (i, 0, 0, 0)),
+        interpret=True,
+    )(x, w, scale)

@@ -1,0 +1,111 @@
+"""Pure-jnp reference oracle for every L1 Pallas kernel.
+
+These are the ground truth the pytest + hypothesis suite checks the
+kernels against (`python/tests/test_kernels.py`), and the math the Rust
+cost/compression code mirrors (`rust/src/compress/quant.rs` pins the same
+quantization grid).
+
+Quantization scheme (symmetric uniform, matching the paper's q-bit integer
+weights): with per-tensor max-abs ``m`` and ``L = 2^(q-1) - 1`` levels,
+
+    fq(w) = round(clip(w, -m, m) / m * L) / L * m
+
+Pruning (paper 3.1): magnitude threshold mask ``|w| >= t``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def levels(bits: int) -> float:
+    """Positive quantization levels for a bit depth (>= 1)."""
+    if bits <= 1:
+        return 1.0
+    return float(2 ** (bits - 1) - 1)
+
+
+def prune_mask(w: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    """Binary mask keeping weights with |w| >= thresh."""
+    return (jnp.abs(w) >= thresh).astype(w.dtype)
+
+
+def fake_quant(w: jnp.ndarray, lvl: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    """Mask + symmetric uniform fake-quantization.
+
+    ``lvl`` and ``thresh`` are scalars (dynamic inputs of the AOT graph, so
+    one compiled artifact serves every compression state).
+    """
+    masked = w * prune_mask(w, thresh)
+    m = jnp.maximum(jnp.max(jnp.abs(masked)), 1e-12)
+    scaled = jnp.clip(jnp.round(masked / m * lvl), -lvl, lvl)
+    return scaled / lvl * m
+
+
+def fake_quant_ste(w, lvl, thresh):
+    """Fake-quant with a straight-through estimator for training.
+
+    Forward value equals :func:`fake_quant`; the gradient passes through
+    the quantizer but is blocked on pruned weights (mask gating), the
+    standard QAT construction the multi-step fine-tuning relies on.
+    """
+    mask = prune_mask(w, thresh)
+    wm = w * mask
+    q = fake_quant(w, lvl, thresh)
+    return wm + jax.lax.stop_gradient(q - wm)
+
+
+def quant_matmul(x, w, lvl, thresh):
+    """x @ fq(w) — the dense-layer hot path."""
+    return x @ fake_quant(w, lvl, thresh)
+
+
+def quant_conv2d(x, w, lvl, thresh):
+    """NHWC 'valid' conv with fake-quantized HWIO weights."""
+    wq = fake_quant(w, lvl, thresh)
+    return jax.lax.conv_general_dilated(
+        x,
+        wq,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def quant_conv2d_same(x, w, lvl, thresh, stride: int = 1):
+    """NHWC 'same' conv (stride configurable) with quantized weights."""
+    wq = fake_quant(w, lvl, thresh)
+    return jax.lax.conv_general_dilated(
+        x,
+        wq,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def quant_conv2d_same_ste(x, w, lvl, thresh, stride: int = 1):
+    """'same' conv with STE-quantized weights (training-path reference)."""
+    wq = fake_quant_ste(w, lvl, thresh)
+    return jax.lax.conv_general_dilated(
+        x,
+        wq,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def quant_dwconv2d_same(x, w, lvl, thresh, stride: int = 1):
+    """Depthwise 'same' conv, HWIO with I=1, feature_group_count=C."""
+    wq = fake_quant(w, lvl, thresh)
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x,
+        wq,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )

@@ -1,0 +1,89 @@
+"""L2 assembly: train-step and inference graphs per network.
+
+Each network exports two jittable functions over *flat* argument lists
+(PJRT executes positional buffers; the Rust runtime mirrors the order,
+which is also recorded in the artifact's ``meta.json``):
+
+    infer(x, y, lvls, threshs, *params)        -> (loss, acc)
+    train_step(x, y, lvls, threshs, lr, *params) -> (loss, acc, *new_params)
+
+``lvls[l] = 2^(q_l - 1) - 1`` and ``threshs[l]`` are the runtime
+compression state (Eq. 1 of the paper, materialized); ``train_step`` is
+one SGD step with STE gradients — the Rust coordinator loops it for the
+per-RL-step fine-tune budget.
+"""
+
+from __future__ import annotations
+
+from .models import layers, lenet, mobilenet, vgg
+
+NETWORKS = {
+    "lenet5": lenet,
+    "vgg16_cifar": vgg,
+    "mobilenet_cifar": mobilenet,
+}
+
+# Executable batch sizes (CPU-PJRT budgets; LeNet is the e2e workhorse).
+BATCH = {"lenet5": 64, "vgg16_cifar": 8, "mobilenet_cifar": 8}
+
+
+def make_infer(mod):
+    def infer(x, y, lvls, threshs, *params):
+        logits = mod.apply(list(params), x, lvls, threshs)
+        loss = layers.cross_entropy(logits, y, mod.NUM_CLASSES)
+        acc = layers.accuracy(logits, y)
+        return (loss, acc)
+
+    return infer
+
+
+def make_train_step(mod):
+    import jax
+
+    def loss_fn(params, x, y, lvls, threshs):
+        logits = mod.apply(params, x, lvls, threshs)
+        loss = layers.cross_entropy(logits, y, mod.NUM_CLASSES)
+        return loss, layers.accuracy(logits, y)
+
+    def train_step(x, y, lvls, threshs, lr, *params):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            list(params), x, y, lvls, threshs
+        )
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return (loss, acc, *new_params)
+
+    return train_step
+
+
+def example_args(name: str, train: bool):
+    """ShapeDtypeStructs for AOT lowering."""
+    import jax
+    import jax.numpy as jnp
+
+    mod = NETWORKS[name]
+    b = BATCH[name]
+    h, w, c = mod.INPUT_SHAPE
+    x = jax.ShapeDtypeStruct((b, h, w, c), jnp.float32)
+    y = jax.ShapeDtypeStruct((b,), jnp.int32)
+    lvls = jax.ShapeDtypeStruct((mod.NUM_COMPUTE_LAYERS,), jnp.float32)
+    threshs = jax.ShapeDtypeStruct((mod.NUM_COMPUTE_LAYERS,), jnp.float32)
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _n, s in mod.PARAM_SPECS]
+    if train:
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+        return (x, y, lvls, threshs, lr, *params)
+    return (x, y, lvls, threshs, *params)
+
+
+def meta(name: str) -> dict:
+    """Artifact metadata the Rust runtime reads."""
+    mod = NETWORKS[name]
+    return {
+        "name": name,
+        "batch": BATCH[name],
+        "input_shape": list(mod.INPUT_SHAPE),
+        "num_classes": mod.NUM_CLASSES,
+        "num_compute_layers": mod.NUM_COMPUTE_LAYERS,
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in mod.PARAM_SPECS
+        ],
+    }

@@ -1,0 +1,1 @@
+"""L2 network definitions (quantization/pruning-aware)."""

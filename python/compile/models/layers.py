@@ -1,0 +1,188 @@
+"""L2 building blocks: compression-aware layers with STE gradients.
+
+Forward passes run the L1 Pallas kernels (so they land in the AOT
+artifact); backward passes are straight-through-estimator VJPs derived
+from the jnp reference (`kernels/ref.py`) — the standard QAT construction
+the paper's per-step fine-tuning needs.
+
+Every op takes the *runtime* compression scalars (`lvl` = 2^(q-1)-1
+levels, `thresh` = prune threshold) so a single compiled artifact serves
+every (Q, P) state the Rust-side RL agent visits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref
+from ..kernels.fake_quant import fake_quant_pallas
+from ..kernels.quant_conv2d import quant_conv2d_pallas
+from ..kernels.quant_matmul import quant_matmul_pallas
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def quant_dense(x, w, lvl, thresh):
+    """x @ fq(mask(w)) via the Pallas matmul kernel."""
+    return quant_matmul_pallas(x, w, lvl, thresh)
+
+
+def _dense_fwd(x, w, lvl, thresh):
+    return quant_dense(x, w, lvl, thresh), (x, w, lvl, thresh)
+
+
+def _dense_bwd(res, g):
+    x, w, lvl, thresh = res
+    # STE: differentiate the reference with the quantizer treated as
+    # identity on surviving weights (mask gates pruned ones).
+    _, vjp = jax.vjp(lambda xx, ww: xx @ ref.fake_quant_ste(ww, lvl, thresh), x, w)
+    dx, dw = vjp(g)
+    return dx, dw, None, None
+
+
+quant_dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Conv (VALID, stride 1 — LeNet-style)
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def quant_conv(x, w, lvl, thresh):
+    """VALID conv2d via the Pallas conv kernel. NHWC x HWIO."""
+    return quant_conv2d_pallas(x, w, lvl, thresh)
+
+
+def _conv_fwd(x, w, lvl, thresh):
+    return quant_conv(x, w, lvl, thresh), (x, w, lvl, thresh)
+
+
+def _conv_bwd(res, g):
+    x, w, lvl, thresh = res
+    _, vjp = jax.vjp(
+        lambda xx, ww: jax.lax.conv_general_dilated(
+            xx,
+            ref.fake_quant_ste(ww, lvl, thresh),
+            window_strides=(1, 1),
+            padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ),
+        x,
+        w,
+    )
+    dx, dw = vjp(g)
+    return dx, dw, None, None
+
+
+quant_conv.defvjp(_conv_fwd, _conv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SAME conv with stride (VGG / MobileNet pointwise + first conv)
+# ---------------------------------------------------------------------------
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def quant_conv_same(x, w, lvl, thresh, stride: int = 1):
+    """SAME conv: pad, run the VALID Pallas kernel, subsample for stride.
+
+    Stride-by-subsampling wastes MACs at build time but keeps a single
+    kernel; artifacts are AOT so the request path never pays Python.
+    """
+    fh, fw = w.shape[0], w.shape[1]
+    ph, pw = (fh - 1) // 2, (fw - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (ph, fh - 1 - ph), (pw, fw - 1 - pw), (0, 0)))
+    out = quant_conv2d_pallas(xp, w, lvl, thresh)
+    if stride > 1:
+        out = out[:, ::stride, ::stride, :]
+    return out
+
+
+def _conv_same_fwd(x, w, lvl, thresh, stride):
+    return quant_conv_same(x, w, lvl, thresh, stride), (x, w, lvl, thresh)
+
+
+def _conv_same_bwd(stride, res, g):
+    x, w, lvl, thresh = res
+    _, vjp = jax.vjp(
+        lambda xx, ww: ref.quant_conv2d_same_ste(xx, ww, lvl, thresh, stride),
+        x,
+        w,
+    )
+    dx, dw = vjp(g)
+    return dx, dw, None, None
+
+
+quant_conv_same.defvjp(_conv_same_fwd, _conv_same_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise SAME conv (MobileNet). The MAC pattern is grouped, which the
+# matmul-shaped Pallas kernel does not cover; the weights still go through
+# the Pallas fake-quant kernel so compression stays on the L1 path.
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def quant_dwconv(x, w, lvl, thresh, stride: int = 1):
+    wq = fake_quant_pallas(w, lvl, thresh)
+    return jax.lax.conv_general_dilated(
+        x,
+        wq,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )
+
+
+def _dw_fwd(x, w, lvl, thresh, stride):
+    return quant_dwconv(x, w, lvl, thresh, stride), (x, w, lvl, thresh)
+
+
+def _dw_bwd(stride, res, g):
+    x, w, lvl, thresh = res
+    _, vjp = jax.vjp(
+        lambda xx, ww: jax.lax.conv_general_dilated(
+            xx,
+            ref.fake_quant_ste(ww, lvl, thresh),
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=xx.shape[-1],
+        ),
+        x,
+        w,
+    )
+    dx, dw = vjp(g)
+    return dx, dw, None, None
+
+
+quant_dwconv.defvjp(_dw_fwd, _dw_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Misc building blocks
+# ---------------------------------------------------------------------------
+def maxpool2(x):
+    """2x2 max pooling, stride 2 (NHWC)."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def global_avgpool(x):
+    """NHWC -> NC mean over spatial dims."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def cross_entropy(logits, labels, num_classes: int):
+    """Mean softmax cross-entropy; labels int32 [B]."""
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

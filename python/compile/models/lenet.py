@@ -1,0 +1,61 @@
+"""LeNet-5 (Caffe 20/50/500 variant — matching `rust/src/model/zoo.rs`)
+with per-layer runtime compression inputs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+# (name, shape) in parameter-list order. The Rust runtime reads the same
+# order from the artifact's meta.json.
+PARAM_SPECS = [
+    ("conv1_w", (5, 5, 1, 20)),
+    ("conv1_b", (20,)),
+    ("conv2_w", (5, 5, 20, 50)),
+    ("conv2_b", (50,)),
+    ("fc1_w", (800, 500)),
+    ("fc1_b", (500,)),
+    ("fc2_w", (500, 10)),
+    ("fc2_b", (10,)),
+]
+
+INPUT_SHAPE = (28, 28, 1)
+NUM_CLASSES = 10
+# Compute layers (carrying q/p state), in order: conv1, conv2, fc1, fc2.
+NUM_COMPUTE_LAYERS = 4
+
+
+def init_params(key):
+    """He-initialized parameter list (build-time tests only; the Rust
+    harness initializes its own weights with the same shapes)."""
+    params = []
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+            )
+    return params
+
+
+def apply(params, x, lvls, threshs):
+    """Forward pass. `lvls`/`threshs` are [4] vectors (one per compute
+    layer) of quantization levels and prune thresholds."""
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    h = layers.quant_conv(x, c1w, lvls[0], threshs[0]) + c1b
+    h = jax.nn.relu(h)
+    h = layers.maxpool2(h)
+    h = layers.quant_conv(h, c2w, lvls[1], threshs[1]) + c2b
+    h = jax.nn.relu(h)
+    h = layers.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = layers.quant_dense(h, f1w, lvls[2], threshs[2]) + f1b
+    h = jax.nn.relu(h)
+    return layers.quant_dense(h, f2w, lvls[3], threshs[3]) + f2b

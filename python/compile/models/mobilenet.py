@@ -1,0 +1,89 @@
+"""Width-scaled MobileNet-v1 for CIFAR-shaped inputs (13 depthwise-
+separable blocks, same topology as `rust/src/model/zoo.rs::mobilenet_cifar`)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+WIDTH = 0.25
+INPUT_SHAPE = (32, 32, 3)
+NUM_CLASSES = 10
+
+# (channels_out, stride) for the 13 blocks.
+_PLAN = [
+    (64, 1),
+    (128, 2),
+    (128, 1),
+    (256, 2),
+    (256, 1),
+    (512, 2),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (1024, 2),
+    (1024, 1),
+]
+
+
+def _ch(c: int) -> int:
+    return max(8, int(c * WIDTH))
+
+
+def param_specs():
+    specs = [("conv1_w", (3, 3, 3, _ch(32))), ("conv1_b", (_ch(32),))]
+    ci = _ch(32)
+    for i, (co, _stride) in enumerate(_PLAN):
+        co = _ch(co)
+        specs.append((f"dw{i + 1}_w", (3, 3, 1, ci)))  # depthwise HWIO: I=1, O=C
+        specs.append((f"dw{i + 1}_b", (ci,)))
+        specs.append((f"pw{i + 1}_w", (1, 1, ci, co)))
+        specs.append((f"pw{i + 1}_b", (co,)))
+        ci = co
+    specs.append(("fc_w", (ci, NUM_CLASSES)))
+    specs.append(("fc_b", (NUM_CLASSES,)))
+    return specs
+
+
+PARAM_SPECS = param_specs()
+# conv1 + 13*(dw+pw) + fc = 28 compute layers.
+NUM_COMPUTE_LAYERS = 28
+
+
+def init_params(key):
+    params = []
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+            )
+    return params
+
+
+def apply(params, x, lvls, threshs):
+    # conv1, stride 2.
+    h = layers.quant_conv_same(x, params[0], lvls[0], threshs[0], stride=2) + params[1]
+    h = jax.nn.relu(h)
+    pi, slot = 2, 1
+    for _i, (_co, stride) in enumerate(_PLAN):
+        dw_w, dw_b = params[pi], params[pi + 1]
+        pw_w, pw_b = params[pi + 2], params[pi + 3]
+        pi += 4
+        h = layers.quant_dwconv(h, dw_w, lvls[slot], threshs[slot], stride=stride) + dw_b
+        h = jax.nn.relu(h)
+        slot += 1
+        h = layers.quant_conv_same(h, pw_w, lvls[slot], threshs[slot]) + pw_b
+        h = jax.nn.relu(h)
+        slot += 1
+    h = layers.global_avgpool(h)
+    return layers.quant_dense(h, params[pi], lvls[slot], threshs[slot]) + params[pi + 1]

@@ -1,0 +1,88 @@
+"""Width-scaled VGG-16 for CIFAR-shaped inputs.
+
+Same 13-conv/3-dense topology as the paper's VGG-16 (and as
+`rust/src/model/zoo.rs::vgg16_cifar`, which drives the *energy* numbers
+at full width); the executable artifact uses `WIDTH` = 0.25 so CPU-PJRT
+fine-tuning stays tractable. Fine-tune dynamics only need a real
+trainable network of the same topology (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+WIDTH = 0.25
+INPUT_SHAPE = (32, 32, 3)
+NUM_CLASSES = 10
+
+_PLAN = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+
+
+def _ch(c: int) -> int:
+    return max(8, int(c * WIDTH))
+
+
+def param_specs():
+    specs = []
+    ci = 3
+    for bi, (c, reps) in enumerate(_PLAN):
+        co = _ch(c)
+        for r in range(reps):
+            specs.append((f"conv{bi + 1}_{r + 1}_w", (3, 3, ci, co)))
+            specs.append((f"conv{bi + 1}_{r + 1}_b", (co,)))
+            ci = co
+    flat = _ch(512)  # 1x1 spatial after 5 pools
+    fc_w = _ch(4096)
+    specs.append(("fc6_w", (flat, fc_w)))
+    specs.append(("fc6_b", (fc_w,)))
+    specs.append(("fc7_w", (fc_w, fc_w)))
+    specs.append(("fc7_b", (fc_w,)))
+    specs.append(("fc8_w", (fc_w, NUM_CLASSES)))
+    specs.append(("fc8_b", (NUM_CLASSES,)))
+    return specs
+
+
+PARAM_SPECS = param_specs()
+NUM_COMPUTE_LAYERS = 16  # 13 convs + 3 dense
+
+
+def init_params(key):
+    params = []
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+            )
+    return params
+
+
+def apply(params, x, lvls, threshs):
+    h = x
+    pi = 0  # param index
+    slot = 0  # compute-layer index
+    for _bi, (_c, reps) in enumerate(_PLAN):
+        for _r in range(reps):
+            w, b = params[pi], params[pi + 1]
+            pi += 2
+            h = layers.quant_conv_same(h, w, lvls[slot], threshs[slot]) + b
+            h = jax.nn.relu(h)
+            slot += 1
+        h = layers.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    for i in range(3):
+        w, b = params[pi], params[pi + 1]
+        pi += 2
+        h = layers.quant_dense(h, w, lvls[slot], threshs[slot]) + b
+        slot += 1
+        if i < 2:
+            h = jax.nn.relu(h)
+    return h

@@ -1,0 +1,65 @@
+"""AOT pipeline: HLO-text emission sanity.
+
+Full lowering of all three networks takes minutes; here we lower the
+standalone kernel artifact plus LeNet's infer graph and validate the HLO
+text structure (the Rust integration tests exercise actual execution).
+"""
+
+import os
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_kernel_demo_emits_parsable_hlo():
+    with tempfile.TemporaryDirectory() as d:
+        aot.emit_kernel_demo(d)
+        path = os.path.join(d, "kernel_fq.hlo.txt")
+        text = open(path).read()
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+
+def test_lenet_infer_lowering():
+    mod = M.NETWORKS["lenet5"]
+    infer = M.make_infer(mod)
+    lowered = jax.jit(infer).lower(*M.example_args("lenet5", train=False))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # Tuple return with (loss, acc).
+    assert "ENTRY" in text
+
+
+def test_meta_is_json_serializable():
+    import json
+
+    for name in M.NETWORKS:
+        s = json.dumps(M.meta(name))
+        back = json.loads(s)
+        assert back["name"] == name
+        assert back["batch"] == M.BATCH[name]
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(os.path.join(os.path.dirname(__file__), "../../artifacts")),
+    reason="artifacts not built",
+)
+def test_emitted_artifacts_present_and_wellformed():
+    d = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    for name in M.NETWORKS:
+        for kind in ("infer", "train"):
+            p = os.path.join(d, f"{name}_{kind}.hlo.txt")
+            if not os.path.exists(p):
+                pytest.skip(f"{p} not built")
+            head = open(p).read(4096)
+            assert "HloModule" in head, p
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

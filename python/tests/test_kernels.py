@@ -1,0 +1,219 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, bit depths and prune fractions — the CORE
+correctness signal for the compute layer (the same quantization grid is
+pinned on the Rust side by `rust/src/compress/quant.rs`).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fake_quant_pallas,
+    quant_conv2d_pallas,
+    quant_matmul_pallas,
+    ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def lvl_of(bits: int) -> jnp.ndarray:
+    return jnp.float32(ref.levels(bits))
+
+
+def thresh_for(w, remaining: float) -> jnp.ndarray:
+    """Magnitude threshold keeping ~remaining of the weights."""
+    if remaining >= 1.0:
+        return jnp.float32(0.0)
+    mags = np.sort(np.abs(np.asarray(w)).ravel())[::-1]
+    keep = max(1, int(round(len(mags) * remaining)))
+    return jnp.float32(mags[keep - 1])
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    cols=st.integers(1, 70),
+    bits=st.integers(2, 8),
+    remaining=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_fake_quant_matches_ref(rows, cols, bits, remaining, seed):
+    w = rand(seed, (rows, cols))
+    lvl = lvl_of(bits)
+    t = thresh_for(w, remaining)
+    got = fake_quant_pallas(w, lvl, t)
+    want = ref.fake_quant(w, lvl, t)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rank=st.integers(1, 4),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_fake_quant_arbitrary_rank(rank, bits, seed):
+    dims = tuple(np.random.RandomState(seed).randint(1, 9, size=rank))
+    w = rand(seed, dims)
+    got = fake_quant_pallas(w, lvl_of(bits), jnp.float32(0.0))
+    want = ref.fake_quant(w, lvl_of(bits), jnp.float32(0.0))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fake_quant_idempotent():
+    w = rand(0, (33, 17))
+    lvl = lvl_of(4)
+    q1 = fake_quant_pallas(w, lvl, jnp.float32(0.0))
+    q2 = fake_quant_pallas(q1, lvl, jnp.float32(0.0))
+    np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-6)
+
+
+def test_fake_quant_prunes_small_weights():
+    w = jnp.array([[0.01, -0.5], [0.02, 0.9]], jnp.float32)
+    out = np.asarray(fake_quant_pallas(w, lvl_of(8), jnp.float32(0.1)))
+    assert out[0, 0] == 0.0 and out[1, 0] == 0.0
+    assert out[0, 1] != 0.0 and out[1, 1] != 0.0
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 33),
+    k=st.integers(1, 48),
+    n=st.integers(1, 150),
+    bits=st.integers(2, 8),
+    remaining=st.floats(0.2, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_quant_matmul_matches_ref(m, k, n, bits, remaining, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    lvl = lvl_of(bits)
+    t = thresh_for(w, remaining)
+    got = quant_matmul_pallas(x, w, lvl, t)
+    want = ref.quant_matmul(x, w, lvl, t)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_quant_matmul_full_precision_is_plain_matmul():
+    x = rand(3, (4, 8))
+    w = rand(4, (8, 6))
+    got = quant_matmul_pallas(x, w, jnp.float32(2**20), jnp.float32(0.0))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quant_conv2d
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hw=st.integers(6, 16),
+    ci=st.integers(1, 6),
+    co=st.integers(1, 12),
+    f=st.sampled_from([1, 3, 5]),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_quant_conv2d_matches_ref(b, hw, ci, co, f, bits, seed):
+    x = rand(seed, (b, hw, hw, ci))
+    w = rand(seed + 1, (f, f, ci, co))
+    lvl = lvl_of(bits)
+    t = thresh_for(w, 0.7)
+    got = quant_conv2d_pallas(x, w, lvl, t)
+    want = ref.quant_conv2d(x, w, lvl, t)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# STE gradients
+# ---------------------------------------------------------------------------
+def test_ste_gradient_passes_through_survivors():
+    w = jnp.array([0.5, -0.8, 0.01], jnp.float32)
+    t = jnp.float32(0.1)
+
+    def f(w):
+        return jnp.sum(ref.fake_quant_ste(w, lvl_of(4), t) * jnp.array([1.0, 2.0, 3.0]))
+
+    g = jax.grad(f)(w)
+    # Survivors get the straight-through gradient; pruned weight gets 0.
+    np.testing.assert_allclose(g, [1.0, 2.0, 0.0], atol=1e-6)
+
+
+def test_ste_forward_equals_fake_quant():
+    w = rand(9, (20,))
+    lvl = lvl_of(3)
+    t = jnp.float32(0.2)
+    np.testing.assert_allclose(
+        ref.fake_quant_ste(w, lvl, t), ref.fake_quant(w, lvl, t), atol=1e-6
+    )
+
+
+def test_quant_error_shrinks_with_bits():
+    w = rand(11, (64, 64))
+    errs = []
+    for bits in (2, 4, 8):
+        q = ref.fake_quant(w, lvl_of(bits), jnp.float32(0.0))
+        errs.append(float(jnp.mean((q - w) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+# ---------------------------------------------------------------------------
+# Layer wrappers (Pallas fwd + STE bwd agree with pure-ref autodiff)
+# ---------------------------------------------------------------------------
+def test_quant_dense_gradients_match_ref():
+    from compile.models import layers
+
+    x = rand(21, (4, 10))
+    w = rand(22, (10, 7))
+    lvl, t = lvl_of(4), jnp.float32(0.05)
+
+    def loss_pallas(w):
+        return jnp.sum(layers.quant_dense(x, w, lvl, t) ** 2)
+
+    def loss_ref(w):
+        return jnp.sum((x @ ref.fake_quant_ste(w, lvl, t)) ** 2)
+
+    g1 = jax.grad(loss_pallas)(w)
+    g2 = jax.grad(loss_ref)(w)
+    np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-3)
+
+
+def test_quant_conv_gradients_match_ref():
+    from compile.models import layers
+
+    x = rand(31, (2, 8, 8, 3))
+    w = rand(32, (3, 3, 3, 5))
+    lvl, t = lvl_of(5), jnp.float32(0.05)
+
+    def loss_pallas(w):
+        return jnp.sum(layers.quant_conv(x, w, lvl, t) ** 2)
+
+    def loss_ref(w):
+        wq = ref.fake_quant_ste(w, lvl, t)
+        out = jax.lax.conv_general_dilated(
+            x, wq, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jnp.sum(out**2)
+
+    g1 = jax.grad(loss_pallas)(w)
+    g2 = jax.grad(loss_ref)(w)
+    np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-3)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

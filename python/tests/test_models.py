@@ -1,0 +1,106 @@
+"""L2 correctness: model shapes, training dynamics, compression response."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def setup_net(name, batch=None):
+    mod = M.NETWORKS[name]
+    b = batch or 4
+    h, w, c = mod.INPUT_SHAPE
+    key = jax.random.PRNGKey(0)
+    params = mod.init_params(key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, h, w, c), jnp.float32)
+    y = jnp.arange(b, dtype=jnp.int32) % mod.NUM_CLASSES
+    lvls = jnp.full((mod.NUM_COMPUTE_LAYERS,), 127.0, jnp.float32)
+    threshs = jnp.zeros((mod.NUM_COMPUTE_LAYERS,), jnp.float32)
+    return mod, params, x, y, lvls, threshs
+
+
+@pytest.mark.parametrize("name", list(M.NETWORKS))
+def test_forward_shapes(name):
+    mod, params, x, y, lvls, threshs = setup_net(name)
+    logits = mod.apply(params, x, lvls, threshs)
+    assert logits.shape == (x.shape[0], mod.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", list(M.NETWORKS))
+def test_param_specs_match_init(name):
+    mod = M.NETWORKS[name]
+    params = mod.init_params(jax.random.PRNGKey(0))
+    assert len(params) == len(mod.PARAM_SPECS)
+    for p, (n, s) in zip(params, mod.PARAM_SPECS):
+        assert p.shape == tuple(s), n
+    # Weight count == compute-layer count (each compute layer has one _w).
+    n_w = sum(1 for n, _ in mod.PARAM_SPECS if n.endswith("_w"))
+    assert n_w == mod.NUM_COMPUTE_LAYERS
+
+
+def test_lenet_loss_decreases_with_training():
+    mod, params, x, y, lvls, threshs = setup_net("lenet5", batch=16)
+    train = M.make_train_step(mod)
+    losses = []
+    p = list(params)
+    for _ in range(8):
+        out = train(x, y, lvls, threshs, jnp.float32(0.05), *p)
+        losses.append(float(out[0]))
+        p = list(out[2:])
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_quantization_depth_changes_logits():
+    mod, params, x, y, lvls, threshs = setup_net("lenet5")
+    full = mod.apply(params, x, lvls, threshs)
+    coarse = mod.apply(
+        params, x, jnp.full_like(lvls, 1.0), threshs
+    )  # 2-bit: 1 level
+    assert float(jnp.max(jnp.abs(full - coarse))) > 1e-3
+
+
+def test_pruning_threshold_zeroes_effect():
+    mod, params, x, y, lvls, threshs = setup_net("lenet5")
+    # Prune everything: logits become bias-only (identical across inputs
+    # up to pooling of zeros).
+    hard = jnp.full_like(threshs, 1e9)
+    logits = mod.apply(params, x, lvls, hard)
+    assert float(jnp.max(jnp.abs(logits[0] - logits[1]))) < 1e-5
+
+
+def test_infer_matches_manual_loss():
+    mod, params, x, y, lvls, threshs = setup_net("lenet5")
+    infer = M.make_infer(mod)
+    loss, acc = infer(x, y, lvls, threshs, *params)
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_train_step_preserves_param_shapes():
+    mod, params, x, y, lvls, threshs = setup_net("lenet5")
+    train = M.make_train_step(mod)
+    out = train(x, y, lvls, threshs, jnp.float32(0.01), *params)
+    assert len(out) == 2 + len(params)
+    for new, old in zip(out[2:], params):
+        assert new.shape == old.shape
+
+
+def test_example_args_are_consistent():
+    for name in M.NETWORKS:
+        infer_args = M.example_args(name, train=False)
+        train_args = M.example_args(name, train=True)
+        mod = M.NETWORKS[name]
+        assert len(infer_args) == 4 + len(mod.PARAM_SPECS)
+        assert len(train_args) == 5 + len(mod.PARAM_SPECS)
+        meta = M.meta(name)
+        assert meta["num_compute_layers"] == mod.NUM_COMPUTE_LAYERS
+        assert len(meta["params"]) == len(mod.PARAM_SPECS)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

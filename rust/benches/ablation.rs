@@ -1,0 +1,21 @@
+//! Ablation benches: the paper's prose hyper-parameter claims (gamma=0.9,
+//! lambda=3 optimal) regenerated as tables.
+#[path = "common.rs"]
+mod common;
+use common::{banner, bench_episodes, BenchTimer};
+use edcompress::report::ablation;
+
+fn main() {
+    banner("Ablations: lambda (Eq.4) and gamma (Eq.1)");
+    let eps = bench_episodes();
+    let mut t = BenchTimer::new("ablation sweeps (8 searches)");
+    let mut out = (String::new(), String::new());
+    t.run(1, || {
+        out = (
+            ablation::lambda_sweep(eps, 0).render(),
+            ablation::gamma_sweep(eps, 0).render(),
+        )
+    });
+    println!("{}\n{}", out.0, out.1);
+    t.report();
+}

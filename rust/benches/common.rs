@@ -1,0 +1,79 @@
+//! Mini benchmark harness shared by all bench targets (`criterion` is not
+//! available offline; `cargo bench` runs these with `harness = false`).
+//!
+//! Conventions: each bench regenerates its paper table/figure (printing
+//! it, deliverable (d)) and reports wall-clock timing statistics for the
+//! work involved. `EDC_EPISODES` scales the search budget (default kept
+//! small so `cargo bench` completes in minutes; EXPERIMENTS.md records
+//! the 60-episode runs).
+
+use std::time::Instant;
+
+pub struct BenchTimer {
+    name: String,
+    samples_ns: Vec<f64>,
+}
+
+impl BenchTimer {
+    pub fn new(name: &str) -> BenchTimer {
+        BenchTimer {
+            name: name.to_string(),
+            samples_ns: Vec::new(),
+        }
+    }
+
+    /// Time `iters` runs of `f`, discarding the first (warmup).
+    pub fn run<T>(&mut self, iters: usize, mut f: impl FnMut() -> T) {
+        for i in 0..iters + 1 {
+            let t0 = Instant::now();
+            let out = f();
+            let ns = t0.elapsed().as_nanos() as f64;
+            std::hint::black_box(&out);
+            if i > 0 {
+                self.samples_ns.push(ns);
+            }
+        }
+    }
+
+    pub fn report(&self) {
+        let n = self.samples_ns.len().max(1) as f64;
+        let mean = self.samples_ns.iter().sum::<f64>() / n;
+        let mut sorted = self.samples_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = sorted.get(sorted.len() / 2).copied().unwrap_or(0.0);
+        let min = sorted.first().copied().unwrap_or(0.0);
+        println!(
+            "bench {:<40} mean {:>12} p50 {:>12} min {:>12} (n={})",
+            self.name,
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(min),
+            self.samples_ns.len()
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Episode budget for bench-time searches.
+pub fn bench_episodes() -> usize {
+    std::env::var("EDC_EPISODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12)
+}
+
+/// Standard bench prologue.
+pub fn banner(what: &str) {
+    println!("\n=== {what} ===");
+}

@@ -1,0 +1,15 @@
+//! Regenerates Figure 1 (EDC vs DC: compression rate vs energy/area eff).
+#[path = "common.rs"]
+mod common;
+use common::{banner, bench_episodes, BenchTimer};
+use edcompress::report::figures;
+
+fn main() {
+    banner("Figure 1: EDC vs Deep Compression");
+    let eps = bench_episodes();
+    let mut t = BenchTimer::new("fig1 (LeNet sweep + DC eval)");
+    let mut rendered = String::new();
+    t.run(1, || rendered = figures::fig1(eps, 0).render());
+    println!("{rendered}");
+    t.report();
+}

@@ -1,0 +1,18 @@
+//! Regenerates Figure 4 (layer-wise DC vs EDC breakdown + params line).
+#[path = "common.rs"]
+mod common;
+use common::{banner, bench_episodes, BenchTimer};
+use edcompress::report::figures;
+
+fn main() {
+    banner("Figure 4: layer-wise energy/area, DC vs EDC (LeNet-5)");
+    let eps = bench_episodes();
+    let mut t = BenchTimer::new("fig4");
+    let mut out = (Vec::new(), String::new());
+    t.run(1, || out = figures::fig4(eps, 0));
+    for table in &out.0 {
+        println!("{}", table.render());
+    }
+    println!("CSV: {}", out.1);
+    t.report();
+}

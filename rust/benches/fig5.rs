@@ -1,0 +1,18 @@
+//! Regenerates Figure 5 (optimization curves, 3 networks x 4 dataflows).
+#[path = "common.rs"]
+mod common;
+use common::{banner, bench_episodes, BenchTimer};
+use edcompress::report::figures;
+
+fn main() {
+    banner("Figure 5: optimization process (energy curves + accuracy)");
+    let eps = bench_episodes();
+    let mut t = BenchTimer::new("fig5 (3 networks x 4 dataflows)");
+    let mut out = (Vec::new(), Vec::new());
+    t.run(1, || out = figures::fig5(eps, 0));
+    for table in &out.0 {
+        println!("{}", table.render());
+    }
+    println!("CSV series: {:?}", out.1);
+    t.report();
+}

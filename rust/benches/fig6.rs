@@ -1,0 +1,15 @@
+//! Regenerates Figure 6 (PE vs data-movement breakdown, before/after).
+#[path = "common.rs"]
+mod common;
+use common::{banner, bench_episodes, BenchTimer};
+use edcompress::report::figures;
+
+fn main() {
+    banner("Figure 6: energy breakdown before/after EDCompress");
+    let eps = bench_episodes();
+    let mut t = BenchTimer::new("fig6");
+    let mut rendered = String::new();
+    t.run(1, || rendered = figures::fig6(eps, 0).render());
+    println!("{rendered}");
+    t.report();
+}

@@ -1,0 +1,15 @@
+//! Regenerates Figure 7 (quant-only vs prune-only vs both).
+#[path = "common.rs"]
+mod common;
+use common::{banner, bench_episodes, BenchTimer};
+use edcompress::report::figures;
+
+fn main() {
+    banner("Figure 7: technique ablation (quant-only / prune-only / both)");
+    let eps = bench_episodes();
+    let mut t = BenchTimer::new("fig7 (3 modes x 3 networks x 4 dataflows)");
+    let mut rendered = String::new();
+    t.run(1, || rendered = figures::fig7(eps, 0).render());
+    println!("{rendered}");
+    t.report();
+}

@@ -1,0 +1,108 @@
+//! Micro-benchmarks of the L3 hot paths (EXPERIMENTS.md §Perf):
+//! cost-model evaluation, SAC update step, GEMM kernel, env step, and —
+//! when artifacts exist — the PJRT execute round-trip.
+#[path = "common.rs"]
+mod common;
+use common::{banner, BenchTimer};
+use edcompress::compress::CompressionState;
+use edcompress::dataflow::Dataflow;
+use edcompress::energy::{self, EnergyConfig};
+use edcompress::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
+use edcompress::model::zoo;
+use edcompress::rl::sac::{SacAgent, SacConfig};
+use edcompress::rl::Env;
+use edcompress::tensor::Tensor;
+use edcompress::util::rng::Rng;
+
+fn main() {
+    banner("L3 hot paths");
+    let cfg = EnergyConfig::default();
+
+    // 1. Cost-model evaluation (called 4x per RL step in sweeps).
+    for net in [zoo::lenet5(), zoo::vgg16_cifar(), zoo::mobilenet_v1()] {
+        let s = CompressionState::uniform(&net, 6.0, 0.6);
+        let mut t = BenchTimer::new(&format!("energy::evaluate {}", net.name));
+        t.run(200, || energy::evaluate(&net, &s, Dataflow::XY, &cfg).total_energy());
+        t.report();
+    }
+
+    // 2. All-15-dataflow ranking.
+    {
+        let net = zoo::vgg16_cifar();
+        let s = CompressionState::uniform(&net, 6.0, 0.6);
+        let mut t = BenchTimer::new("rank_dataflows vgg16 (15 dataflows)");
+        t.run(50, || {
+            edcompress::coordinator::sweep::rank_dataflows(&net, &s, &cfg)
+        });
+        t.report();
+    }
+
+    // 3. GEMM kernel (SAC's inner loop).
+    {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[64, 166], 1.0, &mut rng);
+        let b = Tensor::randn(&[166, 128], 1.0, &mut rng);
+        let mut t = BenchTimer::new("tensor::matmul 64x166x128");
+        t.run(300, || a.matmul(&b));
+        t.report();
+    }
+
+    // 4. SAC update step at LeNet env dimensions.
+    {
+        let net = zoo::lenet5();
+        let oracle = SurrogateOracle::new(&net, 0);
+        let mut env = CompressionEnv::new(
+            net,
+            Dataflow::XY,
+            Box::new(oracle),
+            EnvConfig::default(),
+            cfg.clone(),
+        );
+        let mut agent = SacAgent::new(env.state_dim(), env.action_dim(), SacConfig::default());
+        // Fill replay.
+        let mut s = env.reset();
+        for _ in 0..256 {
+            let a = agent.act(&s);
+            let (s2, r, d) = env.step(&a);
+            agent.observe(&s, &a, r, &s2, d);
+            s = if d { env.reset() } else { s2 };
+        }
+        let mut t = BenchTimer::new("SAC update_once (batch 64, 128x128)");
+        t.run(100, || agent.update_once());
+        t.report();
+
+        let mut t = BenchTimer::new("CompressionEnv::step (surrogate)");
+        let action = vec![-0.2; env.action_dim()];
+        env.reset();
+        t.run(200, || {
+            let (_s, _r, done) = env.step(&action);
+            if done {
+                env.reset();
+            }
+        });
+        t.report();
+    }
+
+    // 5. PJRT execute round-trip (skipped without artifacts).
+    if edcompress::runtime::artifacts_available("lenet5") {
+        use edcompress::runtime::{literal, Runtime};
+        let rt = Runtime::cpu().expect("pjrt");
+        let art = rt
+            .load_artifact(&edcompress::runtime::artifacts_dir().join("kernel_fq.hlo.txt"))
+            .expect("artifact");
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[32, 128], 1.0, &mut rng);
+        let mut t = BenchTimer::new("PJRT kernel_fq execute (32x128)");
+        t.run(100, || {
+            let inputs = vec![
+                literal::tensor_to_literal(&w).unwrap(),
+                literal::scalar_literal(7.0),
+                literal::scalar_literal(0.1),
+            ];
+            art.run(&inputs).unwrap()
+        });
+        t.report();
+    } else {
+        println!("PJRT bench skipped: artifacts missing (make artifacts)");
+    }
+}

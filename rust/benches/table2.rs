@@ -1,0 +1,19 @@
+//! Regenerates Table 2 (EDCompress vs HAQ, MobileNet) and times the
+//! end-to-end search per dataflow.
+#[path = "common.rs"]
+mod common;
+use common::{banner, bench_episodes, BenchTimer};
+use edcompress::report::tables;
+
+fn main() {
+    banner("Table 2: EDCompress vs HAQ (MobileNet)");
+    let eps = bench_episodes();
+    let mut t = BenchTimer::new(&format!("table2 search ({eps} episodes x 4 dataflows)"));
+    let mut rendered = String::new();
+    t.run(1, || {
+        let (table, _outs) = tables::table2(eps, 0);
+        rendered = table.render();
+    });
+    println!("{rendered}");
+    t.report();
+}

@@ -1,0 +1,18 @@
+//! Regenerates Table 3 (EDCompress vs [22][29], VGG-16/CIFAR-10).
+#[path = "common.rs"]
+mod common;
+use common::{banner, bench_episodes, BenchTimer};
+use edcompress::report::tables;
+
+fn main() {
+    banner("Table 3: EDCompress vs filter-pruning baselines (VGG-16/CIFAR)");
+    let eps = bench_episodes();
+    let mut t = BenchTimer::new(&format!("table3 search ({eps} episodes x 4 dataflows)"));
+    let mut rendered = String::new();
+    t.run(1, || {
+        let (table, _outs) = tables::table3(eps, 0);
+        rendered = table.render();
+    });
+    println!("{rendered}");
+    t.report();
+}

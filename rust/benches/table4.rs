@@ -1,0 +1,20 @@
+//! Regenerates Table 4 (per-layer LeNet-5 energy/area, 6 baselines).
+#[path = "common.rs"]
+mod common;
+use common::{banner, bench_episodes, BenchTimer};
+use edcompress::report::tables;
+
+fn main() {
+    banner("Table 4: per-layer energy (uJ) / area (mm^2) on LeNet-5");
+    let eps = bench_episodes();
+    let mut t = BenchTimer::new(&format!("table4 search ({eps} episodes x 4 dataflows)"));
+    let mut rendered = Vec::new();
+    t.run(1, || {
+        let (tables4, _outs) = tables::table4(eps, 0);
+        rendered = tables4.iter().map(|t| t.render()).collect();
+    });
+    for r in &rendered {
+        println!("{r}");
+    }
+    t.report();
+}

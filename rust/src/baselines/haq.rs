@@ -1,0 +1,79 @@
+//! HAQ-style mixed-precision quantization baseline [34] (Table 2).
+//!
+//! HAQ searches per-layer bit depths with DDPG against a *latency/size*
+//! hardware signal — it is hardware-aware but **not dataflow-aware**: it
+//! never sees how the PE array reuses operands. We reproduce its
+//! characteristic output on MobileNet: depthwise layers kept wide
+//! (they're sensitive and tiny), pointwise layers squeezed, first/last
+//! layers protected, **no pruning**.
+
+use super::BaselinePoint;
+use crate::compress::CompressionState;
+use crate::model::{LayerKind, Network};
+
+/// HAQ mixed-precision point for a network.
+pub fn haq(net: &Network) -> BaselinePoint {
+    let compute = net.compute_layers();
+    let n = compute.len();
+    let mut q = Vec::with_capacity(n);
+    let p = vec![1.0; n]; // quantization-only method
+    for (slot, &li) in compute.iter().enumerate() {
+        let layer = &net.layers[li];
+        let bits = if slot == 0 || slot == n - 1 {
+            8.0 // protect boundary layers (HAQ keeps them 8-bit)
+        } else {
+            match layer.kind {
+                LayerKind::DepthwiseConv => 7.0, // sensitive, tiny
+                LayerKind::Conv => 5.0,          // pointwise workhorses
+                LayerKind::Dense => 4.0,
+                LayerKind::Pool => unreachable!("pool is not a compute layer"),
+            }
+        };
+        q.push(bits);
+    }
+    BaselinePoint {
+        name: "HAQ[34]".to_string(),
+        state: CompressionState::from_parts(q, p),
+        act_bits: 10,
+        reported_accuracy: 0.648, // HAQ MobileNet-v1 top-1 (paper Table 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn haq_never_prunes() {
+        let b = haq(&zoo::mobilenet_v1());
+        assert!(b.state.p.iter().all(|&p| p == 1.0));
+    }
+
+    #[test]
+    fn haq_protects_boundary_layers() {
+        let b = haq(&zoo::mobilenet_v1());
+        assert_eq!(b.state.q[0], 8.0);
+        assert_eq!(*b.state.q.last().unwrap(), 8.0);
+    }
+
+    #[test]
+    fn depthwise_kept_wider_than_pointwise() {
+        let net = zoo::mobilenet_v1();
+        let b = haq(&net);
+        let compute = net.compute_layers();
+        let mut dw_bits = Vec::new();
+        let mut pw_bits = Vec::new();
+        for (slot, &li) in compute.iter().enumerate() {
+            if slot == 0 || slot == compute.len() - 1 {
+                continue;
+            }
+            match net.layers[li].kind {
+                LayerKind::DepthwiseConv => dw_bits.push(b.state.q[slot]),
+                LayerKind::Conv => pw_bits.push(b.state.q[slot]),
+                _ => {}
+            }
+        }
+        assert!(dw_bits.iter().all(|&d| pw_bits.iter().all(|&p| d > p)));
+    }
+}

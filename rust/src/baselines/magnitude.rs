@@ -1,0 +1,104 @@
+//! Pruning-only baselines [22][29][24][3][25] (Tables 3–4) and the
+//! quant-only / prune-only ablation points of Figure 7.
+
+use super::BaselinePoint;
+use crate::compress::CompressionState;
+use crate::model::{LayerKind, Network};
+
+fn uniform_point(
+    net: &Network,
+    name: &str,
+    conv_p: f64,
+    dense_p: f64,
+    bits: f64,
+    act_bits: u32,
+    acc: f64,
+) -> BaselinePoint {
+    let compute = net.compute_layers();
+    let mut q = Vec::new();
+    let mut p = Vec::new();
+    for &li in &compute {
+        let pp = match net.layers[li].kind {
+            LayerKind::Dense => dense_p,
+            _ => conv_p,
+        };
+        p.push(pp);
+        q.push(bits);
+    }
+    BaselinePoint {
+        name: name.to_string(),
+        state: CompressionState::from_parts(q, p),
+        act_bits,
+        reported_accuracy: acc,
+    }
+}
+
+/// [22] Li et al., "Pruning Filters for Efficient ConvNets": structured
+/// filter pruning, ~34% FLOP reduction on VGG-16/CIFAR, fp32 weights.
+pub fn filter_pruning(net: &Network) -> BaselinePoint {
+    uniform_point(net, "FilterPrune[22]", 0.66, 0.5, 16.0, 16, 0.931)
+}
+
+/// [29] "Play and Prune": adaptive filter pruning, deeper than [22].
+pub fn play_and_prune(net: &Network) -> BaselinePoint {
+    uniform_point(net, "PlayPrune[29]", 0.45, 0.35, 16.0, 16, 0.934)
+}
+
+/// [24] Frequency-domain dynamic pruning.
+pub fn frequency_pruning(net: &Network) -> BaselinePoint {
+    uniform_point(net, "FreqPrune[24]", 0.4, 0.07, 16.0, 16, 0.991)
+}
+
+/// [3] Modified L1/2 penalty pruning.
+pub fn l_half_pruning(net: &Network) -> BaselinePoint {
+    uniform_point(net, "LHalf[3]", 0.5, 0.04, 16.0, 16, 0.990)
+}
+
+/// [25] Automated pruning (conservative ratios, fp32 storage — the
+/// weakest entry of Table 4, as in the paper).
+pub fn automated_pruning(net: &Network) -> BaselinePoint {
+    uniform_point(net, "AutoPrune[25]", 0.85, 0.6, 32.0, 16, 0.991)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Dataflow;
+    use crate::energy::EnergyConfig;
+    use crate::model::zoo;
+
+    #[test]
+    fn pruning_only_baselines_keep_fp_storage() {
+        let net = zoo::vgg16_cifar();
+        for b in [filter_pruning(&net), play_and_prune(&net)] {
+            assert!(b.state.q.iter().all(|&q| q == 16.0), "{}", b.name);
+            assert_eq!(b.act_bits, 16);
+        }
+    }
+
+    #[test]
+    fn table4_ordering_weakest_is_autoprune() {
+        // The paper's Table 4: [25] has the highest energy of the six.
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let suite = crate::baselines::table4_suite(&net);
+        let energies: Vec<f64> = suite
+            .iter()
+            .map(|b| b.cost(&net, Dataflow::XY, &cfg).total_energy())
+            .collect();
+        let auto = energies.last().unwrap();
+        assert!(
+            energies[..5].iter().all(|e| e < auto),
+            "AutoPrune should be most expensive: {energies:?}"
+        );
+    }
+
+    #[test]
+    fn deeper_pruning_is_cheaper() {
+        let net = zoo::vgg16_cifar();
+        let cfg = EnergyConfig::default();
+        let fp = filter_pruning(&net).cost(&net, Dataflow::XY, &cfg).total_energy();
+        let pp = play_and_prune(&net).cost(&net, Dataflow::XY, &cfg).total_energy();
+        assert!(pp < fp, "play-and-prune {pp} vs filter {fp}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny flag parser: `--key value` pairs after a positional command.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            bail!("missing command");
+        }
+        let command = argv[0].clone();
+        if command.starts_with('-') {
+            bail!("expected a command first, got flag '{command}'");
+        }
+        let mut flags = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let key = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{}'", argv[i]))?;
+            let val = argv
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("flag --{key} missing a value"))?;
+            if val.starts_with("--") {
+                bail!("flag --{key} missing a value (got '{val}')");
+            }
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} wants a number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = Args::parse(&s(&["table", "--id", "4", "--seed", "7"])).unwrap();
+        assert_eq!(a.command, "table");
+        assert_eq!(a.get("id"), Some("4"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert_eq!(a.usize_or("episodes", 40).unwrap(), 40);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Args::parse(&s(&[])).is_err());
+        assert!(Args::parse(&s(&["--id", "4"])).is_err());
+        assert!(Args::parse(&s(&["table", "--id"])).is_err());
+        assert!(Args::parse(&s(&["table", "--id", "--seed"])).is_err());
+        assert!(Args::parse(&s(&["table", "id", "4"])).is_err());
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let a = Args::parse(&s(&["cost", "--q", "abc"])).unwrap();
+        assert!(a.f64_or("q", 8.0).is_err());
+    }
+}

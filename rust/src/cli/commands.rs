@@ -1,0 +1,266 @@
+//! Subcommand implementations.
+
+use super::args::Args;
+use crate::compress::CompressionState;
+use crate::config::{parse_mode, RunConfig};
+use crate::coordinator::{checkpoint, sweep, Coordinator};
+use crate::dataflow::Dataflow;
+use crate::energy;
+use crate::envs::{CompressionEnv, SurrogateOracle};
+use crate::model::zoo;
+use crate::report::{figures, tables};
+use crate::train::{PjrtOracle, TrainConfig};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "compress" => cmd_compress(args),
+        "table" => cmd_table(args),
+        "figure" => cmd_figure(args),
+        "explore" => cmd_explore(args),
+        "cost" => cmd_cost(args),
+        "info" => cmd_info(),
+        "help" | "--help" => {
+            println!("{}", super::usage());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{}", super::usage()),
+    }
+}
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.load_file(Path::new(path))
+            .with_context(|| format!("loading config {path}"))?;
+    }
+    cfg.network = args.str_or("net", &cfg.network);
+    cfg.dataflow = args.str_or("dataflow", &cfg.dataflow);
+    cfg.episodes = args.usize_or("episodes", cfg.episodes)?;
+    cfg.max_steps = args.usize_or("steps", cfg.max_steps)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.oracle = args.str_or("oracle", &cfg.oracle);
+    cfg.lambda = args.f64_or("lambda", cfg.lambda)?;
+    cfg.gamma = args.f64_or("gamma", cfg.gamma)?;
+    cfg.threshold_frac = args.f64_or("threshold", cfg.threshold_frac)?;
+    cfg.lr = args.f64_or("lr", cfg.lr as f64)? as f32;
+    if let Some(m) = args.get("mode") {
+        cfg.mode = parse_mode(m).ok_or_else(|| anyhow!("bad --mode '{m}'"))?;
+    }
+    cfg.out = args.get("out").map(|s| s.to_string());
+    Ok(cfg)
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let net = zoo::by_name(&cfg.network).ok_or_else(|| anyhow!("unknown net {}", cfg.network))?;
+    let df = Dataflow::parse(&cfg.dataflow)
+        .ok_or_else(|| anyhow!("unknown dataflow {}", cfg.dataflow))?;
+
+    let oracle: Box<dyn crate::envs::AccuracyOracle> = match cfg.oracle.as_str() {
+        "surrogate" => Box::new(SurrogateOracle::new(&net, cfg.seed)),
+        "pjrt" => {
+            let rt = crate::runtime::Runtime::cpu()?;
+            log::info!("pretraining {} via PJRT ({}) ...", net.name, rt.platform());
+            let oracle = PjrtOracle::new(
+                &rt,
+                &cfg.network,
+                TrainConfig {
+                    seed: cfg.seed,
+                    ..TrainConfig::default()
+                },
+            )?;
+            log::info!("pretrained: base accuracy {:.4}", oracle.harness.base_accuracy);
+            Box::new(oracle)
+        }
+        other => bail!("unknown oracle '{other}' (surrogate|pjrt)"),
+    };
+
+    let env = CompressionEnv::new(net, df, oracle, cfg.env_config(), cfg.energy_config());
+    let mut coord = Coordinator::new(env, cfg.search_config());
+    let outcome = coord.run();
+
+    println!(
+        "search done: {} {} — energy improvement {:.2}x, area {:.2}x",
+        outcome.network,
+        outcome.dataflow,
+        outcome.energy_improvement(),
+        outcome.area_improvement()
+    );
+    if let Some(b) = &outcome.best {
+        println!(
+            "best: accuracy {:.4} (base {:.4}), energy {:.3} uJ, area {:.3} mm2 at step {}",
+            b.accuracy,
+            outcome.base_accuracy,
+            b.energy * 1e6,
+            b.area,
+            b.step
+        );
+        println!("  Q (bits): {:?}", b.state.all_bits());
+        println!(
+            "  P (remaining %): {:?}",
+            b.state.p.iter().map(|p| (p * 100.0).round() as i64).collect::<Vec<_>>()
+        );
+    } else {
+        println!("no admissible compression point found (try more episodes)");
+    }
+    if let Some(out) = &cfg.out {
+        checkpoint::save(&outcome, Path::new(out))?;
+        println!("saved outcome to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = args.usize_or("id", 0)?;
+    let episodes = args.usize_or("episodes", crate::report::episode_budget())?;
+    let seed = args.u64_or("seed", 0)?;
+    match id {
+        2 => println!("{}", tables::table2(episodes, seed).0.render()),
+        3 => println!("{}", tables::table3(episodes, seed).0.render()),
+        4 => {
+            for t in tables::table4(episodes, seed).0 {
+                println!("{}", t.render());
+            }
+        }
+        _ => bail!("--id must be 2, 3 or 4"),
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args.usize_or("id", 0)?;
+    let episodes = args.usize_or("episodes", crate::report::episode_budget())?;
+    let seed = args.u64_or("seed", 0)?;
+    match id {
+        1 => println!("{}", figures::fig1(episodes, seed).render()),
+        4 => {
+            let (ts, csv) = figures::fig4(episodes, seed);
+            for t in ts {
+                println!("{}", t.render());
+            }
+            println!("series written to {csv}");
+        }
+        5 => {
+            let (ts, csvs) = figures::fig5(episodes, seed);
+            for t in ts {
+                println!("{}", t.render());
+            }
+            println!("series written to {csvs:?}");
+        }
+        6 => println!("{}", figures::fig6(episodes, seed).render()),
+        7 => println!("{}", figures::fig7(episodes, seed).render()),
+        _ => bail!("--id must be 1, 4, 5, 6 or 7"),
+    }
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    let name = args.str_or("net", "lenet5");
+    let net = zoo::by_name(&name).ok_or_else(|| anyhow!("unknown net {name}"))?;
+    let q = args.f64_or("q", 8.0)?;
+    let p = args.f64_or("p", 1.0)?;
+    let state = CompressionState::uniform(&net, q, p);
+    let rows = sweep::rank_dataflows(&net, &state, &crate::energy::EnergyConfig::default());
+    println!(
+        "Dataflow ranking for {} at q={q} bits, p={:.0}% (energy-sorted):",
+        net.name,
+        p * 100.0
+    );
+    println!("{:<8} {:>14} {:>14}", "A:B", "energy (uJ)", "area (mm2)");
+    for (df, e, a) in rows {
+        println!("{:<8} {:>14.3} {:>14.3}", df.label(), e * 1e6, a);
+    }
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let name = args.str_or("net", "lenet5");
+    let net = zoo::by_name(&name).ok_or_else(|| anyhow!("unknown net {name}"))?;
+    let df = Dataflow::parse(&args.str_or("dataflow", "X:Y"))
+        .ok_or_else(|| anyhow!("bad --dataflow"))?;
+    let q = args.f64_or("q", 8.0)?;
+    let p = args.f64_or("p", 1.0)?;
+    let state = CompressionState::uniform(&net, q, p);
+    let rep = energy::evaluate(&net, &state, df, &crate::energy::EnergyConfig::default());
+    println!(
+        "{} under {} at q={q} p={p}: total {:.3} uJ ({:.3} uJ PE + {:.3} uJ movement), area {:.3} mm2",
+        net.name,
+        df.label(),
+        rep.total_energy_uj(),
+        rep.pe_energy() * 1e6,
+        rep.movement_energy() * 1e6,
+        rep.total_area
+    );
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "layer", "PE uJ", "sram uJ", "noc uJ", "reg uJ", "area mm2", "PEs"
+    );
+    for l in &rep.per_layer {
+        println!(
+            "{:<8} {:>12.4} {:>12.4} {:>12.4} {:>12.4} {:>12.4} {:>10}",
+            l.name,
+            l.pe_energy * 1e6,
+            l.sram_energy * 1e6,
+            (l.noc_input + l.noc_weight + l.noc_psum) * 1e6,
+            l.reg_energy * 1e6,
+            l.total_area(),
+            l.pes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("edcompress {}", env!("CARGO_PKG_VERSION"));
+    let dir = crate::runtime::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    for net in ["lenet5", "vgg16_cifar", "mobilenet_cifar"] {
+        println!(
+            "  {net}: {}",
+            if crate::runtime::artifacts_available(net) {
+                "present"
+            } else {
+                "MISSING (run `make artifacts`)"
+            }
+        );
+    }
+    match crate::runtime::Runtime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn cost_and_explore_run() {
+        dispatch(&argv(&["cost", "--net", "lenet5", "--q", "4", "--p", "0.5"])).unwrap();
+        dispatch(&argv(&["explore", "--net", "lenet5"])).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&argv(&["bogus"])).is_err());
+    }
+
+    #[test]
+    fn run_config_from_flags() {
+        let a = argv(&[
+            "compress", "--net", "vgg16_cifar", "--episodes", "3", "--mode", "quant",
+            "--lambda", "2.0",
+        ]);
+        let c = run_config(&a).unwrap();
+        assert_eq!(c.network, "vgg16_cifar");
+        assert_eq!(c.episodes, 3);
+        assert_eq!(c.lambda, 2.0);
+    }
+}

@@ -1,0 +1,47 @@
+//! Hand-rolled CLI (no `clap` offline).
+//!
+//! ```text
+//! edc compress --net lenet5 --dataflow X:Y [--oracle surrogate|pjrt] ...
+//! edc table   --id 2|3|4   [--episodes N] [--seed S]
+//! edc figure  --id 1|4|5|6|7 [--episodes N] [--seed S]
+//! edc explore --net vgg16  [--q 8] [--p 1.0]   # rank all 15 dataflows
+//! edc cost    --net lenet5 [--dataflow X:Y] [--q 8] [--p 1.0]
+//! edc info
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point called by `main.rs`. Returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", usage());
+            return 2;
+        }
+    };
+    match commands::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+pub fn usage() -> &'static str {
+    "usage: edc <command> [flags]\n\
+     commands:\n\
+       compress   run the EDCompress search (--net, --dataflow, --oracle,\n\
+                  --episodes, --steps, --seed, --mode, --lambda, --gamma,\n\
+                  --out result.json)\n\
+       table      regenerate a paper table (--id 2|3|4, --episodes, --seed)\n\
+       figure     regenerate a paper figure (--id 1|4|5|6|7, --episodes, --seed)\n\
+       explore    rank all 15 dataflows for a network (--net, --q, --p)\n\
+       cost       evaluate the cost model at a state (--net, --dataflow, --q, --p)\n\
+       info       runtime/platform/artifact status"
+}

@@ -1,0 +1,218 @@
+//! Per-layer compression state and the paper's multi-step update rule.
+//!
+//! Eq. 1 of the paper:
+//!
+//! ```text
+//! Q_t^l = Q_0^l + sum_{i<t} q_i^l * gamma^i
+//! P_t^l = P_0^l + sum_{i<t} p_i^l * gamma^i
+//! ```
+//!
+//! The agent emits continuous deltas `(q_i^l, p_i^l)` each step; the
+//! discount `gamma^i` shrinks later steps so the search takes smaller
+//! moves near the optimum (paper: gamma = 0.9). Quantization depth stays
+//! continuous during the search and is rounded only when a concrete model
+//! is materialized (paper §3.3: "we use the continuous action space ...
+//! we round the quantization depth to the nearest integer value").
+
+pub mod prune;
+pub mod quant;
+
+use crate::model::Network;
+use crate::util::clampf;
+
+/// Bounds and step sizes of the compression search.
+#[derive(Clone, Debug)]
+pub struct CompressionLimits {
+    /// Discount gamma of Eq. 1 (paper: 0.9).
+    pub gamma: f64,
+    /// Max |Δq| per step in bits.
+    pub dq_max: f64,
+    /// Max |Δp| per step (fraction of weights).
+    pub dp_max: f64,
+    pub q_min: f64,
+    pub q_max: f64,
+    pub p_min: f64,
+    pub p_max: f64,
+}
+
+impl Default for CompressionLimits {
+    fn default() -> Self {
+        CompressionLimits {
+            gamma: 0.9,
+            dq_max: 1.0,
+            dp_max: 0.10,
+            q_min: 1.0,
+            q_max: 8.0,
+            p_min: 0.02,
+            p_max: 1.0,
+        }
+    }
+}
+
+/// Per-compute-layer (Q, P) state of Eq. 1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressionState {
+    /// Continuous quantization depth per compute layer (bits).
+    pub q: Vec<f64>,
+    /// Pruning remaining amount per compute layer, in (0, 1].
+    pub p: Vec<f64>,
+}
+
+impl CompressionState {
+    /// Uniform initial state — the paper starts every episode at 8-bit
+    /// weights, 100% remaining.
+    pub fn uniform(net: &Network, q0: f64, p0: f64) -> CompressionState {
+        let n = net.num_compute_layers();
+        CompressionState {
+            q: vec![q0; n],
+            p: vec![p0; n],
+        }
+    }
+
+    pub fn from_parts(q: Vec<f64>, p: Vec<f64>) -> CompressionState {
+        assert_eq!(q.len(), p.len());
+        CompressionState { q, p }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Apply one action step of Eq. 1. `action` is the agent's raw vector
+    /// in [-1,1]^(2L): first L entries are Δq directions, last L are Δp.
+    /// `step` is the episode step index `i` (for the gamma^i discount).
+    pub fn apply_action(&mut self, action: &[f64], step: usize, lim: &CompressionLimits) {
+        let l = self.num_layers();
+        assert_eq!(action.len(), 2 * l, "action dim {} != 2L = {}", action.len(), 2 * l);
+        let scale = lim.gamma.powi(step as i32);
+        for i in 0..l {
+            let dq = clampf(action[i], -1.0, 1.0) * lim.dq_max * scale;
+            let dp = clampf(action[l + i], -1.0, 1.0) * lim.dp_max * scale;
+            self.q[i] = clampf(self.q[i] + dq, lim.q_min, lim.q_max);
+            self.p[i] = clampf(self.p[i] + dp, lim.p_min, lim.p_max);
+        }
+    }
+
+    /// Rounded integer bit-depth for layer `l` (materialization).
+    pub fn bits(&self, l: usize) -> u32 {
+        self.q[l].round().max(1.0) as u32
+    }
+
+    /// All rounded bit-depths.
+    pub fn all_bits(&self) -> Vec<u32> {
+        (0..self.num_layers()).map(|l| self.bits(l)).collect()
+    }
+
+    /// Remaining fraction for layer `l`.
+    pub fn remaining(&self, l: usize) -> f64 {
+        self.p[l]
+    }
+
+    /// Model size in bits under this state (pruned weights removed,
+    /// surviving weights at the rounded depth + index overhead).
+    pub fn model_bits(&self, net: &Network, idx_bits: u32) -> f64 {
+        let mut total = 0.0;
+        for (slot, &li) in net.compute_layers().iter().enumerate() {
+            let params = net.layers[li].params() as f64;
+            let kept = params * self.p[slot];
+            let stored_bits = self.bits(slot) as f64
+                + if self.p[slot] < 1.0 { idx_bits as f64 } else { 0.0 };
+            total += kept * stored_bits;
+        }
+        total
+    }
+
+    /// Compression rate vs. a dense 32-bit model (Figure 1's x-axis).
+    pub fn compression_rate(&self, net: &Network, idx_bits: u32) -> f64 {
+        let dense_bits = net.total_params() as f64 * 32.0;
+        dense_bits / self.model_bits(net, idx_bits).max(1.0)
+    }
+
+    /// Flatten to [q..., p...] (the representation inside RL states).
+    pub fn as_flat(&self) -> Vec<f64> {
+        let mut v = self.q.clone();
+        v.extend_from_slice(&self.p);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn eq1_discounting() {
+        let net = zoo::lenet5();
+        let lim = CompressionLimits::default();
+        let mut s = CompressionState::uniform(&net, 8.0, 1.0);
+        let l = s.num_layers();
+        // Push q down with a full-strength action at steps 0 and 1.
+        let action = vec![-1.0; 2 * l];
+        s.apply_action(&action, 0, &lim);
+        assert!((s.q[0] - (8.0 - 1.0)).abs() < 1e-12);
+        assert!((s.p[0] - 0.9).abs() < 1e-12);
+        s.apply_action(&action, 1, &lim);
+        // Second step discounted by gamma = 0.9.
+        assert!((s.q[0] - (7.0 - 0.9)).abs() < 1e-12);
+        assert!((s.p[0] - (0.9 - 0.09)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamping_invariants() {
+        let net = zoo::lenet5();
+        let lim = CompressionLimits::default();
+        let mut s = CompressionState::uniform(&net, 8.0, 1.0);
+        let l = s.num_layers();
+        for step in 0..100 {
+            s.apply_action(&vec![-1.0; 2 * l], step, &lim);
+        }
+        for i in 0..l {
+            assert!(s.q[i] >= lim.q_min && s.q[i] <= lim.q_max);
+            assert!(s.p[i] >= lim.p_min && s.p[i] <= lim.p_max);
+        }
+        // Push back up; must clamp at the top too.
+        for step in 0..200 {
+            s.apply_action(&vec![1.0; 2 * l], step, &lim);
+        }
+        assert!(s.q.iter().all(|&q| q <= lim.q_max + 1e-12));
+        assert!(s.p.iter().all(|&p| p <= lim.p_max + 1e-12));
+    }
+
+    #[test]
+    fn rounding() {
+        let net = zoo::lenet5();
+        let mut s = CompressionState::uniform(&net, 8.0, 1.0);
+        s.q[0] = 4.4;
+        s.q[1] = 4.6;
+        assert_eq!(s.bits(0), 4);
+        assert_eq!(s.bits(1), 5);
+    }
+
+    #[test]
+    fn model_bits_and_compression_rate() {
+        let net = zoo::lenet5();
+        let s = CompressionState::uniform(&net, 8.0, 1.0);
+        // Unpruned: params * 8 bits, no index overhead.
+        assert_eq!(s.model_bits(&net, 4), net.total_params() as f64 * 8.0);
+        assert!((s.compression_rate(&net, 4) - 4.0).abs() < 1e-9);
+
+        let mut c = s.clone();
+        for p in c.p.iter_mut() {
+            *p = 0.5;
+        }
+        // Half the weights at 8+4 bits each.
+        let expect = net.total_params() as f64 * 0.5 * 12.0;
+        assert_eq!(c.model_bits(&net, 4), expect);
+    }
+
+    #[test]
+    fn flat_layout() {
+        let net = zoo::lenet5();
+        let s = CompressionState::uniform(&net, 7.0, 0.5);
+        let f = s.as_flat();
+        assert_eq!(f.len(), 8);
+        assert!(f[..4].iter().all(|&v| v == 7.0));
+        assert!(f[4..].iter().all(|&v| v == 0.5));
+    }
+}

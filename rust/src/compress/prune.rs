@@ -1,0 +1,111 @@
+//! Magnitude pruning: threshold selection and mask statistics.
+//!
+//! The paper prunes by sorting weights and zeroing the smallest absolute
+//! values (§3.1). The PJRT graphs take a per-layer *threshold* scalar and
+//! build the mask in-graph (`|w| >= t`), so Rust computes the threshold
+//! that keeps a `remaining` fraction here.
+
+/// Threshold `t` such that `|w| >= t` keeps ~`remaining` of the weights.
+/// `remaining` in (0, 1]; returns 0.0 for remaining >= 1.
+pub fn threshold_for_remaining(weights: &[f32], remaining: f64) -> f32 {
+    if remaining >= 1.0 || weights.is_empty() {
+        return 0.0;
+    }
+    let keep = ((weights.len() as f64) * remaining).round() as usize;
+    if keep == 0 {
+        return f32::INFINITY;
+    }
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    // Select the keep-th largest magnitude: sort descending, take index keep-1.
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    mags[keep - 1]
+}
+
+/// Fraction of weights with |w| >= t.
+pub fn surviving_fraction(weights: &[f32], t: f32) -> f64 {
+    if weights.is_empty() {
+        return 1.0;
+    }
+    weights.iter().filter(|w| w.abs() >= t).count() as f64 / weights.len() as f64
+}
+
+/// Apply the mask in place; returns number of zeroed weights.
+pub fn apply_mask(weights: &mut [f32], t: f32) -> usize {
+    let mut zeroed = 0;
+    for w in weights.iter_mut() {
+        if w.abs() < t {
+            *w = 0.0;
+            zeroed += 1;
+        }
+    }
+    zeroed
+}
+
+/// Energy of the pruned-away weights relative to total (a surrogate for
+/// how damaging a prune is — small-magnitude weights carry less signal).
+pub fn pruned_energy_fraction(weights: &[f32], t: f32) -> f64 {
+    let total: f64 = weights.iter().map(|&w| (w as f64) * (w as f64)).sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let pruned: f64 = weights
+        .iter()
+        .filter(|w| w.abs() < t)
+        .map(|&w| (w as f64) * (w as f64))
+        .sum();
+    pruned / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn threshold_keeps_requested_fraction() {
+        let mut rng = Rng::new(42);
+        let w: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32).collect();
+        for remaining in [0.9, 0.5, 0.25, 0.1] {
+            let t = threshold_for_remaining(&w, remaining);
+            let f = surviving_fraction(&w, t);
+            assert!(
+                (f - remaining).abs() < 0.01,
+                "remaining {remaining}: got {f}"
+            );
+        }
+    }
+
+    #[test]
+    fn full_remaining_is_noop() {
+        let w = [0.5f32, -0.1, 0.0];
+        assert_eq!(threshold_for_remaining(&w, 1.0), 0.0);
+        assert_eq!(surviving_fraction(&w, 0.0), 1.0);
+    }
+
+    #[test]
+    fn apply_mask_zeroes_small() {
+        let mut w = [0.5f32, -0.05, 0.3, 0.01];
+        let z = apply_mask(&mut w, 0.1);
+        assert_eq!(z, 2);
+        assert_eq!(w, [0.5, 0.0, 0.3, 0.0]);
+    }
+
+    #[test]
+    fn pruned_energy_small_for_magnitude_pruning() {
+        let mut rng = Rng::new(7);
+        let w: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32).collect();
+        let t = threshold_for_remaining(&w, 0.5);
+        // Pruning the *smallest* half removes far less than half the energy.
+        let e = pruned_energy_fraction(&w, t);
+        assert!(e < 0.2, "energy fraction {e}");
+    }
+
+    #[test]
+    fn ties_and_extremes() {
+        let w = [1.0f32; 8];
+        let t = threshold_for_remaining(&w, 0.5);
+        // All equal: threshold equals the value; everything survives.
+        assert!(surviving_fraction(&w, t) >= 0.5);
+        assert_eq!(threshold_for_remaining(&[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Quantization math shared by the cost model and the PJRT fine-tune path.
+//!
+//! Symmetric uniform fake-quantization: a weight tensor with max-abs `m`
+//! quantized to `q` bits keeps values on the grid `m * k / (2^(q-1) - 1)`,
+//! `k in [-(2^(q-1)-1), 2^(q-1)-1]`. The same scheme is implemented by the
+//! L1 Pallas kernel (`python/compile/kernels/fake_quant.py`); the tests in
+//! `python/tests` pin both sides to the identical grid.
+
+/// Number of positive quantization levels for a bit depth.
+pub fn levels(bits: u32) -> f64 {
+    if bits == 0 {
+        return 1.0;
+    }
+    ((1u64 << (bits.min(31) - 1)) - 1).max(1) as f64
+}
+
+/// Fake-quantize one value given the tensor's max-abs `m`.
+pub fn fake_quant(v: f32, max_abs: f32, bits: u32) -> f32 {
+    if max_abs <= 0.0 {
+        return 0.0;
+    }
+    let l = levels(bits) as f32;
+    let scaled = (v / max_abs * l).round().clamp(-l, l);
+    scaled / l * max_abs
+}
+
+/// Fake-quantize a slice in place; returns the max-abs used.
+pub fn fake_quant_slice(vs: &mut [f32], bits: u32) -> f32 {
+    let m = vs.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    for v in vs.iter_mut() {
+        *v = fake_quant(*v, m, bits);
+    }
+    m
+}
+
+/// Mean-squared quantization error of a slice at a bit depth (used by the
+/// surrogate accuracy oracle to estimate degradation).
+pub fn quant_mse(vs: &[f32], bits: u32) -> f64 {
+    let m = vs.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    if m == 0.0 {
+        return 0.0;
+    }
+    vs.iter()
+        .map(|&v| {
+            let e = (v - fake_quant(v, m, bits)) as f64;
+            e * e
+        })
+        .sum::<f64>()
+        / vs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_table() {
+        assert_eq!(levels(1), 1.0);
+        assert_eq!(levels(2), 1.0);
+        assert_eq!(levels(3), 3.0);
+        assert_eq!(levels(8), 127.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        // Quantizing twice = quantizing once.
+        let m = 2.0;
+        for bits in [2u32, 4, 8] {
+            for v in [-1.7f32, -0.3, 0.0, 0.9, 2.0] {
+                let q1 = fake_quant(v, m, bits);
+                let q2 = fake_quant(q1, m, bits);
+                assert!((q1 - q2).abs() < 1e-6, "bits={bits} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_extremes_and_zero() {
+        assert_eq!(fake_quant(0.0, 1.0, 4), 0.0);
+        assert_eq!(fake_quant(1.0, 1.0, 4), 1.0);
+        assert_eq!(fake_quant(-1.0, 1.0, 4), -1.0);
+    }
+
+    #[test]
+    fn error_shrinks_with_bits() {
+        let vs: Vec<f32> = (0..1000).map(|i| ((i * 37 % 199) as f32 - 99.0) / 99.0).collect();
+        let e2 = quant_mse(&vs, 2);
+        let e4 = quant_mse(&vs, 4);
+        let e8 = quant_mse(&vs, 8);
+        assert!(e2 > e4 && e4 > e8, "{e2} {e4} {e8}");
+        assert!(e8 < 1e-4);
+    }
+
+    #[test]
+    fn grid_spacing() {
+        // 3 bits -> levels = 3 -> grid step m/3.
+        let q = fake_quant(0.4, 1.0, 3);
+        assert!((q - 1.0 / 3.0).abs() < 1e-6);
+    }
+}

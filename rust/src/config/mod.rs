@@ -1,0 +1,158 @@
+//! Run configuration: defaults < JSON config file < CLI flags.
+//!
+//! The config file (`edc.json`, or `--config <path>`) uses the same keys
+//! as the CLI flags. No `serde` offline — parsing goes through
+//! `util::json`.
+
+use crate::compress::CompressionLimits;
+use crate::coordinator::SearchConfig;
+use crate::energy::EnergyConfig;
+use crate::envs::{CompressMode, EnvConfig};
+use crate::rl::sac::SacConfig;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Everything a search run needs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub network: String,
+    pub dataflow: String,
+    pub episodes: usize,
+    pub max_steps: usize,
+    pub seed: u64,
+    pub oracle: String, // "surrogate" | "pjrt"
+    pub mode: CompressMode,
+    pub lambda: f64,
+    pub gamma: f64,
+    pub threshold_frac: f64,
+    pub lr: f32,
+    pub out: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            network: "lenet5".into(),
+            dataflow: "X:Y".into(),
+            episodes: 60,
+            max_steps: 32,
+            seed: 0,
+            oracle: "surrogate".into(),
+            mode: CompressMode::Both,
+            lambda: 3.0,
+            gamma: 0.9,
+            threshold_frac: 0.97,
+            lr: 3e-3,
+            out: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Merge values from a JSON object (file layer).
+    pub fn merge_json(&mut self, j: &Json) {
+        self.network = j.str_or("network", &self.network);
+        self.dataflow = j.str_or("dataflow", &self.dataflow);
+        self.episodes = j.num_or("episodes", self.episodes as f64) as usize;
+        self.max_steps = j.num_or("max_steps", self.max_steps as f64) as usize;
+        self.seed = j.num_or("seed", self.seed as f64) as u64;
+        self.oracle = j.str_or("oracle", &self.oracle);
+        self.lambda = j.num_or("lambda", self.lambda);
+        self.gamma = j.num_or("gamma", self.gamma);
+        self.threshold_frac = j.num_or("threshold_frac", self.threshold_frac);
+        self.lr = j.num_or("lr", self.lr as f64) as f32;
+        if let Some(m) = j.get("mode").and_then(|m| m.as_str()) {
+            self.mode = parse_mode(m).unwrap_or(self.mode);
+        }
+    }
+
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let j = crate::util::json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        self.merge_json(&j);
+        Ok(())
+    }
+
+    /// Build the environment config (Eq. 1–4 knobs).
+    pub fn env_config(&self) -> EnvConfig {
+        EnvConfig {
+            lambda: self.lambda,
+            max_steps: self.max_steps,
+            threshold_frac: self.threshold_frac,
+            mode: self.mode,
+            limits: CompressionLimits {
+                gamma: self.gamma,
+                ..CompressionLimits::default()
+            },
+            ..EnvConfig::default()
+        }
+    }
+
+    pub fn search_config(&self) -> SearchConfig {
+        SearchConfig {
+            episodes: self.episodes,
+            sac: SacConfig {
+                lr: self.lr,
+                alpha_lr: self.lr,
+                updates_per_step: 4,
+                warmup_steps: 96,
+                seed: self.seed,
+                ..SacConfig::default()
+            },
+            verbose: true,
+        }
+    }
+
+    pub fn energy_config(&self) -> EnergyConfig {
+        EnergyConfig::default()
+    }
+}
+
+pub fn parse_mode(s: &str) -> Option<CompressMode> {
+    match s {
+        "both" => Some(CompressMode::Both),
+        "quant" | "quant-only" => Some(CompressMode::QuantOnly),
+        "prune" | "prune-only" => Some(CompressMode::PruneOnly),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn merge_overrides_defaults() {
+        let mut c = RunConfig::default();
+        let j = json::parse(
+            r#"{"network":"vgg16_cifar","episodes":5,"lambda":2.5,"mode":"quant-only"}"#,
+        )
+        .unwrap();
+        c.merge_json(&j);
+        assert_eq!(c.network, "vgg16_cifar");
+        assert_eq!(c.episodes, 5);
+        assert_eq!(c.lambda, 2.5);
+        assert_eq!(c.mode, CompressMode::QuantOnly);
+        // Untouched keys keep defaults.
+        assert_eq!(c.max_steps, 32);
+    }
+
+    #[test]
+    fn env_config_propagates_paper_knobs() {
+        let mut c = RunConfig::default();
+        c.lambda = 2.0;
+        c.gamma = 0.8;
+        let e = c.env_config();
+        assert_eq!(e.lambda, 2.0);
+        assert_eq!(e.limits.gamma, 0.8);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(parse_mode("both"), Some(CompressMode::Both));
+        assert_eq!(parse_mode("quant"), Some(CompressMode::QuantOnly));
+        assert_eq!(parse_mode("nope"), None);
+    }
+}

@@ -1,0 +1,167 @@
+//! Search-outcome persistence (JSON, deterministic field order).
+//!
+//! The paper restores model weights from a checkpoint between episodes;
+//! at the coordinator level we additionally persist the *search* result —
+//! the best (Q, P) vectors and the episode curves — so long sweeps can be
+//! resumed and the report generators can run offline from saved runs.
+
+use super::{EpisodeRecord, SearchOutcome};
+use crate::compress::CompressionState;
+use crate::envs::BestPoint;
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+pub fn outcome_to_json(o: &SearchOutcome) -> Json {
+    let mut j = Json::obj();
+    j.set("network", Json::Str(o.network.clone()))
+        .set("dataflow", Json::Str(o.dataflow.clone()))
+        .set("start_energy", Json::Num(o.start_energy))
+        .set("start_area", Json::Num(o.start_area))
+        .set("base_accuracy", Json::Num(o.base_accuracy))
+        .set(
+            "episodes",
+            Json::Arr(o.episodes.iter().map(episode_to_json).collect()),
+        );
+    if let Some(b) = &o.best {
+        j.set("best", best_to_json(b));
+    }
+    j
+}
+
+fn episode_to_json(e: &EpisodeRecord) -> Json {
+    let mut j = Json::obj();
+    j.set("episode", Json::Num(e.episode as f64))
+        .set("steps", Json::Num(e.steps as f64))
+        .set("total_reward", Json::Num(e.total_reward))
+        .set("energy_curve", Json::from_f64s(&e.energy_curve))
+        .set("accuracy_curve", Json::from_f64s(&e.accuracy_curve));
+    if let Some(b) = &e.best {
+        j.set("best", best_to_json(b));
+    }
+    j
+}
+
+fn best_to_json(b: &BestPoint) -> Json {
+    let mut j = Json::obj();
+    j.set("q", Json::from_f64s(&b.state.q))
+        .set("p", Json::from_f64s(&b.state.p))
+        .set("energy", Json::Num(b.energy))
+        .set("area", Json::Num(b.area))
+        .set("accuracy", Json::Num(b.accuracy))
+        .set("step", Json::Num(b.step as f64));
+    j
+}
+
+fn best_from_json(j: &Json) -> Option<BestPoint> {
+    Some(BestPoint {
+        state: CompressionState::from_parts(
+            j.get("q")?.to_f64s()?,
+            j.get("p")?.to_f64s()?,
+        ),
+        energy: j.num_or("energy", 0.0),
+        area: j.num_or("area", 0.0),
+        accuracy: j.num_or("accuracy", 0.0),
+        step: j.num_or("step", 0.0) as usize,
+    })
+}
+
+pub fn outcome_from_json(j: &Json) -> Option<SearchOutcome> {
+    let episodes = j
+        .get("episodes")?
+        .as_arr()?
+        .iter()
+        .filter_map(|e| {
+            Some(EpisodeRecord {
+                episode: e.num_or("episode", 0.0) as usize,
+                steps: e.num_or("steps", 0.0) as usize,
+                total_reward: e.num_or("total_reward", 0.0),
+                energy_curve: e.get("energy_curve")?.to_f64s()?,
+                accuracy_curve: e.get("accuracy_curve")?.to_f64s()?,
+                best: e.get("best").and_then(best_from_json),
+            })
+        })
+        .collect();
+    Some(SearchOutcome {
+        network: j.str_or("network", ""),
+        dataflow: j.str_or("dataflow", ""),
+        episodes,
+        best: j.get("best").and_then(best_from_json),
+        start_energy: j.num_or("start_energy", 0.0),
+        start_area: j.num_or("start_area", 0.0),
+        base_accuracy: j.num_or("base_accuracy", 0.0),
+    })
+}
+
+/// Save an outcome to disk.
+pub fn save(o: &SearchOutcome, path: &Path) -> anyhow::Result<()> {
+    std::fs::create_dir_all(path.parent().unwrap_or(Path::new(".")))?;
+    std::fs::write(path, outcome_to_json(o).to_string())?;
+    Ok(())
+}
+
+/// Load an outcome from disk.
+pub fn load(path: &Path) -> anyhow::Result<SearchOutcome> {
+    let text = std::fs::read_to_string(path)?;
+    let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    outcome_from_json(&j).ok_or_else(|| anyhow::anyhow!("malformed checkpoint {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_outcome() -> SearchOutcome {
+        SearchOutcome {
+            network: "lenet5".into(),
+            dataflow: "X:Y".into(),
+            episodes: vec![EpisodeRecord {
+                episode: 0,
+                steps: 2,
+                total_reward: 1.5,
+                energy_curve: vec![2e-6, 1e-6],
+                accuracy_curve: vec![0.99, 0.98],
+                best: Some(BestPoint {
+                    state: CompressionState::from_parts(vec![4.0, 3.0], vec![0.5, 0.2]),
+                    energy: 1e-6,
+                    area: 0.4,
+                    accuracy: 0.98,
+                    step: 2,
+                }),
+            }],
+            best: Some(BestPoint {
+                state: CompressionState::from_parts(vec![4.0, 3.0], vec![0.5, 0.2]),
+                energy: 1e-6,
+                area: 0.4,
+                accuracy: 0.98,
+                step: 2,
+            }),
+            start_energy: 5e-6,
+            start_area: 1.0,
+            base_accuracy: 0.993,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_outcome() {
+        let o = sample_outcome();
+        let j = outcome_to_json(&o);
+        let back = outcome_from_json(&j).unwrap();
+        assert_eq!(back.network, o.network);
+        assert_eq!(back.episodes.len(), 1);
+        assert_eq!(back.episodes[0].energy_curve, o.episodes[0].energy_curve);
+        let (b1, b2) = (back.best.unwrap(), o.best.unwrap());
+        assert_eq!(b1.state, b2.state);
+        assert_eq!(b1.energy, b2.energy);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let o = sample_outcome();
+        let dir = std::env::temp_dir().join("edc_ckpt_test");
+        let path = dir.join("outcome.json");
+        save(&o, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.dataflow, "X:Y");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

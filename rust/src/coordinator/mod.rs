@@ -1,0 +1,255 @@
+//! Episode orchestration: runs the SAC agent against a compression
+//! environment for many episodes, tracks the global best admissible
+//! point, and records the curves Figure 5 plots.
+
+pub mod checkpoint;
+pub mod sweep;
+
+use crate::envs::{BestPoint, CompressionEnv};
+use crate::rl::sac::{SacAgent, SacConfig};
+use crate::rl::Env;
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub episodes: usize,
+    pub sac: SacConfig,
+    /// Print per-episode progress via `log`.
+    pub verbose: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            episodes: 40,
+            sac: SacConfig::default(),
+            verbose: false,
+        }
+    }
+}
+
+/// Record of one episode (one Figure-5 curve segment).
+#[derive(Clone, Debug)]
+pub struct EpisodeRecord {
+    pub episode: usize,
+    pub steps: usize,
+    pub total_reward: f64,
+    /// Energy (J) after every step of the episode.
+    pub energy_curve: Vec<f64>,
+    /// Accuracy after every step.
+    pub accuracy_curve: Vec<f64>,
+    /// Best admissible point inside this episode, if any.
+    pub best: Option<BestPoint>,
+}
+
+/// Full search result for one (network, dataflow).
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    pub network: String,
+    pub dataflow: String,
+    pub episodes: Vec<EpisodeRecord>,
+    /// Global best admissible point across all episodes.
+    pub best: Option<BestPoint>,
+    /// Energy (J) and area (mm^2) of the uncompressed start state.
+    pub start_energy: f64,
+    pub start_area: f64,
+    pub base_accuracy: f64,
+}
+
+impl SearchOutcome {
+    /// Energy-efficiency improvement factor (the paper's headline "NX").
+    pub fn energy_improvement(&self) -> f64 {
+        self.best
+            .as_ref()
+            .map(|b| self.start_energy / b.energy)
+            .unwrap_or(1.0)
+    }
+
+    pub fn area_improvement(&self) -> f64 {
+        self.best
+            .as_ref()
+            .map(|b| self.start_area / b.area)
+            .unwrap_or(1.0)
+    }
+}
+
+/// Drives SAC over a `CompressionEnv`.
+pub struct Coordinator {
+    pub env: CompressionEnv,
+    pub agent: SacAgent,
+    pub cfg: SearchConfig,
+}
+
+impl Coordinator {
+    pub fn new(env: CompressionEnv, cfg: SearchConfig) -> Coordinator {
+        let agent = SacAgent::new(env.state_dim(), env.action_dim(), cfg.sac.clone());
+        Coordinator { env, agent, cfg }
+    }
+
+    /// Run the full multi-episode search.
+    pub fn run(&mut self) -> SearchOutcome {
+        // "Before EDCompress" reference = 16-bit activations, 8-bit dense
+        // weights (Figure 6's solid bars) — the improvement factors the
+        // paper headlines are against this point.
+        let rep = crate::energy::baseline_cost(
+            &self.env.net,
+            self.env.dataflow,
+            &self.env.energy_cfg,
+        );
+        let start_energy = rep.total_energy();
+        let start_area = rep.total_area;
+        let base_acc = self.env.accuracy_floor() / self.env.cfg.threshold_frac;
+
+        let mut episodes = Vec::with_capacity(self.cfg.episodes);
+        let mut global_best: Option<BestPoint> = None;
+
+        for ep in 0..self.cfg.episodes {
+            let rec = self.run_episode(ep);
+            if let Some(b) = &rec.best {
+                if global_best
+                    .as_ref()
+                    .map(|g| b.energy < g.energy)
+                    .unwrap_or(true)
+                {
+                    global_best = Some(b.clone());
+                }
+            }
+            if self.cfg.verbose {
+                log::info!(
+                    "episode {ep}: steps={} reward={:.3} best_energy={:.3e}",
+                    rec.steps,
+                    rec.total_reward,
+                    rec.best.as_ref().map(|b| b.energy).unwrap_or(f64::NAN),
+                );
+            }
+            episodes.push(rec);
+        }
+
+        SearchOutcome {
+            network: self.env.net.name.clone(),
+            dataflow: self.env.dataflow.label(),
+            episodes,
+            best: global_best,
+            start_energy,
+            start_area,
+            base_accuracy: base_acc,
+        }
+    }
+
+    fn run_episode(&mut self, episode: usize) -> EpisodeRecord {
+        let mut state = self.env.reset();
+        let mut rec = EpisodeRecord {
+            episode,
+            steps: 0,
+            total_reward: 0.0,
+            energy_curve: Vec::new(),
+            accuracy_curve: Vec::new(),
+            best: None,
+        };
+        loop {
+            let action = self.agent.act(&state);
+            let (next, reward, done) = self.env.step(&action);
+            self.agent.observe(&state, &action, reward, &next, done);
+            self.agent.maybe_update();
+            state = next;
+            rec.steps += 1;
+            rec.total_reward += reward;
+            // Instrument the curves from the env's live state.
+            let rep = crate::energy::evaluate(
+                &self.env.net,
+                self.env.current_state(),
+                self.env.dataflow,
+                &self.env.energy_cfg,
+            );
+            rec.energy_curve.push(rep.total_energy());
+            if let Some(b) = self.env.best() {
+                rec.accuracy_curve.push(b.accuracy);
+            } else {
+                rec.accuracy_curve.push(f64::NAN);
+            }
+            if done {
+                break;
+            }
+        }
+        rec.best = self.env.best().cloned();
+        rec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Dataflow;
+    use crate::energy::EnergyConfig;
+    use crate::envs::{EnvConfig, SurrogateOracle};
+    use crate::model::zoo;
+    use crate::rl::sac::SacConfig;
+
+    fn small_search(episodes: usize, seed: u64) -> SearchOutcome {
+        let net = zoo::lenet5();
+        let oracle = SurrogateOracle::new(&net, seed);
+        let env = CompressionEnv::new(
+            net,
+            Dataflow::XY,
+            Box::new(oracle),
+            EnvConfig {
+                max_steps: 16,
+                ..EnvConfig::default()
+            },
+            EnergyConfig::default(),
+        );
+        let cfg = SearchConfig {
+            episodes,
+            sac: SacConfig {
+                hidden: vec![128, 128],
+                warmup_steps: 96,
+                batch_size: 64,
+                lr: 3e-3,
+                alpha_lr: 3e-3,
+                updates_per_step: 4,
+                seed,
+                ..SacConfig::default()
+            },
+            verbose: false,
+        };
+        Coordinator::new(env, cfg).run()
+    }
+
+    #[test]
+    fn search_finds_energy_savings() {
+        let out = small_search(30, 3);
+        let best = out.best.clone().expect("no admissible point found");
+        assert!(
+            out.energy_improvement() > 2.5,
+            "improvement {}x too small",
+            out.energy_improvement()
+        );
+        assert!(best.accuracy >= 0.97 * out.base_accuracy - 1e-6);
+    }
+
+    #[test]
+    fn episode_records_are_complete() {
+        let out = small_search(3, 1);
+        assert_eq!(out.episodes.len(), 3);
+        for ep in &out.episodes {
+            assert!(ep.steps > 0 && ep.steps <= 16);
+            assert_eq!(ep.energy_curve.len(), ep.steps);
+            assert_eq!(ep.accuracy_curve.len(), ep.steps);
+        }
+    }
+
+    #[test]
+    fn improvement_defaults_to_one_without_best() {
+        let out = SearchOutcome {
+            network: "x".into(),
+            dataflow: "X:Y".into(),
+            episodes: vec![],
+            best: None,
+            start_energy: 1.0,
+            start_area: 1.0,
+            base_accuracy: 0.99,
+        };
+        assert_eq!(out.energy_improvement(), 1.0);
+        assert_eq!(out.area_improvement(), 1.0);
+    }
+}

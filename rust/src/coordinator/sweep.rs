@@ -1,0 +1,112 @@
+//! Multi-dataflow / multi-network sweeps — the workhorse behind every
+//! table and figure. Sweeps run each (network, dataflow) search on its own
+//! OS thread (the searches are independent; no tokio offline, std threads
+//! suffice).
+
+use super::{Coordinator, SearchConfig, SearchOutcome};
+use crate::dataflow::Dataflow;
+use crate::energy::EnergyConfig;
+use crate::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
+use crate::model::Network;
+
+/// One sweep request: a network searched under each dataflow.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub net: Network,
+    pub dataflows: Vec<Dataflow>,
+    pub env: EnvConfig,
+    pub energy: EnergyConfig,
+    pub search: SearchConfig,
+    pub seed: u64,
+}
+
+impl SweepSpec {
+    pub fn paper_four(net: Network, seed: u64) -> SweepSpec {
+        SweepSpec {
+            net,
+            dataflows: Dataflow::paper_four().to_vec(),
+            env: EnvConfig::default(),
+            energy: EnergyConfig::default(),
+            search: SearchConfig::default(),
+            seed,
+        }
+    }
+}
+
+/// Run the sweep with the surrogate oracle, one thread per dataflow.
+pub fn run_surrogate_sweep(spec: &SweepSpec) -> Vec<SearchOutcome> {
+    let mut handles = Vec::new();
+    for (i, df) in spec.dataflows.iter().enumerate() {
+        let net = spec.net.clone();
+        let env_cfg = spec.env.clone();
+        let energy_cfg = spec.energy.clone();
+        let mut search = spec.search.clone();
+        // Decorrelate agent seeds across dataflows but keep determinism.
+        search.sac.seed = spec.seed.wrapping_add(i as u64 * 7919);
+        let df = *df;
+        let oracle_seed = spec.seed.wrapping_add(i as u64);
+        handles.push(std::thread::spawn(move || {
+            let oracle = SurrogateOracle::new(&net, oracle_seed);
+            let env = CompressionEnv::new(net, df, Box::new(oracle), env_cfg, energy_cfg);
+            Coordinator::new(env, search).run()
+        }));
+    }
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("sweep worker panicked"))
+        .collect()
+}
+
+/// Rank all 15 dataflows for a network at a fixed compression state —
+/// the "find the optimal dataflow type" use-case of the abstract.
+pub fn rank_dataflows(
+    net: &Network,
+    state: &crate::compress::CompressionState,
+    cfg: &EnergyConfig,
+) -> Vec<(Dataflow, f64, f64)> {
+    let mut rows: Vec<(Dataflow, f64, f64)> = Dataflow::all_fifteen()
+        .into_iter()
+        .map(|df| {
+            let rep = crate::energy::evaluate(net, state, df, cfg);
+            (df, rep.total_energy(), rep.total_area)
+        })
+        .collect();
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CompressionState;
+    use crate::model::zoo;
+    use crate::rl::sac::SacConfig;
+
+    #[test]
+    fn sweep_runs_all_dataflows_in_parallel() {
+        let mut spec = SweepSpec::paper_four(zoo::lenet5(), 1);
+        spec.search.episodes = 2;
+        spec.env.max_steps = 8;
+        spec.search.sac = SacConfig {
+            hidden: vec![32, 32],
+            warmup_steps: 16,
+            batch_size: 16,
+            ..SacConfig::default()
+        };
+        let outs = run_surrogate_sweep(&spec);
+        assert_eq!(outs.len(), 4);
+        let labels: Vec<&str> = outs.iter().map(|o| o.dataflow.as_str()).collect();
+        assert_eq!(labels, vec!["X:Y", "FX:FY", "X:FX", "CI:CO"]);
+    }
+
+    #[test]
+    fn rank_orders_by_energy() {
+        let net = zoo::lenet5();
+        let s = CompressionState::uniform(&net, 8.0, 1.0);
+        let rows = rank_dataflows(&net, &s, &EnergyConfig::default());
+        assert_eq!(rows.len(), 15);
+        for w in rows.windows(2) {
+            assert!(w[0].1 <= w[1].1, "not sorted by energy");
+        }
+    }
+}

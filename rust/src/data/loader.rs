@@ -1,0 +1,109 @@
+//! Mini-batch iteration with per-epoch shuffling.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Infinite batch iterator over a dataset (reshuffles each epoch).
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+    pub epochs: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seed: u64) -> BatchIter<'a> {
+        assert!(batch > 0 && batch <= data.n, "batch {} vs n {}", batch, data.n);
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..data.n).collect();
+        rng.shuffle(&mut order);
+        BatchIter {
+            data,
+            batch,
+            order,
+            pos: 0,
+            rng,
+            epochs: 0,
+        }
+    }
+
+    /// Next batch as (images [B*H*W*C], labels [B]).
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        if self.pos + self.batch > self.data.n {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+            self.epochs += 1;
+        }
+        let sz = self.data.image_elems();
+        let mut images = Vec::with_capacity(self.batch * sz);
+        let mut labels = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            let idx = self.order[self.pos + i];
+            images.extend_from_slice(self.data.image(idx));
+            labels.push(self.data.labels[idx]);
+        }
+        self.pos += self.batch;
+        (images, labels)
+    }
+
+    /// Iterate the dataset once in fixed order (for eval), yielding full
+    /// batches only (the tail partial batch is dropped, as the AOT graphs
+    /// have a fixed batch dimension).
+    pub fn eval_batches(data: &'a Dataset, batch: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
+        let sz = data.image_elems();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + batch <= data.n {
+            let mut images = Vec::with_capacity(batch * sz);
+            let mut labels = Vec::with_capacity(batch);
+            for k in i..i + batch {
+                images.extend_from_slice(data.image(k));
+                labels.push(data.labels[k]);
+            }
+            out.push((images, labels));
+            i += batch;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist;
+
+    #[test]
+    fn batches_have_right_shapes() {
+        let d = synth_mnist(50, 0);
+        let mut it = BatchIter::new(&d, 16, 1);
+        let (x, y) = it.next_batch();
+        assert_eq!(x.len(), 16 * 28 * 28);
+        assert_eq!(y.len(), 16);
+    }
+
+    #[test]
+    fn epoch_rollover_reshuffles() {
+        let d = synth_mnist(20, 0);
+        let mut it = BatchIter::new(&d, 8, 1);
+        let mut seen = 0;
+        while it.epochs == 0 {
+            it.next_batch();
+            seen += 1;
+            assert!(seen < 10, "epoch never rolled");
+        }
+        assert!(it.epochs >= 1);
+    }
+
+    #[test]
+    fn eval_batches_cover_dataset_without_tail() {
+        let d = synth_mnist(50, 0);
+        let batches = BatchIter::eval_batches(&d, 16);
+        assert_eq!(batches.len(), 3); // 48 of 50 samples
+        for (x, y) in &batches {
+            assert_eq!(x.len(), 16 * 28 * 28);
+            assert_eq!(y.len(), 16);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Procedural digit glyphs: a stroke-skeleton per class rendered with
+//! per-sample jitter. Deterministic given the seed.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Stroke skeletons on a 7-segment-plus-diagonals grid in [0,1]^2.
+/// Each stroke is (x0, y0, x1, y1).
+fn glyph(class: usize) -> &'static [(f32, f32, f32, f32)] {
+    match class {
+        0 => &[
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+            (0.3, 0.8, 0.3, 0.2),
+        ],
+        1 => &[(0.5, 0.2, 0.5, 0.8), (0.4, 0.3, 0.5, 0.2)],
+        2 => &[
+            (0.3, 0.25, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.5),
+            (0.7, 0.5, 0.3, 0.8),
+            (0.3, 0.8, 0.7, 0.8),
+        ],
+        3 => &[
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.8),
+            (0.4, 0.5, 0.7, 0.5),
+            (0.3, 0.8, 0.7, 0.8),
+        ],
+        4 => &[
+            (0.35, 0.2, 0.3, 0.55),
+            (0.3, 0.55, 0.7, 0.55),
+            (0.65, 0.2, 0.65, 0.8),
+        ],
+        5 => &[
+            (0.7, 0.2, 0.3, 0.2),
+            (0.3, 0.2, 0.3, 0.5),
+            (0.3, 0.5, 0.7, 0.55),
+            (0.7, 0.55, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+        ],
+        6 => &[
+            (0.65, 0.2, 0.35, 0.35),
+            (0.35, 0.35, 0.3, 0.8),
+            (0.3, 0.8, 0.7, 0.8),
+            (0.7, 0.8, 0.7, 0.55),
+            (0.7, 0.55, 0.3, 0.55),
+        ],
+        7 => &[(0.3, 0.2, 0.7, 0.2), (0.7, 0.2, 0.45, 0.8)],
+        8 => &[
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+            (0.3, 0.8, 0.3, 0.2),
+            (0.3, 0.5, 0.7, 0.5),
+        ],
+        _ => &[
+            (0.7, 0.45, 0.3, 0.45),
+            (0.3, 0.45, 0.3, 0.2),
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.8),
+        ],
+    }
+}
+
+/// Render a stroke with soft (Gaussian-falloff) thickness into `img`.
+fn draw_stroke(img: &mut [f32], h: usize, w: usize, s: (f32, f32, f32, f32), thick: f32) {
+    let (x0, y0, x1, y1) = s;
+    let steps = 40;
+    for i in 0..=steps {
+        let t = i as f32 / steps as f32;
+        let cx = (x0 + (x1 - x0) * t) * w as f32;
+        let cy = (y0 + (y1 - y0) * t) * h as f32;
+        let r = (thick * 2.5).ceil() as i32;
+        for dy in -r..=r {
+            for dx in -r..=r {
+                let px = cx as i32 + dx;
+                let py = cy as i32 + dy;
+                if px < 0 || py < 0 || px >= w as i32 || py >= h as i32 {
+                    continue;
+                }
+                let d2 = ((px as f32 - cx).powi(2) + (py as f32 - cy).powi(2)) / (thick * thick);
+                let v = (-d2).exp();
+                let idx = py as usize * w + px as usize;
+                img[idx] = (img[idx] + v).min(1.0);
+            }
+        }
+    }
+}
+
+/// Generate `n` samples of 28x28x1 digit images, classes balanced.
+pub fn synth_mnist(n: usize, seed: u64) -> Dataset {
+    let (h, w) = (28usize, 28usize);
+    let mut rng = Rng::new(seed ^ 0x5EED_D161);
+    let mut images = vec![0.0f32; n * h * w];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        labels.push(class as i32);
+        let img = &mut images[i * h * w..(i + 1) * h * w];
+        // Per-sample jitter: translation, scale, thickness, noise.
+        let ox = rng.range(-0.08, 0.08) as f32;
+        let oy = rng.range(-0.08, 0.08) as f32;
+        let scale = rng.range(0.85, 1.15) as f32;
+        let thick = rng.range(0.9, 1.6) as f32;
+        for &(x0, y0, x1, y1) in glyph(class) {
+            let tf = |x: f32, y: f32| {
+                (
+                    ((x - 0.5) * scale + 0.5 + ox).clamp(0.05, 0.95),
+                    ((y - 0.5) * scale + 0.5 + oy).clamp(0.05, 0.95),
+                )
+            };
+            let (ax, ay) = tf(x0, y0);
+            let (bx, by) = tf(x1, y1);
+            draw_stroke(img, h, w, (ax, ay, bx, by), thick);
+        }
+        for v in img.iter_mut() {
+            *v += rng.normal_ms(0.0, 0.05) as f32;
+            *v = v.clamp(0.0, 1.0);
+        }
+    }
+    // Shuffle samples (keeping image/label pairing).
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let sz = h * w;
+    let mut shuffled_images = vec![0.0f32; n * sz];
+    let mut shuffled_labels = vec![0i32; n];
+    for (dst, &src) in order.iter().enumerate() {
+        shuffled_images[dst * sz..(dst + 1) * sz].copy_from_slice(&images[src * sz..(src + 1) * sz]);
+        shuffled_labels[dst] = labels[src];
+    }
+    Dataset {
+        images: shuffled_images,
+        labels: shuffled_labels,
+        n,
+        h,
+        w,
+        c: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = synth_mnist(20, 7);
+        let b = synth_mnist(20, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let d = synth_mnist(100, 1);
+        let mut counts = [0usize; 10];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn pixels_in_range_and_nonempty() {
+        let d = synth_mnist(30, 2);
+        assert!(d.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Every image must have some ink.
+        for i in 0..d.n {
+            let ink: f32 = d.image(i).iter().sum();
+            assert!(ink > 5.0, "image {i} nearly blank (ink {ink})");
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean intra-class L2 distance must be well below inter-class —
+        // otherwise the task is unlearnable and fine-tune accuracy
+        // would be meaningless.
+        let d = synth_mnist(200, 3);
+        let sz = d.image_elems();
+        let mut by_class: Vec<Vec<&[f32]>> = vec![Vec::new(); 10];
+        for i in 0..d.n {
+            by_class[d.labels[i] as usize].push(&d.images[i * sz..(i + 1) * sz]);
+        }
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut ni = 0;
+        let mut nx = 0;
+        for c in 0..10 {
+            for i in 1..by_class[c].len().min(5) {
+                intra += dist(by_class[c][0], by_class[c][i]);
+                ni += 1;
+            }
+            let c2 = (c + 1) % 10;
+            inter += dist(by_class[c][0], by_class[c2][0]);
+            nx += 1;
+        }
+        let (intra, inter) = (intra / ni as f64, inter / nx as f64);
+        assert!(
+            inter > 1.5 * intra,
+            "classes not separable: intra {intra} inter {inter}"
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! Dataflow taxonomy and spatial-reuse analysis (paper §3, Table 1).
+//!
+//! A *dataflow* `A:B` unrolls two of the six loops of Algorithm 1 across a
+//! 2-D array of processing elements. Which loops are unrolled decides how
+//! often each operand (input feature map `I`, weights `W`, partial sums
+//! `O`) must travel between SRAM and the array — the dominant energy term.
+//!
+//! The analysis here is generic over all C(6,2) = 15 loop pairs; the four
+//! dataflows the paper evaluates (`X:Y`, `FX:FY`, `X:FX`, `CI:CO`) are
+//! surfaced as constants.
+
+pub mod spatial;
+
+/// The six loops of a convolutional layer (Algorithm 1 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LoopDim {
+    Co,
+    Ci,
+    X,
+    Y,
+    Fx,
+    Fy,
+}
+
+impl LoopDim {
+    pub const ALL: [LoopDim; 6] = [
+        LoopDim::Co,
+        LoopDim::Ci,
+        LoopDim::X,
+        LoopDim::Y,
+        LoopDim::Fx,
+        LoopDim::Fy,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            LoopDim::Co => "CO",
+            LoopDim::Ci => "CI",
+            LoopDim::X => "X",
+            LoopDim::Y => "Y",
+            LoopDim::Fx => "FX",
+            LoopDim::Fy => "FY",
+        }
+    }
+
+    /// Does the input feature map `I[ci][x+fx][y+fy]` vary along this loop?
+    pub fn indexes_input(self) -> bool {
+        !matches!(self, LoopDim::Co)
+    }
+
+    /// Does the weight tensor `W[co][ci][fx][fy]` vary along this loop?
+    pub fn indexes_weight(self) -> bool {
+        !matches!(self, LoopDim::X | LoopDim::Y)
+    }
+
+    /// Does the output `O[co][x][y]` vary along this loop?
+    pub fn indexes_output(self) -> bool {
+        matches!(self, LoopDim::Co | LoopDim::X | LoopDim::Y)
+    }
+
+    /// Is this a reduction loop (accumulated into the same output)?
+    pub fn is_reduction(self) -> bool {
+        !self.indexes_output()
+    }
+}
+
+/// A dataflow: the (unordered) pair of spatially-unrolled loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Dataflow {
+    pub a: LoopDim,
+    pub b: LoopDim,
+}
+
+impl Dataflow {
+    pub fn new(a: LoopDim, b: LoopDim) -> Dataflow {
+        assert_ne!(a, b, "dataflow must unroll two distinct loops");
+        // Canonical order for Eq/Hash stability.
+        if a <= b {
+            Dataflow { a, b }
+        } else {
+            Dataflow { a: b, b: a }
+        }
+    }
+
+    /// The four dataflows of the paper's evaluation (Table 1).
+    pub const XY: Dataflow = Dataflow {
+        a: LoopDim::X,
+        b: LoopDim::Y,
+    };
+    pub const FXFY: Dataflow = Dataflow {
+        a: LoopDim::Fx,
+        b: LoopDim::Fy,
+    };
+    pub const XFX: Dataflow = Dataflow {
+        a: LoopDim::X,
+        b: LoopDim::Fx,
+    };
+    pub const CICO: Dataflow = Dataflow {
+        a: LoopDim::Co,
+        b: LoopDim::Ci,
+    };
+
+    /// The paper's four evaluated dataflows, in table order.
+    pub fn paper_four() -> [Dataflow; 4] {
+        [Self::XY, Self::FXFY, Self::XFX, Self::CICO]
+    }
+
+    /// All 15 loop pairs (paper §3: "there are C(6,2)=15 possibilities").
+    pub fn all_fifteen() -> Vec<Dataflow> {
+        let mut out = Vec::with_capacity(15);
+        for i in 0..LoopDim::ALL.len() {
+            for j in (i + 1)..LoopDim::ALL.len() {
+                out.push(Dataflow::new(LoopDim::ALL[i], LoopDim::ALL[j]));
+            }
+        }
+        out
+    }
+
+    /// Human-readable `A:B` label matching the paper's notation.
+    pub fn label(&self) -> String {
+        // Paper prints e.g. "X:Y", "FX:FY", "X:FX", "CI:CO".
+        let order = [
+            LoopDim::X,
+            LoopDim::Y,
+            LoopDim::Fx,
+            LoopDim::Fy,
+            LoopDim::Ci,
+            LoopDim::Co,
+        ];
+        let pos = |d: LoopDim| order.iter().position(|&o| o == d).unwrap();
+        let (first, second) = if pos(self.a) <= pos(self.b) {
+            (self.a, self.b)
+        } else {
+            (self.b, self.a)
+        };
+        format!("{}:{}", first.label(), second.label())
+    }
+
+    /// Parse "X:Y"-style labels (case-insensitive).
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        let up = s.to_uppercase();
+        let mut parts = up.split(':');
+        let pa = parse_dim(parts.next()?)?;
+        let pb = parse_dim(parts.next()?)?;
+        if parts.next().is_some() || pa == pb {
+            return None;
+        }
+        Some(Dataflow::new(pa, pb))
+    }
+
+    pub fn dims(&self) -> [LoopDim; 2] {
+        [self.a, self.b]
+    }
+}
+
+fn parse_dim(s: &str) -> Option<LoopDim> {
+    match s.trim() {
+        "CO" => Some(LoopDim::Co),
+        "CI" => Some(LoopDim::Ci),
+        "X" => Some(LoopDim::X),
+        "Y" => Some(LoopDim::Y),
+        "FX" => Some(LoopDim::Fx),
+        "FY" => Some(LoopDim::Fy),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifteen_distinct_dataflows() {
+        let all = Dataflow::all_fifteen();
+        assert_eq!(all.len(), 15);
+        let mut set = std::collections::HashSet::new();
+        for df in &all {
+            assert!(set.insert(*df), "duplicate {df:?}");
+        }
+    }
+
+    #[test]
+    fn labels_match_paper_notation() {
+        assert_eq!(Dataflow::XY.label(), "X:Y");
+        assert_eq!(Dataflow::FXFY.label(), "FX:FY");
+        assert_eq!(Dataflow::XFX.label(), "X:FX");
+        assert_eq!(Dataflow::CICO.label(), "CI:CO");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for df in Dataflow::all_fifteen() {
+            assert_eq!(Dataflow::parse(&df.label()), Some(df));
+        }
+        assert_eq!(Dataflow::parse("ci:co"), Some(Dataflow::CICO));
+        assert_eq!(Dataflow::parse("X:X"), None);
+        assert_eq!(Dataflow::parse("bogus"), None);
+    }
+
+    #[test]
+    fn index_sets_match_algorithm1() {
+        // I[ci][x+fx][y+fy]: varies with everything except co.
+        assert!(!LoopDim::Co.indexes_input());
+        assert!(LoopDim::Fx.indexes_input());
+        // W[co][ci][fx][fy]: fixed along x, y.
+        assert!(!LoopDim::X.indexes_weight());
+        assert!(!LoopDim::Y.indexes_weight());
+        assert!(LoopDim::Co.indexes_weight());
+        // O[co][x][y]: reduction loops are ci, fx, fy.
+        assert!(LoopDim::Ci.is_reduction());
+        assert!(LoopDim::Fx.is_reduction());
+        assert!(LoopDim::Fy.is_reduction());
+        assert!(!LoopDim::X.is_reduction());
+    }
+
+    #[test]
+    fn canonical_ordering() {
+        let d1 = Dataflow::new(LoopDim::Y, LoopDim::X);
+        let d2 = Dataflow::new(LoopDim::X, LoopDim::Y);
+        assert_eq!(d1, d2);
+    }
+}

@@ -1,0 +1,211 @@
+//! Spatial mapping: PE-array sizing, tiling and operand reuse factors.
+//!
+//! For a layer `L` and dataflow `A:B`, the accelerator instantiates a
+//! `|A| x |B|` PE array (tiled down to `pe_cap` when the trip counts are
+//! large — real arrays are bounded; the paper's per-layer area numbers
+//! reflect each layer's own array). Reuse factors follow directly from
+//! Algorithm 1's index sets:
+//!
+//! - operand `T` is **spatially reused** across every unrolled loop that
+//!   does *not* index `T` (all PEs along that axis see the same value);
+//! - output partial sums are **spatially reduced** across unrolled
+//!   reduction loops (adder tree), halving result traffic.
+
+use super::{Dataflow, LoopDim};
+use crate::model::{LayerKind, LayerSpec};
+
+/// Result of mapping one layer onto one dataflow.
+#[derive(Clone, Copy, Debug)]
+pub struct Mapping {
+    /// Trip counts of the two unrolled loops (after depthwise adjustment).
+    pub unroll_a: usize,
+    pub unroll_b: usize,
+    /// PE array actually instantiated (capped + tiled).
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// Number of sequential tiles needed to cover the full unroll space.
+    pub tiles: u64,
+    /// Spatial reuse factors per operand (>= 1).
+    pub reuse_input: f64,
+    pub reuse_weight: f64,
+    pub reuse_output: f64,
+    /// Spatial reduction factor for partial sums (>= 1).
+    pub reduction: f64,
+    /// Fraction of PEs doing useful work in the steady state (<= 1).
+    pub utilization: f64,
+}
+
+impl Mapping {
+    pub fn pes(&self) -> u64 {
+        (self.pe_rows as u64) * (self.pe_cols as u64)
+    }
+}
+
+/// Hardware bound on the PE array (both axes). The paper sizes each
+/// dataflow's array to the layer (`A·B` PEs); we keep that behaviour by
+/// default but cap at `pe_cap` per axis to keep CI:CO on 4096-wide FC
+/// layers physical (matches the paper's blow-up in Table 4 area).
+pub const DEFAULT_PE_CAP: usize = 4096;
+
+/// Compute the mapping of `layer` under `df`.
+pub fn map_layer(layer: &LayerSpec, df: Dataflow, pe_cap: usize) -> Mapping {
+    let trip = |d: LoopDim| -> usize {
+        let t = effective_trip(layer, d);
+        t.max(1)
+    };
+    let ta = trip(df.a);
+    let tb = trip(df.b);
+
+    let pe_rows = ta.min(pe_cap);
+    let pe_cols = tb.min(pe_cap);
+    let tiles_a = ta.div_ceil(pe_rows) as u64;
+    let tiles_b = tb.div_ceil(pe_cols) as u64;
+
+    // Utilization: ragged final tiles leave PEs idle.
+    let util_a = ta as f64 / (tiles_a as f64 * pe_rows as f64);
+    let util_b = tb as f64 / (tiles_b as f64 * pe_cols as f64);
+
+    let reuse = |indexes: fn(LoopDim) -> bool| -> f64 {
+        let mut r = 1.0;
+        if !indexes(df.a) {
+            r *= pe_rows as f64;
+        }
+        if !indexes(df.b) {
+            r *= pe_cols as f64;
+        }
+        r
+    };
+    let mut reduction = 1.0;
+    if df.a.is_reduction() {
+        reduction *= pe_rows as f64;
+    }
+    if df.b.is_reduction() {
+        reduction *= pe_cols as f64;
+    }
+
+    Mapping {
+        unroll_a: ta,
+        unroll_b: tb,
+        pe_rows,
+        pe_cols,
+        tiles: tiles_a * tiles_b,
+        reuse_input: reuse(LoopDim::indexes_input),
+        reuse_weight: reuse(LoopDim::indexes_weight),
+        reuse_output: reuse(LoopDim::indexes_output),
+        reduction,
+        utilization: util_a * util_b,
+    }
+}
+
+/// Depthwise conv has a single input channel per group, so `CI`-unrolling
+/// degenerates to 1; dense layers have unit spatial/filter loops.
+fn effective_trip(layer: &LayerSpec, d: LoopDim) -> usize {
+    match (layer.kind, d) {
+        (LayerKind::DepthwiseConv, LoopDim::Ci) => 1,
+        _ => layer.trip(d),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn conv_layer() -> LayerSpec {
+        // conv2 of LeNet-5: CO=50, CI=20, X=Y=8, FX=FY=5.
+        zoo::lenet5().layers[2].clone()
+    }
+
+    #[test]
+    fn xy_reuses_weights_spatially() {
+        // X:Y unrolls the two output-pixel loops. Weights are not indexed
+        // by x or y, so every PE shares the same weight: reuse = 8*8.
+        let m = map_layer(&conv_layer(), Dataflow::XY, DEFAULT_PE_CAP);
+        assert_eq!((m.pe_rows, m.pe_cols), (8, 8));
+        assert_eq!(m.reuse_weight, 64.0);
+        assert_eq!(m.reuse_output, 1.0); // outputs all distinct
+        assert_eq!(m.reduction, 1.0); // no reduction loops unrolled
+    }
+
+    #[test]
+    fn fxfy_accumulates_spatially() {
+        // FX:FY unrolls the filter loops: both are reduction loops, so
+        // partial sums collapse through a 5x5 adder tree.
+        let m = map_layer(&conv_layer(), Dataflow::FXFY, DEFAULT_PE_CAP);
+        assert_eq!((m.pe_rows, m.pe_cols), (5, 5));
+        assert_eq!(m.reduction, 25.0);
+        assert_eq!(m.reuse_output, 25.0); // O not indexed by fx/fy
+        assert_eq!(m.reuse_weight, 1.0);
+        assert_eq!(m.reuse_input, 1.0);
+    }
+
+    #[test]
+    fn cico_reuses_inputs_co_times() {
+        // CI:CO: inputs not indexed by co -> reused CO times; weights all
+        // distinct; partial sums reduced CI-ways. Matches paper §3 prose.
+        let m = map_layer(&conv_layer(), Dataflow::CICO, DEFAULT_PE_CAP);
+        assert_eq!(m.reuse_input, 50.0); // CO = 50
+        assert_eq!(m.reuse_weight, 1.0);
+        assert_eq!(m.reduction, 20.0); // CI = 20
+    }
+
+    #[test]
+    fn xfx_mixed_reuse() {
+        // X:FX: weights not indexed by x -> reused X times; outputs not
+        // indexed by fx -> reduced FX-ways.
+        let m = map_layer(&conv_layer(), Dataflow::XFX, DEFAULT_PE_CAP);
+        assert_eq!(m.reuse_weight, 8.0); // X = 8
+        assert_eq!(m.reduction, 5.0); // FX = 5
+    }
+
+    #[test]
+    fn pe_cap_tiles_large_layers() {
+        let net = zoo::vgg16();
+        let fc6 = net.layers.iter().find(|l| l.name == "fc6").unwrap();
+        // CI:CO on fc6: 25088 x 4096 -> capped at 4096 per axis.
+        let m = map_layer(fc6, Dataflow::CICO, DEFAULT_PE_CAP);
+        assert!(m.pe_rows <= DEFAULT_PE_CAP && m.pe_cols <= DEFAULT_PE_CAP);
+        assert!(m.tiles > 1);
+        assert!(m.utilization > 0.0 && m.utilization <= 1.0);
+    }
+
+    #[test]
+    fn depthwise_ci_degenerates() {
+        let net = zoo::mobilenet_v1();
+        let dw = net
+            .layers
+            .iter()
+            .find(|l| l.kind == LayerKind::DepthwiseConv)
+            .unwrap();
+        let m = map_layer(dw, Dataflow::CICO, DEFAULT_PE_CAP);
+        // CI axis is 1 (depthwise): array collapses to a column.
+        assert!(m.pe_rows == 1 || m.pe_cols == 1);
+    }
+
+    #[test]
+    fn dense_layers_have_unit_spatial_loops() {
+        let net = zoo::lenet5();
+        let fc1 = net.layers.iter().find(|l| l.name == "fc1").unwrap();
+        let m = map_layer(fc1, Dataflow::XY, DEFAULT_PE_CAP);
+        assert_eq!((m.pe_rows, m.pe_cols), (1, 1));
+        assert_eq!(m.pes(), 1);
+    }
+
+    #[test]
+    fn utilization_bounds_for_all_dataflows() {
+        let net = zoo::vgg16_cifar();
+        for df in Dataflow::all_fifteen() {
+            for l in net.layers.iter().filter(|l| l.is_compute()) {
+                let m = map_layer(l, df, DEFAULT_PE_CAP);
+                assert!(
+                    m.utilization > 0.0 && m.utilization <= 1.0 + 1e-12,
+                    "{} {} util {}",
+                    df.label(),
+                    l.name,
+                    m.utilization
+                );
+                assert!(m.reuse_input >= 1.0 && m.reuse_weight >= 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Area model: logic LUTs of the PE array + RAM for weights and feature
+//! maps (paper §3.1 and §4).
+
+use super::constants::EnergyConfig;
+use super::mac;
+use crate::dataflow::spatial::Mapping;
+use crate::model::LayerSpec;
+
+/// Logic area of the PE array for one layer at weight depth `q`:
+/// multiplier + accumulator LUTs plus operand/psum registers per PE.
+///
+/// Pruning does **not** shrink logic area — a pruned weight only gates the
+/// multiplier's activity, the silicon is still there. That asymmetry is
+/// exactly the paper's §4.3 observation ("pruning ... is not good at
+/// decreasing the area of processing elements").
+pub fn logic_area(mapping: &Mapping, q: u32, cfg: &EnergyConfig) -> f64 {
+    let luts = mac::pe_luts(q, cfg) as f64 * cfg.lut_area;
+    let reg_bits = (cfg.act_bits + q + cfg.acc_bits(q)) as f64;
+    let regs = reg_bits * cfg.reg_bit_area;
+    mapping.pes() as f64 * (luts + regs)
+}
+
+/// Bits needed to store one layer's surviving weights. Pruned layers pay
+/// `idx_bits` of sparse-index overhead per surviving weight — unless the
+/// dense format is cheaper (mild pruning), in which case the compiler
+/// picks dense. The min keeps storage monotone in `p` (property-tested).
+pub fn weight_storage_bits(layer: &LayerSpec, q: u32, p: f64, cfg: &EnergyConfig) -> f64 {
+    let params = layer.params() as f64;
+    let sparse = params * p * (q as f64 + cfg.idx_bits as f64);
+    let dense = params * q as f64;
+    sparse.min(dense)
+}
+
+/// RAM area for a bit count.
+pub fn ram_area(bits: f64, cfg: &EnergyConfig) -> f64 {
+    bits * cfg.ram_bit_area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{spatial, Dataflow};
+    use crate::model::zoo;
+
+    #[test]
+    fn quantization_shrinks_logic_area() {
+        let cfg = EnergyConfig::default();
+        let net = zoo::lenet5();
+        let m = spatial::map_layer(&net.layers[0], Dataflow::XY, cfg.pe_cap);
+        assert!(logic_area(&m, 8, &cfg) > logic_area(&m, 3, &cfg));
+    }
+
+    #[test]
+    fn pruning_does_not_shrink_logic_area() {
+        // Same mapping, same q: area identical regardless of p — the
+        // paper's §4.3 asymmetry. (p is not even an argument.)
+        let cfg = EnergyConfig::default();
+        let net = zoo::lenet5();
+        let m = spatial::map_layer(&net.layers[0], Dataflow::CICO, cfg.pe_cap);
+        let a = logic_area(&m, 8, &cfg);
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn storage_bits_account_for_sparse_index() {
+        let cfg = EnergyConfig::default();
+        let net = zoo::lenet5();
+        let fc1 = net.layers.iter().find(|l| l.name == "fc1").unwrap();
+        let dense = weight_storage_bits(fc1, 8, 1.0, &cfg);
+        assert_eq!(dense, fc1.params() as f64 * 8.0);
+        let half = weight_storage_bits(fc1, 8, 0.5, &cfg);
+        assert_eq!(half, fc1.params() as f64 * 0.5 * (8.0 + 4.0));
+        // Pruning to 50% at 8 bits still wins despite index overhead.
+        assert!(half < dense);
+    }
+
+    #[test]
+    fn ram_area_linear() {
+        let cfg = EnergyConfig::default();
+        assert!((ram_area(2000.0, &cfg) / ram_area(1000.0, &cfg) - 2.0).abs() < 1e-12);
+    }
+}

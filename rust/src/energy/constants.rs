@@ -1,0 +1,107 @@
+//! Technology constants of the cost model.
+//!
+//! Calibrated once against the paper's reported magnitudes (Table 4:
+//! LeNet-5 total energy O(1–10 µJ) and area O(0.1–10 mm²) on a Virtex
+//! UltraScale; Fig. 6's ~55%/45% PE-vs-movement split) and then
+//! **frozen** — every number the benches report is a ratio over a
+//! baseline evaluated with the same constants, exactly like the paper's
+//! normalized tables.
+
+/// All tunables of the energy/area model.
+#[derive(Clone, Debug)]
+pub struct EnergyConfig {
+    /// Activation (feature-map) bit width in the *optimized* datapath.
+    /// Paper §4: "parameters in the feature map are quantized by 10 bits".
+    pub act_bits: u32,
+    /// Activation width of the pre-optimization baseline (16-bit float
+    /// activations — Figure 6 "before").
+    pub baseline_act_bits: u32,
+    /// Extra accumulator guard bits on top of `act_bits + q`
+    /// (log2 of the deepest reduction).
+    pub acc_margin: u32,
+    /// Index overhead per stored weight in sparse (pruned) format, bits.
+    pub idx_bits: u32,
+    /// Per-axis cap on the PE array (tiling bound).
+    pub pe_cap: usize,
+
+    // ---- Energy constants (joules) ----
+    /// Switching energy per active adder cell per MAC.
+    pub e_adder: f64,
+    /// SRAM (on-chip RAM block) access energy per bit.
+    pub e_sram_bit: f64,
+    /// Array-distribution (SRAM -> PE edge wires / NoC) energy per bit.
+    pub e_noc_bit: f64,
+    /// PE register access energy per bit.
+    pub e_reg_bit: f64,
+
+    // ---- Area constants (mm^2) ----
+    /// Area of one 6-input LUT.
+    pub lut_area: f64,
+    /// RAM area per bit.
+    pub ram_bit_area: f64,
+    /// Register area per bit (flip-flop in the PE).
+    pub reg_bit_area: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        EnergyConfig {
+            act_bits: 10,
+            baseline_act_bits: 16,
+            acc_margin: 6,
+            idx_bits: 4,
+            pe_cap: 4096,
+            // ~0.02 pJ per adder cell per MAC: a 16x8 multiply + 30-bit
+            // accumulate (~150 cells) costs ~3 pJ — an FPGA LUT-logic
+            // figure.
+            e_adder: 0.02e-12,
+            // ~0.35 pJ/bit on-chip block-RAM access.
+            e_sram_bit: 0.35e-12,
+            // Edge-distribution wires ~an order below SRAM.
+            e_noc_bit: 0.04e-12,
+            // PE-port registers.
+            e_reg_bit: 0.06e-12,
+            // ~0.6 um^2 per LUT.
+            lut_area: 0.6e-6,
+            // ~0.12 um^2 per RAM bit.
+            ram_bit_area: 0.12e-6,
+            // ~0.25 um^2 per register bit.
+            reg_bit_area: 0.25e-6,
+        }
+    }
+}
+
+impl EnergyConfig {
+    /// Config with a different PE cap (CLI `--pe-cap`).
+    pub fn with_pe_cap(mut self, cap: usize) -> Self {
+        self.pe_cap = cap;
+        self
+    }
+
+    /// Accumulator width at weight depth `q` (grows with operand widths).
+    pub fn acc_bits(&self, q: u32) -> u32 {
+        self.act_bits + q + self.acc_margin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_physical() {
+        let c = EnergyConfig::default();
+        assert!(c.e_reg_bit < c.e_sram_bit, "registers must be cheaper than SRAM");
+        assert!(c.e_noc_bit < c.e_sram_bit, "wires must be cheaper than SRAM");
+        assert!(c.act_bits <= c.baseline_act_bits);
+        assert!(c.lut_area > 0.0 && c.ram_bit_area > 0.0);
+    }
+
+    #[test]
+    fn acc_width_tracks_quantization() {
+        let c = EnergyConfig::default();
+        assert_eq!(c.acc_bits(8), 24);
+        assert_eq!(c.acc_bits(2), 18);
+        assert!(c.acc_bits(8) > c.acc_bits(2));
+    }
+}

@@ -1,0 +1,103 @@
+//! Processing-element (MAC logic) energy and LUT counts.
+//!
+//! The paper's Figure 2(b) argument: an array multiplier is a grid of
+//! adders; reducing the weight depth `q` removes adder rows, and pruning
+//! (Figure 2(c)) skips whole multipliers whose weight is zero.
+//!
+//! LUT counts follow Walters [33] as cited in §4: an `MxN` multiplier
+//! needs `M/2 x (N+1)` 6-input LUTs. Adder-cell counts follow the paper's
+//! own worked examples: a 23x23 (32FP mantissa) multiplier has 506 adders
+//! (= 22x23) and a 10x8 one has 72 (= 9x8), i.e. `(M-1) x N`.
+
+use super::constants::EnergyConfig;
+use crate::dataflow::spatial::Mapping;
+use crate::model::LayerSpec;
+
+/// Adder cells inside an MxN array multiplier — the paper's examples:
+/// 23x23 -> 506, 10x8 -> 72.
+pub fn mult_adders(m: u32, n: u32) -> u64 {
+    if m == 0 || n == 0 {
+        return 0;
+    }
+    (m.saturating_sub(1) as u64) * (n as u64)
+}
+
+/// LUTs for an MxN multiplier (Walters [33]: M/2 x (N+1), 6-input LUTs).
+pub fn mult_luts(m: u32, n: u32) -> u64 {
+    if m == 0 || n == 0 {
+        return 0;
+    }
+    (((m + 1) / 2) as u64) * ((n + 1) as u64)
+}
+
+/// LUTs for the accumulator adder at the PE output (carry-chain packs two
+/// bits per LUT).
+pub fn adder_luts(bits: u32) -> u64 {
+    (bits as u64 + 1) / 2 + 1
+}
+
+/// Adder cells switched per accumulate.
+pub fn acc_adders(bits: u32) -> u64 {
+    bits as u64
+}
+
+/// Switching energy of all MACs of one layer. Pruned weights skip the
+/// multiplier *and* the accumulate (Figure 2(c)).
+pub fn pe_energy(layer: &LayerSpec, _mapping: &Mapping, q: u32, p: f64, cfg: &EnergyConfig) -> f64 {
+    let active = layer.macs() as f64 * p;
+    let cells = mult_adders(cfg.act_bits, q) + acc_adders(cfg.acc_bits(q));
+    active * cells as f64 * cfg.e_adder
+}
+
+/// Per-PE logic LUTs at depth `q` (multiplier + accumulator; PE registers
+/// are counted separately in the area model).
+pub fn pe_luts(q: u32, cfg: &EnergyConfig) -> u64 {
+    mult_luts(cfg.act_bits, q) + adder_luts(cfg.acc_bits(q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{spatial, Dataflow};
+    use crate::model::zoo;
+
+    #[test]
+    fn paper_worked_examples() {
+        // "a high precision model with 32FP ... 23 bit x 23 bit
+        //  multipliers, with 506 adders in total"
+        assert_eq!(mult_adders(23, 23), 506);
+        // "only 10 bit x 8 bit multipliers are required, with 72 adders
+        //  in total, which is 86% less than the original amount"
+        assert_eq!(mult_adders(10, 8), 72);
+        let reduction: f64 = 1.0 - 72.0 / 506.0;
+        assert!((reduction - 0.86).abs() < 0.01);
+    }
+
+    #[test]
+    fn walters_lut_formula() {
+        // M/2 x (N+1): 10x8 -> 5*9 = 45.
+        assert_eq!(mult_luts(10, 8), 45);
+        assert_eq!(mult_luts(10, 4), 25);
+        // Monotone in q.
+        assert!(mult_luts(10, 8) > mult_luts(10, 3));
+    }
+
+    #[test]
+    fn pe_energy_scales_with_pruning_and_bits() {
+        let net = zoo::lenet5();
+        let layer = &net.layers[0];
+        let cfg = EnergyConfig::default();
+        let m = spatial::map_layer(layer, Dataflow::XY, cfg.pe_cap);
+        let e_full = pe_energy(layer, &m, 8, 1.0, &cfg);
+        let e_half = pe_energy(layer, &m, 8, 0.5, &cfg);
+        let e_4bit = pe_energy(layer, &m, 4, 1.0, &cfg);
+        assert!((e_half / e_full - 0.5).abs() < 1e-9);
+        assert!(e_4bit < e_full);
+    }
+
+    #[test]
+    fn zero_width_edge_cases() {
+        assert_eq!(mult_adders(0, 8), 0);
+        assert_eq!(mult_luts(10, 0), 0);
+    }
+}

@@ -1,0 +1,269 @@
+//! The accelerator cost model (paper §3.1 and §4 "hardware setup").
+//!
+//! Energy = processing-element energy (multiplier + accumulator switching,
+//! scaled by quantization depth and pruning skip) + data-movement energy
+//! (SRAM and register traffic, scaled by the dataflow's spatial reuse).
+//! Area = logic LUTs of the PE array + RAM bits for weights and the
+//! largest feature map.
+//!
+//! The paper reads these numbers from the Xilinx XPE toolkit for a Virtex
+//! UltraScale part; we reproduce the *structure* (every formula the paper
+//! states: Walters' LUT count, bits-moved proportionality, RAM sizing) and
+//! calibrate the technology constants so LeNet-5 lands in the paper's
+//! magnitude (µJ / mm², Table 4). All comparisons the paper makes are
+//! ratios, which the constants cancel out of.
+
+pub mod area;
+pub mod constants;
+pub mod mac;
+pub mod memory;
+
+pub use constants::EnergyConfig;
+
+use crate::compress::CompressionState;
+use crate::dataflow::{spatial, Dataflow};
+use crate::model::Network;
+
+/// Energy breakdown for a single layer, in joules.
+#[derive(Clone, Debug, Default)]
+pub struct LayerCost {
+    pub name: String,
+    /// Processing-element (MAC logic) energy.
+    pub pe_energy: f64,
+    /// SRAM streaming energy (weights + feature maps, once each).
+    pub sram_energy: f64,
+    /// Array-distribution (NoC) energy per operand.
+    pub noc_input: f64,
+    pub noc_weight: f64,
+    pub noc_psum: f64,
+    /// Register-file energy at the PE ports.
+    pub reg_energy: f64,
+    /// Logic area of this layer's PE array (mm^2).
+    pub logic_area: f64,
+    /// RAM area for this layer's weights + output feature map (mm^2).
+    pub ram_area: f64,
+    /// Instantiated PEs.
+    pub pes: u64,
+    /// Active MACs after pruning.
+    pub active_macs: f64,
+    /// Parameters in the layer.
+    pub params: u64,
+}
+
+impl LayerCost {
+    /// Total data-movement energy (the paper's "data movement" bucket).
+    pub fn movement_energy(&self) -> f64 {
+        self.sram_energy + self.noc_input + self.noc_weight + self.noc_psum + self.reg_energy
+    }
+
+    pub fn total_energy(&self) -> f64 {
+        self.pe_energy + self.movement_energy()
+    }
+
+    pub fn total_area(&self) -> f64 {
+        self.logic_area + self.ram_area
+    }
+}
+
+/// Whole-network cost report.
+#[derive(Clone, Debug, Default)]
+pub struct CostReport {
+    pub network: String,
+    pub dataflow: String,
+    pub per_layer: Vec<LayerCost>,
+    /// Reported total area (mm^2): max layer logic + RAM sized for all
+    /// weights plus the largest feature map (paper Table 4 note: "total
+    /// area is the maximum area that can support the function of each
+    /// layer").
+    pub total_area: f64,
+}
+
+impl CostReport {
+    pub fn total_energy(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.total_energy()).sum()
+    }
+
+    pub fn pe_energy(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.pe_energy).sum()
+    }
+
+    pub fn movement_energy(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.movement_energy()).sum()
+    }
+
+    pub fn total_energy_uj(&self) -> f64 {
+        self.total_energy() * 1e6
+    }
+
+    pub fn total_area_mm2(&self) -> f64 {
+        self.total_area
+    }
+}
+
+/// Evaluate the full cost model for `net` compressed per `state` under
+/// dataflow `df`.
+pub fn evaluate(
+    net: &Network,
+    state: &CompressionState,
+    df: Dataflow,
+    cfg: &EnergyConfig,
+) -> CostReport {
+    let compute = net.compute_layers();
+    assert_eq!(
+        state.num_layers(),
+        compute.len(),
+        "state layers {} != network compute layers {}",
+        state.num_layers(),
+        compute.len()
+    );
+
+    let mut per_layer = Vec::new();
+    let mut max_logic = 0.0f64;
+    let mut total_weight_bits = 0.0f64;
+    let mut max_fmap_bits = 0.0f64;
+
+    for (slot, &li) in compute.iter().enumerate() {
+        let layer = &net.layers[li];
+        let q = state.bits(slot);
+        let p = state.remaining(slot);
+        let mapping = spatial::map_layer(layer, df, cfg.pe_cap);
+
+        let pe_energy = mac::pe_energy(layer, &mapping, q, p, cfg);
+        let traffic = memory::traffic(layer, df, &mapping, q, p, cfg);
+        let logic_area = area::logic_area(&mapping, q, cfg);
+        let weight_bits = area::weight_storage_bits(layer, q, p, cfg);
+        let fmap_bits = layer.fmap_elems() as f64 * cfg.act_bits as f64;
+        let ram_area = area::ram_area(weight_bits + fmap_bits, cfg);
+
+        max_logic = max_logic.max(logic_area);
+        total_weight_bits += weight_bits;
+        max_fmap_bits = max_fmap_bits.max(fmap_bits);
+
+        per_layer.push(LayerCost {
+            name: layer.name.clone(),
+            pe_energy,
+            sram_energy: traffic.sram_energy,
+            noc_input: traffic.noc_input,
+            noc_weight: traffic.noc_weight,
+            noc_psum: traffic.noc_psum,
+            reg_energy: traffic.reg_energy,
+            logic_area,
+            ram_area,
+            pes: mapping.pes(),
+            active_macs: layer.macs() as f64 * p,
+            params: layer.params(),
+        });
+    }
+
+    let total_area = max_logic + area::ram_area(total_weight_bits + max_fmap_bits, cfg);
+
+    CostReport {
+        network: net.name.clone(),
+        dataflow: df.label(),
+        per_layer,
+        total_area,
+    }
+}
+
+/// Convenience: cost of the paper's pre-optimization reference point
+/// (16-bit activations-as-stored, 8-bit weights, no pruning — Figure 6
+/// "before EDCompress").
+pub fn baseline_cost(net: &Network, df: Dataflow, cfg: &EnergyConfig) -> CostReport {
+    let state = CompressionState::uniform(net, 8.0, 1.0);
+    let mut base_cfg = cfg.clone();
+    base_cfg.act_bits = cfg.baseline_act_bits;
+    evaluate(net, &state, df, &base_cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn default_eval(q: f64, p: f64, df: Dataflow) -> CostReport {
+        let net = zoo::lenet5();
+        let state = CompressionState::uniform(&net, q, p);
+        evaluate(&net, &state, df, &EnergyConfig::default())
+    }
+
+    #[test]
+    fn energy_monotone_in_bits() {
+        for df in Dataflow::paper_four() {
+            let e8 = default_eval(8.0, 1.0, df).total_energy();
+            let e4 = default_eval(4.0, 1.0, df).total_energy();
+            let e2 = default_eval(2.0, 1.0, df).total_energy();
+            assert!(e8 > e4 && e4 > e2, "{}: {e8} {e4} {e2}", df.label());
+        }
+    }
+
+    #[test]
+    fn energy_monotone_in_pruning() {
+        for df in Dataflow::paper_four() {
+            let e100 = default_eval(8.0, 1.0, df).total_energy();
+            let e50 = default_eval(8.0, 0.5, df).total_energy();
+            let e10 = default_eval(8.0, 0.1, df).total_energy();
+            assert!(e100 > e50 && e50 > e10, "{}", df.label());
+        }
+    }
+
+    #[test]
+    fn lenet_magnitude_matches_paper_band() {
+        // Fig. 6 "before": ~tens of µJ for LeNet-5; Table 4 "after": ~1 µJ.
+        let cfg = EnergyConfig::default();
+        let net = zoo::lenet5();
+        let before = baseline_cost(&net, Dataflow::XY, &cfg).total_energy_uj();
+        assert!(
+            before > 5.0 && before < 200.0,
+            "uncompressed LeNet X:Y energy {before} uJ out of band"
+        );
+        let after = default_eval(3.0, 0.2, Dataflow::XY).total_energy_uj();
+        assert!(after < before / 5.0, "after {after} vs before {before}");
+    }
+
+    #[test]
+    fn movement_dominates_vgg_uncompressed() {
+        // Paper intro: ~72% of VGG-16 energy is data movement.
+        let net = zoo::vgg16();
+        let cfg = EnergyConfig::default();
+        let rep = baseline_cost(&net, Dataflow::XY, &cfg);
+        let frac = rep.movement_energy() / rep.total_energy();
+        assert!(
+            frac > 0.5 && frac < 0.95,
+            "movement fraction {frac} out of plausible band"
+        );
+    }
+
+    #[test]
+    fn cico_area_blows_up_on_fc_layers() {
+        // Table 4: CI:CO has ~25x the area of FX:FY on LeNet because fc1
+        // instantiates an 800x500 PE array.
+        let cfg = EnergyConfig::default();
+        let net = zoo::lenet5();
+        let s = CompressionState::uniform(&net, 8.0, 1.0);
+        let cico = evaluate(&net, &s, Dataflow::CICO, &cfg).total_area;
+        let fxfy = evaluate(&net, &s, Dataflow::FXFY, &cfg).total_area;
+        assert!(
+            cico > 5.0 * fxfy,
+            "CI:CO area {cico} should dwarf FX:FY {fxfy}"
+        );
+    }
+
+    #[test]
+    fn per_layer_report_covers_compute_layers() {
+        let rep = default_eval(8.0, 1.0, Dataflow::XY);
+        assert_eq!(rep.per_layer.len(), 4); // conv1 conv2 fc1 fc2
+        assert!(rep.per_layer.iter().all(|l| l.total_energy() > 0.0));
+    }
+
+    #[test]
+    fn all_fifteen_dataflows_evaluate() {
+        let net = zoo::mobilenet_cifar();
+        let s = CompressionState::uniform(&net, 8.0, 1.0);
+        let cfg = EnergyConfig::default();
+        for df in Dataflow::all_fifteen() {
+            let rep = evaluate(&net, &s, df, &cfg);
+            assert!(rep.total_energy() > 0.0, "{}", df.label());
+            assert!(rep.total_area > 0.0, "{}", df.label());
+        }
+    }
+}

@@ -1,0 +1,374 @@
+//! The EDCompress RL environment (paper §3.3, Eq. 2–4).
+//!
+//! State: the (Q, P) trajectories over a `tau`-step history window plus
+//! the recent rewards and the step index (Eq. 3). Action: per-layer
+//! continuous deltas for Q and P (Eq. 2). Reward: accuracy-ratio to the
+//! lambda power times the inverse energy ratio (Eq. 4). Episodes abort
+//! when accuracy falls below a threshold or the step limit is reached.
+
+pub mod surrogate;
+
+pub use surrogate::SurrogateOracle;
+
+use crate::compress::{CompressionLimits, CompressionState};
+use crate::dataflow::Dataflow;
+use crate::energy::{self, EnergyConfig};
+use crate::model::Network;
+use crate::rl::Env;
+use crate::util::clampf;
+
+/// Measures model accuracy at a compression state. Two implementations:
+/// the analytic [`SurrogateOracle`] (fast; used for table/figure sweeps)
+/// and `train::PjrtOracle` (real fine-tuning through the AOT artifacts;
+/// used by the end-to-end example).
+pub trait AccuracyOracle {
+    /// Accuracy in [0, 1] after this step's fine-tune budget.
+    fn evaluate(&mut self, state: &CompressionState) -> f64;
+    /// Restore the pristine trained model (start of an episode). The
+    /// paper: "when the last episode ends, we restore the weights from a
+    /// saved checkpoint".
+    fn reset(&mut self);
+    /// Uncompressed reference accuracy.
+    fn base_accuracy(&self) -> f64;
+}
+
+/// Which compression knobs the agent may move (Figure 7's ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressMode {
+    Both,
+    QuantOnly,
+    PruneOnly,
+}
+
+/// Environment hyper-parameters (paper values as defaults).
+#[derive(Clone, Debug)]
+pub struct EnvConfig {
+    /// Accuracy exponent lambda of Eq. 4 (paper: 3).
+    pub lambda: f64,
+    /// History window tau of Eq. 3.
+    pub tau: usize,
+    /// Steps per episode (paper Fig. 5: thirty-two steps).
+    pub max_steps: usize,
+    /// Abort when accuracy < threshold_frac * base accuracy.
+    pub threshold_frac: f64,
+    /// Initial quantization depth (paper: 8-bit).
+    pub q0: f64,
+    /// Initial pruning remaining amount (paper: 100%).
+    pub p0: f64,
+    /// Reward clamp to keep Q-targets bounded.
+    pub reward_clip: f64,
+    pub limits: CompressionLimits,
+    /// Restrict the action space (quantization-only / pruning-only).
+    pub mode: CompressMode,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig {
+            lambda: 3.0,
+            tau: 4,
+            max_steps: 32,
+            threshold_frac: 0.97,
+            q0: 8.0,
+            p0: 1.0,
+            reward_clip: 10.0,
+            limits: CompressionLimits::default(),
+            mode: CompressMode::Both,
+        }
+    }
+}
+
+/// Snapshot of the best (lowest-energy, accuracy-admissible) state seen.
+#[derive(Clone, Debug)]
+pub struct BestPoint {
+    pub state: CompressionState,
+    pub energy: f64,
+    pub area: f64,
+    pub accuracy: f64,
+    pub step: usize,
+}
+
+/// The compression environment for one (network, dataflow) pair.
+pub struct CompressionEnv {
+    pub net: Network,
+    pub dataflow: Dataflow,
+    pub cfg: EnvConfig,
+    pub energy_cfg: EnergyConfig,
+    oracle: Box<dyn AccuracyOracle>,
+    state: CompressionState,
+    t: usize,
+    prev_acc: f64,
+    prev_energy: f64,
+    /// Ring of the last tau+1 flattened (Q,P) states and rewards (Eq. 3).
+    hist_qp: Vec<Vec<f64>>,
+    hist_r: Vec<f64>,
+    best: Option<BestPoint>,
+    /// Energy of the episode-start state (for normalized logging).
+    pub start_energy: f64,
+}
+
+impl CompressionEnv {
+    pub fn new(
+        net: Network,
+        dataflow: Dataflow,
+        oracle: Box<dyn AccuracyOracle>,
+        cfg: EnvConfig,
+        energy_cfg: EnergyConfig,
+    ) -> CompressionEnv {
+        let state = CompressionState::uniform(&net, cfg.q0, cfg.p0);
+        let mut env = CompressionEnv {
+            net,
+            dataflow,
+            cfg,
+            energy_cfg,
+            oracle,
+            state,
+            t: 0,
+            prev_acc: 1.0,
+            prev_energy: 1.0,
+            hist_qp: Vec::new(),
+            hist_r: Vec::new(),
+            best: None,
+            start_energy: 0.0,
+        };
+        env.reset_internal();
+        env
+    }
+
+    fn energy_of(&self, state: &CompressionState) -> (f64, f64) {
+        let rep = energy::evaluate(&self.net, state, self.dataflow, &self.energy_cfg);
+        (rep.total_energy(), rep.total_area)
+    }
+
+    fn reset_internal(&mut self) -> Vec<f64> {
+        self.state = CompressionState::uniform(&self.net, self.cfg.q0, self.cfg.p0);
+        self.oracle.reset();
+        self.t = 0;
+        self.prev_acc = self.oracle.evaluate(&self.state);
+        let (e, _a) = self.energy_of(&self.state);
+        self.prev_energy = e;
+        self.start_energy = e;
+        let flat = self.state.as_flat();
+        self.hist_qp = vec![flat; self.cfg.tau + 1];
+        self.hist_r = vec![0.0; self.cfg.tau + 1];
+        self.best = None;
+        self.observation()
+    }
+
+    /// Eq. 3: Q/P history window + reward history + step index, all
+    /// normalized to O(1) ranges for the MLPs.
+    fn observation(&self) -> Vec<f64> {
+        let l = self.state.num_layers();
+        let mut obs = Vec::with_capacity((self.cfg.tau + 1) * (2 * l + 1) + 1);
+        for snap in &self.hist_qp {
+            for i in 0..l {
+                obs.push(snap[i] / self.cfg.limits.q_max); // Q normalized
+            }
+            for i in 0..l {
+                obs.push(snap[l + i]); // P already in (0,1]
+            }
+        }
+        for &r in &self.hist_r {
+            obs.push(clampf(r, -self.cfg.reward_clip, self.cfg.reward_clip) / self.cfg.reward_clip);
+        }
+        obs.push(self.t as f64 / self.cfg.max_steps as f64);
+        obs
+    }
+
+    pub fn best(&self) -> Option<&BestPoint> {
+        self.best.as_ref()
+    }
+
+    pub fn current_state(&self) -> &CompressionState {
+        &self.state
+    }
+
+    pub fn step_index(&self) -> usize {
+        self.t
+    }
+
+    /// Accuracy floor below which the episode aborts.
+    pub fn accuracy_floor(&self) -> f64 {
+        self.cfg.threshold_frac * self.oracle.base_accuracy()
+    }
+}
+
+impl Env for CompressionEnv {
+    fn state_dim(&self) -> usize {
+        let l = self.net.num_compute_layers();
+        (self.cfg.tau + 1) * 2 * l + (self.cfg.tau + 1) + 1
+    }
+
+    fn action_dim(&self) -> usize {
+        2 * self.net.num_compute_layers()
+    }
+
+    fn reset(&mut self) -> Vec<f64> {
+        self.reset_internal()
+    }
+
+    fn step(&mut self, action: &[f64]) -> (Vec<f64>, f64, bool) {
+        // Figure 7 ablations: mask out the disabled half of the action.
+        let l = self.state.num_layers();
+        let mut action = action.to_vec();
+        match self.cfg.mode {
+            CompressMode::Both => {}
+            CompressMode::QuantOnly => action[l..].fill(0.0),
+            CompressMode::PruneOnly => action[..l].fill(0.0),
+        }
+        // Eq. 1/2: apply the discounted per-layer deltas.
+        self.state.apply_action(&action, self.t, &self.cfg.limits);
+        self.t += 1;
+
+        let acc = self.oracle.evaluate(&self.state);
+        let (energy, area) = self.energy_of(&self.state);
+
+        // Eq. 4: r = (alpha_t/alpha_{t-1})^lambda * beta_{t-1}/beta_t.
+        let acc_ratio = (acc / self.prev_acc.max(1e-9)).max(1e-6);
+        let energy_ratio = self.prev_energy / energy.max(1e-30);
+        let reward_raw = acc_ratio.powf(self.cfg.lambda) * energy_ratio;
+        // Center at 0 (r=1 means "no change") and clip for stability.
+        let reward = clampf(reward_raw - 1.0, -self.cfg.reward_clip, self.cfg.reward_clip);
+
+        self.prev_acc = acc;
+        self.prev_energy = energy;
+
+        // Track the best admissible point of the episode.
+        let admissible = acc >= self.accuracy_floor();
+        if admissible && self.best.as_ref().map(|b| energy < b.energy).unwrap_or(true) {
+            self.best = Some(BestPoint {
+                state: self.state.clone(),
+                energy,
+                area,
+                accuracy: acc,
+                step: self.t,
+            });
+        }
+
+        // History ring for Eq. 3.
+        self.hist_qp.remove(0);
+        self.hist_qp.push(self.state.as_flat());
+        self.hist_r.remove(0);
+        self.hist_r.push(reward);
+
+        // Abort conditions (paper: step limit or accuracy threshold).
+        let done = self.t >= self.cfg.max_steps || acc < self.accuracy_floor();
+        (self.observation(), reward, done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn make_env() -> CompressionEnv {
+        let net = zoo::lenet5();
+        let oracle = SurrogateOracle::new(&net, 0);
+        CompressionEnv::new(
+            net,
+            Dataflow::XY,
+            Box::new(oracle),
+            EnvConfig::default(),
+            EnergyConfig::default(),
+        )
+    }
+
+    #[test]
+    fn dimensions_match_eq2_eq3() {
+        let env = make_env();
+        // LeNet: L = 4 compute layers -> action = 8.
+        assert_eq!(env.action_dim(), 8);
+        // state: (tau+1)*2L + (tau+1) + 1 = 5*8 + 5 + 1 = 46.
+        assert_eq!(env.state_dim(), 46);
+    }
+
+    #[test]
+    fn observation_has_declared_dim() {
+        let mut env = make_env();
+        let s = env.reset();
+        assert_eq!(s.len(), env.state_dim());
+        let (s2, _r, _d) = env.step(&vec![0.0; env.action_dim()]);
+        assert_eq!(s2.len(), env.state_dim());
+    }
+
+    #[test]
+    fn noop_action_gives_zero_reward() {
+        let mut env = make_env();
+        env.reset();
+        let (_s, r, _d) = env.step(&vec![0.0; 8]);
+        // Nothing changed -> acc ratio = energy ratio = 1 -> centered 0.
+        assert!(r.abs() < 0.05, "reward {r}");
+    }
+
+    #[test]
+    fn compressing_yields_positive_reward_initially() {
+        let mut env = make_env();
+        env.reset();
+        // Gentle compression: quantize down, prune a little. Individual
+        // steps can be ~0 when the rounded bit depth doesn't move, so
+        // check the cumulative reward over a few steps.
+        let mut action = vec![-0.5; 8];
+        // Protect accuracy: smaller prune moves.
+        for a in action[4..].iter_mut() {
+            *a = -0.2;
+        }
+        let mut total = 0.0;
+        for _ in 0..4 {
+            let (_s, r, _d) = env.step(&action);
+            total += r;
+        }
+        assert!(total > 0.0, "cumulative compression reward {total}");
+    }
+
+    #[test]
+    fn over_compression_ends_episode() {
+        let mut env = make_env();
+        env.reset();
+        let action = vec![-1.0; 8];
+        let mut done = false;
+        for step in 0..32 {
+            let (_s, _r, d) = env.step(&action);
+            if d {
+                done = true;
+                // Must abort before exhausting all steps: slamming q to 1
+                // bit and p to 2% destroys accuracy.
+                assert!(step < 31, "aborted only at step {step}");
+                break;
+            }
+        }
+        assert!(done);
+    }
+
+    #[test]
+    fn best_point_is_admissible_and_cheaper() {
+        let mut env = make_env();
+        env.reset();
+        for _ in 0..10 {
+            let (_s, _r, d) = env.step(&vec![-0.3; 8]);
+            if d {
+                break;
+            }
+        }
+        if let Some(best) = env.best() {
+            assert!(best.accuracy >= env.accuracy_floor());
+            assert!(best.energy < env.start_energy);
+        }
+    }
+
+    #[test]
+    fn episode_caps_at_max_steps() {
+        let mut env = make_env();
+        env.reset();
+        let mut steps = 0;
+        loop {
+            let (_s, _r, d) = env.step(&vec![0.0; 8]);
+            steps += 1;
+            if d {
+                break;
+            }
+            assert!(steps <= 32, "never terminated");
+        }
+        assert_eq!(steps, 32);
+    }
+}

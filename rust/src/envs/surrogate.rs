@@ -1,0 +1,230 @@
+//! Analytic accuracy oracle.
+//!
+//! The PJRT oracle fine-tunes a real network per RL step (the paper's
+//! procedure); that is exercised end-to-end in `examples/e2e_compress.rs`
+//! but is far too slow to regenerate every table on CPU. This surrogate
+//! captures the *qualitative* accuracy response to compression that the
+//! search needs:
+//!
+//! - accuracy degrades smoothly as bit depth drops, with a knee around
+//!   2–3 bits (QAT literature; the paper fine-tunes down to 3 bits before
+//!   aborting in Fig. 3's example);
+//! - accuracy degrades as pruning deepens, with larger layers tolerating
+//!   much more pruning (Deep Compression prunes LeNet fc1 to ~8% but
+//!   conv1 only to ~66%);
+//! - first and last layers are the most sensitive (standard result; the
+//!   paper's Fig. 4 narrative leans on conv1's disproportionate impact);
+//! - fine-tuning recovers part of the loss each step (multi-step
+//!   recovery is the core premise of the paper's Eq. 1 formulation).
+//!
+//! The surrogate is deterministic given the seed, monotone in (q, p), and
+//! separable across layers — all properties the property-based tests in
+//! `rust/tests/prop_invariants.rs` pin down.
+
+use super::AccuracyOracle;
+use crate::compress::CompressionState;
+use crate::model::Network;
+use crate::util::rng::Rng;
+
+/// Per-layer sensitivity profile.
+#[derive(Clone, Debug)]
+struct LayerProfile {
+    /// Remaining-fraction below which accuracy collapses (p-knee).
+    p_knee: f64,
+    /// Bit depth below which accuracy collapses (q-knee).
+    q_knee: f64,
+    /// How sharply this layer's term falls past the knee.
+    steepness: f64,
+}
+
+/// Deterministic analytic stand-in for fine-tune + eval.
+pub struct SurrogateOracle {
+    base_acc: f64,
+    profiles: Vec<LayerProfile>,
+    /// Multi-step recovery: fraction of the raw degradation recovered by
+    /// the per-step fine-tune (compounds with repeated evaluation).
+    recovery: f64,
+    /// Small deterministic evaluation jitter (fine-tune stochasticity).
+    noise_amp: f64,
+    seed: u64,
+    evals: u64,
+}
+
+impl SurrogateOracle {
+    pub fn new(net: &Network, seed: u64) -> SurrogateOracle {
+        let compute = net.compute_layers();
+        let n = compute.len();
+        let profiles = compute
+            .iter()
+            .enumerate()
+            .map(|(slot, &li)| {
+                let layer = &net.layers[li];
+                let params = layer.params() as f64;
+                // Bigger layers tolerate deeper pruning: knee ~ params^-0.3.
+                let p_knee = (1.2 / params.max(4.0).powf(0.30)).clamp(0.02, 0.5);
+                // Boundary layers need ~1 extra bit.
+                let boundary = slot == 0 || slot == n - 1;
+                let q_knee = if boundary { 2.8 } else { 2.0 };
+                LayerProfile {
+                    p_knee,
+                    q_knee,
+                    steepness: if boundary { 3.0 } else { 2.5 },
+                }
+            })
+            .collect();
+        SurrogateOracle {
+            base_acc: net.base_accuracy,
+            profiles,
+            recovery: 0.55,
+            noise_amp: 0.001,
+            seed,
+            evals: 0,
+        }
+    }
+
+    /// Disable evaluation jitter (for exact-math tests).
+    pub fn deterministic(mut self) -> Self {
+        self.noise_amp = 0.0;
+        self
+    }
+
+    fn layer_factor(&self, profile: &LayerProfile, q: f64, p: f64) -> f64 {
+        // Each factor is a biased logistic gate: comfortably ~1 above the
+        // knee (the +2.5 bias puts the knee itself at ~92%), collapsing
+        // below it. Fine-tune recovery lifts the raw factor toward 1.
+        const BIAS: f64 = 3.2;
+        let fq = logistic((q - profile.q_knee) * profile.steepness + BIAS);
+        let fp = logistic((p / profile.p_knee).ln() * profile.steepness + BIAS);
+        let raw = fq * fp;
+        raw + (1.0 - raw) * self.recovery
+    }
+}
+
+fn logistic(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl AccuracyOracle for SurrogateOracle {
+    fn evaluate(&mut self, state: &CompressionState) -> f64 {
+        assert_eq!(state.num_layers(), self.profiles.len());
+        self.evals += 1;
+        let mut acc = self.base_acc;
+        for (i, prof) in self.profiles.iter().enumerate() {
+            // Normalize so the uncompressed point sits at base accuracy.
+            let f = self.layer_factor(prof, state.q[i], state.p[i]);
+            let f0 = self.layer_factor(prof, 8.0, 1.0);
+            acc *= (f / f0).min(1.0);
+        }
+        if self.noise_amp > 0.0 {
+            let mut r = Rng::new(self.seed ^ self.evals.wrapping_mul(0x2545_F491_4F6C_DD1D));
+            acc += r.normal() * self.noise_amp;
+        }
+        acc.clamp(0.0, 1.0)
+    }
+
+    fn reset(&mut self) {
+        // The surrogate is stateless across episodes (weights "restored
+        // from checkpoint"); only the jitter stream advances.
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        self.base_acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn oracle() -> SurrogateOracle {
+        SurrogateOracle::new(&zoo::lenet5(), 0).deterministic()
+    }
+
+    #[test]
+    fn uncompressed_matches_base_accuracy() {
+        let net = zoo::lenet5();
+        let mut o = oracle();
+        let s = CompressionState::uniform(&net, 8.0, 1.0);
+        let acc = o.evaluate(&s);
+        assert!((acc - net.base_accuracy).abs() < 1e-6, "acc {acc}");
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        let net = zoo::lenet5();
+        let mut o = oracle();
+        let mut prev = 1.0;
+        for q in [8.0, 6.0, 4.0, 3.0, 2.0, 1.0] {
+            let s = CompressionState::uniform(&net, q, 1.0);
+            let acc = o.evaluate(&s);
+            assert!(acc <= prev + 1e-9, "q={q}: {acc} > {prev}");
+            prev = acc;
+        }
+    }
+
+    #[test]
+    fn monotone_in_pruning() {
+        let net = zoo::lenet5();
+        let mut o = oracle();
+        let mut prev = 1.0;
+        for p in [1.0, 0.6, 0.3, 0.1, 0.05, 0.02] {
+            let s = CompressionState::uniform(&net, 8.0, p);
+            let acc = o.evaluate(&s);
+            assert!(acc <= prev + 1e-9, "p={p}: {acc} > {prev}");
+            prev = acc;
+        }
+    }
+
+    #[test]
+    fn moderate_compression_keeps_accuracy() {
+        // 4-bit + 50% pruning must remain near base accuracy — otherwise
+        // the search could never find the paper's operating points.
+        let net = zoo::lenet5();
+        let mut o = oracle();
+        let s = CompressionState::uniform(&net, 4.0, 0.5);
+        let acc = o.evaluate(&s);
+        assert!(acc > 0.95 * net.base_accuracy, "acc {acc}");
+    }
+
+    #[test]
+    fn extreme_compression_collapses() {
+        let net = zoo::lenet5();
+        let mut o = oracle();
+        let s = CompressionState::uniform(&net, 1.0, 0.02);
+        let acc = o.evaluate(&s);
+        assert!(acc < 0.8 * net.base_accuracy, "acc {acc}");
+    }
+
+    #[test]
+    fn large_layers_tolerate_more_pruning() {
+        let net = zoo::lenet5();
+        let mut o = oracle();
+        let base = CompressionState::uniform(&net, 8.0, 1.0);
+        // Prune only fc1 (largest, slot 2) vs only conv1 (smallest, slot 0).
+        let mut fc1 = base.clone();
+        fc1.p[2] = 0.08;
+        let mut conv1 = base.clone();
+        conv1.p[0] = 0.08;
+        let acc_fc1 = o.evaluate(&fc1);
+        let acc_conv1 = o.evaluate(&conv1);
+        assert!(
+            acc_fc1 > acc_conv1,
+            "fc1-pruned {acc_fc1} should beat conv1-pruned {acc_conv1}"
+        );
+    }
+
+    #[test]
+    fn jitter_is_small_and_deterministic() {
+        let net = zoo::lenet5();
+        let s = CompressionState::uniform(&net, 8.0, 1.0);
+        let mut o1 = SurrogateOracle::new(&net, 7);
+        let mut o2 = SurrogateOracle::new(&net, 7);
+        for _ in 0..5 {
+            assert_eq!(o1.evaluate(&s), o2.evaluate(&s));
+        }
+        let clean = o1.base_accuracy();
+        let noisy = o1.evaluate(&s);
+        assert!((noisy - clean).abs() < 0.01);
+    }
+}

@@ -1,0 +1,48 @@
+//! # EDCompress
+//!
+//! A production-grade reproduction of *"EDCompress: Energy-Aware Model
+//! Compression with Dataflow"* (Wang, Luo, Zhou, Goh, 2020) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The library couples a **dataflow-aware accelerator cost model** (energy
+//! and area of a spatial PE array under any of the 15 loop-pair dataflows)
+//! with **multi-step model compression** (per-layer quantization depth and
+//! pruning remaining-amount, Eq. 1 of the paper) searched by a **soft
+//! actor-critic agent** implemented from scratch in Rust (Eq. 2–4).
+//!
+//! Layer map (see `DESIGN.md`):
+//! - **L3 (this crate)** — coordinator, SAC agent, cost model, datasets,
+//!   baselines, report generation. Owns the whole run-time loop.
+//! - **L2 (python/compile)** — JAX train/infer graphs per network, lowered
+//!   once to HLO text in `artifacts/` and executed from Rust via PJRT.
+//! - **L1 (python/compile/kernels)** — Pallas fake-quant matmul/conv
+//!   kernels (interpret mode) inside the L2 graphs.
+pub mod baselines;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dataflow;
+pub mod energy;
+pub mod envs;
+pub mod model;
+pub mod nn;
+pub mod report;
+pub mod rl;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::compress::{self, CompressionState};
+    pub use crate::coordinator::{self, Coordinator, SearchOutcome};
+    pub use crate::dataflow::{Dataflow, LoopDim};
+    pub use crate::energy::{self, CostReport, EnergyConfig};
+    pub use crate::envs::{AccuracyOracle, CompressionEnv, EnvConfig, SurrogateOracle};
+    pub use crate::model::{self, LayerKind, LayerSpec, Network};
+    pub use crate::rl::sac::{SacAgent, SacConfig};
+    pub use crate::util::rng::Rng;
+}

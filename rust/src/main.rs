@@ -1,0 +1,7 @@
+//! `edc` — the EDCompress command-line launcher (L3 leader entrypoint).
+
+fn main() {
+    edcompress::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    std::process::exit(edcompress::cli::run(&args));
+}

@@ -1,0 +1,250 @@
+//! CNN network descriptions — the *shapes* the cost model operates on.
+//!
+//! The energy/area model (paper §3–4) is purely analytic over layer
+//! dimensions: it never executes the network, so the zoo carries the
+//! **full-size** LeNet-5 / VGG-16 / MobileNet-v1 topologies even though
+//! the executable artifacts (L2) are width-scaled for CPU feasibility.
+
+pub mod zoo;
+
+/// Layer type. Pool layers carry no MACs but shrink the feature map, which
+/// matters to the memory model; depthwise conv has `CI = 1` per output
+/// channel (MobileNet).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    DepthwiseConv,
+    Dense,
+    /// Average or max pooling with the given stride (energy-free in the
+    /// paper's model; affects feature-map sizes downstream).
+    Pool,
+}
+
+/// One layer of a CNN, in the paper's six-loop nomenclature (Algorithm 1):
+/// `CO, CI` output/input channels, `X, Y` output feature-map width/height,
+/// `FX, FY` filter width/height.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    pub co: usize,
+    pub ci: usize,
+    pub x: usize,
+    pub y: usize,
+    pub fx: usize,
+    pub fy: usize,
+}
+
+impl LayerSpec {
+    pub fn conv(name: &str, co: usize, ci: usize, x: usize, y: usize, fx: usize, fy: usize) -> Self {
+        LayerSpec {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            co,
+            ci,
+            x,
+            y,
+            fx,
+            fy,
+        }
+    }
+
+    pub fn dwconv(name: &str, c: usize, x: usize, y: usize, fx: usize, fy: usize) -> Self {
+        LayerSpec {
+            name: name.into(),
+            kind: LayerKind::DepthwiseConv,
+            co: c,
+            ci: 1, // one input channel per group
+            x,
+            y,
+            fx,
+            fy,
+        }
+    }
+
+    pub fn dense(name: &str, out: usize, inp: usize) -> Self {
+        LayerSpec {
+            name: name.into(),
+            kind: LayerKind::Dense,
+            co: out,
+            ci: inp,
+            x: 1,
+            y: 1,
+            fx: 1,
+            fy: 1,
+        }
+    }
+
+    pub fn pool(name: &str, c: usize, x: usize, y: usize) -> Self {
+        LayerSpec {
+            name: name.into(),
+            kind: LayerKind::Pool,
+            co: c,
+            ci: c,
+            x,
+            y,
+            fx: 1,
+            fy: 1,
+        }
+    }
+
+    /// Does this layer perform MACs (and thus carry compressible weights)?
+    pub fn is_compute(&self) -> bool {
+        !matches!(self.kind, LayerKind::Pool)
+    }
+
+    /// Total multiply-accumulate operations (paper §3: CO·CI·X·Y·FX·FY).
+    pub fn macs(&self) -> u64 {
+        if !self.is_compute() {
+            return 0;
+        }
+        (self.co as u64)
+            * (self.ci as u64)
+            * (self.x as u64)
+            * (self.y as u64)
+            * (self.fx as u64)
+            * (self.fy as u64)
+    }
+
+    /// Number of weight parameters.
+    pub fn params(&self) -> u64 {
+        if !self.is_compute() {
+            return 0;
+        }
+        (self.co as u64) * (self.ci as u64) * (self.fx as u64) * (self.fy as u64)
+    }
+
+    /// Output feature-map size in elements.
+    pub fn fmap_elems(&self) -> u64 {
+        (self.co as u64) * (self.x as u64) * (self.y as u64)
+    }
+
+    /// Input feature-map size in elements (CI·(X+FX-1)·(Y+FY-1) approx for
+    /// 'same' padding; exact enough for the memory model).
+    pub fn input_elems(&self) -> u64 {
+        let ci = match self.kind {
+            LayerKind::DepthwiseConv => self.co as u64,
+            _ => self.ci as u64,
+        };
+        ci * ((self.x + self.fx - 1) as u64) * ((self.y + self.fy - 1) as u64)
+    }
+
+    /// Trip count of a named loop (used by the dataflow reuse analysis).
+    pub fn trip(&self, dim: crate::dataflow::LoopDim) -> usize {
+        use crate::dataflow::LoopDim::*;
+        match dim {
+            Co => self.co,
+            Ci => self.ci,
+            X => self.x,
+            Y => self.y,
+            Fx => self.fx,
+            Fy => self.fy,
+        }
+    }
+}
+
+/// A whole network plus bookkeeping the environment needs.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+    /// Reference clean accuracy (the paper's starting accuracy for the
+    /// surrogate oracle; the PJRT oracle measures its own).
+    pub base_accuracy: f64,
+}
+
+impl Network {
+    /// Indices of layers that carry weights (the RL action space is 2x this).
+    pub fn compute_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_compute())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn num_compute_layers(&self) -> usize {
+        self.compute_layers().len()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn max_fmap_elems(&self) -> u64 {
+        self.layers.iter().map(|l| l.fmap_elems()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_macs_and_params() {
+        let net = zoo::lenet5();
+        // Classic LeNet-5 (as used by Deep Compression comparisons):
+        // conv1 20x1x5x5, conv2 50x20x5x5, fc1 500x800, fc2 10x500.
+        assert_eq!(net.total_params(), 20 * 25 + 50 * 20 * 25 + 500 * 800 + 10 * 500);
+        // conv1 MACs = 20*1*24*24*5*5
+        assert_eq!(net.layers[0].macs(), 20 * 24 * 24 * 25);
+    }
+
+    #[test]
+    fn vgg16_has_13_convs_3_dense() {
+        let net = zoo::vgg16();
+        let convs = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .count();
+        let dense = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Dense)
+            .count();
+        assert_eq!(convs, 13);
+        assert_eq!(dense, 3);
+        // VGG-16 ~ 1.5e10 MACs at 224x224 (paper intro cites 1.5e10).
+        let macs = net.total_macs() as f64;
+        assert!(macs > 1.4e10 && macs < 1.6e10, "macs = {macs:e}");
+    }
+
+    #[test]
+    fn vgg16_param_count_matches_paper_magnitude() {
+        // Paper intro: "VGG-16 contains 528MB of weights" = 138M params * 4B.
+        let net = zoo::vgg16();
+        let p = net.total_params() as f64;
+        assert!(p > 1.3e8 && p < 1.45e8, "params = {p:e}");
+    }
+
+    #[test]
+    fn mobilenet_alternates_dw_pw() {
+        let net = zoo::mobilenet_v1();
+        let dw = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::DepthwiseConv)
+            .count();
+        assert_eq!(dw, 13);
+        // MobileNet-v1 ~ 569M MACs, ~4.2M params.
+        let macs = net.total_macs() as f64;
+        assert!(macs > 5.2e8 && macs < 6.2e8, "macs = {macs:e}");
+        let p = net.total_params() as f64;
+        assert!(p > 3.9e6 && p < 4.5e6, "params = {p:e}");
+    }
+
+    #[test]
+    fn compute_layer_indexing_skips_pools() {
+        let net = zoo::lenet5();
+        for &i in &net.compute_layers() {
+            assert!(net.layers[i].is_compute());
+        }
+        assert_eq!(net.num_compute_layers(), 4);
+    }
+}

@@ -1,0 +1,188 @@
+//! Full-size network topologies used by the paper's evaluation.
+//!
+//! Dimensions follow the original papers ([20] LeNet-5 as used in Deep
+//! Compression, [28] VGG-16 at 224x224, [17] MobileNet-v1 at 224x224).
+//! These drive the *analytic* cost model only — the runnable artifacts in
+//! `artifacts/` are width-scaled variants of the same topologies.
+
+use super::{LayerSpec, Network};
+
+/// LeNet-5 (Caffe variant: 20/50 conv channels, 500 FC — the shape the
+/// Deep Compression baseline of Table 4 uses), MNIST 28x28 input.
+pub fn lenet5() -> Network {
+    Network {
+        name: "lenet5".into(),
+        layers: vec![
+            LayerSpec::conv("conv1", 20, 1, 24, 24, 5, 5),
+            LayerSpec::pool("pool1", 20, 12, 12),
+            LayerSpec::conv("conv2", 50, 20, 8, 8, 5, 5),
+            LayerSpec::pool("pool2", 50, 4, 4),
+            LayerSpec::dense("fc1", 500, 800),
+            LayerSpec::dense("fc2", 10, 500),
+        ],
+        base_accuracy: 0.993, // paper Table 4 baseline accuracy
+    }
+}
+
+/// VGG-16 at 224x224 (ImageNet) / identical channel plan at 32x32 for
+/// CIFAR-10 (paper Table 3 uses the CIFAR variant; channel structure and
+/// hence energy *ratios* are the same — pass `input=32` for CIFAR).
+pub fn vgg16_at(input: usize) -> Network {
+    let mut layers = Vec::new();
+    let plan: &[(usize, usize)] = &[(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut ci = 3usize;
+    let mut res = input;
+    for (block, &(ch, reps)) in plan.iter().enumerate() {
+        for r in 0..reps {
+            layers.push(LayerSpec::conv(
+                &format!("conv{}_{}", block + 1, r + 1),
+                ch,
+                ci,
+                res,
+                res,
+                3,
+                3,
+            ));
+            ci = ch;
+        }
+        res /= 2;
+        layers.push(LayerSpec::pool(&format!("pool{}", block + 1), ch, res, res));
+    }
+    // Classifier. At 224 the flatten is 512*7*7 = 25088 (ImageNet); at 32
+    // it is 512*1*1 (CIFAR VGG variants).
+    let flat = 512 * res * res;
+    layers.push(LayerSpec::dense("fc6", 4096, flat));
+    layers.push(LayerSpec::dense("fc7", 4096, 4096));
+    layers.push(LayerSpec::dense("fc8", if input == 224 { 1000 } else { 10 }, 4096));
+    Network {
+        name: format!("vgg16_{input}"),
+        layers,
+        base_accuracy: if input == 224 { 0.715 } else { 0.934 },
+    }
+}
+
+/// VGG-16 at the ImageNet resolution (for MAC/param sanity tests and the
+/// paper-intro numbers).
+pub fn vgg16() -> Network {
+    vgg16_at(224)
+}
+
+/// VGG-16 on CIFAR-10 — the configuration of Table 3 / Figure 5.
+pub fn vgg16_cifar() -> Network {
+    vgg16_at(32)
+}
+
+/// MobileNet-v1 (width 1.0) at 224x224 — Table 2's network.
+pub fn mobilenet_v1() -> Network {
+    mobilenet_v1_at(224)
+}
+
+/// MobileNet-v1 at a configurable input resolution (32 for the CIFAR runs
+/// of Figure 5).
+pub fn mobilenet_v1_at(input: usize) -> Network {
+    let mut layers = Vec::new();
+    let mut res = input / 2; // first conv has stride 2
+    layers.push(LayerSpec::conv("conv1", 32, 3, res, res, 3, 3));
+    // (channels_out, stride) for the 13 depthwise-separable blocks.
+    let plan: &[(usize, usize)] = &[
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    let mut ci = 32usize;
+    for (i, &(co, stride)) in plan.iter().enumerate() {
+        // Depthwise acts on the *input* channels at the strided resolution.
+        let dw_res = res / stride;
+        layers.push(LayerSpec::dwconv(&format!("dw{}", i + 1), ci, dw_res, dw_res, 3, 3));
+        layers.push(LayerSpec::conv(
+            &format!("pw{}", i + 1),
+            co,
+            ci,
+            dw_res,
+            dw_res,
+            1,
+            1,
+        ));
+        ci = co;
+        res = dw_res;
+    }
+    layers.push(LayerSpec::pool("avgpool", 1024, 1, 1));
+    layers.push(LayerSpec::dense(
+        "fc",
+        if input == 224 { 1000 } else { 10 },
+        1024,
+    ));
+    Network {
+        name: format!("mobilenet_{input}"),
+        layers,
+        base_accuracy: if input == 224 { 0.709 } else { 0.915 },
+    }
+}
+
+/// MobileNet on CIFAR-scale inputs (Figure 5's middle panel).
+pub fn mobilenet_cifar() -> Network {
+    mobilenet_v1_at(32)
+}
+
+/// Look up a network by CLI name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "lenet5" | "lenet" => Some(lenet5()),
+        "vgg16" | "vgg" => Some(vgg16()),
+        "vgg16_cifar" | "vgg_cifar" => Some(vgg16_cifar()),
+        "mobilenet" | "mobilenet_v1" => Some(mobilenet_v1()),
+        "mobilenet_cifar" => Some(mobilenet_cifar()),
+        _ => None,
+    }
+}
+
+/// All (network, dataset) pairs of the paper's evaluation.
+pub fn paper_networks() -> Vec<Network> {
+    vec![vgg16_cifar(), mobilenet_cifar(), lenet5()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["lenet5", "vgg16", "mobilenet", "vgg16_cifar", "mobilenet_cifar"] {
+            assert!(by_name(n).is_some(), "missing {n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn vgg_cifar_flatten_is_512() {
+        let net = vgg16_cifar();
+        let fc6 = net.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert_eq!(fc6.ci, 512);
+    }
+
+    #[test]
+    fn mobilenet_resolution_chain() {
+        let net = mobilenet_v1();
+        // Last pointwise layer runs at 7x7 for 224 input.
+        let pw13 = net.layers.iter().find(|l| l.name == "pw13").unwrap();
+        assert_eq!((pw13.x, pw13.y), (7, 7));
+        assert_eq!(pw13.co, 1024);
+    }
+
+    #[test]
+    fn fc2_is_output_layer() {
+        let net = lenet5();
+        let last = net.layers.last().unwrap();
+        assert_eq!(last.co, 10);
+    }
+}

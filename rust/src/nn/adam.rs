@@ -1,0 +1,112 @@
+//! Adam optimizer (Kingma & Ba, 2015) with bias correction.
+
+use crate::tensor::Tensor;
+
+/// Adam state for a fixed list of parameter tensors.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(shapes: &[&[usize]], lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            t: 0,
+        }
+    }
+
+    /// Convenience: build from current parameter tensors.
+    pub fn for_params(params: &[&Tensor], lr: f32) -> Adam {
+        let shapes: Vec<&[usize]> = params.iter().map(|p| p.shape()).collect();
+        Adam::new(&shapes, lr)
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Apply one update. `params` and `grads` must be in the same, fixed
+    /// order used at construction.
+    pub fn step(&mut self, params: Vec<&mut Tensor>, grads: &[&Tensor]) {
+        assert_eq!(params.len(), self.m.len(), "param count changed");
+        assert_eq!(grads.len(), self.m.len(), "grad count mismatch");
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for ((p, g), (m, v)) in params
+            .into_iter()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.shape(), g.shape(), "adam shape mismatch");
+            let (pd, gd) = (p.data_mut(), g.data());
+            let (md, vd) = (m.data_mut(), v.data_mut());
+            for i in 0..pd.len() {
+                md[i] = self.beta1 * md[i] + (1.0 - self.beta1) * gd[i];
+                vd[i] = self.beta2 * vd[i] + (1.0 - self.beta2) * gd[i] * gd[i];
+                let mhat = md[i] / b1t;
+                let vhat = vd[i] / b2t;
+                pd[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adam must minimize a quadratic f(x) = 0.5*||x - c||^2 quickly.
+    #[test]
+    fn minimizes_quadratic() {
+        let c = [3.0f32, -1.5, 0.25];
+        let mut x = Tensor::from_vec(&[3], vec![0.0; 3]);
+        let mut opt = Adam::for_params(&[&x], 0.05);
+        for _ in 0..2000 {
+            let g =
+                Tensor::from_vec(&[3], x.data().iter().zip(&c).map(|(xi, ci)| xi - ci).collect());
+            opt.step(vec![&mut x], &[&g]);
+        }
+        for (xi, ci) in x.data().iter().zip(&c) {
+            assert!((xi - ci).abs() < 1e-2, "{xi} vs {ci}");
+        }
+    }
+
+    /// First step magnitude equals lr regardless of gradient scale
+    /// (bias-corrected Adam property).
+    #[test]
+    fn first_step_is_lr_sized() {
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut x = Tensor::from_vec(&[1], vec![0.0]);
+            let mut opt = Adam::for_params(&[&x], 0.1);
+            let g = Tensor::from_vec(&[1], vec![scale]);
+            opt.step(vec![&mut x], &[&g]);
+            assert!(
+                (x.data()[0] + 0.1).abs() < 1e-3,
+                "scale {scale}: step {}",
+                x.data()[0]
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        let mut x = Tensor::zeros(&[2]);
+        let mut opt = Adam::for_params(&[&x], 0.1);
+        let g = Tensor::zeros(&[3]);
+        opt.step(vec![&mut x], &[&g]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Dense (fully-connected) layer with explicit forward/backward.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// `y = x @ w + b` with `x: [B, in]`, `w: [in, out]`, `b: [1, out]`.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub w: Tensor,
+    pub b: Tensor,
+}
+
+/// Gradients for one linear layer.
+#[derive(Clone, Debug)]
+pub struct LinearGrads {
+    pub dw: Tensor,
+    pub db: Tensor,
+}
+
+impl Linear {
+    /// He-style init scaled for the fan-in (good for ReLU nets; fine for
+    /// tanh at the widths we use).
+    pub fn new(fan_in: usize, fan_out: usize, rng: &mut Rng) -> Linear {
+        let std = (2.0 / fan_in as f64).sqrt();
+        Linear {
+            w: Tensor::randn(&[fan_in, fan_out], std, rng),
+            b: Tensor::zeros(&[1, fan_out]),
+        }
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn fan_out(&self) -> usize {
+        self.w.cols()
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        x.matmul(&self.w).add_row(&self.b)
+    }
+
+    /// Backward pass. `x` is the layer input from the forward pass and
+    /// `dy` the gradient flowing in from above; returns `dx` plus the
+    /// parameter gradients.
+    pub fn backward(&self, x: &Tensor, dy: &Tensor) -> (Tensor, LinearGrads) {
+        let dw = x.matmul_tn(dy); // [in, out] = x^T @ dy
+        let db = dy.sum_rows(); // [1, out]
+        let dx = dy.matmul_nt(&self.w); // [B, in] = dy @ w^T
+        (dx, LinearGrads { dw, db })
+    }
+
+    /// Flat parameter views for the optimizer.
+    pub fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    pub fn params(&self) -> Vec<&Tensor> {
+        vec![&self.w, &self.b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Finite-difference check of dw, db, dx for a scalar loss L = sum(y).
+    #[test]
+    fn gradcheck_linear() {
+        let mut rng = Rng::new(99);
+        let layer = Linear::new(4, 3, &mut rng);
+        let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+        let dy = Tensor::full(&[2, 3], 1.0); // dL/dy for L = sum(y)
+        let (dx, grads) = layer.backward(&x, &dy);
+
+        let eps = 1e-3f32;
+        // dw check
+        for idx in 0..layer.w.len() {
+            let mut lp = layer.clone();
+            lp.w.data_mut()[idx] += eps;
+            let mut lm = layer.clone();
+            lm.w.data_mut()[idx] -= eps;
+            let fd = (lp.forward(&x).sum() - lm.forward(&x).sum()) / (2.0 * eps as f64);
+            let an = grads.dw.data()[idx] as f64;
+            assert!((fd - an).abs() < 1e-2, "dw[{idx}]: fd={fd} an={an}");
+        }
+        // db check
+        for idx in 0..layer.b.len() {
+            let mut lp = layer.clone();
+            lp.b.data_mut()[idx] += eps;
+            let mut lm = layer.clone();
+            lm.b.data_mut()[idx] -= eps;
+            let fd = (lp.forward(&x).sum() - lm.forward(&x).sum()) / (2.0 * eps as f64);
+            let an = grads.db.data()[idx] as f64;
+            assert!((fd - an).abs() < 1e-2, "db[{idx}]: fd={fd} an={an}");
+        }
+        // dx check
+        for idx in 0..x.len() {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let fd = (layer.forward(&xp).sum() - layer.forward(&xm).sum()) / (2.0 * eps as f64);
+            let an = dx.data()[idx] as f64;
+            assert!((fd - an).abs() < 1e-2, "dx[{idx}]: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let layer = Linear::new(8, 5, &mut rng);
+        let x = Tensor::zeros(&[3, 8]);
+        assert_eq!(layer.forward(&x).shape(), &[3, 5]);
+    }
+}

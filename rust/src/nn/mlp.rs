@@ -1,0 +1,263 @@
+//! Multi-layer perceptron with cached-forward / explicit-backward.
+
+use super::linear::{Linear, LinearGrads};
+use super::Activation;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// MLP: `n` hidden layers with activation, then a linear head.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+    pub act: Activation,
+}
+
+/// Forward-pass cache: the input and every post-activation (plus the
+/// pre-activation head output) needed for backprop.
+pub struct MlpCache {
+    /// inputs[i] is the input fed to layers[i].
+    pub inputs: Vec<Tensor>,
+    /// Final output (linear head, no activation).
+    pub output: Tensor,
+}
+
+/// Per-layer parameter gradients.
+pub struct MlpGrads {
+    pub layers: Vec<LinearGrads>,
+}
+
+impl MlpGrads {
+    pub fn zeros_like(mlp: &Mlp) -> MlpGrads {
+        MlpGrads {
+            layers: mlp
+                .layers
+                .iter()
+                .map(|l| LinearGrads {
+                    dw: Tensor::zeros(l.w.shape()),
+                    db: Tensor::zeros(l.b.shape()),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn axpy(&mut self, alpha: f32, other: &MlpGrads) {
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.dw.axpy(alpha, &b.dw);
+            a.db.axpy(alpha, &b.db);
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for g in &mut self.layers {
+            g.dw.scale(s);
+            g.db.scale(s);
+        }
+    }
+
+    /// Global gradient L2 norm — used for clipping.
+    pub fn norm(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|g| g.dw.sq_norm() + g.db.sq_norm())
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Clip to `max_norm` in place; returns the pre-clip norm.
+    pub fn clip(&mut self, max_norm: f64) -> f64 {
+        let n = self.norm();
+        if n > max_norm && n > 0.0 {
+            self.scale((max_norm / n) as f32);
+        }
+        n
+    }
+
+    pub fn tensors(&self) -> Vec<&Tensor> {
+        self.layers
+            .iter()
+            .flat_map(|g| [&g.dw, &g.db])
+            .collect()
+    }
+}
+
+impl Mlp {
+    /// `dims` = [in, h1, h2, ..., out].
+    pub fn new(dims: &[usize], act: Activation, rng: &mut Rng) -> Mlp {
+        assert!(dims.len() >= 2, "need at least in/out dims");
+        let layers = dims
+            .windows(2)
+            .map(|w| Linear::new(w[0], w[1], rng))
+            .collect();
+        Mlp { layers, act }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().unwrap().fan_in()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().fan_out()
+    }
+
+    /// Plain forward (no cache) — for inference/eval.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut h = x.clone();
+        let last = self.layers.len() - 1;
+        for (i, layer) in self.layers.iter().enumerate() {
+            h = layer.forward(&h);
+            if i != last {
+                let act = self.act;
+                h.map_inplace(|v| act.apply(v));
+            }
+        }
+        h
+    }
+
+    /// Forward that records everything backward needs.
+    pub fn forward_cached(&self, x: &Tensor) -> MlpCache {
+        let mut inputs = Vec::with_capacity(self.layers.len());
+        let mut h = x.clone();
+        let last = self.layers.len() - 1;
+        for (i, layer) in self.layers.iter().enumerate() {
+            inputs.push(h.clone());
+            h = layer.forward(&h);
+            if i != last {
+                let act = self.act;
+                h.map_inplace(|v| act.apply(v));
+            }
+        }
+        MlpCache { inputs, output: h }
+    }
+
+    /// Backward from `dout` (gradient wrt the head output). Returns the
+    /// gradient wrt the network input along with parameter grads.
+    pub fn backward(&self, cache: &MlpCache, dout: &Tensor) -> (Tensor, MlpGrads) {
+        let mut grads: Vec<Option<LinearGrads>> = vec![None; self.layers.len()];
+        let mut dy = dout.clone();
+        let last = self.layers.len() - 1;
+        for i in (0..self.layers.len()).rev() {
+            if i != last {
+                // dy currently is grad wrt post-activation of layer i;
+                // convert to grad wrt pre-activation using the cached
+                // *input of layer i+1* (== post-activation output of i).
+                let post = &cache.inputs[i + 1];
+                let act = self.act;
+                let mut d = dy.clone();
+                for (dv, &yv) in d.data_mut().iter_mut().zip(post.data()) {
+                    *dv *= act.deriv_from_output(yv);
+                }
+                dy = d;
+            }
+            let (dx, g) = self.layers[i].backward(&cache.inputs[i], &dy);
+            grads[i] = Some(g);
+            dy = dx;
+        }
+        (
+            dy,
+            MlpGrads {
+                layers: grads.into_iter().map(|g| g.unwrap()).collect(),
+            },
+        )
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        self.layers
+            .iter_mut()
+            .flat_map(|l| l.params_mut())
+            .collect()
+    }
+
+    pub fn params(&self) -> Vec<&Tensor> {
+        self.layers.iter().flat_map(|l| l.params()).collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params().iter().map(|p| p.len()).sum()
+    }
+
+    /// Polyak soft update: self = (1-tau)*self + tau*src.
+    pub fn soft_update_from(&mut self, src: &Mlp, tau: f32) {
+        for (dst, s) in self.params_mut().into_iter().zip(src.params()) {
+            dst.lerp_into(1.0 - tau, s, tau);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Finite-difference gradient check through a 2-hidden-layer MLP for
+    /// both parameter grads and input grads, with tanh and relu.
+    #[test]
+    fn gradcheck_mlp() {
+        for act in [Activation::Tanh, Activation::Relu] {
+            let mut rng = Rng::new(7);
+            let mlp = Mlp::new(&[3, 8, 8, 2], act, &mut rng);
+            let x = Tensor::randn(&[4, 3], 1.0, &mut rng);
+            let cache = mlp.forward_cached(&x);
+            // Loss = sum(output^2)/2 -> dout = output
+            let dout = cache.output.clone();
+            let (dx, grads) = mlp.backward(&cache, &dout);
+
+            let loss = |m: &Mlp, xx: &Tensor| -> f64 {
+                let y = m.forward(xx);
+                y.data().iter().map(|&v| 0.5 * (v as f64) * (v as f64)).sum()
+            };
+            let eps = 1e-3f32;
+
+            // Spot-check a handful of parameter coordinates in every layer.
+            for (li, layer) in mlp.layers.iter().enumerate() {
+                for idx in [0usize, layer.w.len() / 2, layer.w.len() - 1] {
+                    let mut mp = mlp.clone();
+                    mp.layers[li].w.data_mut()[idx] += eps;
+                    let mut mm = mlp.clone();
+                    mm.layers[li].w.data_mut()[idx] -= eps;
+                    let fd = (loss(&mp, &x) - loss(&mm, &x)) / (2.0 * eps as f64);
+                    let an = grads.layers[li].dw.data()[idx] as f64;
+                    assert!(
+                        (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                        "act {act:?} layer {li} w[{idx}]: fd={fd} an={an}"
+                    );
+                }
+            }
+            // Input gradient.
+            for idx in 0..x.len() {
+                let mut xp = x.clone();
+                xp.data_mut()[idx] += eps;
+                let mut xm = x.clone();
+                xm.data_mut()[idx] -= eps;
+                let fd = (loss(&mlp, &xp) - loss(&mlp, &xm)) / (2.0 * eps as f64);
+                let an = dx.data()[idx] as f64;
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                    "act {act:?} dx[{idx}]: fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn soft_update_moves_toward_source() {
+        let mut rng = Rng::new(3);
+        let src = Mlp::new(&[2, 4, 1], Activation::Relu, &mut rng);
+        let mut dst = Mlp::new(&[2, 4, 1], Activation::Relu, &mut rng);
+        let before = dst.layers[0].w.at(0, 0);
+        let target = src.layers[0].w.at(0, 0);
+        dst.soft_update_from(&src, 0.5);
+        let after = dst.layers[0].w.at(0, 0);
+        assert!((after - (0.5 * before + 0.5 * target)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_clip() {
+        let mut rng = Rng::new(5);
+        let mlp = Mlp::new(&[2, 4, 1], Activation::Tanh, &mut rng);
+        let x = Tensor::randn(&[8, 2], 5.0, &mut rng);
+        let cache = mlp.forward_cached(&x);
+        let dout = Tensor::full(&[8, 1], 100.0);
+        let (_, mut grads) = mlp.backward(&cache, &dout);
+        grads.clip(1.0);
+        assert!(grads.norm() <= 1.0 + 1e-4);
+    }
+}

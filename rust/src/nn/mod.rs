@@ -1,0 +1,67 @@
+//! Minimal neural-network stack with hand-written backpropagation.
+//!
+//! Powers the SAC agent (L3). Only what SAC needs: dense layers, ReLU /
+//! tanh activations, an MLP container that caches forward activations for
+//! the backward pass, and Adam. Gradients are verified against finite
+//! differences in the tests below — that check is the foundation the RL
+//! correctness rests on.
+
+pub mod adam;
+pub mod linear;
+pub mod mlp;
+
+pub use adam::Adam;
+pub use linear::Linear;
+pub use mlp::{Mlp, MlpCache, MlpGrads};
+
+/// Hidden-layer activation functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Tanh,
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::Tanh => x.tanh(),
+        }
+    }
+
+    /// Derivative expressed in terms of the *post*-activation value `y`,
+    /// which is what the cache stores.
+    #[inline]
+    pub fn deriv_from_output(self, y: f32) -> f32 {
+        match self {
+            Activation::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Tanh => 1.0 - y * y,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activation_derivatives() {
+        // tanh'(x) = 1 - tanh(x)^2, checked at x=0.7.
+        let y = Activation::Tanh.apply(0.7);
+        let d = Activation::Tanh.deriv_from_output(y);
+        // f32 finite differences at eps=1e-3 carry ~1e-3 noise.
+        let fd = (Activation::Tanh.apply(0.7 + 1e-3) - Activation::Tanh.apply(0.7 - 1e-3)) / 2e-3;
+        assert!((d - fd).abs() < 1e-2, "{d} vs {fd}");
+
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert_eq!(Activation::Relu.deriv_from_output(0.0), 0.0);
+        assert_eq!(Activation::Relu.deriv_from_output(2.0), 1.0);
+    }
+}

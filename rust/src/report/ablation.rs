@@ -1,0 +1,93 @@
+//! Hyper-parameter ablations the paper reports in prose (§3.3): the
+//! step-discount gamma ("we test different values ... gamma = 0.9 is
+//! optimal") and the accuracy exponent lambda ("lambda = 3 is optimal"),
+//! plus the dq/dp step-size choices DESIGN.md calls out.
+
+use super::Table;
+use crate::coordinator::{Coordinator, SearchConfig};
+use crate::dataflow::Dataflow;
+use crate::energy::EnergyConfig;
+use crate::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
+use crate::model::zoo;
+use crate::rl::sac::SacConfig;
+
+fn run_one(lambda: f64, gamma: f64, episodes: usize, seed: u64) -> (f64, f64) {
+    let net = zoo::lenet5();
+    let oracle = SurrogateOracle::new(&net, seed);
+    let mut env_cfg = EnvConfig {
+        lambda,
+        ..EnvConfig::default()
+    };
+    env_cfg.limits.gamma = gamma;
+    let env = CompressionEnv::new(
+        net,
+        Dataflow::XY,
+        Box::new(oracle),
+        env_cfg,
+        EnergyConfig::default(),
+    );
+    let cfg = SearchConfig {
+        episodes,
+        sac: SacConfig {
+            lr: 3e-3,
+            alpha_lr: 3e-3,
+            updates_per_step: 4,
+            warmup_steps: 96,
+            seed,
+            ..SacConfig::default()
+        },
+        verbose: false,
+    };
+    let out = Coordinator::new(env, cfg).run();
+    (
+        out.energy_improvement(),
+        out.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN),
+    )
+}
+
+/// Lambda sweep (Eq. 4's accuracy exponent).
+pub fn lambda_sweep(episodes: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "Ablation: accuracy exponent lambda (Eq. 4), LeNet-5 / X:Y",
+        &["lambda", "energy improvement", "best accuracy"],
+    );
+    for lambda in [1.0, 2.0, 3.0, 5.0] {
+        let (imp, acc) = run_one(lambda, 0.9, episodes, seed);
+        t.row(vec![
+            format!("{lambda}"),
+            format!("{imp:.1}x"),
+            format!("{acc:.4}"),
+        ]);
+    }
+    t
+}
+
+/// Gamma sweep (Eq. 1's step discount).
+pub fn gamma_sweep(episodes: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "Ablation: step discount gamma (Eq. 1), LeNet-5 / X:Y",
+        &["gamma", "energy improvement", "best accuracy"],
+    );
+    for gamma in [0.7, 0.8, 0.9, 1.0] {
+        let (imp, acc) = run_one(3.0, gamma, episodes, seed);
+        t.row(vec![
+            format!("{gamma}"),
+            format!("{imp:.1}x"),
+            format!("{acc:.4}"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweeps_render() {
+        let t = lambda_sweep(2, 1);
+        assert_eq!(t.rows.len(), 4);
+        let t = gamma_sweep(2, 1);
+        assert_eq!(t.rows.len(), 4);
+    }
+}

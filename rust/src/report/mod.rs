@@ -1,0 +1,133 @@
+//! Table/figure regeneration (deliverable (d)): every table and figure of
+//! the paper's evaluation, rendered as paper-style ASCII plus CSV series
+//! under `reports/`.
+//!
+//! Shared between `cargo bench` (each bench prints its table) and the
+//! `edc table|figure` CLI.
+
+pub mod ablation;
+pub mod figures;
+pub mod tables;
+
+use std::fmt::Write as _;
+
+/// A simple aligned ASCII table.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.title);
+        let line = |out: &mut String| {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out);
+        let mut hdr = String::from("|");
+        for (i, h) in self.header.iter().enumerate() {
+            let _ = write!(hdr, " {:width$} |", h, width = widths[i]);
+        }
+        let _ = writeln!(out, "{hdr}");
+        line(&mut out);
+        for row in &self.rows {
+            let mut r = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(r, " {:width$} |", row[i], width = widths[i]);
+            }
+            let _ = writeln!(out, "{r}");
+        }
+        line(&mut out);
+        out
+    }
+}
+
+/// Write a CSV file under `reports/` (creating the dir).
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<f64>]) -> std::io::Result<String> {
+    let dir = std::path::Path::new("reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut s = String::new();
+    let _ = writeln!(s, "{}", header.join(","));
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        let _ = writeln!(s, "{}", cells.join(","));
+    }
+    std::fs::write(&path, s)?;
+    Ok(path.display().to_string())
+}
+
+/// Format a ratio like the paper's normalized tables (2 decimals).
+pub fn norm(v: f64, base: f64) -> String {
+    if base <= 0.0 {
+        return "n/a".into();
+    }
+    format!("{:.2}", v / base)
+}
+
+/// Episode budget for table/figure searches. `EDC_EPISODES` overrides —
+/// benches default low enough to finish in minutes; the committed
+/// EXPERIMENTS.md numbers use larger budgets (recorded there).
+pub fn episode_budget() -> usize {
+    std::env::var("EDC_EPISODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "long-header", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        let s = t.render();
+        assert!(s.contains("long-header"));
+        // All data lines equal width.
+        let widths: Vec<usize> = s.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn norm_formats() {
+        assert_eq!(norm(4.0, 2.0), "2.00");
+        assert_eq!(norm(1.0, 0.0), "n/a");
+    }
+}

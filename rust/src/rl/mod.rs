@@ -1,0 +1,92 @@
+//! Reinforcement learning: environment abstraction, replay buffer and a
+//! from-scratch soft actor-critic (SAC) implementation (Haarnoja et al.,
+//! 2018 — the algorithm the paper's §4 uses).
+
+pub mod replay;
+pub mod sac;
+
+pub use replay::{ReplayBuffer, Transition};
+pub use sac::{SacAgent, SacConfig};
+
+/// A continuous-action RL environment.
+///
+/// EDCompress's compression environment (`envs::CompressionEnv`)
+/// implements this; tests use toy environments.
+pub trait Env {
+    /// Dimensionality of the observation vector (Eq. 3 of the paper).
+    fn state_dim(&self) -> usize;
+    /// Dimensionality of the action vector (Eq. 2): 2·L for L layers.
+    fn action_dim(&self) -> usize;
+    /// Reset to the start of an episode, returning the initial state.
+    fn reset(&mut self) -> Vec<f64>;
+    /// Apply an action in [-1, 1]^A. Returns (next_state, reward, done).
+    fn step(&mut self, action: &[f64]) -> (Vec<f64>, f64, bool);
+}
+
+/// Outcome statistics of a single rolled-out episode.
+#[derive(Clone, Debug, Default)]
+pub struct EpisodeStats {
+    pub steps: usize,
+    pub total_reward: f64,
+    pub final_reward: f64,
+}
+
+/// Roll out `env` for at most `max_steps` using `policy` (a closure so we
+/// can use either the SAC actor or scripted baselines).
+pub fn rollout<E: Env>(
+    env: &mut E,
+    max_steps: usize,
+    mut policy: impl FnMut(&[f64]) -> Vec<f64>,
+) -> EpisodeStats {
+    let mut state = env.reset();
+    let mut stats = EpisodeStats::default();
+    for _ in 0..max_steps {
+        let action = policy(&state);
+        let (next, reward, done) = env.step(&action);
+        stats.steps += 1;
+        stats.total_reward += reward;
+        stats.final_reward = reward;
+        state = next;
+        if done {
+            break;
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct CountEnv {
+        t: usize,
+    }
+
+    impl Env for CountEnv {
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn action_dim(&self) -> usize {
+            1
+        }
+        fn reset(&mut self) -> Vec<f64> {
+            self.t = 0;
+            vec![0.0]
+        }
+        fn step(&mut self, _a: &[f64]) -> (Vec<f64>, f64, bool) {
+            self.t += 1;
+            (vec![self.t as f64], 1.0, self.t >= 5)
+        }
+    }
+
+    #[test]
+    fn rollout_respects_done_and_max_steps() {
+        let mut env = CountEnv { t: 0 };
+        let stats = rollout(&mut env, 100, |_s| vec![0.0]);
+        assert_eq!(stats.steps, 5);
+        assert_eq!(stats.total_reward, 5.0);
+
+        let stats = rollout(&mut env, 3, |_s| vec![0.0]);
+        assert_eq!(stats.steps, 3);
+    }
+}

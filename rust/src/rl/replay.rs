@@ -1,0 +1,116 @@
+//! Uniform-sampling ring-buffer replay memory.
+
+use crate::util::rng::Rng;
+
+/// One environment transition.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: Vec<f32>,
+    pub reward: f32,
+    pub next_state: Vec<f32>,
+    /// 1.0 when the episode terminated at this step (used to mask the
+    /// bootstrap target).
+    pub done: f32,
+}
+
+/// Fixed-capacity FIFO replay buffer with uniform sampling.
+pub struct ReplayBuffer {
+    cap: usize,
+    data: Vec<Transition>,
+    head: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> ReplayBuffer {
+        assert!(cap > 0);
+        ReplayBuffer {
+            cap,
+            data: Vec::with_capacity(cap.min(1 << 20)),
+            head: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.data.len() < self.cap {
+            self.data.push(t);
+        } else {
+            self.data[self.head] = t;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Sample `n` transitions uniformly with replacement.
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng) -> Vec<&'a Transition> {
+        assert!(!self.data.is_empty(), "sampling from empty buffer");
+        (0..n).map(|_| &self.data[rng.below(self.data.len())]).collect()
+    }
+
+    /// All stored transitions (order unspecified once the ring wraps).
+    pub fn as_slice(&self) -> &[Transition] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> Transition {
+        Transition {
+            state: vec![v],
+            action: vec![0.0],
+            reward: v,
+            next_state: vec![v],
+            done: 0.0,
+        }
+    }
+
+    #[test]
+    fn fifo_eviction_at_capacity() {
+        let mut b = ReplayBuffer::new(3);
+        for i in 0..5 {
+            b.push(t(i as f32));
+        }
+        assert_eq!(b.len(), 3);
+        // Contents must be exactly {2, 3, 4}: 0 and 1 evicted first.
+        let mut rewards: Vec<f32> = b.data.iter().map(|x| x.reward).collect();
+        rewards.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(rewards, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sample_covers_buffer() {
+        let mut b = ReplayBuffer::new(10);
+        for i in 0..10 {
+            b.push(t(i as f32));
+        }
+        let mut rng = Rng::new(0);
+        let s = b.sample(1000, &mut rng);
+        let mut seen = [false; 10];
+        for x in s {
+            seen[x.reward as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "uniform sampling missed an element");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn sample_empty_panics() {
+        let b = ReplayBuffer::new(4);
+        let mut rng = Rng::new(0);
+        let _ = b.sample(1, &mut rng);
+    }
+}

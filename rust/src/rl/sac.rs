@@ -1,0 +1,616 @@
+//! Soft actor-critic (SAC) with automatic entropy tuning, implemented from
+//! scratch on the `nn` substrate (Haarnoja et al., 2018 — the optimizer the
+//! paper's experiments use).
+//!
+//! The actor outputs a squashed-Gaussian policy: `a = tanh(mu + sigma*eps)`
+//! with the standard log-prob correction `-sum ln(1 - a^2 + eta)`. Twin Q
+//! networks with Polyak-averaged targets bootstrap the soft value, and the
+//! temperature `alpha` is tuned toward a target entropy of `-action_dim`.
+//!
+//! All gradients are hand-derived; `tests::gradcheck_policy_loss` verifies
+//! the full policy-gradient path (through tanh, the log-prob and the Q
+//! network) against finite differences.
+
+use super::replay::{ReplayBuffer, Transition};
+use crate::nn::{Activation, Adam, Mlp};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+const LOG_STD_MIN: f32 = -8.0;
+const LOG_STD_MAX: f32 = 2.0;
+const SQUASH_ETA: f32 = 1e-6;
+const LN_2PI: f32 = 1.837_877_1;
+
+/// Hyper-parameters. Defaults follow the SAC paper adjusted for the small
+/// search spaces of EDCompress (paper §4: "the search space in our problem
+/// is not large, and SAC can approach the optimal solutions very quickly").
+#[derive(Clone, Debug)]
+pub struct SacConfig {
+    pub hidden: Vec<usize>,
+    pub gamma: f32,
+    pub tau: f32,
+    pub lr: f32,
+    pub alpha_lr: f32,
+    pub batch_size: usize,
+    pub replay_capacity: usize,
+    /// Steps of pure random exploration before the actor is used.
+    pub warmup_steps: usize,
+    /// Upper bound of warmup random actions (lower is always -1).
+    /// EDCompress biases warmup toward compression (negative deltas):
+    /// the useful half of the action space is known a priori.
+    pub warmup_action_hi: f64,
+    /// Gradient updates per environment step.
+    pub updates_per_step: usize,
+    pub grad_clip: f64,
+    pub init_alpha: f32,
+    pub seed: u64,
+}
+
+impl Default for SacConfig {
+    fn default() -> Self {
+        SacConfig {
+            hidden: vec![128, 128],
+            gamma: 0.95,
+            tau: 0.01,
+            lr: 1e-3,
+            alpha_lr: 1e-3,
+            batch_size: 64,
+            replay_capacity: 100_000,
+            warmup_steps: 128,
+            warmup_action_hi: 0.5,
+            updates_per_step: 2,
+            grad_clip: 10.0,
+            init_alpha: 0.2,
+            seed: 0,
+        }
+    }
+}
+
+/// Diagnostics from one gradient update.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateStats {
+    pub q1_loss: f64,
+    pub q2_loss: f64,
+    pub policy_loss: f64,
+    pub alpha: f64,
+    pub entropy: f64,
+}
+
+/// The agent: actor, twin critics + targets, temperature, replay.
+pub struct SacAgent {
+    pub cfg: SacConfig,
+    state_dim: usize,
+    action_dim: usize,
+    actor: Mlp,
+    q1: Mlp,
+    q2: Mlp,
+    q1_target: Mlp,
+    q2_target: Mlp,
+    log_alpha: f32,
+    target_entropy: f32,
+    actor_opt: Adam,
+    q1_opt: Adam,
+    q2_opt: Adam,
+    pub replay: ReplayBuffer,
+    rng: Rng,
+    env_steps: usize,
+}
+
+impl SacAgent {
+    pub fn new(state_dim: usize, action_dim: usize, cfg: SacConfig) -> SacAgent {
+        assert!(state_dim > 0 && action_dim > 0);
+        let mut rng = Rng::new(cfg.seed);
+        let mut actor_dims = vec![state_dim];
+        actor_dims.extend_from_slice(&cfg.hidden);
+        actor_dims.push(2 * action_dim);
+        let mut q_dims = vec![state_dim + action_dim];
+        q_dims.extend_from_slice(&cfg.hidden);
+        q_dims.push(1);
+
+        let actor = Mlp::new(&actor_dims, Activation::Relu, &mut rng);
+        let q1 = Mlp::new(&q_dims, Activation::Relu, &mut rng);
+        let q2 = Mlp::new(&q_dims, Activation::Relu, &mut rng);
+        let q1_target = q1.clone();
+        let q2_target = q2.clone();
+        let actor_opt = Adam::for_params(&actor.params(), cfg.lr);
+        let q1_opt = Adam::for_params(&q1.params(), cfg.lr);
+        let q2_opt = Adam::for_params(&q2.params(), cfg.lr);
+        let replay = ReplayBuffer::new(cfg.replay_capacity);
+        SacAgent {
+            state_dim,
+            action_dim,
+            actor,
+            q1,
+            q2,
+            q1_target,
+            q2_target,
+            log_alpha: cfg.init_alpha.ln(),
+            target_entropy: -(action_dim as f32),
+            actor_opt,
+            q1_opt,
+            q2_opt,
+            replay,
+            rng,
+            env_steps: 0,
+            cfg,
+        }
+    }
+
+    pub fn state_dim(&self) -> usize {
+        self.state_dim
+    }
+
+    pub fn action_dim(&self) -> usize {
+        self.action_dim
+    }
+
+    pub fn alpha(&self) -> f32 {
+        self.log_alpha.exp()
+    }
+
+    pub fn env_steps(&self) -> usize {
+        self.env_steps
+    }
+
+    /// Select an action for environment interaction. Random during warmup,
+    /// then a stochastic policy sample.
+    pub fn act(&mut self, state: &[f64]) -> Vec<f64> {
+        self.env_steps += 1;
+        if self.env_steps <= self.cfg.warmup_steps {
+            let hi = self.cfg.warmup_action_hi;
+            return (0..self.action_dim).map(|_| self.rng.range(-1.0, hi)).collect();
+        }
+        self.sample(state, false)
+    }
+
+    /// Deterministic (mean) action for evaluation.
+    pub fn act_deterministic(&mut self, state: &[f64]) -> Vec<f64> {
+        self.sample(state, true)
+    }
+
+    fn sample(&mut self, state: &[f64], deterministic: bool) -> Vec<f64> {
+        let x = Tensor::from_vec(
+            &[1, self.state_dim],
+            state.iter().map(|&v| v as f32).collect(),
+        );
+        let out = self.actor.forward(&x);
+        let a = self.action_dim;
+        let mut action = Vec::with_capacity(a);
+        for d in 0..a {
+            let mean = out.data()[d];
+            if deterministic {
+                action.push(mean.tanh() as f64);
+            } else {
+                let log_std = out.data()[a + d].clamp(LOG_STD_MIN, LOG_STD_MAX);
+                let eps = self.rng.normal() as f32;
+                action.push(((mean + log_std.exp() * eps).tanh()) as f64);
+            }
+        }
+        action
+    }
+
+    /// Record a transition in the replay buffer.
+    pub fn observe(
+        &mut self,
+        state: &[f64],
+        action: &[f64],
+        reward: f64,
+        next_state: &[f64],
+        done: bool,
+    ) {
+        self.replay.push(Transition {
+            state: state.iter().map(|&v| v as f32).collect(),
+            action: action.iter().map(|&v| v as f32).collect(),
+            reward: reward as f32,
+            next_state: next_state.iter().map(|&v| v as f32).collect(),
+            done: if done { 1.0 } else { 0.0 },
+        });
+    }
+
+    /// Run the configured number of gradient updates if enough data is
+    /// buffered. Returns stats of the last update.
+    pub fn maybe_update(&mut self) -> Option<UpdateStats> {
+        if self.replay.len() < self.cfg.batch_size.max(self.cfg.warmup_steps) {
+            return None;
+        }
+        let mut last = None;
+        for _ in 0..self.cfg.updates_per_step {
+            last = Some(self.update_once());
+        }
+        last
+    }
+
+    /// One SAC gradient update on a uniform minibatch.
+    pub fn update_once(&mut self) -> UpdateStats {
+        let b = self.cfg.batch_size;
+        let (s, a, r, s2, done) = self.sample_batch(b);
+
+        // ---- Target computation: y = r + gamma * (1-d) * (minQ'(s',a') - alpha*logp') ----
+        let (a2, logp2) = self.policy_forward_batch(&s2);
+        let q_in2 = concat_cols(&s2, &a2);
+        let q1t = self.q1_target.forward(&q_in2);
+        let q2t = self.q2_target.forward(&q_in2);
+        let alpha = self.log_alpha.exp();
+        let gamma = self.cfg.gamma;
+        let mut y = Tensor::zeros(&[b, 1]);
+        for i in 0..b {
+            let qmin = q1t.data()[i].min(q2t.data()[i]);
+            let soft = qmin - alpha * logp2.data()[i];
+            y.data_mut()[i] = r.data()[i] + gamma * (1.0 - done.data()[i]) * soft;
+        }
+
+        // ---- Critic updates (0.5 * MSE) ----
+        let q_in = concat_cols(&s, &a);
+        let q1_loss = self.critic_update(true, &q_in, &y);
+        let q2_loss = self.critic_update(false, &q_in, &y);
+
+        // ---- Actor update ----
+        let (policy_loss, entropy) = self.actor_update(&s);
+
+        // ---- Temperature update ----
+        // alpha_loss = -log_alpha * mean(logp + target_entropy) (detached)
+        let mean_err = -(entropy as f32) + self.target_entropy; // mean(logp) = -entropy
+        self.log_alpha -= self.cfg.alpha_lr * (-mean_err);
+        self.log_alpha = self.log_alpha.clamp(-10.0, 3.0);
+
+        // ---- Polyak target updates ----
+        self.q1_target.soft_update_from(&self.q1, self.cfg.tau);
+        self.q2_target.soft_update_from(&self.q2, self.cfg.tau);
+
+        UpdateStats {
+            q1_loss,
+            q2_loss,
+            policy_loss,
+            alpha: self.log_alpha.exp() as f64,
+            entropy,
+        }
+    }
+
+    fn sample_batch(&mut self, b: usize) -> (Tensor, Tensor, Tensor, Tensor, Tensor) {
+        let (sd, ad) = (self.state_dim, self.action_dim);
+        let mut s = Tensor::zeros(&[b, sd]);
+        let mut a = Tensor::zeros(&[b, ad]);
+        let mut r = Tensor::zeros(&[b, 1]);
+        let mut s2 = Tensor::zeros(&[b, sd]);
+        let mut d = Tensor::zeros(&[b, 1]);
+        // Borrow dance: sample indices first to avoid holding &self.replay.
+        let idx: Vec<usize> = (0..b).map(|_| self.rng.below(self.replay.len())).collect();
+        for (row, &i) in idx.iter().enumerate() {
+            let t = &self.replay.sample_at(i);
+            s.data_mut()[row * sd..(row + 1) * sd].copy_from_slice(&t.state);
+            a.data_mut()[row * ad..(row + 1) * ad].copy_from_slice(&t.action);
+            r.data_mut()[row] = t.reward;
+            s2.data_mut()[row * sd..(row + 1) * sd].copy_from_slice(&t.next_state);
+            d.data_mut()[row] = t.done;
+        }
+        (s, a, r, s2, d)
+    }
+
+    /// Batched policy forward: returns squashed actions [B, A] and
+    /// per-sample log-probs [B, 1] (no gradients retained).
+    fn policy_forward_batch(&mut self, s: &Tensor) -> (Tensor, Tensor) {
+        let b = s.rows();
+        let a_dim = self.action_dim;
+        let out = self.actor.forward(s);
+        let mut actions = Tensor::zeros(&[b, a_dim]);
+        let mut logp = Tensor::zeros(&[b, 1]);
+        for i in 0..b {
+            let mut lp = 0.0f32;
+            for d in 0..a_dim {
+                let mean = out.data()[i * 2 * a_dim + d];
+                let log_std = out.data()[i * 2 * a_dim + a_dim + d].clamp(LOG_STD_MIN, LOG_STD_MAX);
+                let eps = self.rng.normal() as f32;
+                let u = mean + log_std.exp() * eps;
+                let act = u.tanh();
+                actions.data_mut()[i * a_dim + d] = act;
+                lp += -0.5 * LN_2PI - log_std - 0.5 * eps * eps - (1.0 - act * act + SQUASH_ETA).ln();
+            }
+            logp.data_mut()[i] = lp;
+        }
+        (actions, logp)
+    }
+
+    /// 0.5*MSE critic update; returns the loss.
+    fn critic_update(&mut self, first: bool, q_in: &Tensor, y: &Tensor) -> f64 {
+        let b = q_in.rows();
+        let (net, opt) = if first {
+            (&mut self.q1, &mut self.q1_opt)
+        } else {
+            (&mut self.q2, &mut self.q2_opt)
+        };
+        let cache = net.forward_cached(q_in);
+        let mut dout = Tensor::zeros(&[b, 1]);
+        let mut loss = 0.0f64;
+        for i in 0..b {
+            let err = cache.output.data()[i] - y.data()[i];
+            loss += 0.5 * (err as f64) * (err as f64);
+            dout.data_mut()[i] = err / b as f32;
+        }
+        loss /= b as f64;
+        let (_, mut grads) = net.backward(&cache, &dout);
+        grads.clip(self.cfg.grad_clip);
+        let gt = grads.tensors();
+        opt.step(net.params_mut(), &gt);
+        loss
+    }
+
+    /// Reparameterized policy update. Returns (policy_loss, entropy).
+    fn actor_update(&mut self, s: &Tensor) -> (f64, f64) {
+        let b = s.rows();
+        let a_dim = self.action_dim;
+        let alpha = self.log_alpha.exp();
+
+        let cache = self.actor.forward_cached(s);
+        let out = &cache.output; // [B, 2A]
+
+        // Sample eps, compute actions and logp.
+        let mut eps_t = Tensor::zeros(&[b, a_dim]);
+        let mut actions = Tensor::zeros(&[b, a_dim]);
+        let mut std_t = Tensor::zeros(&[b, a_dim]);
+        let mut clamped = vec![false; b * a_dim];
+        let mut logp = vec![0.0f32; b];
+        for i in 0..b {
+            for d in 0..a_dim {
+                let mean = out.data()[i * 2 * a_dim + d];
+                let raw_ls = out.data()[i * 2 * a_dim + a_dim + d];
+                let ls = raw_ls.clamp(LOG_STD_MIN, LOG_STD_MAX);
+                clamped[i * a_dim + d] = raw_ls != ls;
+                let std = ls.exp();
+                let eps = self.rng.normal() as f32;
+                let u = mean + std * eps;
+                let act = u.tanh();
+                eps_t.data_mut()[i * a_dim + d] = eps;
+                std_t.data_mut()[i * a_dim + d] = std;
+                actions.data_mut()[i * a_dim + d] = act;
+                logp[i] +=
+                    -0.5 * LN_2PI - ls - 0.5 * eps * eps - (1.0 - act * act + SQUASH_ETA).ln();
+            }
+        }
+
+        // Q(s, a) with gradient wrt the action input.
+        let q_in = concat_cols(s, &actions);
+        let c1 = self.q1.forward_cached(&q_in);
+        let c2 = self.q2.forward_cached(&q_in);
+        // Per-sample min; dout routes -1/B to the chosen branch.
+        let mut d1 = Tensor::zeros(&[b, 1]);
+        let mut d2 = Tensor::zeros(&[b, 1]);
+        let mut policy_loss = 0.0f64;
+        for i in 0..b {
+            let (q1v, q2v) = (c1.output.data()[i], c2.output.data()[i]);
+            let qmin = q1v.min(q2v);
+            policy_loss += (alpha * logp[i] - qmin) as f64;
+            if q1v <= q2v {
+                d1.data_mut()[i] = -1.0 / b as f32;
+            } else {
+                d2.data_mut()[i] = -1.0 / b as f32;
+            }
+        }
+        policy_loss /= b as f64;
+        let (dx1, _) = self.q1.backward(&c1, &d1);
+        let (dx2, _) = self.q2.backward(&c2, &d2);
+
+        // Gradient wrt actions = action-columns of dQ_in.
+        let sd = self.state_dim;
+        let mut dout_actor = Tensor::zeros(&[b, 2 * a_dim]);
+        for i in 0..b {
+            for d in 0..a_dim {
+                let act = actions.data()[i * a_dim + d];
+                let dq_da = dx1.data()[i * (sd + a_dim) + sd + d]
+                    + dx2.data()[i * (sd + a_dim) + sd + d];
+                // d(mean alpha*logp)/da via the -ln(1-a^2+eta) term.
+                let dlogp_da = 2.0 * act / (1.0 - act * act + SQUASH_ETA);
+                let g_a = alpha * dlogp_da / b as f32 + dq_da;
+                let dtanh = 1.0 - act * act;
+                let dmean = g_a * dtanh;
+                let mut dls = g_a * dtanh * std_t.data()[i * a_dim + d] * eps_t.data()[i * a_dim + d]
+                    - alpha / b as f32; // -alpha * d(log_std)/dls / B from logp
+                if clamped[i * a_dim + d] {
+                    dls = 0.0;
+                }
+                dout_actor.data_mut()[i * 2 * a_dim + d] = dmean;
+                dout_actor.data_mut()[i * 2 * a_dim + a_dim + d] = dls;
+            }
+        }
+        let (_, mut grads) = self.actor.backward(&cache, &dout_actor);
+        grads.clip(self.cfg.grad_clip);
+        let gt = grads.tensors();
+        self.actor_opt.step(self.actor.params_mut(), &gt);
+
+        let entropy = -(logp.iter().map(|&v| v as f64).sum::<f64>() / b as f64);
+        (policy_loss, entropy)
+    }
+}
+
+/// Concatenate two matrices along columns: [B, n1] ++ [B, n2] -> [B, n1+n2].
+pub fn concat_cols(a: &Tensor, b: &Tensor) -> Tensor {
+    let rows = a.rows();
+    assert_eq!(rows, b.rows(), "concat_cols row mismatch");
+    let (n1, n2) = (a.cols(), b.cols());
+    let mut out = Tensor::zeros(&[rows, n1 + n2]);
+    for i in 0..rows {
+        out.data_mut()[i * (n1 + n2)..i * (n1 + n2) + n1]
+            .copy_from_slice(&a.data()[i * n1..(i + 1) * n1]);
+        out.data_mut()[i * (n1 + n2) + n1..(i + 1) * (n1 + n2)]
+            .copy_from_slice(&b.data()[i * n2..(i + 1) * n2]);
+    }
+    out
+}
+
+impl ReplayBuffer {
+    /// Direct index access used by the batched sampler.
+    pub(crate) fn sample_at(&self, i: usize) -> &Transition {
+        &self.as_slice()[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::{rollout, Env};
+
+    /// 1-D "drive x to zero" toy environment.
+    struct Drive {
+        x: f64,
+        t: usize,
+        rng: Rng,
+    }
+
+    impl Env for Drive {
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn action_dim(&self) -> usize {
+            1
+        }
+        fn reset(&mut self) -> Vec<f64> {
+            self.x = self.rng.range(-1.5, 1.5);
+            self.t = 0;
+            vec![self.x]
+        }
+        fn step(&mut self, a: &[f64]) -> (Vec<f64>, f64, bool) {
+            self.x = (self.x + 0.5 * a[0].clamp(-1.0, 1.0)).clamp(-2.0, 2.0);
+            self.t += 1;
+            (vec![self.x], -self.x * self.x, self.t >= 20)
+        }
+    }
+
+    #[test]
+    fn sac_learns_toy_control() {
+        let cfg = SacConfig {
+            hidden: vec![32, 32],
+            warmup_steps: 200,
+            warmup_action_hi: 1.0, // symmetric task
+            batch_size: 64,
+            lr: 3e-3,
+            alpha_lr: 3e-3,
+            updates_per_step: 1,
+            seed: 17,
+            ..SacConfig::default()
+        };
+        let mut agent = SacAgent::new(1, 1, cfg);
+        let mut env = Drive {
+            x: 0.0,
+            t: 0,
+            rng: Rng::new(5),
+        };
+        // Train.
+        for _episode in 0..120 {
+            let mut s = env.reset();
+            loop {
+                let a = agent.act(&s);
+                let (s2, r, done) = env.step(&a);
+                agent.observe(&s, &a, r, &s2, done);
+                agent.maybe_update();
+                s = s2;
+                if done {
+                    break;
+                }
+            }
+        }
+        // Evaluate deterministically: mean |x| at episode end must be small.
+        let mut final_abs = 0.0;
+        let evals = 10;
+        for _ in 0..evals {
+            let stats = rollout(&mut env, 20, |s| agent.act_deterministic(s));
+            let _ = stats;
+            final_abs += env.x.abs();
+        }
+        final_abs /= evals as f64;
+        assert!(
+            final_abs < 0.35,
+            "SAC failed to learn: mean final |x| = {final_abs}"
+        );
+    }
+
+    /// Finite-difference check of the policy-gradient path wrt the actor
+    /// head outputs (mean and log_std), holding eps fixed.
+    #[test]
+    fn gradcheck_policy_loss() {
+        let a_dim = 2usize;
+        let alpha = 0.3f32;
+        let mut rng = Rng::new(21);
+        // A fixed random Q function to differentiate through.
+        let q = Mlp::new(&[3 + a_dim, 16, 1], Activation::Tanh, &mut rng);
+        let s = Tensor::randn(&[1, 3], 1.0, &mut rng);
+        let eps: Vec<f32> = (0..a_dim).map(|_| rng.normal() as f32).collect();
+        // head = [mean0, mean1, ls0, ls1]
+        let head = vec![0.3f32, -0.2, -0.5, 0.1];
+
+        let loss = |h: &[f32]| -> f64 {
+            let mut lp = 0.0f32;
+            let mut acts = vec![0.0f32; a_dim];
+            for d in 0..a_dim {
+                let ls = h[a_dim + d].clamp(LOG_STD_MIN, LOG_STD_MAX);
+                let u = h[d] + ls.exp() * eps[d];
+                let a = u.tanh();
+                acts[d] = a;
+                lp += -0.5 * LN_2PI - ls - 0.5 * eps[d] * eps[d]
+                    - (1.0 - a * a + SQUASH_ETA).ln();
+            }
+            let qin = concat_cols(&s, &Tensor::from_vec(&[1, a_dim], acts));
+            let qv = q.forward(&qin).data()[0];
+            (alpha * lp - qv) as f64
+        };
+
+        // Analytic gradient, mirroring actor_update's math with B=1.
+        let mut acts = vec![0.0f32; a_dim];
+        let mut stds = vec![0.0f32; a_dim];
+        for d in 0..a_dim {
+            let ls = head[a_dim + d].clamp(LOG_STD_MIN, LOG_STD_MAX);
+            stds[d] = ls.exp();
+            acts[d] = (head[d] + stds[d] * eps[d]).tanh();
+        }
+        let qin = concat_cols(&s, &Tensor::from_vec(&[1, a_dim], acts.clone()));
+        let qc = q.forward_cached(&qin);
+        let dq = Tensor::from_vec(&[1, 1], vec![-1.0]);
+        let (dqin, _) = q.backward(&qc, &dq);
+        let mut grad = vec![0.0f32; 2 * a_dim];
+        for d in 0..a_dim {
+            let a = acts[d];
+            let dq_da = dqin.data()[3 + d];
+            let g_a = alpha * 2.0 * a / (1.0 - a * a + SQUASH_ETA) + dq_da;
+            let dtanh = 1.0 - a * a;
+            grad[d] = g_a * dtanh;
+            grad[a_dim + d] = g_a * dtanh * stds[d] * eps[d] - alpha;
+        }
+
+        let fd_eps = 1e-3f32;
+        for i in 0..2 * a_dim {
+            let mut hp = head.clone();
+            hp[i] += fd_eps;
+            let mut hm = head.clone();
+            hm[i] -= fd_eps;
+            let fd = (loss(&hp) - loss(&hm)) / (2.0 * fd_eps as f64);
+            let an = grad[i] as f64;
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                "head[{i}]: fd={fd} an={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn concat_cols_layout() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 1], vec![9., 8.]);
+        let c = concat_cols(&a, &b);
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.data(), &[1., 2., 9., 3., 4., 8.]);
+    }
+
+    #[test]
+    fn warmup_actions_random_then_policy() {
+        let cfg = SacConfig {
+            warmup_steps: 5,
+            ..SacConfig::default()
+        };
+        let mut agent = SacAgent::new(2, 1, cfg);
+        for _ in 0..5 {
+            let a = agent.act(&[0.0, 0.0]);
+            assert!(a[0].abs() <= 1.0);
+        }
+        let a = agent.act(&[0.0, 0.0]);
+        assert!(a[0].abs() <= 1.0);
+        assert_eq!(agent.env_steps(), 6);
+    }
+}

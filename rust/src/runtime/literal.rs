@@ -1,0 +1,61 @@
+//! Tensor <-> xla::Literal conversion.
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+
+/// Convert a Tensor to an f32 literal with the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert an f32/i32/f64 literal back into a Tensor (f32 storage).
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = match shape.ty() {
+        xla::ElementType::F32 => l.to_vec::<f32>()?,
+        xla::ElementType::S32 => l.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect(),
+        xla::ElementType::F64 => l.to_vec::<f64>()?.into_iter().map(|v| v as f32).collect(),
+        other => return Err(anyhow!("unsupported literal type {other:?}")),
+    };
+    let dims = if dims.is_empty() { vec![1] } else { dims };
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Build an i32 labels literal of shape [n].
+pub fn labels_literal(labels: &[i32]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(labels);
+    Ok(lit.reshape(&[labels.len() as i64])?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.data(), t.data());
+    }
+
+    #[test]
+    fn scalar_and_labels() {
+        let s = scalar_literal(2.5);
+        let t = literal_to_tensor(&s).unwrap();
+        assert_eq!(t.data(), &[2.5]);
+
+        let l = labels_literal(&[1, 2, 3]).unwrap();
+        let t = literal_to_tensor(&l).unwrap();
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0]);
+    }
+}

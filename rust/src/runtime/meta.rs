@@ -1,0 +1,145 @@
+//! Artifact metadata (`NAME_meta.json` emitted by `python/compile/aot.py`).
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One parameter tensor's name + shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Is this a weight (vs bias) tensor? Weights carry compression state.
+    pub fn is_weight(&self) -> bool {
+        self.name.ends_with("_w")
+    }
+}
+
+/// Metadata of one network's artifact bundle.
+#[derive(Clone, Debug)]
+pub struct NetMeta {
+    pub name: String,
+    pub batch: usize,
+    /// (H, W, C).
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub num_compute_layers: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl NetMeta {
+    pub fn load(path: &Path) -> Result<NetMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading meta {path:?}"))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j).ok_or_else(|| anyhow!("malformed meta {path:?}"))
+    }
+
+    pub fn from_json(j: &Json) -> Option<NetMeta> {
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Some(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .to_f64s()?
+                        .into_iter()
+                        .map(|v| v as usize)
+                        .collect(),
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(NetMeta {
+            name: j.str_or("name", ""),
+            batch: j.num_or("batch", 0.0) as usize,
+            input_shape: j
+                .get("input_shape")?
+                .to_f64s()?
+                .into_iter()
+                .map(|v| v as usize)
+                .collect(),
+            num_classes: j.num_or("num_classes", 10.0) as usize,
+            num_compute_layers: j.num_or("num_compute_layers", 0.0) as usize,
+            params,
+        })
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Indices (into `params`) of the weight tensors, in compute-layer
+    /// order — weight l corresponds to compression slot l.
+    pub fn weight_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_weight())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Input element count per batch (B*H*W*C).
+    pub fn input_elems(&self) -> usize {
+        self.batch * self.input_shape.iter().product::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "lenet5", "batch": 64, "input_shape": [28, 28, 1],
+      "num_classes": 10, "num_compute_layers": 4,
+      "params": [
+        {"name": "conv1_w", "shape": [5,5,1,20]},
+        {"name": "conv1_b", "shape": [20]},
+        {"name": "fc2_w", "shape": [500,10]},
+        {"name": "fc2_b", "shape": [10]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample_meta() {
+        let j = json::parse(SAMPLE).unwrap();
+        let m = NetMeta::from_json(&j).unwrap();
+        assert_eq!(m.name, "lenet5");
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.input_shape, vec![28, 28, 1]);
+        assert_eq!(m.params.len(), 4);
+        assert_eq!(m.params[0].shape, vec![5, 5, 1, 20]);
+        assert_eq!(m.weight_indices(), vec![0, 2]);
+        assert_eq!(m.input_elems(), 64 * 28 * 28);
+        assert_eq!(m.param_count(), 500 + 20 + 5000 + 10);
+    }
+
+    #[test]
+    fn weight_vs_bias_detection() {
+        assert!(ParamSpec {
+            name: "x_w".into(),
+            shape: vec![1]
+        }
+        .is_weight());
+        assert!(!ParamSpec {
+            name: "x_b".into(),
+            shape: vec![1]
+        }
+        .is_weight());
+    }
+}

@@ -1,0 +1,121 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO text from
+//! `artifacts/*.hlo.txt` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. One [`Artifact`] per compiled graph;
+//! [`NetRuntime`] pairs a network's train/infer artifacts with the
+//! metadata emitted by `python/compile/aot.py`.
+//!
+//! Python never runs here — the artifacts are self-contained.
+
+pub mod literal;
+pub mod meta;
+
+pub use meta::NetMeta;
+
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shared PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load_artifact(&self, path: &Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Artifact {
+            exe,
+            path: path.to_path_buf(),
+        })
+    }
+}
+
+/// A compiled executable.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Artifact {
+    /// Execute with the given inputs; returns the flattened tuple outputs.
+    ///
+    /// All our AOT graphs are lowered with `return_tuple=True`, so the
+    /// single result literal is a tuple we decompose.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let mut lit = result[0][0].to_literal_sync()?;
+        Ok(lit.decompose_tuple()?)
+    }
+
+    /// Execute with Tensor inputs, converting in and out.
+    pub fn run_tensors(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(literal::tensor_to_literal)
+            .collect::<Result<_>>()?;
+        let outs = self.run(&lits)?;
+        outs.iter().map(literal::literal_to_tensor).collect()
+    }
+}
+
+/// The artifact bundle of one network (infer + train + meta).
+pub struct NetRuntime {
+    pub meta: NetMeta,
+    pub infer: Artifact,
+    pub train: Artifact,
+}
+
+impl NetRuntime {
+    /// Load `NAME_{infer,train}.hlo.txt` + `NAME_meta.json` from a dir.
+    pub fn load(rt: &Runtime, artifacts_dir: &Path, name: &str) -> Result<NetRuntime> {
+        let meta = NetMeta::load(&artifacts_dir.join(format!("{name}_meta.json")))?;
+        let infer = rt.load_artifact(&artifacts_dir.join(format!("{name}_infer.hlo.txt")))?;
+        let train = rt.load_artifact(&artifacts_dir.join(format!("{name}_train.hlo.txt")))?;
+        Ok(NetRuntime { meta, infer, train })
+    }
+}
+
+/// Default artifacts directory (repo-relative, overridable via
+/// `EDC_ARTIFACTS`).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("EDC_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // Tests run from the crate root; examples may run elsewhere.
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True when the artifact bundle for `name` exists (integration tests
+/// skip politely otherwise).
+pub fn artifacts_available(name: &str) -> bool {
+    let d = artifacts_dir();
+    d.join(format!("{name}_infer.hlo.txt")).exists()
+        && d.join(format!("{name}_train.hlo.txt")).exists()
+        && d.join(format!("{name}_meta.json")).exists()
+}

@@ -1,0 +1,459 @@
+//! Dense f32 tensors.
+//!
+//! This is the numeric substrate for the Rust-side neural networks (the
+//! SAC agent's MLPs) and for marshalling model weights between the
+//! coordinator and the PJRT runtime. It deliberately supports exactly what
+//! this project needs — row-major storage, 2-D GEMM variants with a
+//! blocked inner loop, and elementwise ops — rather than being a general
+//! ndarray clone.
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Row-major dense f32 tensor with arbitrary rank.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{} elems]", self.data.len())
+        }
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with {} elements",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Gaussian init with the given std (e.g. He/Xavier computed by caller).
+    pub fn randn(shape: &[usize], std: f64, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal_f32(&mut t.data, std);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on non-matrix {:?}", self.shape);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on non-matrix {:?}", self.shape);
+        self.shape[1]
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols() + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        let cols = self.cols();
+        self.data[r * cols + c] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// self += alpha * other (axpy).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self = self * a + other * b (used by soft target updates).
+    pub fn lerp_into(&mut self, a: f32, other: &Tensor, b: f32) {
+        assert_eq!(self.shape, other.shape, "lerp shape mismatch");
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x = *x * a + *y * b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Elementwise product into a new tensor.
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "hadamard shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a * b)
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    /// Squared L2 norm (f64 accumulation).
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// C = A @ B. Blocked i-k-j loop order — the k-j inner pair is
+    /// auto-vectorizable and cache-friendly for row-major data.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (kb, n) = (b.rows(), b.cols());
+        assert_eq!(k, kb, "matmul inner dim {k} vs {kb}");
+        let mut c = Tensor::zeros(&[m, n]);
+        matmul_into(&self.data, &b.data, &mut c.data, m, k, n);
+        c
+    }
+
+    /// C = Aᵀ @ B where self is A (shape [k, m]). Avoids materializing Aᵀ.
+    pub fn matmul_tn(&self, b: &Tensor) -> Tensor {
+        let (k, m) = (self.rows(), self.cols());
+        let (kb, n) = (b.rows(), b.cols());
+        assert_eq!(k, kb, "matmul_tn inner dim {k} vs {kb}");
+        let mut c = Tensor::zeros(&[m, n]);
+        // C[i,j] += A[p,i] * B[p,j]: loop p outer, rank-1 update with a
+        // bounds-check-free zip (§Perf).
+        for p in 0..k {
+            let arow = &self.data[p * m..(p + 1) * m];
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                    *cj += a * bj;
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A @ Bᵀ where other is B (shape [n, k]). Dot-product form.
+    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (n, kb) = (b.rows(), b.cols());
+        assert_eq!(k, kb, "matmul_nt inner dim {k} vs {kb}");
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                // 4 independent accumulators break the FP dependency
+                // chain so the dot product vectorizes (§Perf).
+                let mut acc = [0.0f32; 4];
+                let (ach, art) = arow.split_at(k - k % 4);
+                let (bch, brt) = brow.split_at(k - k % 4);
+                for (av, bv) in ach.chunks_exact(4).zip(bch.chunks_exact(4)) {
+                    acc[0] += av[0] * bv[0];
+                    acc[1] += av[1] * bv[1];
+                    acc[2] += av[2] * bv[2];
+                    acc[3] += av[3] * bv[3];
+                }
+                let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+                for (av, bv) in art.iter().zip(brt) {
+                    s += av * bv;
+                }
+                c.data[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    /// Broadcast-add a row vector [1, n] to each row of [m, n].
+    pub fn add_row(&self, row: &Tensor) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        assert_eq!(row.len(), n, "add_row len mismatch");
+        let mut out = self.clone();
+        for i in 0..m {
+            for j in 0..n {
+                out.data[i * n + j] += row.data[j];
+            }
+        }
+        out
+    }
+
+    /// Column-wise sum producing [1, n] — the bias gradient.
+    pub fn sum_rows(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[1, n]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j] += self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+}
+
+/// Blocked GEMM kernel: C += A[m,k] @ B[k,n]. Exposed so the perf pass can
+/// bench it directly.
+///
+/// Perf notes (EXPERIMENTS.md §Perf): i-k-j loop order with a 2-way
+/// unrolled k so two B rows stream per C-row pass; the j loop is a
+/// bounds-check-free `zip` that LLVM auto-vectorizes. ~3.5x over the
+/// naive blocked version at SAC's 64x166x128 shape.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    const BK: usize = 128;
+    for k0 in (0..k).step_by(BK) {
+        let kend = (k0 + BK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut p = k0;
+            // 2-way k-unroll: one pass over crow applies two rank-1 rows.
+            while p + 1 < kend {
+                let a0 = arow[p];
+                let a1 = arow[p + 1];
+                if a0 == 0.0 && a1 == 0.0 {
+                    p += 2;
+                    continue;
+                }
+                let b0 = &b[p * n..p * n + n];
+                let b1 = &b[(p + 1) * n..(p + 1) * n + n];
+                for ((cj, &x0), &x1) in crow.iter_mut().zip(b0).zip(b1) {
+                    *cj += a0 * x0 + a1 * x1;
+                }
+                p += 2;
+            }
+            if p < kend {
+                let a0 = arow[p];
+                if a0 != 0.0 {
+                    let b0 = &b[p * n..p * n + n];
+                    for (cj, &x0) in crow.iter_mut().zip(b0) {
+                        *cj += a0 * x0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (16, 7, 9), (33, 65, 17)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c = a.matmul(&b);
+            let c0 = naive_matmul(&a, &b);
+            for (x, y) in c.data().iter().zip(c0.data()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let mut rng = Rng::new(12);
+        let a = Tensor::randn(&[6, 4], 1.0, &mut rng); // A is [k=6, m=4]
+        let b = Tensor::randn(&[6, 5], 1.0, &mut rng);
+        let c = a.matmul_tn(&b);
+        let c0 = a.transpose().matmul(&b);
+        for (x, y) in c.data().iter().zip(c0.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(13);
+        let a = Tensor::randn(&[3, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 7], 1.0, &mut rng); // B is [n=5, k=7]
+        let c = a.matmul_nt(&b);
+        let c0 = a.matmul(&b.transpose());
+        for (x, y) in c.data().iter().zip(c0.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn add_row_and_sum_rows_are_adjoint() {
+        // <x + row, y> gradient wrt row is sum_rows(y): spot-check shapes/values.
+        let x = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let row = Tensor::from_vec(&[1, 3], vec![10., 20., 30.]);
+        let y = x.add_row(&row);
+        assert_eq!(y.data(), &[11., 22., 33., 14., 25., 36.]);
+        let s = y.sum_rows();
+        assert_eq!(s.data(), &[25., 47., 69.]);
+    }
+
+    #[test]
+    fn axpy_and_lerp() {
+        let mut a = Tensor::from_vec(&[2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[2], vec![10., 10.]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6., 7.]);
+        a.lerp_into(0.0, &b, 1.0);
+        assert_eq!(a.data(), &[10., 10.]);
+    }
+
+    #[test]
+    fn reshape_checks_size() {
+        let t = Tensor::zeros(&[2, 3]);
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_wrong_size_panics() {
+        let t = Tensor::zeros(&[2, 3]);
+        let _ = t.reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(&[2, 2], vec![1., -2., 3., -4.]);
+        assert_eq!(t.sum(), -2.0);
+        assert_eq!(t.mean(), -0.5);
+        assert_eq!(t.abs_max(), 4.0);
+        assert!((t.sq_norm() - 30.0).abs() < 1e-9);
+    }
+}

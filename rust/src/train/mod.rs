@@ -1,0 +1,262 @@
+//! Fine-tuning harness: the real (non-surrogate) accuracy oracle.
+//!
+//! Owns the model weights as Rust tensors and drives the AOT-compiled
+//! PJRT artifacts: `train` for SGD steps (with STE quantization/pruning
+//! applied in-graph from the runtime `lvls`/`threshs` inputs) and `infer`
+//! for held-out accuracy. This is the paper's actual procedure — "the
+//! model is then fine tuned by one or few epochs" per RL step, with
+//! weights restored from a checkpoint when an episode ends.
+//!
+//! Python is never invoked here; everything runs through
+//! `runtime::Artifact` on the PJRT CPU client.
+
+use crate::compress::{prune, quant, CompressionState};
+use crate::data::{BatchIter, Dataset};
+use crate::envs::AccuracyOracle;
+use crate::runtime::{literal, NetRuntime, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Synthetic dataset size (split 80/20 train/test).
+    pub dataset_size: usize,
+    /// SGD steps for the initial (uncompressed) pretraining.
+    pub pretrain_steps: usize,
+    pub pretrain_lr: f32,
+    /// SGD steps of fine-tuning per RL step.
+    pub finetune_steps: usize,
+    pub finetune_lr: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dataset_size: 2000,
+            pretrain_steps: 300,
+            pretrain_lr: 0.08,
+            finetune_steps: 4,
+            finetune_lr: 0.02,
+            seed: 0,
+        }
+    }
+}
+
+/// Weight owner + artifact driver for one network.
+pub struct TrainHarness {
+    pub rt: NetRuntime,
+    pub cfg: TrainConfig,
+    pub weights: Vec<Tensor>,
+    pristine: Vec<Tensor>,
+    train_data: Dataset,
+    test_data: Dataset,
+    rng: Rng,
+    /// Measured accuracy of the pristine (uncompressed) model.
+    pub base_accuracy: f64,
+}
+
+impl TrainHarness {
+    /// Build the harness: load artifacts, synthesize data, init weights.
+    pub fn new(runtime: &Runtime, name: &str, cfg: TrainConfig) -> Result<TrainHarness> {
+        let rt = NetRuntime::load(runtime, &crate::runtime::artifacts_dir(), name)
+            .with_context(|| format!("loading artifacts for {name}"))?;
+        let mut rng = Rng::new(cfg.seed ^ 0x7A41_1255);
+        let data = crate::data::for_network(name, cfg.dataset_size, cfg.seed);
+        let (train_data, test_data) = data.split(0.2);
+        let weights = init_weights(&rt, &mut rng);
+        let pristine = weights.clone();
+        Ok(TrainHarness {
+            rt,
+            cfg,
+            weights,
+            pristine,
+            train_data,
+            test_data,
+            rng,
+            base_accuracy: 0.0,
+        })
+    }
+
+    /// Uncompressed (lvls huge, thresh 0) compression inputs.
+    fn identity_knobs(&self) -> (Tensor, Tensor) {
+        let l = self.rt.meta.num_compute_layers;
+        (
+            Tensor::full(&[l], quant::levels(16) as f32),
+            Tensor::zeros(&[l]),
+        )
+    }
+
+    /// Materialize (lvls, threshs) from a compression state using the
+    /// *current* weights for threshold selection (paper §3.1: sort the
+    /// weights, zero the least-magnitude ones).
+    pub fn knobs_for(&self, state: &CompressionState) -> (Tensor, Tensor) {
+        let l = self.rt.meta.num_compute_layers;
+        assert_eq!(state.num_layers(), l, "state/meta layer mismatch");
+        let mut lvls = vec![0.0f32; l];
+        let mut threshs = vec![0.0f32; l];
+        let widx = self.rt.meta.weight_indices();
+        for slot in 0..l {
+            lvls[slot] = quant::levels(state.bits(slot)) as f32;
+            let w = &self.weights[widx[slot]];
+            threshs[slot] = prune::threshold_for_remaining(w.data(), state.remaining(slot));
+        }
+        (
+            Tensor::from_vec(&[l], lvls),
+            Tensor::from_vec(&[l], threshs),
+        )
+    }
+
+    fn run_train_steps(
+        &mut self,
+        lvls: &Tensor,
+        threshs: &Tensor,
+        steps: usize,
+        lr: f32,
+    ) -> Result<(f64, f64)> {
+        let meta = &self.rt.meta;
+        let b = meta.batch;
+        let mut it = BatchIter::new(&self.train_data, b, self.rng.next_u64());
+        let (mut last_loss, mut last_acc) = (0.0, 0.0);
+        let (h, w, c) = (meta.input_shape[0], meta.input_shape[1], meta.input_shape[2]);
+        for _ in 0..steps {
+            let (x, y) = it.next_batch();
+            let mut inputs = Vec::with_capacity(5 + self.weights.len());
+            inputs.push(literal::tensor_to_literal(&Tensor::from_vec(&[b, h, w, c], x))?);
+            inputs.push(literal::labels_literal(&y)?);
+            inputs.push(literal::tensor_to_literal(lvls)?);
+            inputs.push(literal::tensor_to_literal(threshs)?);
+            inputs.push(literal::scalar_literal(lr));
+            for t in &self.weights {
+                inputs.push(literal::tensor_to_literal(t)?);
+            }
+            let outs = self.rt.train.run(&inputs)?;
+            anyhow::ensure!(
+                outs.len() == 2 + self.weights.len(),
+                "train artifact returned {} outputs",
+                outs.len()
+            );
+            last_loss = literal::literal_to_tensor(&outs[0])?.data()[0] as f64;
+            last_acc = literal::literal_to_tensor(&outs[1])?.data()[0] as f64;
+            for (i, lit) in outs[2..].iter().enumerate() {
+                let t = literal::literal_to_tensor(lit)?;
+                // Literal shapes can come back flattened for rank-1.
+                self.weights[i] = t.reshape(&self.rt.meta.params[i].shape.clone());
+            }
+        }
+        Ok((last_loss, last_acc))
+    }
+
+    /// Pretrain the uncompressed model; records `base_accuracy` and the
+    /// pristine checkpoint.
+    pub fn pretrain(&mut self) -> Result<f64> {
+        let (lvls, threshs) = self.identity_knobs();
+        let steps = self.cfg.pretrain_steps;
+        let lr = self.cfg.pretrain_lr;
+        self.run_train_steps(&lvls, &threshs, steps, lr)?;
+        self.pristine = self.weights.clone();
+        self.base_accuracy = self.eval_accuracy(&lvls, &threshs)?;
+        Ok(self.base_accuracy)
+    }
+
+    /// Fine-tune under a compression state for the per-step budget.
+    pub fn finetune(&mut self, state: &CompressionState) -> Result<(f64, f64)> {
+        let (lvls, threshs) = self.knobs_for(state);
+        let steps = self.cfg.finetune_steps;
+        let lr = self.cfg.finetune_lr;
+        self.run_train_steps(&lvls, &threshs, steps, lr)
+    }
+
+    /// Held-out accuracy at a compression state (no weight updates).
+    pub fn eval_state(&mut self, state: &CompressionState) -> Result<f64> {
+        let (lvls, threshs) = self.knobs_for(state);
+        self.eval_accuracy(&lvls, &threshs)
+    }
+
+    fn eval_accuracy(&self, lvls: &Tensor, threshs: &Tensor) -> Result<f64> {
+        let meta = &self.rt.meta;
+        let b = meta.batch;
+        let (h, w, c) = (meta.input_shape[0], meta.input_shape[1], meta.input_shape[2]);
+        let batches = BatchIter::eval_batches(&self.test_data, b);
+        anyhow::ensure!(!batches.is_empty(), "test set smaller than one batch");
+        let mut acc_sum = 0.0;
+        for (x, y) in &batches {
+            let mut inputs = Vec::with_capacity(4 + self.weights.len());
+            inputs.push(literal::tensor_to_literal(&Tensor::from_vec(
+                &[b, h, w, c],
+                x.clone(),
+            ))?);
+            inputs.push(literal::labels_literal(y)?);
+            inputs.push(literal::tensor_to_literal(lvls)?);
+            inputs.push(literal::tensor_to_literal(threshs)?);
+            for t in &self.weights {
+                inputs.push(literal::tensor_to_literal(t)?);
+            }
+            let outs = self.rt.infer.run(&inputs)?;
+            acc_sum += literal::literal_to_tensor(&outs[1])?.data()[0] as f64;
+        }
+        Ok(acc_sum / batches.len() as f64)
+    }
+
+    /// Restore the pristine checkpoint (start of an episode).
+    pub fn restore(&mut self) {
+        self.weights = self.pristine.clone();
+    }
+}
+
+/// He-initialized weights / zero biases matching the artifact metadata.
+pub fn init_weights(rt: &NetRuntime, rng: &mut Rng) -> Vec<Tensor> {
+    rt.meta
+        .params
+        .iter()
+        .map(|p| {
+            if p.is_weight() {
+                let fan_in: usize = p.shape[..p.shape.len() - 1].iter().product();
+                Tensor::randn(&p.shape, (2.0 / fan_in.max(1) as f64).sqrt(), rng)
+            } else {
+                Tensor::zeros(&p.shape)
+            }
+        })
+        .collect()
+}
+
+/// The real-fine-tuning accuracy oracle (paper's procedure; used by the
+/// end-to-end example and the runtime integration tests).
+pub struct PjrtOracle {
+    pub harness: TrainHarness,
+}
+
+impl PjrtOracle {
+    /// Build and pretrain. Expensive — minutes on CPU for LeNet.
+    pub fn new(runtime: &Runtime, name: &str, cfg: TrainConfig) -> Result<PjrtOracle> {
+        let mut harness = TrainHarness::new(runtime, name, cfg)?;
+        harness.pretrain()?;
+        Ok(PjrtOracle { harness })
+    }
+}
+
+impl AccuracyOracle for PjrtOracle {
+    fn evaluate(&mut self, state: &CompressionState) -> f64 {
+        match self
+            .harness
+            .finetune(state)
+            .and_then(|_| self.harness.eval_state(state))
+        {
+            Ok(acc) => acc,
+            Err(e) => {
+                log::error!("PJRT oracle failure: {e:#}");
+                0.0 // treated as catastrophic accuracy -> episode aborts
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.harness.restore();
+    }
+
+    fn base_accuracy(&self) -> f64 {
+        self.harness.base_accuracy
+    }
+}

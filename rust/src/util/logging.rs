@@ -1,0 +1,59 @@
+//! Minimal `log`-facade backend writing to stderr with timestamps.
+//!
+//! `EDC_LOG=debug|info|warn|error` selects verbosity (default `info`).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    max: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            eprintln!(
+                "[{t:9.3}s {:5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; repeated calls are no-ops.
+pub fn init() {
+    let level = match std::env::var("EDC_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let logger = Box::new(StderrLogger {
+        start: Instant::now(),
+        max: level,
+    });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::Trace);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init(); // second call must not panic
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,52 @@
+//! Offline substrates: PRNG, JSON codec, statistics, logging and a
+//! miniature property-testing harness.
+//!
+//! The build environment has no network access and the crates-io mirror
+//! only carries a small vendored set (`xla`, `anyhow`, `thiserror`,
+//! `log`, ...). `rand`, `serde`, `proptest` and `criterion` are therefore
+//! re-implemented here at the scale this project needs.
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Format a float with engineering-style precision used across reports.
+pub fn fmt_sig(v: f64, digits: usize) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{:.*}", dec.min(6), v)
+}
+
+/// Clamp helper for f64 (std's `clamp` panics on NaN bounds; ours is total).
+pub fn clampf(v: f64, lo: f64, hi: f64) -> f64 {
+    if v < lo {
+        lo
+    } else if v > hi {
+        hi
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_sig_basic() {
+        assert_eq!(fmt_sig(0.0, 3), "0");
+        assert_eq!(fmt_sig(1234.0, 3), "1234");
+        assert_eq!(fmt_sig(0.012345, 3), "0.0123");
+    }
+
+    #[test]
+    fn clampf_total() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+}

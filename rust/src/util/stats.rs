@@ -1,0 +1,172 @@
+//! Small statistics helpers used by reports, benches and tests.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Geometric mean (inputs must be positive); used for the paper's
+/// "averaged NX improvement" claims which are ratio averages.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Linear-interpolated percentile, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Min/max that ignore NaN (returns 0 for empty).
+pub fn minmax(xs: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        if x.is_nan() {
+            continue;
+        }
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if lo > hi {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Exponential moving average over a series.
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let v = match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        };
+        acc = Some(v);
+        out.push(v);
+    }
+    out
+}
+
+/// Running timing statistics for the bench harness.
+#[derive(Debug, Default, Clone)]
+pub struct Timing {
+    pub samples_ns: Vec<f64>,
+}
+
+impl Timing {
+    pub fn push(&mut self, ns: f64) {
+        self.samples_ns.push(ns);
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        mean(&self.samples_ns)
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn p99_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 99.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p99={}",
+            self.samples_ns.len(),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p50_ns()),
+            fmt_ns(self.p99_ns()),
+        )
+    }
+}
+
+/// Human-readable duration from nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_ratios() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let out = ema(&[1.0, 1.0, 10.0], 0.5);
+        assert_eq!(out[0], 1.0);
+        assert_eq!(out[1], 1.0);
+        assert!((out[2] - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50us");
+        assert_eq!(fmt_ns(2_000_000.0), "2.00ms");
+    }
+
+    #[test]
+    fn minmax_ignores_nan() {
+        let (lo, hi) = minmax(&[3.0, f64::NAN, -1.0]);
+        assert_eq!((lo, hi), (-1.0, 3.0));
+    }
+}

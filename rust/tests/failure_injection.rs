@@ -1,0 +1,125 @@
+//! Failure injection: every user-facing entry point must fail loudly and
+//! cleanly, never corrupt state or panic on bad external inputs.
+
+use edcompress::cli::Args;
+use edcompress::coordinator::checkpoint;
+use edcompress::runtime::{NetMeta, Runtime};
+use edcompress::util::json;
+use std::path::Path;
+
+#[test]
+fn runtime_rejects_missing_artifact() {
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let err = match rt.load_artifact(Path::new("/nonexistent/never.hlo.txt")) {
+        Ok(_) => panic!("loading a nonexistent artifact succeeded"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("never.hlo.txt"), "error lacks path: {msg}");
+}
+
+#[test]
+fn runtime_rejects_garbage_hlo_text() {
+    let dir = std::env::temp_dir().join("edc_fail_inj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("garbage.hlo.txt");
+    std::fs::write(&path, "this is not an HLO module at all").unwrap();
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    assert!(rt.load_artifact(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn meta_rejects_malformed_json() {
+    let dir = std::env::temp_dir().join("edc_fail_meta");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, content) in [
+        ("truncated.json", "{\"name\": \"x\", "),
+        ("missing_fields.json", "{\"name\": \"x\"}"),
+        ("wrong_types.json", "{\"name\": 3, \"params\": 7}"),
+    ] {
+        let path = dir.join(name);
+        std::fs::write(&path, content).unwrap();
+        assert!(NetMeta::load(&path).is_err(), "{name} should fail");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_load_rejects_garbage() {
+    let dir = std::env::temp_dir().join("edc_fail_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.json");
+    std::fs::write(&path, "[1, 2, 3]").unwrap();
+    assert!(checkpoint::load(&path).is_err());
+    std::fs::write(&path, "not json").unwrap();
+    assert!(checkpoint::load(&path).is_err());
+    assert!(checkpoint::load(&dir.join("missing.json")).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_rejects_malformed_invocations() {
+    let parse = |v: &[&str]| Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    assert!(parse(&[]).is_err());
+    assert!(parse(&["--net", "lenet5"]).is_err()); // flag before command
+    assert!(parse(&["table", "--id"]).is_err()); // missing value
+    assert!(parse(&["table", "--id", "--seed"]).is_err()); // value is a flag
+    assert!(parse(&["table", "positional"]).is_err());
+}
+
+#[test]
+fn json_parser_handles_adversarial_inputs() {
+    for bad in [
+        "",
+        "{",
+        "}",
+        "[[[[[",
+        "\"\\u12",
+        "1e99999999999999999999x",
+        "{\"a\":}",
+        "nulll",
+        "truefalse",
+    ] {
+        assert!(json::parse(bad).is_err(), "accepted: {bad:?}");
+    }
+    // Deep nesting parses without stack issues at reasonable depth.
+    let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+    assert!(json::parse(&deep).is_ok());
+}
+
+#[test]
+fn dataflow_parse_rejects_junk() {
+    use edcompress::dataflow::Dataflow;
+    for bad in ["", "X", "X:", ":Y", "X:Y:Z", "Q:R", "x-y"] {
+        assert!(Dataflow::parse(bad).is_none(), "accepted {bad:?}");
+    }
+}
+
+#[test]
+fn zoo_lookup_unknown_is_none() {
+    assert!(edcompress::model::zoo::by_name("resnet9000").is_none());
+}
+
+#[test]
+fn env_rejects_wrong_action_length() {
+    use edcompress::dataflow::Dataflow;
+    use edcompress::energy::EnergyConfig;
+    use edcompress::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
+    use edcompress::model::zoo;
+    use edcompress::rl::Env;
+    let net = zoo::lenet5();
+    let oracle = SurrogateOracle::new(&net, 0);
+    let mut env = CompressionEnv::new(
+        net,
+        Dataflow::XY,
+        Box::new(oracle),
+        EnvConfig::default(),
+        EnergyConfig::default(),
+    );
+    env.reset();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        env.step(&[0.0; 3]) // wrong: needs 8
+    }));
+    assert!(result.is_err(), "wrong action length must panic");
+}

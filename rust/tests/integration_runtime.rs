@@ -1,0 +1,147 @@
+//! Runtime integration: HLO-text artifacts loaded + executed via PJRT.
+//!
+//! Requires `make artifacts`. Tests skip with a notice when artifacts are
+//! missing so `cargo test` stays green on a fresh checkout.
+
+use edcompress::compress::CompressionState;
+use edcompress::model::zoo;
+use edcompress::runtime::{self, literal, Runtime};
+use edcompress::tensor::Tensor;
+use edcompress::train::{TrainConfig, TrainHarness};
+use edcompress::util::rng::Rng;
+
+fn artifacts_or_skip(name: &str) -> bool {
+    if runtime::artifacts_available(name) {
+        true
+    } else {
+        eprintln!("SKIP: artifacts for {name} missing (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn kernel_fq_artifact_roundtrip() {
+    let path = runtime::artifacts_dir().join("kernel_fq.hlo.txt");
+    if !path.exists() {
+        eprintln!("SKIP: kernel_fq artifact missing");
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt cpu");
+    let art = rt.load_artifact(&path).expect("load artifact");
+
+    let mut rng = Rng::new(42);
+    let w = Tensor::randn(&[32, 128], 1.0, &mut rng);
+    let lvl = Tensor::from_vec(&[1], vec![7.0]); // scalar-shaped below
+    let _ = lvl;
+    let inputs = vec![
+        literal::tensor_to_literal(&w).unwrap(),
+        literal::scalar_literal(7.0),
+        literal::scalar_literal(0.3),
+    ];
+    let outs = art.run(&inputs).expect("execute");
+    assert_eq!(outs.len(), 1);
+    let got = literal::literal_to_tensor(&outs[0]).unwrap();
+    assert_eq!(got.len(), 32 * 128);
+
+    // Mirror the quantization math in Rust and compare elementwise.
+    let masked: Vec<f32> = w
+        .data()
+        .iter()
+        .map(|&v| if v.abs() >= 0.3 { v } else { 0.0 })
+        .collect();
+    let m = masked.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    for (i, (&g, &orig)) in got.data().iter().zip(w.data()).enumerate() {
+        let wm = if orig.abs() >= 0.3 { orig } else { 0.0 };
+        let want = (wm / m * 7.0).round().clamp(-7.0, 7.0) / 7.0 * m;
+        assert!(
+            (g - want).abs() < 1e-5,
+            "elem {i}: got {g}, want {want} (orig {orig})"
+        );
+    }
+}
+
+#[test]
+fn lenet_infer_executes_with_correct_arity() {
+    if !artifacts_or_skip("lenet5") {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut harness = TrainHarness::new(
+        &rt,
+        "lenet5",
+        TrainConfig {
+            dataset_size: 400, // test split must cover one batch of 64
+            pretrain_steps: 0,
+            ..TrainConfig::default()
+        },
+    )
+    .expect("harness");
+    let net = zoo::lenet5();
+    let state = CompressionState::uniform(&net, 8.0, 1.0);
+    let acc = harness.eval_state(&state).expect("eval");
+    // Untrained model ~ random chance.
+    assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+}
+
+#[test]
+fn lenet_pretrain_learns_synthetic_digits() {
+    if !artifacts_or_skip("lenet5") {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut harness = TrainHarness::new(
+        &rt,
+        "lenet5",
+        TrainConfig {
+            dataset_size: 600,
+            pretrain_steps: 120,
+            pretrain_lr: 0.08,
+            ..TrainConfig::default()
+        },
+    )
+    .unwrap();
+    let base = harness.pretrain().expect("pretrain");
+    assert!(
+        base > 0.6,
+        "LeNet should learn synth-MNIST quickly, got {base}"
+    );
+
+    // Fine-tune under moderate compression: accuracy must not collapse.
+    let net = zoo::lenet5();
+    let state = CompressionState::uniform(&net, 6.0, 0.8);
+    let (_loss, _acc) = harness.finetune(&state).expect("finetune");
+    let acc = harness.eval_state(&state).expect("eval");
+    assert!(
+        acc > base - 0.25,
+        "moderate compression collapsed accuracy: {acc} vs base {base}"
+    );
+
+    // Restore brings back pristine weights.
+    harness.restore();
+    let acc2 = harness.eval_state(&CompressionState::uniform(&net, 8.0, 1.0)).unwrap();
+    assert!((acc2 - base).abs() < 0.1, "restore drifted: {acc2} vs {base}");
+}
+
+#[test]
+fn vgg_and_mobilenet_artifacts_execute() {
+    for name in ["vgg16_cifar", "mobilenet_cifar"] {
+        if !artifacts_or_skip(name) {
+            continue;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut harness = TrainHarness::new(
+            &rt,
+            name,
+            TrainConfig {
+                dataset_size: 64,
+                pretrain_steps: 0,
+                ..TrainConfig::default()
+            },
+        )
+        .unwrap();
+        let l = harness.rt.meta.num_compute_layers;
+        let state = CompressionState::from_parts(vec![8.0; l], vec![1.0; l]);
+        let acc = harness.eval_state(&state).expect("eval");
+        assert!((0.0..=1.0).contains(&acc), "{name} acc {acc}");
+    }
+}

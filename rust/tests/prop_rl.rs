@@ -1,0 +1,197 @@
+//! Property tests on the RL substrate: replay semantics, action bounds,
+//! network algebra and optimizer behaviour.
+
+use edcompress::nn::{Activation, Adam, Mlp};
+use edcompress::rl::replay::{ReplayBuffer, Transition};
+use edcompress::rl::sac::{SacAgent, SacConfig};
+use edcompress::tensor::Tensor;
+use edcompress::util::proptest::{check, close, ensure};
+use edcompress::util::rng::Rng;
+
+fn t(v: f32) -> Transition {
+    Transition {
+        state: vec![v],
+        action: vec![0.0],
+        reward: v,
+        next_state: vec![v],
+        done: 0.0,
+    }
+}
+
+#[test]
+fn prop_replay_never_exceeds_capacity_and_keeps_recent() {
+    check("replay capacity", 40, |rng| {
+        let cap = 1 + rng.below(64);
+        let pushes = rng.below(300);
+        let mut buf = ReplayBuffer::new(cap);
+        for i in 0..pushes {
+            buf.push(t(i as f32));
+        }
+        ensure(buf.len() == pushes.min(cap), format!("len {}", buf.len()))?;
+        if pushes > cap {
+            // Every element must be one of the most recent `cap` pushes.
+            let floor = (pushes - cap) as f32;
+            for tr in buf.as_slice() {
+                ensure(tr.reward >= floor, format!("stale element {}", tr.reward))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sac_actions_always_in_unit_box() {
+    check("sac action bounds", 6, |rng| {
+        let sd = 1 + rng.below(8);
+        let ad = 1 + rng.below(5);
+        let mut agent = SacAgent::new(
+            sd,
+            ad,
+            SacConfig {
+                hidden: vec![16, 16],
+                warmup_steps: 5,
+                seed: rng.next_u64(),
+                ..SacConfig::default()
+            },
+        );
+        for _ in 0..30 {
+            let s: Vec<f64> = (0..sd).map(|_| rng.range(-3.0, 3.0)).collect();
+            let a = agent.act(&s);
+            ensure(a.len() == ad, "action dim")?;
+            for &v in &a {
+                ensure((-1.0..=1.0).contains(&v), format!("action {v} out of box"))?;
+            }
+            let d = agent.act_deterministic(&s);
+            for &v in &d {
+                ensure((-1.0..=1.0).contains(&v), format!("det action {v}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linear_layer_is_affine() {
+    // forward(a*x + b*y) == a*forward(x) + b*forward(y) - (a+b-1)*bias_row
+    check("linear affinity", 30, |rng| {
+        let mut nrng = Rng::new(rng.next_u64());
+        let layer = edcompress::nn::Linear::new(5, 3, &mut nrng);
+        let x = Tensor::randn(&[2, 5], 1.0, &mut nrng);
+        let y = Tensor::randn(&[2, 5], 1.0, &mut nrng);
+        let (a, b) = (rng.range(-2.0, 2.0) as f32, rng.range(-2.0, 2.0) as f32);
+        let mut comb = x.clone();
+        comb.scale(a);
+        comb.axpy(b, &y);
+        let lhs = layer.forward(&comb);
+        let mut rhs = layer.forward(&x);
+        rhs.scale(a);
+        rhs.axpy(b, &layer.forward(&y));
+        // Correct the bias over-counting: bias appears (a+b) times in rhs.
+        let bias_corr = 1.0 - (a + b);
+        let rhs = rhs.add_row(&{
+            let mut bb = layer.b.clone();
+            bb.scale(bias_corr);
+            bb
+        });
+        for (l, r) in lhs.data().iter().zip(rhs.data()) {
+            close(*l as f64, *r as f64, 1e-3, "affine")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mlp_forward_cached_consistent_with_forward() {
+    check("forward_cached == forward", 20, |rng| {
+        let mut nrng = Rng::new(rng.next_u64());
+        let act = if rng.bool_with(0.5) {
+            Activation::Relu
+        } else {
+            Activation::Tanh
+        };
+        let mlp = Mlp::new(&[4, 9, 7, 2], act, &mut nrng);
+        let x = Tensor::randn(&[3, 4], 1.0, &mut nrng);
+        let a = mlp.forward(&x);
+        let b = mlp.forward_cached(&x).output;
+        for (u, v) in a.data().iter().zip(b.data()) {
+            close(*u as f64, *v as f64, 1e-6, "outputs")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_soft_update_converges_geometrically() {
+    check("polyak convergence", 10, |rng| {
+        let mut nrng = Rng::new(rng.next_u64());
+        let src = Mlp::new(&[2, 4, 1], Activation::Relu, &mut nrng);
+        let mut dst = Mlp::new(&[2, 4, 1], Activation::Relu, &mut nrng);
+        let tau = rng.range(0.05, 0.5) as f32;
+        let initial_gap: f64 = dst
+            .params()
+            .iter()
+            .zip(src.params())
+            .map(|(d, s)| d.sub(s).sq_norm())
+            .sum::<f64>()
+            .sqrt();
+        for _ in 0..50 {
+            dst.soft_update_from(&src, tau);
+        }
+        let final_gap: f64 = dst
+            .params()
+            .iter()
+            .zip(src.params())
+            .map(|(d, s)| d.sub(s).sq_norm())
+            .sum::<f64>()
+            .sqrt();
+        let expected = initial_gap * ((1.0 - tau) as f64).powi(50);
+        close(final_gap, expected, 0.05, "geometric gap")
+    });
+}
+
+#[test]
+fn prop_adam_invariant_to_gradient_scale_direction() {
+    // Adam's first step is ±lr regardless of gradient magnitude; the sign
+    // must follow the gradient's sign.
+    check("adam sign", 40, |rng| {
+        let g0 = rng.range(-100.0, 100.0) as f32;
+        if g0.abs() < 1e-3 {
+            return Ok(());
+        }
+        let mut x = Tensor::from_vec(&[1], vec![0.0]);
+        let mut opt = Adam::for_params(&[&x], 0.05);
+        let g = Tensor::from_vec(&[1], vec![g0]);
+        opt.step(vec![&mut x], &[&g]);
+        let step = x.data()[0];
+        ensure(
+            (step + 0.05 * g0.signum()).abs() < 1e-3,
+            format!("step {step} for grad {g0}"),
+        )
+    });
+}
+
+#[test]
+fn prop_batchiter_preserves_image_label_pairing() {
+    check("batch pairing", 10, |rng| {
+        let n = 40 + rng.below(60);
+        let data = edcompress::data::synth_mnist(n, rng.next_u64());
+        // Identify each image by its ink sum; build the ground-truth map.
+        let sig = |img: &[f32]| -> u64 { (img.iter().sum::<f32>() * 1e4) as u64 };
+        let mut truth = std::collections::HashMap::new();
+        for i in 0..data.n {
+            truth.insert(sig(data.image(i)), data.labels[i]);
+        }
+        let mut it = edcompress::data::BatchIter::new(&data, 8, rng.next_u64());
+        for _ in 0..10 {
+            let (x, y) = it.next_batch();
+            for (img, &label) in x.chunks(28 * 28).zip(&y) {
+                let want = truth.get(&sig(img));
+                ensure(
+                    want == Some(&label),
+                    format!("pairing broken: {want:?} vs {label}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
