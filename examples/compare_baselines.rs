@@ -26,7 +26,7 @@ fn main() {
     // EDCompress search on the four paper dataflows.
     let mut spec = SweepSpec::paper_four(net.clone(), 0);
     spec.search = table_search_config(episodes, 0);
-    let outcomes = run_surrogate_sweep(&spec);
+    let outcomes = run_surrogate_sweep(&spec).expect("sweep failed");
 
     println!(
         "LeNet-5: energy (uJ) and area (mm2) per dataflow — baselines vs EDCompress ({} episodes)",

@@ -35,9 +35,14 @@ impl BenchTimer {
         }
     }
 
-    pub fn report(&self) {
+    /// Mean sample time in nanoseconds (0 before any `run`).
+    pub fn mean_ns(&self) -> f64 {
         let n = self.samples_ns.len().max(1) as f64;
-        let mean = self.samples_ns.iter().sum::<f64>() / n;
+        self.samples_ns.iter().sum::<f64>() / n
+    }
+
+    pub fn report(&self) {
+        let mean = self.mean_ns();
         let mut sorted = self.samples_ns.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let p50 = sorted.get(sorted.len() / 2).copied().unwrap_or(0.0);

@@ -16,6 +16,7 @@ use std::path::Path;
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "compress" => cmd_compress(args),
+        "sweep" => cmd_sweep(args),
         "table" => cmd_table(args),
         "figure" => cmd_figure(args),
         "explore" => cmd_explore(args),
@@ -108,6 +109,79 @@ fn cmd_compress(args: &Args) -> Result<()> {
     if let Some(out) = &cfg.out {
         checkpoint::save(&outcome, Path::new(out))?;
         println!("saved outcome to {out}");
+    }
+    Ok(())
+}
+
+/// Multi-network, multi-dataflow search sweep through the bounded worker
+/// pool (`--nets a,b,c`, `--dataflows paper|all|X:Y,CI:CO,...`).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut nets = Vec::new();
+    for name in args.str_or("nets", "lenet5").split(',') {
+        let name = name.trim();
+        nets.push(zoo::by_name(name).ok_or_else(|| anyhow!("unknown net '{name}'"))?);
+    }
+    let df_arg = args.str_or("dataflows", "paper");
+    let dataflows = match df_arg.as_str() {
+        "paper" => Dataflow::paper_four().to_vec(),
+        "all" => Dataflow::all_fifteen(),
+        list => {
+            let mut v = Vec::new();
+            for s in list.split(',') {
+                v.push(
+                    Dataflow::parse(s.trim())
+                        .ok_or_else(|| anyhow!("unknown dataflow '{}'", s.trim()))?,
+                );
+            }
+            v
+        }
+    };
+
+    let mut spec = sweep::SweepSpec::new(nets, dataflows, args.u64_or("seed", 0)?);
+    spec.search.episodes = args.usize_or("episodes", 8)?;
+    spec.env.max_steps = args.usize_or("steps", spec.env.max_steps)?;
+
+    let jobs = spec.nets.len() * spec.dataflows.len();
+    println!(
+        "sweeping {} networks x {} dataflows = {} jobs on {} workers",
+        spec.nets.len(),
+        spec.dataflows.len(),
+        jobs,
+        sweep::worker_count(jobs)
+    );
+
+    let (outcomes, failed) = match sweep::run_surrogate_sweep(&spec) {
+        Ok(outs) => (outs, Vec::new()),
+        Err(err) => {
+            eprintln!("warning: {err}");
+            (err.completed, err.failures)
+        }
+    };
+    println!(
+        "{:<16} {:<8} {:>12} {:>12} {:>10}",
+        "network", "dataflow", "E improv.", "A improv.", "best acc"
+    );
+    for o in &outcomes {
+        let acc = o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN);
+        println!(
+            "{:<16} {:<8} {:>11.2}x {:>11.2}x {:>10.4}",
+            o.network,
+            o.dataflow,
+            o.energy_improvement(),
+            o.area_improvement(),
+            acc
+        );
+    }
+    if !failed.is_empty() {
+        bail!(
+            "{} sweep jobs failed: {}",
+            failed.len(),
+            failed
+                .iter()
+                .map(|f| format!("{} {} ({})", f.network, f.dataflow, f.error))
+                .collect::<Vec<_>>()
+                .join("; ")
+        );
     }
     Ok(())
 }
@@ -245,6 +319,16 @@ mod tests {
     fn cost_and_explore_run() {
         dispatch(&argv(&["cost", "--net", "lenet5", "--q", "4", "--p", "0.5"])).unwrap();
         dispatch(&argv(&["explore", "--net", "lenet5"])).unwrap();
+    }
+
+    #[test]
+    fn sweep_command_runs_tiny_budget() {
+        dispatch(&argv(&[
+            "sweep", "--nets", "lenet5", "--dataflows", "X:Y", "--episodes", "1", "--steps", "4",
+        ]))
+        .unwrap();
+        assert!(dispatch(&argv(&["sweep", "--nets", "resnet9000"])).is_err());
+        assert!(dispatch(&argv(&["sweep", "--dataflows", "Q:R"])).is_err());
     }
 
     #[test]

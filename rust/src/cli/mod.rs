@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! edc compress --net lenet5 --dataflow X:Y [--oracle surrogate|pjrt] ...
+//! edc sweep   --nets lenet5,vgg16_cifar [--dataflows paper|all|X:Y,..]
 //! edc table   --id 2|3|4   [--episodes N] [--seed S]
 //! edc figure  --id 1|4|5|6|7 [--episodes N] [--seed S]
 //! edc explore --net vgg16  [--q 8] [--p 1.0]   # rank all 15 dataflows
@@ -39,6 +40,9 @@ pub fn usage() -> &'static str {
        compress   run the EDCompress search (--net, --dataflow, --oracle,\n\
                   --episodes, --steps, --seed, --mode, --lambda, --gamma,\n\
                   --out result.json)\n\
+       sweep      search many (network x dataflow) pairs on a bounded\n\
+                  worker pool (--nets a,b,c --dataflows paper|all|X:Y,..,\n\
+                  --episodes, --steps, --seed)\n\
        table      regenerate a paper table (--id 2|3|4, --episodes, --seed)\n\
        figure     regenerate a paper figure (--id 1|4|5|6|7, --episodes, --seed)\n\
        explore    rank all 15 dataflows for a network (--net, --q, --p)\n\

@@ -154,14 +154,10 @@ impl Coordinator {
             state = next;
             rec.steps += 1;
             rec.total_reward += reward;
-            // Instrument the curves from the env's live state.
-            let rep = crate::energy::evaluate(
-                &self.env.net,
-                self.env.current_state(),
-                self.env.dataflow,
-                &self.env.energy_cfg,
-            );
-            rec.energy_curve.push(rep.total_energy());
+            // Instrument the curves from the env's live state; the env
+            // already evaluated this state during the step, so read it
+            // back instead of re-running the cost model.
+            rec.energy_curve.push(self.env.last_energy());
             if let Some(b) = self.env.best() {
                 rec.accuracy_curve.push(b.accuracy);
             } else {

@@ -1,18 +1,26 @@
 //! Multi-dataflow / multi-network sweeps — the workhorse behind every
-//! table and figure. Sweeps run each (network, dataflow) search on its own
-//! OS thread (the searches are independent; no tokio offline, std threads
-//! suffice).
+//! table and figure.
+//!
+//! Sweeps stream `(network × dataflow)` jobs through a bounded worker
+//! pool sized by `std::thread::available_parallelism`, so a spec with
+//! several networks and all 15 dataflows runs without oversubscribing the
+//! machine (the old design spawned one OS thread per job). Worker panics
+//! are contained per job: the sweep returns every completed outcome plus
+//! a report of which jobs failed, instead of aborting wholesale.
 
 use super::{Coordinator, SearchConfig, SearchOutcome};
 use crate::dataflow::Dataflow;
-use crate::energy::EnergyConfig;
+use crate::energy::{self, EnergyConfig};
 use crate::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
 use crate::model::Network;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
 
-/// One sweep request: a network searched under each dataflow.
+/// One sweep request: each network searched under each dataflow.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
-    pub net: Network,
+    pub nets: Vec<Network>,
     pub dataflows: Vec<Dataflow>,
     pub env: EnvConfig,
     pub energy: EnergyConfig,
@@ -21,57 +29,220 @@ pub struct SweepSpec {
 }
 
 impl SweepSpec {
-    pub fn paper_four(net: Network, seed: u64) -> SweepSpec {
+    pub fn new(nets: Vec<Network>, dataflows: Vec<Dataflow>, seed: u64) -> SweepSpec {
         SweepSpec {
-            net,
-            dataflows: Dataflow::paper_four().to_vec(),
+            nets,
+            dataflows,
             env: EnvConfig::default(),
             energy: EnergyConfig::default(),
             search: SearchConfig::default(),
             seed,
         }
     }
+
+    /// One network under the paper's four dataflows (Table 1).
+    pub fn paper_four(net: Network, seed: u64) -> SweepSpec {
+        SweepSpec::new(vec![net], Dataflow::paper_four().to_vec(), seed)
+    }
+
+    /// One network under all 15 loop-pair dataflows.
+    pub fn all_dataflows(net: Network, seed: u64) -> SweepSpec {
+        SweepSpec::new(vec![net], Dataflow::all_fifteen(), seed)
+    }
+
+    /// The job list in output order: network-major, then dataflow.
+    fn jobs(&self) -> Vec<SweepJob> {
+        let mut jobs = Vec::with_capacity(self.nets.len() * self.dataflows.len());
+        for net in &self.nets {
+            for df in &self.dataflows {
+                let i = jobs.len() as u64;
+                let mut search = self.search.clone();
+                // Decorrelate agent seeds across jobs but keep determinism
+                // (same formula as the original per-dataflow threads).
+                search.sac.seed = self.seed.wrapping_add(i * 7919);
+                jobs.push(SweepJob {
+                    net: net.clone(),
+                    df: *df,
+                    env: self.env.clone(),
+                    energy: self.energy.clone(),
+                    search,
+                    oracle_seed: self.seed.wrapping_add(i),
+                });
+            }
+        }
+        jobs
+    }
 }
 
-/// Run the sweep with the surrogate oracle, one thread per dataflow.
-pub fn run_surrogate_sweep(spec: &SweepSpec) -> Vec<SearchOutcome> {
-    let mut handles = Vec::new();
-    for (i, df) in spec.dataflows.iter().enumerate() {
-        let net = spec.net.clone();
-        let env_cfg = spec.env.clone();
-        let energy_cfg = spec.energy.clone();
-        let mut search = spec.search.clone();
-        // Decorrelate agent seeds across dataflows but keep determinism.
-        search.sac.seed = spec.seed.wrapping_add(i as u64 * 7919);
-        let df = *df;
-        let oracle_seed = spec.seed.wrapping_add(i as u64);
-        handles.push(std::thread::spawn(move || {
-            let oracle = SurrogateOracle::new(&net, oracle_seed);
-            let env = CompressionEnv::new(net, df, Box::new(oracle), env_cfg, energy_cfg);
-            Coordinator::new(env, search).run()
-        }));
+struct SweepJob {
+    net: Network,
+    df: Dataflow,
+    env: EnvConfig,
+    energy: EnergyConfig,
+    search: SearchConfig,
+    oracle_seed: u64,
+}
+
+/// A job that died inside the worker pool.
+#[derive(Clone, Debug)]
+pub struct SweepFailure {
+    pub network: String,
+    pub dataflow: String,
+    /// The panic message of the failed job.
+    pub error: String,
+}
+
+/// Failure report of a sweep: which jobs died, plus every outcome that
+/// did complete (in job order), so long sweeps never lose finished work.
+#[derive(Debug)]
+pub struct SweepError {
+    pub failures: Vec<SweepFailure>,
+    pub completed: Vec<SearchOutcome>,
+}
+
+impl std::fmt::Display for SweepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} of {} sweep jobs failed:",
+            self.failures.len(),
+            self.failures.len() + self.completed.len()
+        )?;
+        for fail in &self.failures {
+            write!(f, " [{} {}: {}]", fail.network, fail.dataflow, fail.error)?;
+        }
+        Ok(())
     }
-    handles
+}
+
+impl std::error::Error for SweepError {}
+
+/// Worker count for `n` jobs: bounded by the machine's parallelism.
+pub fn worker_count(jobs: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    hw.min(jobs).max(1)
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked (non-string payload)".to_string()
+    }
+}
+
+/// Run `jobs` through a bounded worker pool, preserving job order in the
+/// results. A job that panics yields `Err(panic message)` in its slot;
+/// the other jobs keep running.
+fn run_pool<J, R, F>(jobs: Vec<J>, f: F) -> Vec<Result<R, String>>
+where
+    J: Send,
+    R: Send,
+    F: Fn(J) -> R + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let queue: Mutex<VecDeque<(usize, J)>> = Mutex::new(jobs.into_iter().enumerate().collect());
+    let slots: Vec<Mutex<Option<Result<R, String>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let workers = worker_count(n);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap().pop_front();
+                let Some((idx, job)) = job else { break };
+                let outcome = catch_unwind(AssertUnwindSafe(|| f(job))).map_err(panic_message);
+                *slots[idx].lock().unwrap() = Some(outcome);
+            });
+        }
+    });
+    slots
         .into_iter()
-        .map(|h| h.join().expect("sweep worker panicked"))
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("worker pool finished with an unfilled slot")
+        })
         .collect()
 }
 
+/// Run the sweep with the surrogate oracle through the bounded pool.
+///
+/// On success the outcomes are in job order (network-major, then
+/// dataflow, matching `spec.nets` × `spec.dataflows`). If any job
+/// panics, the error carries the failed (network, dataflow) pairs *and*
+/// every completed outcome.
+pub fn run_surrogate_sweep(spec: &SweepSpec) -> Result<Vec<SearchOutcome>, SweepError> {
+    let jobs = spec.jobs();
+    let labels: Vec<(String, String)> = jobs
+        .iter()
+        .map(|j| (j.net.name.clone(), j.df.label()))
+        .collect();
+    let results = run_pool(jobs, |job: SweepJob| {
+        let oracle = SurrogateOracle::new(&job.net, job.oracle_seed);
+        let env = CompressionEnv::new(job.net, job.df, Box::new(oracle), job.env, job.energy);
+        Coordinator::new(env, job.search).run()
+    });
+
+    let mut completed = Vec::new();
+    let mut failures = Vec::new();
+    for (result, (network, dataflow)) in results.into_iter().zip(labels) {
+        match result {
+            Ok(outcome) => completed.push(outcome),
+            Err(error) => failures.push(SweepFailure {
+                network,
+                dataflow,
+                error,
+            }),
+        }
+    }
+    if failures.is_empty() {
+        Ok(completed)
+    } else {
+        Err(SweepError { failures, completed })
+    }
+}
+
+/// NaN-safe energy ordering: finite energies ascend; any NaN (which the
+/// evaluate boundary debug-asserts against) sorts last instead of
+/// panicking mid-sort.
+fn sort_rows_by_energy(rows: &mut [(Dataflow, f64, f64)]) {
+    rows.sort_by(|a, b| a.1.total_cmp(&b.1));
+}
+
 /// Rank all 15 dataflows for a network at a fixed compression state —
-/// the "find the optimal dataflow type" use-case of the abstract.
+/// the "find the optimal dataflow type" use-case of the abstract. One
+/// batched pass shares per-layer mappings and costs across dataflows.
 pub fn rank_dataflows(
     net: &Network,
     state: &crate::compress::CompressionState,
     cfg: &EnergyConfig,
 ) -> Vec<(Dataflow, f64, f64)> {
-    let mut rows: Vec<(Dataflow, f64, f64)> = Dataflow::all_fifteen()
+    let mut cache = energy::cache::CostCache::new(net, cfg);
+    rank_dataflows_cached(net, state, cfg, &mut cache)
+}
+
+/// [`rank_dataflows`] against a caller-owned cache, for repeated queries
+/// over the same network (CLI sweeps, benches).
+pub fn rank_dataflows_cached(
+    net: &Network,
+    state: &crate::compress::CompressionState,
+    cfg: &EnergyConfig,
+    cache: &mut energy::cache::CostCache,
+) -> Vec<(Dataflow, f64, f64)> {
+    let dfs = Dataflow::all_fifteen();
+    let reports = energy::evaluate_batch(net, state, &dfs, cfg, cache);
+    let mut rows: Vec<(Dataflow, f64, f64)> = dfs
         .into_iter()
-        .map(|df| {
-            let rep = crate::energy::evaluate(net, state, df, cfg);
-            (df, rep.total_energy(), rep.total_area)
-        })
+        .zip(reports)
+        .map(|(df, rep)| (df, rep.total_energy(), rep.total_area))
         .collect();
-    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    sort_rows_by_energy(&mut rows);
     rows
 }
 
@@ -82,21 +253,86 @@ mod tests {
     use crate::model::zoo;
     use crate::rl::sac::SacConfig;
 
+    fn tiny_search() -> SearchConfig {
+        SearchConfig {
+            episodes: 2,
+            sac: SacConfig {
+                hidden: vec![32, 32],
+                warmup_steps: 16,
+                batch_size: 16,
+                ..SacConfig::default()
+            },
+            verbose: false,
+        }
+    }
+
     #[test]
     fn sweep_runs_all_dataflows_in_parallel() {
         let mut spec = SweepSpec::paper_four(zoo::lenet5(), 1);
-        spec.search.episodes = 2;
         spec.env.max_steps = 8;
-        spec.search.sac = SacConfig {
-            hidden: vec![32, 32],
-            warmup_steps: 16,
-            batch_size: 16,
-            ..SacConfig::default()
-        };
-        let outs = run_surrogate_sweep(&spec);
+        spec.search = tiny_search();
+        let outs = run_surrogate_sweep(&spec).expect("sweep");
         assert_eq!(outs.len(), 4);
         let labels: Vec<&str> = outs.iter().map(|o| o.dataflow.as_str()).collect();
         assert_eq!(labels, vec!["X:Y", "FX:FY", "X:FX", "CI:CO"]);
+    }
+
+    #[test]
+    fn multi_network_sweep_keeps_job_order() {
+        let mut spec = SweepSpec::new(
+            vec![zoo::lenet5(), zoo::lenet5()],
+            vec![Dataflow::XY, Dataflow::FXFY],
+            3,
+        );
+        spec.env.max_steps = 6;
+        spec.search = tiny_search();
+        let outs = run_surrogate_sweep(&spec).expect("sweep");
+        assert_eq!(outs.len(), 4);
+        let got: Vec<(String, String)> = outs
+            .iter()
+            .map(|o| (o.network.clone(), o.dataflow.clone()))
+            .collect();
+        assert_eq!(got[0].1, "X:Y");
+        assert_eq!(got[1].1, "FX:FY");
+        assert_eq!(got[2].1, "X:Y");
+        assert_eq!(got[3].1, "FX:FY");
+    }
+
+    #[test]
+    fn pool_contains_panics_and_preserves_other_jobs() {
+        let results = run_pool(vec![1usize, 2, 3, 4, 5], |j| {
+            if j == 3 {
+                panic!("boom on {j}");
+            }
+            j * 10
+        });
+        assert_eq!(results.len(), 5);
+        assert_eq!(results[0], Ok(10));
+        assert_eq!(results[1], Ok(20));
+        assert!(results[2].as_ref().unwrap_err().contains("boom on 3"));
+        assert_eq!(results[3], Ok(40));
+        assert_eq!(results[4], Ok(50));
+    }
+
+    #[test]
+    fn pool_handles_empty_and_single_job() {
+        let empty: Vec<Result<u32, String>> = run_pool(Vec::<u32>::new(), |j| j);
+        assert!(empty.is_empty());
+        let one = run_pool(vec![7u32], |j| j + 1);
+        assert_eq!(one, vec![Ok(8)]);
+    }
+
+    #[test]
+    fn sort_is_nan_safe() {
+        let mut rows = vec![
+            (Dataflow::XY, f64::NAN, 1.0),
+            (Dataflow::FXFY, 2.0, 1.0),
+            (Dataflow::CICO, 1.0, 1.0),
+        ];
+        sort_rows_by_energy(&mut rows); // must not panic
+        assert_eq!(rows[0].0, Dataflow::CICO);
+        assert_eq!(rows[1].0, Dataflow::FXFY);
+        assert!(rows[2].1.is_nan(), "NaN sorts last");
     }
 
     #[test]
@@ -108,5 +344,13 @@ mod tests {
         for w in rows.windows(2) {
             assert!(w[0].1 <= w[1].1, "not sorted by energy");
         }
+    }
+
+    #[test]
+    fn worker_count_is_bounded() {
+        assert_eq!(worker_count(0), 1);
+        assert_eq!(worker_count(1), 1);
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        assert!(worker_count(1000) <= hw);
     }
 }

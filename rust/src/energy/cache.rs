@@ -1,0 +1,405 @@
+//! Incremental cost evaluation: per-layer cost caching and mapping reuse.
+//!
+//! The RL search loop evaluates the cost model at every environment step,
+//! and `rank_dataflows` evaluates it 15 times per query. Each of those
+//! evaluations used to re-derive the spatial mapping and every traffic /
+//! area formula from scratch, even though a SAC action only perturbs the
+//! per-layer (Q, P) knobs. This module memoizes the per-layer
+//! [`LayerCost`] so unchanged layers cost a hash lookup (or nothing at
+//! all, in the [`IncrementalEvaluator`] fast path) instead of a full
+//! re-derivation.
+//!
+//! # Cache-key bucketing
+//!
+//! A cache entry is keyed by `(compression slot, dataflow, SlotKey)`
+//! where [`SlotKey`] buckets the continuous (Q, P) state:
+//!
+//! - **Q is bucketed by rounding to an integer bit depth.** This is not
+//!   an approximation: the paper materializes quantization by rounding
+//!   (§3.3 "we round the quantization depth to the nearest integer"), and
+//!   `energy::evaluate` has always consumed `CompressionState::bits()`.
+//!   Two states whose Q rounds the same are *exactly* the same point of
+//!   the cost model.
+//! - **P is bucketed onto a grid of [`P_BUCKETS`] (= 128) steps**, i.e. a
+//!   resolution of ~0.78% remaining weights. The pruning ratio enters the
+//!   formulas continuously, so a finite key needs a grid; 1/128 is far
+//!   below the ~1% granularity at which prune ratios are reported (the
+//!   paper quotes integer percents) and perturbs absolute energies by
+//!   well under 1%. Crucially the *evaluation itself* snaps P to the same
+//!   grid ([`snap_p`] inside `energy::evaluate`), so a cache hit is
+//!   **bit-identical** to a fresh evaluation — the grid is part of the
+//!   model, not a cache-side approximation. `snap_p` is monotone, so all
+//!   monotonicity properties of the model survive.
+//!
+//! # What invalidates the cache
+//!
+//! A cache instance is pinned to one network topology and one
+//! [`EnergyConfig`] (both are captured at construction; the config is
+//! fingerprinted and checked with `debug_assert` on every access).
+//! Layer costs depend on nothing else — not on the other layers, not on
+//! episode history — so entries never expire. Evaluating a different
+//! network or config requires a fresh `CostCache`; [`Mapping`]s
+//! additionally depend only on `(layer, dataflow, pe_cap)` and are cached
+//! forever in [`CostCache::mapping`].
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+use super::constants::EnergyConfig;
+use super::{accumulate_area, layer_cost, total_area_of, CostReport, LayerCost};
+use crate::compress::CompressionState;
+use crate::dataflow::{spatial, Dataflow};
+use crate::model::Network;
+
+/// Number of buckets of the pruning-ratio grid (see module docs).
+pub const P_BUCKETS: u32 = 128;
+
+/// Bucket index of a pruning remaining-fraction `p` in [0, 1].
+pub fn p_bucket(p: f64) -> u32 {
+    (p * P_BUCKETS as f64).round().clamp(0.0, P_BUCKETS as f64) as u32
+}
+
+/// Representative pruning fraction of a bucket (exact dyadic rational).
+pub fn p_from_bucket(bucket: u32) -> f64 {
+    bucket as f64 / P_BUCKETS as f64
+}
+
+/// Snap a pruning fraction onto the bucket grid. Monotone; fixes every
+/// multiple of `1/P_BUCKETS` (including 0.5 and 1.0) exactly.
+pub fn snap_p(p: f64) -> f64 {
+    p_from_bucket(p_bucket(p))
+}
+
+/// The bucketed per-slot compression key (see module docs for why each
+/// half is a bucket rather than the raw continuous value).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SlotKey {
+    /// Rounded quantization depth, bits.
+    pub bits: u32,
+    /// Pruning bucket index in `0..=P_BUCKETS`.
+    pub p_bucket: u32,
+}
+
+impl SlotKey {
+    /// Key of compression slot `slot` in `state`.
+    pub fn of(state: &CompressionState, slot: usize) -> SlotKey {
+        SlotKey {
+            bits: state.bits(slot),
+            p_bucket: p_bucket(state.remaining(slot)),
+        }
+    }
+}
+
+/// Fingerprint an [`EnergyConfig`] so a cache can detect being used with
+/// a different config than it was built for (a silent source of stale
+/// costs otherwise).
+fn config_fingerprint(cfg: &EnergyConfig) -> u64 {
+    let mut h = DefaultHasher::new();
+    cfg.act_bits.hash(&mut h);
+    cfg.baseline_act_bits.hash(&mut h);
+    cfg.acc_margin.hash(&mut h);
+    cfg.idx_bits.hash(&mut h);
+    cfg.pe_cap.hash(&mut h);
+    for v in [
+        cfg.e_adder,
+        cfg.e_sram_bit,
+        cfg.e_noc_bit,
+        cfg.e_reg_bit,
+        cfg.lut_area,
+        cfg.ram_bit_area,
+        cfg.reg_bit_area,
+    ] {
+        v.to_bits().hash(&mut h);
+    }
+    h.finish()
+}
+
+/// Memoized per-layer costs and spatial mappings for one (network,
+/// config) pair.
+pub struct CostCache {
+    net_name: String,
+    /// Global layer index of each compression slot.
+    compute: Vec<usize>,
+    pe_cap: usize,
+    fingerprint: u64,
+    /// `mappings[slot][dataflow]` — `spatial::map_layer` computed once
+    /// per (layer, dataflow, pe_cap).
+    mappings: Vec<HashMap<Dataflow, spatial::Mapping>>,
+    costs: HashMap<(u32, Dataflow, SlotKey), Arc<LayerCost>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl CostCache {
+    pub fn new(net: &Network, cfg: &EnergyConfig) -> CostCache {
+        let compute = net.compute_layers();
+        let mappings = vec![HashMap::new(); compute.len()];
+        CostCache {
+            net_name: net.name.clone(),
+            compute,
+            pe_cap: cfg.pe_cap,
+            fingerprint: config_fingerprint(cfg),
+            mappings,
+            costs: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The spatial mapping of slot `slot` under `df`, computed at most
+    /// once per (layer, dataflow).
+    pub fn mapping(&mut self, net: &Network, slot: usize, df: Dataflow) -> spatial::Mapping {
+        let li = self.compute[slot];
+        let layer = &net.layers[li];
+        let cap = self.pe_cap;
+        *self.mappings[slot]
+            .entry(df)
+            .or_insert_with(|| spatial::map_layer(layer, df, cap))
+    }
+
+    /// The memoized cost of slot `slot` under `df` at the bucketed
+    /// compression point `key`. Hits return the same `Arc`, so repeated
+    /// lookups are bit-identical by construction.
+    pub fn layer_cost(
+        &mut self,
+        net: &Network,
+        cfg: &EnergyConfig,
+        slot: usize,
+        df: Dataflow,
+        key: SlotKey,
+    ) -> Arc<LayerCost> {
+        debug_assert_eq!(
+            self.fingerprint,
+            config_fingerprint(cfg),
+            "CostCache used with a different EnergyConfig than it was built for"
+        );
+        debug_assert_eq!(self.net_name, net.name, "CostCache used with a different network");
+        if let Some(c) = self.costs.get(&(slot as u32, df, key)) {
+            self.hits += 1;
+            return Arc::clone(c);
+        }
+        self.misses += 1;
+        let mapping = self.mapping(net, slot, df);
+        let layer = &net.layers[self.compute[slot]];
+        let cost = Arc::new(layer_cost(
+            layer,
+            df,
+            &mapping,
+            key.bits,
+            p_from_bucket(key.p_bucket),
+            cfg,
+        ));
+        self.costs.insert((slot as u32, df, key), Arc::clone(&cost));
+        cost
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Number of distinct cached layer costs.
+    pub fn len(&self) -> usize {
+        self.costs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.costs.is_empty()
+    }
+}
+
+/// Stateful incremental evaluator for one (network, dataflow) pair — the
+/// `CompressionEnv::step` fast path. Tracks the last-seen [`SlotKey`] per
+/// layer and recomputes (or re-fetches) only the layers whose key moved;
+/// unchanged layers cost a key comparison.
+pub struct IncrementalEvaluator {
+    df: Dataflow,
+    cache: CostCache,
+    keys: Vec<Option<SlotKey>>,
+    costs: Vec<Option<Arc<LayerCost>>>,
+}
+
+impl IncrementalEvaluator {
+    pub fn new(net: &Network, df: Dataflow, cfg: &EnergyConfig) -> IncrementalEvaluator {
+        let n = net.num_compute_layers();
+        IncrementalEvaluator {
+            df,
+            cache: CostCache::new(net, cfg),
+            keys: vec![None; n],
+            costs: vec![None; n],
+        }
+    }
+
+    pub fn dataflow(&self) -> Dataflow {
+        self.df
+    }
+
+    pub fn cache(&self) -> &CostCache {
+        &self.cache
+    }
+
+    /// Total (energy, area) of `state` — bit-identical to
+    /// `energy::evaluate(net, state, df, cfg)` (property-tested in
+    /// `tests/prop_cache.rs`), but only layers whose bucketed key changed
+    /// since the previous call do any work.
+    pub fn evaluate(
+        &mut self,
+        net: &Network,
+        state: &CompressionState,
+        cfg: &EnergyConfig,
+    ) -> (f64, f64) {
+        assert_eq!(
+            state.num_layers(),
+            self.keys.len(),
+            "state layers {} != evaluator slots {}",
+            state.num_layers(),
+            self.keys.len()
+        );
+        for slot in 0..self.keys.len() {
+            let key = SlotKey::of(state, slot);
+            if self.keys[slot] != Some(key) {
+                self.costs[slot] = Some(self.cache.layer_cost(net, cfg, slot, self.df, key));
+                self.keys[slot] = Some(key);
+            }
+        }
+        let mut energy = 0.0;
+        for cost in self.costs.iter().flatten() {
+            energy += cost.total_energy();
+        }
+        let area = accumulate_area(self.costs.iter().flatten().map(|c| c.as_ref()), cfg);
+        debug_assert!(
+            energy.is_finite() && area.is_finite(),
+            "non-finite incremental cost for {} under {}",
+            net.name,
+            self.df.label()
+        );
+        (energy, area)
+    }
+
+    /// Materialize the full [`CostReport`] of the last evaluated state.
+    /// Panics if `evaluate` has not been called yet.
+    pub fn report(&self, net: &Network, cfg: &EnergyConfig) -> CostReport {
+        let per_layer: Vec<LayerCost> = self
+            .costs
+            .iter()
+            .map(|c| {
+                c.as_ref()
+                    .expect("IncrementalEvaluator::report before evaluate")
+                    .as_ref()
+                    .clone()
+            })
+            .collect();
+        let total_area = total_area_of(&per_layer, cfg);
+        CostReport {
+            network: net.name.clone(),
+            dataflow: self.df.label(),
+            per_layer,
+            total_area,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn p_grid_is_monotone_and_fixes_grid_points() {
+        assert_eq!(snap_p(1.0), 1.0);
+        assert_eq!(snap_p(0.5), 0.5);
+        assert_eq!(snap_p(0.25), 0.25);
+        let mut prev = -1.0;
+        for i in 0..=1000 {
+            let p = i as f64 / 1000.0;
+            let s = snap_p(p);
+            assert!(s >= prev, "snap_p not monotone at {p}");
+            assert!((s - p).abs() <= 0.5 / P_BUCKETS as f64 + 1e-12);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn slot_key_buckets_q_and_p() {
+        let net = zoo::lenet5();
+        let mut s = crate::compress::CompressionState::uniform(&net, 8.0, 1.0);
+        s.q[0] = 4.4;
+        s.p[0] = 0.5;
+        let k = SlotKey::of(&s, 0);
+        assert_eq!(k.bits, 4);
+        assert_eq!(k.p_bucket, P_BUCKETS / 2);
+        // Sub-bucket perturbations map to the same key.
+        s.q[0] = 4.45;
+        s.p[0] = 0.5001;
+        assert_eq!(SlotKey::of(&s, 0), k);
+    }
+
+    #[test]
+    fn cache_hits_return_identical_costs() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let mut cache = CostCache::new(&net, &cfg);
+        let key = SlotKey { bits: 5, p_bucket: 77 };
+        let a = cache.layer_cost(&net, &cfg, 1, Dataflow::XY, key);
+        let b = cache.layer_cost(&net, &cfg, 1, Dataflow::XY, key);
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the same entry");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(a.total_energy().to_bits(), b.total_energy().to_bits());
+    }
+
+    #[test]
+    fn mappings_computed_once_per_layer_dataflow() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let mut cache = CostCache::new(&net, &cfg);
+        let m1 = cache.mapping(&net, 0, Dataflow::XY);
+        let m2 = cache.mapping(&net, 0, Dataflow::XY);
+        assert_eq!(m1.pes(), m2.pes());
+        let direct = spatial::map_layer(&net.layers[0], Dataflow::XY, cfg.pe_cap);
+        assert_eq!(m1.pes(), direct.pes());
+        assert_eq!(m1.tiles, direct.tiles);
+    }
+
+    #[test]
+    fn incremental_evaluator_matches_full_evaluate() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let mut ev = IncrementalEvaluator::new(&net, Dataflow::CICO, &cfg);
+        let mut state = crate::compress::CompressionState::uniform(&net, 8.0, 1.0);
+        for step in 0..20 {
+            // Perturb one slot per step, cycling; every other visit moves
+            // the knob back so earlier cache keys recur (hits).
+            let slot = step % state.num_layers();
+            let sign = if (step / state.num_layers()) % 2 == 0 { -1.0 } else { 1.0 };
+            state.q[slot] = (state.q[slot] + sign * 0.8).clamp(1.0, 8.0);
+            state.p[slot] = (state.p[slot] + sign * 0.125).clamp(0.02, 1.0);
+            let (e, a) = ev.evaluate(&net, &state, &cfg);
+            let full = super::super::evaluate(&net, &state, Dataflow::CICO, &cfg);
+            assert_eq!(e.to_bits(), full.total_energy().to_bits(), "energy step {step}");
+            assert_eq!(a.to_bits(), full.total_area.to_bits(), "area step {step}");
+        }
+        assert!(ev.cache().hits() > 0, "expected some cache hits");
+    }
+
+    #[test]
+    fn report_matches_full_evaluate() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let state = crate::compress::CompressionState::uniform(&net, 5.0, 0.4);
+        let mut ev = IncrementalEvaluator::new(&net, Dataflow::XY, &cfg);
+        ev.evaluate(&net, &state, &cfg);
+        let rep = ev.report(&net, &cfg);
+        let full = super::super::evaluate(&net, &state, Dataflow::XY, &cfg);
+        assert_eq!(rep.network, full.network);
+        assert_eq!(rep.dataflow, full.dataflow);
+        assert_eq!(rep.per_layer.len(), full.per_layer.len());
+        assert_eq!(rep.total_energy().to_bits(), full.total_energy().to_bits());
+        assert_eq!(rep.total_area.to_bits(), full.total_area.to_bits());
+    }
+}

@@ -14,6 +14,7 @@
 //! ratios, which the constants cancel out of.
 
 pub mod area;
+pub mod cache;
 pub mod constants;
 pub mod mac;
 pub mod memory;
@@ -22,7 +23,7 @@ pub use constants::EnergyConfig;
 
 use crate::compress::CompressionState;
 use crate::dataflow::{spatial, Dataflow};
-use crate::model::Network;
+use crate::model::{LayerSpec, Network};
 
 /// Energy breakdown for a single layer, in joules.
 #[derive(Clone, Debug, Default)]
@@ -48,6 +49,10 @@ pub struct LayerCost {
     pub active_macs: f64,
     /// Parameters in the layer.
     pub params: u64,
+    /// Storage bits of the surviving weights (whole-network RAM sizing).
+    pub weight_bits: f64,
+    /// Output feature-map bits (whole-network RAM sizing takes the max).
+    pub fmap_bits: f64,
 }
 
 impl LayerCost {
@@ -100,8 +105,72 @@ impl CostReport {
     }
 }
 
+/// Full cost of one layer under one dataflow at an integer bit depth `q`
+/// and (grid-snapped) pruning fraction `p`. This is the single source of
+/// truth shared by [`evaluate`], [`evaluate_batch`],
+/// [`evaluate_incremental`] and [`cache::CostCache`], which is what makes
+/// the cached and incremental paths bit-identical to a fresh evaluation.
+fn layer_cost(
+    layer: &LayerSpec,
+    df: Dataflow,
+    mapping: &spatial::Mapping,
+    q: u32,
+    p: f64,
+    cfg: &EnergyConfig,
+) -> LayerCost {
+    let pe_energy = mac::pe_energy(layer, mapping, q, p, cfg);
+    let traffic = memory::traffic(layer, df, mapping, q, p, cfg);
+    let logic_area = area::logic_area(mapping, q, cfg);
+    let weight_bits = area::weight_storage_bits(layer, q, p, cfg);
+    let fmap_bits = layer.fmap_elems() as f64 * cfg.act_bits as f64;
+    let ram_area = area::ram_area(weight_bits + fmap_bits, cfg);
+    LayerCost {
+        name: layer.name.clone(),
+        pe_energy,
+        sram_energy: traffic.sram_energy,
+        noc_input: traffic.noc_input,
+        noc_weight: traffic.noc_weight,
+        noc_psum: traffic.noc_psum,
+        reg_energy: traffic.reg_energy,
+        logic_area,
+        ram_area,
+        pes: mapping.pes(),
+        active_macs: layer.macs() as f64 * p,
+        params: layer.params(),
+        weight_bits,
+        fmap_bits,
+    }
+}
+
+/// Reported total area of a per-layer cost list: max layer logic + RAM
+/// sized for all weights plus the largest feature map (paper Table 4).
+fn total_area_of(per_layer: &[LayerCost], cfg: &EnergyConfig) -> f64 {
+    accumulate_area(per_layer.iter(), cfg)
+}
+
+/// The Table-4 area reduction over any stream of layer costs — single
+/// source of truth shared by the full, batched and incremental paths.
+fn accumulate_area<'a, I>(costs: I, cfg: &EnergyConfig) -> f64
+where
+    I: Iterator<Item = &'a LayerCost>,
+{
+    let mut max_logic = 0.0_f64;
+    let mut total_weight_bits = 0.0_f64;
+    let mut max_fmap_bits = 0.0_f64;
+    for c in costs {
+        max_logic = max_logic.max(c.logic_area);
+        total_weight_bits += c.weight_bits;
+        max_fmap_bits = max_fmap_bits.max(c.fmap_bits);
+    }
+    max_logic + area::ram_area(total_weight_bits + max_fmap_bits, cfg)
+}
+
 /// Evaluate the full cost model for `net` compressed per `state` under
 /// dataflow `df`.
+///
+/// Quantization is consumed at the rounded integer depth (paper §3.3) and
+/// pruning at the [`cache::snap_p`] grid — see `energy::cache` for why
+/// both are part of the model rather than cache-side approximations.
 pub fn evaluate(
     net: &Network,
     state: &CompressionState,
@@ -117,52 +186,113 @@ pub fn evaluate(
         compute.len()
     );
 
-    let mut per_layer = Vec::new();
-    let mut max_logic = 0.0f64;
-    let mut total_weight_bits = 0.0f64;
-    let mut max_fmap_bits = 0.0f64;
-
+    let mut per_layer = Vec::with_capacity(compute.len());
     for (slot, &li) in compute.iter().enumerate() {
         let layer = &net.layers[li];
         let q = state.bits(slot);
-        let p = state.remaining(slot);
+        let p = cache::snap_p(state.remaining(slot));
         let mapping = spatial::map_layer(layer, df, cfg.pe_cap);
-
-        let pe_energy = mac::pe_energy(layer, &mapping, q, p, cfg);
-        let traffic = memory::traffic(layer, df, &mapping, q, p, cfg);
-        let logic_area = area::logic_area(&mapping, q, cfg);
-        let weight_bits = area::weight_storage_bits(layer, q, p, cfg);
-        let fmap_bits = layer.fmap_elems() as f64 * cfg.act_bits as f64;
-        let ram_area = area::ram_area(weight_bits + fmap_bits, cfg);
-
-        max_logic = max_logic.max(logic_area);
-        total_weight_bits += weight_bits;
-        max_fmap_bits = max_fmap_bits.max(fmap_bits);
-
-        per_layer.push(LayerCost {
-            name: layer.name.clone(),
-            pe_energy,
-            sram_energy: traffic.sram_energy,
-            noc_input: traffic.noc_input,
-            noc_weight: traffic.noc_weight,
-            noc_psum: traffic.noc_psum,
-            reg_energy: traffic.reg_energy,
-            logic_area,
-            ram_area,
-            pes: mapping.pes(),
-            active_macs: layer.macs() as f64 * p,
-            params: layer.params(),
-        });
+        per_layer.push(layer_cost(layer, df, &mapping, q, p, cfg));
     }
 
-    let total_area = max_logic + area::ram_area(total_weight_bits + max_fmap_bits, cfg);
+    let total_area = total_area_of(&per_layer, cfg);
+    let report = CostReport {
+        network: net.name.clone(),
+        dataflow: df.label(),
+        per_layer,
+        total_area,
+    };
+    debug_assert!(
+        report.total_energy().is_finite() && report.total_area.is_finite(),
+        "non-finite cost for {} under {}",
+        net.name,
+        df.label()
+    );
+    report
+}
 
+/// Re-evaluate after a state change that touched only `changed_slots`.
+///
+/// `prev` must be the report of a state identical to `state` at every
+/// slot *not* listed in `changed_slots` (same network, dataflow and
+/// config). Unchanged layers are reused from `prev`; changed layers come
+/// from `cache`. The result is bit-identical to a fresh [`evaluate`] of
+/// `state` (property-tested in `tests/prop_cache.rs`).
+pub fn evaluate_incremental(
+    net: &Network,
+    state: &CompressionState,
+    df: Dataflow,
+    cfg: &EnergyConfig,
+    prev: &CostReport,
+    changed_slots: &[usize],
+    cache: &mut cache::CostCache,
+) -> CostReport {
+    assert_eq!(
+        prev.per_layer.len(),
+        state.num_layers(),
+        "prev report has {} layers, state has {}",
+        prev.per_layer.len(),
+        state.num_layers()
+    );
+    let mut per_layer = prev.per_layer.clone();
+    for &slot in changed_slots {
+        let key = cache::SlotKey::of(state, slot);
+        per_layer[slot] = cache.layer_cost(net, cfg, slot, df, key).as_ref().clone();
+    }
+    let total_area = total_area_of(&per_layer, cfg);
     CostReport {
         network: net.name.clone(),
         dataflow: df.label(),
         per_layer,
         total_area,
     }
+}
+
+/// Evaluate one state under many dataflows in a single pass over the
+/// layers, sharing per-layer work (key derivation, cached mappings and
+/// costs) across all dataflows. Result `i` is bit-identical to
+/// `evaluate(net, state, dfs[i], cfg)`.
+pub fn evaluate_batch(
+    net: &Network,
+    state: &CompressionState,
+    dfs: &[Dataflow],
+    cfg: &EnergyConfig,
+    cache: &mut cache::CostCache,
+) -> Vec<CostReport> {
+    let n = state.num_layers();
+    assert_eq!(
+        net.num_compute_layers(),
+        n,
+        "state layers {} != network compute layers {}",
+        n,
+        net.num_compute_layers()
+    );
+    let mut reports: Vec<CostReport> = dfs
+        .iter()
+        .map(|df| CostReport {
+            network: net.name.clone(),
+            dataflow: df.label(),
+            per_layer: Vec::with_capacity(n),
+            total_area: 0.0,
+        })
+        .collect();
+    for slot in 0..n {
+        let key = cache::SlotKey::of(state, slot);
+        for (di, &df) in dfs.iter().enumerate() {
+            let cost = cache.layer_cost(net, cfg, slot, df, key);
+            reports[di].per_layer.push(cost.as_ref().clone());
+        }
+    }
+    for report in reports.iter_mut() {
+        report.total_area = total_area_of(&report.per_layer, cfg);
+        debug_assert!(
+            report.total_energy().is_finite() && report.total_area.is_finite(),
+            "non-finite cost for {} under {}",
+            report.network,
+            report.dataflow
+        );
+    }
+    reports
 }
 
 /// Convenience: cost of the paper's pre-optimization reference point
@@ -264,6 +394,46 @@ mod tests {
             let rep = evaluate(&net, &s, df, &cfg);
             assert!(rep.total_energy() > 0.0, "{}", df.label());
             assert!(rep.total_area > 0.0, "{}", df.label());
+        }
+    }
+
+    #[test]
+    fn batch_matches_individual_evaluates() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let s = CompressionState::uniform(&net, 6.0, 0.6);
+        let dfs = Dataflow::all_fifteen();
+        let mut c = cache::CostCache::new(&net, &cfg);
+        let batch = evaluate_batch(&net, &s, &dfs, &cfg, &mut c);
+        assert_eq!(batch.len(), dfs.len());
+        for (df, rep) in dfs.iter().zip(&batch) {
+            let full = evaluate(&net, &s, *df, &cfg);
+            assert_eq!(rep.dataflow, full.dataflow);
+            assert_eq!(
+                rep.total_energy().to_bits(),
+                full.total_energy().to_bits(),
+                "{}",
+                df.label()
+            );
+            assert_eq!(rep.total_area.to_bits(), full.total_area.to_bits(), "{}", df.label());
+        }
+    }
+
+    #[test]
+    fn incremental_matches_full_after_single_slot_change() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let mut c = cache::CostCache::new(&net, &cfg);
+        let mut s = CompressionState::uniform(&net, 8.0, 1.0);
+        let mut prev = evaluate(&net, &s, Dataflow::XY, &cfg);
+        for slot in 0..s.num_layers() {
+            s.q[slot] = 3.0;
+            s.p[slot] = 0.25;
+            let inc = evaluate_incremental(&net, &s, Dataflow::XY, &cfg, &prev, &[slot], &mut c);
+            let full = evaluate(&net, &s, Dataflow::XY, &cfg);
+            assert_eq!(inc.total_energy().to_bits(), full.total_energy().to_bits());
+            assert_eq!(inc.total_area.to_bits(), full.total_area.to_bits());
+            prev = inc;
         }
     }
 }

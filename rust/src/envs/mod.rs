@@ -60,6 +60,10 @@ pub struct EnvConfig {
     pub limits: CompressionLimits,
     /// Restrict the action space (quantization-only / pruning-only).
     pub mode: CompressMode,
+    /// Use the incremental cost evaluator (`energy::cache`) for the
+    /// per-step energy. Bit-identical to a full `energy::evaluate`
+    /// (property-tested); disable only to benchmark the full path.
+    pub incremental: bool,
 }
 
 impl Default for EnvConfig {
@@ -74,6 +78,7 @@ impl Default for EnvConfig {
             reward_clip: 10.0,
             limits: CompressionLimits::default(),
             mode: CompressMode::Both,
+            incremental: true,
         }
     }
 }
@@ -99,6 +104,10 @@ pub struct CompressionEnv {
     t: usize,
     prev_acc: f64,
     prev_energy: f64,
+    prev_area: f64,
+    /// Incremental cost evaluator; persists across episodes so the layer
+    /// cache keeps warming as the search revisits nearby states.
+    evaluator: energy::cache::IncrementalEvaluator,
     /// Ring of the last tau+1 flattened (Q,P) states and rewards (Eq. 3).
     hist_qp: Vec<Vec<f64>>,
     hist_r: Vec<f64>,
@@ -116,6 +125,7 @@ impl CompressionEnv {
         energy_cfg: EnergyConfig,
     ) -> CompressionEnv {
         let state = CompressionState::uniform(&net, cfg.q0, cfg.p0);
+        let evaluator = energy::cache::IncrementalEvaluator::new(&net, dataflow, &energy_cfg);
         let mut env = CompressionEnv {
             net,
             dataflow,
@@ -126,6 +136,8 @@ impl CompressionEnv {
             t: 0,
             prev_acc: 1.0,
             prev_energy: 1.0,
+            prev_area: 0.0,
+            evaluator,
             hist_qp: Vec::new(),
             hist_r: Vec::new(),
             best: None,
@@ -135,9 +147,15 @@ impl CompressionEnv {
         env
     }
 
-    fn energy_of(&self, state: &CompressionState) -> (f64, f64) {
-        let rep = energy::evaluate(&self.net, state, self.dataflow, &self.energy_cfg);
-        (rep.total_energy(), rep.total_area)
+    /// (energy, area) of the current state. The incremental path is
+    /// bit-identical to the full path (see `energy::cache`).
+    fn energy_of(&mut self) -> (f64, f64) {
+        if self.cfg.incremental {
+            self.evaluator.evaluate(&self.net, &self.state, &self.energy_cfg)
+        } else {
+            let rep = energy::evaluate(&self.net, &self.state, self.dataflow, &self.energy_cfg);
+            (rep.total_energy(), rep.total_area)
+        }
     }
 
     fn reset_internal(&mut self) -> Vec<f64> {
@@ -145,8 +163,9 @@ impl CompressionEnv {
         self.oracle.reset();
         self.t = 0;
         self.prev_acc = self.oracle.evaluate(&self.state);
-        let (e, _a) = self.energy_of(&self.state);
+        let (e, a) = self.energy_of();
         self.prev_energy = e;
+        self.prev_area = a;
         self.start_energy = e;
         let flat = self.state.as_flat();
         self.hist_qp = vec![flat; self.cfg.tau + 1];
@@ -187,6 +206,18 @@ impl CompressionEnv {
         self.t
     }
 
+    /// Energy (J) of the current state — computed by the last step/reset,
+    /// so instrumentation can read it without re-running the cost model.
+    pub fn last_energy(&self) -> f64 {
+        self.prev_energy
+    }
+
+    /// Area (mm^2) of the current state (same freshness as
+    /// [`last_energy`](Self::last_energy)).
+    pub fn last_area(&self) -> f64 {
+        self.prev_area
+    }
+
     /// Accuracy floor below which the episode aborts.
     pub fn accuracy_floor(&self) -> f64 {
         self.cfg.threshold_frac * self.oracle.base_accuracy()
@@ -221,7 +252,7 @@ impl Env for CompressionEnv {
         self.t += 1;
 
         let acc = self.oracle.evaluate(&self.state);
-        let (energy, area) = self.energy_of(&self.state);
+        let (energy, area) = self.energy_of();
 
         // Eq. 4: r = (alpha_t/alpha_{t-1})^lambda * beta_{t-1}/beta_t.
         let acc_ratio = (acc / self.prev_acc.max(1e-9)).max(1e-6);
@@ -232,6 +263,7 @@ impl Env for CompressionEnv {
 
         self.prev_acc = acc;
         self.prev_energy = energy;
+        self.prev_area = area;
 
         // Track the best admissible point of the episode.
         let admissible = acc >= self.accuracy_floor();
@@ -353,6 +385,45 @@ mod tests {
         if let Some(best) = env.best() {
             assert!(best.accuracy >= env.accuracy_floor());
             assert!(best.energy < env.start_energy);
+        }
+    }
+
+    #[test]
+    fn incremental_env_matches_full_env_bitwise() {
+        // Two envs over the same oracle stream, one on the incremental
+        // evaluator and one on full re-evaluation: observations, rewards
+        // and termination must agree bit-for-bit.
+        let make = |incremental: bool| {
+            let net = zoo::lenet5();
+            let oracle = SurrogateOracle::new(&net, 9);
+            CompressionEnv::new(
+                net,
+                Dataflow::CICO,
+                Box::new(oracle),
+                EnvConfig {
+                    incremental,
+                    ..EnvConfig::default()
+                },
+                EnergyConfig::default(),
+            )
+        };
+        let mut fast = make(true);
+        let mut slow = make(false);
+        let s1 = fast.reset();
+        let s2 = slow.reset();
+        assert_eq!(s1, s2);
+        let mut action = vec![-0.4; 8];
+        for step in 0..32 {
+            action[step % 8] = -0.4 + 0.1 * (step % 3) as f64;
+            let (o1, r1, d1) = fast.step(&action);
+            let (o2, r2, d2) = slow.step(&action);
+            assert_eq!(r1.to_bits(), r2.to_bits(), "reward step {step}");
+            assert_eq!(o1, o2, "obs step {step}");
+            assert_eq!(d1, d2, "done step {step}");
+            assert_eq!(fast.last_energy().to_bits(), slow.last_energy().to_bits());
+            if d1 {
+                break;
+            }
         }
     }
 

@@ -13,7 +13,7 @@ fn edc_sweep(net: &Network, episodes: usize, seed: u64, mode: CompressMode) -> V
     let mut spec = SweepSpec::paper_four(net.clone(), seed);
     spec.search = super::tables::table_search_config(episodes, seed);
     spec.env.mode = mode;
-    run_surrogate_sweep(&spec)
+    run_surrogate_sweep(&spec).expect("figure sweep failed")
 }
 
 /// Figure 1: EDC vs Deep Compression — compression rate vs energy/area

@@ -29,7 +29,7 @@ pub fn table_search_config(episodes: usize, seed: u64) -> SearchConfig {
 pub fn edc_outcomes(net: &Network, episodes: usize, seed: u64) -> Vec<SearchOutcome> {
     let mut spec = SweepSpec::paper_four(net.clone(), seed);
     spec.search = table_search_config(episodes, seed);
-    run_surrogate_sweep(&spec)
+    run_surrogate_sweep(&spec).expect("table sweep failed")
 }
 
 /// Cost of an EDC outcome under its dataflow; falls back to the start

@@ -1,39 +1,107 @@
-//! Tensor <-> xla::Literal conversion.
+//! Tensor <-> runtime literal conversion.
+//!
+//! With the `pjrt` feature, [`Literal`] is `xla::Literal` and the
+//! conversions cross the PJRT boundary. In the default (stub) build,
+//! [`Literal`] is a plain Rust buffer with the same shape semantics, so
+//! the conversion layer (and its tests) behaves identically without XLA.
 
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-/// Convert a Tensor to an f32 literal with the same shape.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(t.data());
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
+#[cfg(feature = "pjrt")]
+pub use xla::Literal;
+
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+
+/// Stub literal: an f32 or i32 buffer plus dimensions (empty dims =
+/// scalar, matching XLA shape conventions).
+#[cfg(not(feature = "pjrt"))]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
 }
 
-/// Convert an f32/i32/f64 literal back into a Tensor (f32 storage).
-pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
-    let shape = l.array_shape()?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data: Vec<f32> = match shape.ty() {
-        xla::ElementType::F32 => l.to_vec::<f32>()?,
-        xla::ElementType::S32 => l.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect(),
-        xla::ElementType::F64 => l.to_vec::<f64>()?.into_iter().map(|v| v as f32).collect(),
-        other => return Err(anyhow!("unsupported literal type {other:?}")),
-    };
-    let dims = if dims.is_empty() { vec![1] } else { dims };
-    Ok(Tensor::from_vec(&dims, data))
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::*;
+
+    /// Convert a Tensor to an f32 literal with the same shape.
+    pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+        let lit = Literal::vec1(t.data());
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert an f32/i32/f64 literal back into a Tensor (f32 storage).
+    pub fn literal_to_tensor(l: &Literal) -> Result<Tensor> {
+        let shape = l.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data: Vec<f32> = match shape.ty() {
+            xla::ElementType::F32 => l.to_vec::<f32>()?,
+            xla::ElementType::S32 => l.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect(),
+            xla::ElementType::F64 => l.to_vec::<f64>()?.into_iter().map(|v| v as f32).collect(),
+            other => return Err(anyhow!("unsupported literal type {other:?}")),
+        };
+        let dims = if dims.is_empty() { vec![1] } else { dims };
+        Ok(Tensor::from_vec(&dims, data))
+    }
+
+    /// Build an i32 labels literal of shape [n].
+    pub fn labels_literal(labels: &[i32]) -> Result<Literal> {
+        let lit = Literal::vec1(labels);
+        Ok(lit.reshape(&[labels.len() as i64])?)
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar_literal(v: f32) -> Literal {
+        Literal::scalar(v)
+    }
 }
 
-/// Build an i32 labels literal of shape [n].
-pub fn labels_literal(labels: &[i32]) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(labels);
-    Ok(lit.reshape(&[labels.len() as i64])?)
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
+
+    /// Convert a Tensor to an f32 literal with the same shape.
+    pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+        Ok(Literal::F32 {
+            dims: t.shape().to_vec(),
+            data: t.data().to_vec(),
+        })
+    }
+
+    /// Convert a literal back into a Tensor (f32 storage).
+    pub fn literal_to_tensor(l: &Literal) -> Result<Tensor> {
+        let (dims, data): (Vec<usize>, Vec<f32>) = match l {
+            Literal::F32 { dims, data } => (dims.clone(), data.clone()),
+            Literal::I32 { dims, data } => {
+                (dims.clone(), data.iter().map(|&v| v as f32).collect())
+            }
+        };
+        let dims = if dims.is_empty() { vec![1] } else { dims };
+        Ok(Tensor::from_vec(&dims, data))
+    }
+
+    /// Build an i32 labels literal of shape [n].
+    pub fn labels_literal(labels: &[i32]) -> Result<Literal> {
+        Ok(Literal::I32 {
+            dims: vec![labels.len()],
+            data: labels.to_vec(),
+        })
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar_literal(v: f32) -> Literal {
+        Literal::F32 {
+            dims: Vec::new(),
+            data: vec![v],
+        }
+    }
 }
 
-/// Scalar f32 literal.
-pub fn scalar_literal(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
+pub use imp::{labels_literal, literal_to_tensor, scalar_literal, tensor_to_literal};
 
 #[cfg(test)]
 mod tests {

@@ -157,12 +157,19 @@ fn write_escaped(s: &str, f: &mut fmt::Formatter<'_>) -> fmt::Result {
 }
 
 /// Parse errors carry byte offsets for debuggability.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 pub fn parse(input: &str) -> Result<Json, ParseError> {
     let mut p = Parser {

@@ -62,7 +62,7 @@ fn sweep_covers_paper_dataflows_and_improves() {
     let mut spec = SweepSpec::paper_four(zoo::lenet5(), 11);
     spec.env.max_steps = 16;
     spec.search = quick_search_cfg(11, 15);
-    let outs = run_surrogate_sweep(&spec);
+    let outs = run_surrogate_sweep(&spec).expect("sweep");
     assert_eq!(outs.len(), 4);
     // At least three of four dataflows must find >1.5x improvement even
     // with this tiny budget.
@@ -137,7 +137,7 @@ fn edc_beats_deep_compression_on_energy_lenet() {
 
     let mut spec = SweepSpec::paper_four(net.clone(), 21);
     spec.search = edcompress::report::tables::table_search_config(40, 21);
-    let outs = run_surrogate_sweep(&spec);
+    let outs = run_surrogate_sweep(&spec).expect("sweep");
 
     let mut edc_wins = 0;
     for (i, df) in Dataflow::paper_four().iter().enumerate() {
@@ -187,7 +187,7 @@ fn vgg_xy_gains_strongly_from_optimization() {
     let net = zoo::vgg16_cifar();
     let mut spec = SweepSpec::paper_four(net.clone(), 31);
     spec.search = quick_search_cfg(31, 20);
-    let outs = run_surrogate_sweep(&spec);
+    let outs = run_surrogate_sweep(&spec).expect("sweep");
     let xy = outs.iter().find(|o| o.dataflow == "X:Y").unwrap();
     let best = outs
         .iter()

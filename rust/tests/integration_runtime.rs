@@ -11,7 +11,10 @@ use edcompress::train::{TrainConfig, TrainHarness};
 use edcompress::util::rng::Rng;
 
 fn artifacts_or_skip(name: &str) -> bool {
-    if runtime::artifacts_available(name) {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature (stub runtime)");
+        false
+    } else if runtime::artifacts_available(name) {
         true
     } else {
         eprintln!("SKIP: artifacts for {name} missing (run `make artifacts`)");
@@ -21,6 +24,10 @@ fn artifacts_or_skip(name: &str) -> bool {
 
 #[test]
 fn kernel_fq_artifact_roundtrip() {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature (stub runtime)");
+        return;
+    }
     let path = runtime::artifacts_dir().join("kernel_fq.hlo.txt");
     if !path.exists() {
         eprintln!("SKIP: kernel_fq artifact missing");

@@ -1,0 +1,177 @@
+//! Property tests for the incremental energy-evaluation engine
+//! (`energy::cache`): the cached, batched and incremental paths must be
+//! **bit-identical** to a fresh `energy::evaluate`, for any network,
+//! dataflow and compression state.
+
+use edcompress::compress::CompressionState;
+use edcompress::dataflow::Dataflow;
+use edcompress::energy::{self, cache, EnergyConfig};
+use edcompress::model::zoo;
+use edcompress::util::proptest::{check, ensure};
+use edcompress::util::rng::Rng;
+
+fn random_network(rng: &mut Rng) -> edcompress::model::Network {
+    match rng.below(3) {
+        0 => zoo::lenet5(),
+        1 => zoo::vgg16_cifar(),
+        _ => zoo::mobilenet_cifar(),
+    }
+}
+
+fn random_dataflow(rng: &mut Rng) -> Dataflow {
+    let all = Dataflow::all_fifteen();
+    all[rng.below(all.len())]
+}
+
+fn random_state(net: &edcompress::model::Network, rng: &mut Rng) -> CompressionState {
+    let n = net.num_compute_layers();
+    let q = (0..n).map(|_| rng.range(1.0, 8.0)).collect();
+    let p = (0..n).map(|_| rng.range(0.02, 1.0)).collect();
+    CompressionState::from_parts(q, p)
+}
+
+fn reports_bit_identical(
+    a: &energy::CostReport,
+    b: &energy::CostReport,
+    what: &str,
+) -> Result<(), String> {
+    ensure(
+        a.total_energy().to_bits() == b.total_energy().to_bits(),
+        format!("{what}: energy {} vs {}", a.total_energy(), b.total_energy()),
+    )?;
+    ensure(
+        a.total_area.to_bits() == b.total_area.to_bits(),
+        format!("{what}: area {} vs {}", a.total_area, b.total_area),
+    )?;
+    ensure(a.per_layer.len() == b.per_layer.len(), format!("{what}: layer count"))?;
+    for (la, lb) in a.per_layer.iter().zip(&b.per_layer) {
+        ensure(
+            la.total_energy().to_bits() == lb.total_energy().to_bits()
+                && la.pe_energy.to_bits() == lb.pe_energy.to_bits()
+                && la.sram_energy.to_bits() == lb.sram_energy.to_bits()
+                && la.logic_area.to_bits() == lb.logic_area.to_bits()
+                && la.ram_area.to_bits() == lb.ram_area.to_bits()
+                && la.pes == lb.pes,
+            format!("{what}: layer {} mismatch", la.name),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_incremental_matches_full_after_single_slot_change() {
+    check("incremental == full (single slot)", 40, |rng| {
+        let net = random_network(rng);
+        let df = random_dataflow(rng);
+        let cfg = EnergyConfig::default();
+        let mut cost_cache = cache::CostCache::new(&net, &cfg);
+        let mut state = random_state(&net, rng);
+        let mut prev = energy::evaluate(&net, &state, df, &cfg);
+        for _ in 0..6 {
+            let slot = rng.below(state.num_layers());
+            state.q[slot] = rng.range(1.0, 8.0);
+            state.p[slot] = rng.range(0.02, 1.0);
+            let inc =
+                energy::evaluate_incremental(&net, &state, df, &cfg, &prev, &[slot], &mut cost_cache);
+            let full = energy::evaluate(&net, &state, df, &cfg);
+            reports_bit_identical(&inc, &full, &format!("{} {}", net.name, df.label()))?;
+            prev = inc;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_hits_are_bit_identical() {
+    check("cache hit == recompute", 40, |rng| {
+        let net = random_network(rng);
+        let df = random_dataflow(rng);
+        let cfg = EnergyConfig::default();
+        let state = random_state(&net, rng);
+        let slot = rng.below(state.num_layers());
+        let key = cache::SlotKey::of(&state, slot);
+
+        let mut c1 = cache::CostCache::new(&net, &cfg);
+        let first = c1.layer_cost(&net, &cfg, slot, df, key);
+        let hit = c1.layer_cost(&net, &cfg, slot, df, key);
+        ensure(c1.hits() == 1 && c1.misses() == 1, "hit/miss accounting")?;
+        ensure(
+            first.total_energy().to_bits() == hit.total_energy().to_bits()
+                && first.total_area().to_bits() == hit.total_area().to_bits(),
+            "hit not bit-identical to first computation",
+        )?;
+
+        // And both equal an independent cache's computation.
+        let mut c2 = cache::CostCache::new(&net, &cfg);
+        let fresh = c2.layer_cost(&net, &cfg, slot, df, key);
+        ensure(
+            fresh.total_energy().to_bits() == first.total_energy().to_bits(),
+            "independent caches disagree",
+        )
+    });
+}
+
+#[test]
+fn prop_batch_matches_fifteen_individual_evaluates() {
+    check("batch == individual x15", 25, |rng| {
+        let net = random_network(rng);
+        let cfg = EnergyConfig::default();
+        let state = random_state(&net, rng);
+        let dfs = Dataflow::all_fifteen();
+        let mut cost_cache = cache::CostCache::new(&net, &cfg);
+        let batch = energy::evaluate_batch(&net, &state, &dfs, &cfg, &mut cost_cache);
+        ensure(batch.len() == dfs.len(), "batch length")?;
+        for (df, rep) in dfs.iter().zip(&batch) {
+            let full = energy::evaluate(&net, &state, *df, &cfg);
+            reports_bit_identical(rep, &full, &format!("{} {}", net.name, df.label()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_evaluator_tracks_episode_exactly() {
+    // The env-style stateful evaluator over a whole random trajectory:
+    // every step must agree bit-for-bit with a fresh full evaluation.
+    check("IncrementalEvaluator == full over episodes", 12, |rng| {
+        let net = random_network(rng);
+        let df = random_dataflow(rng);
+        let cfg = EnergyConfig::default();
+        let limits = edcompress::compress::CompressionLimits::default();
+        let mut ev = cache::IncrementalEvaluator::new(&net, df, &cfg);
+        let l = net.num_compute_layers();
+        // Two episodes to exercise the reset-to-uniform transition.
+        for _episode in 0..2 {
+            let mut state = CompressionState::uniform(&net, 8.0, 1.0);
+            for t in 0..16 {
+                let action: Vec<f64> = (0..2 * l).map(|_| rng.range(-1.0, 1.0)).collect();
+                state.apply_action(&action, t, &limits);
+                let (e, a) = ev.evaluate(&net, &state, &cfg);
+                let full = energy::evaluate(&net, &state, df, &cfg);
+                ensure(
+                    e.to_bits() == full.total_energy().to_bits(),
+                    format!("energy diverged at step {t}: {e} vs {}", full.total_energy()),
+                )?;
+                ensure(
+                    a.to_bits() == full.total_area.to_bits(),
+                    format!("area diverged at step {t}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_snap_p_is_monotone_and_tight() {
+    check("snap_p monotone/tight", 200, |rng| {
+        let a = rng.range(0.0, 1.0);
+        let b = rng.range(0.0, 1.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        ensure(cache::snap_p(lo) <= cache::snap_p(hi), "snap_p not monotone")?;
+        ensure(
+            (cache::snap_p(a) - a).abs() <= 0.5 / cache::P_BUCKETS as f64 + 1e-12,
+            "snap_p moved p more than half a bucket",
+        )
+    });
+}

@@ -1,0 +1,239 @@
+//! Minimal, API-compatible subset of the `anyhow` error crate.
+//!
+//! The build environment has no crates-io access, so this vendored crate
+//! covers the surface the workspace uses: [`Error`], [`Result`], the
+//! `anyhow!` / `bail!` / `ensure!` macros, and the [`Context`] extension
+//! trait for `Result` and `Option`. Like the real crate:
+//!
+//! - `{}` (Display) prints only the outermost message/context;
+//! - `{:#}` (alternate Display) prints the whole chain joined by `": "`;
+//! - `{:?}` (Debug) prints the message plus a `Caused by:` list;
+//! - any `std::error::Error + Send + Sync + 'static` converts via `?`
+//!   (its `source()` chain is captured as strings at conversion time);
+//! - `Error` itself does **not** implement `std::error::Error`, which is
+//!   what makes the blanket `From` impl coherent.
+
+use std::fmt::{self, Debug, Display};
+
+/// A dynamic error: an ordered chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message (the `anyhow!` entry point).
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Internal conversion trait mirroring real `anyhow`'s `ext::StdError`:
+/// implemented for [`Error`] itself and blanket-implemented for every
+/// `std::error::Error`, so a single `Context` impl covers both
+/// `Result<_, anyhow::Error>` and `Result<_, E: std::error::Error>`.
+/// (Coherent because `Error` does not implement `std::error::Error`.)
+mod ext {
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Error::from(io_err()).context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: file missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: file missing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "nothing here").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing here");
+
+        let ar: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = ar.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(5).is_err());
+        assert!(format!("{}", f(99).unwrap_err()).contains("99"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Minimal, API-compatible subset of the `log` crate facade.
+//!
+//! The build environment has no crates-io access, so this vendored crate
+//! provides exactly the surface the workspace uses: the five level
+//! macros, [`Log`], [`Level`]/[`LevelFilter`], [`Record`]/[`Metadata`],
+//! [`set_boxed_logger`] and [`set_max_level`]. Semantics follow the real
+//! facade: nothing is emitted until a logger is installed, and records
+//! above the max level are filtered before reaching the logger.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity of a single log record. Ordered `Error < Warn < ... < Trace`
+/// (a smaller level is more severe), matching the real crate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.pad(s)
+    }
+}
+
+/// Global verbosity ceiling; `Off` disables everything.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Metadata of a record: its level and the module that produced it.
+#[derive(Clone, Copy, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the formatted message arguments.
+#[derive(Clone, Copy)]
+pub struct Record<'a> {
+    level: Level,
+    target: &'a str,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+
+    pub fn metadata(&self) -> Metadata<'a> {
+        Metadata {
+            level: self.level,
+            target: self.target,
+        }
+    }
+}
+
+/// A log sink. Implementations must be thread-safe: records can arrive
+/// from any thread (e.g. sweep workers).
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+/// Install the global logger. Fails (without replacing) if one exists.
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global verbosity ceiling.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// Current verbosity ceiling as a raw ordinal (macro plumbing).
+pub fn max_level_ordinal() -> usize {
+    MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Macro plumbing: filter, then dispatch to the installed logger.
+pub fn __log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if (level as usize) > max_level_ordinal() {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record {
+            level,
+            target,
+            args,
+        };
+        if logger.enabled(&record.metadata()) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Error, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Warn, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Info, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Debug, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Trace, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_matches_facade() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+        assert!((LevelFilter::Off as usize) < (LevelFilter::Error as usize));
+    }
+
+    #[test]
+    fn logging_without_logger_is_a_noop() {
+        // Must not panic even though no logger is installed in this
+        // test binary.
+        crate::info!("no logger installed: {}", 42);
+    }
+}
