@@ -43,21 +43,13 @@ fn main() {
         print!("{:<10}", df.label());
         for b in &suite {
             let rep = b.cost(&net, *df, &cfg);
-            print!(
-                " {:>10.2}/{:>6.2}",
-                rep.total_energy() * 1e6,
-                rep.total_area
-            );
+            print!(" {:>10.2}/{:>6.2}", rep.total_energy() * 1e6, rep.total_area);
         }
         let ours = match &outcomes[i].best {
             Some(best) => energy::evaluate(&net, &best.state, *df, &cfg),
             None => energy::baseline_cost(&net, *df, &cfg),
         };
-        println!(
-            " {:>10.2}/{:>6.2}",
-            ours.total_energy() * 1e6,
-            ours.total_area
-        );
+        println!(" {:>10.2}/{:>6.2}", ours.total_energy() * 1e6, ours.total_area);
     }
 
     // Model-size view (Figure 1's argument: size != energy).
@@ -70,19 +62,17 @@ fn main() {
             b.reported_accuracy * 100.0
         );
     }
-    if let Some(best) = outcomes
+    let global_best = outcomes
         .iter()
         .filter_map(|o| o.best.as_ref())
-        .min_by(|a, b| a.energy.partial_cmp(&b.energy).unwrap())
-    {
+        .min_by(|a, b| a.energy.total_cmp(&b.energy));
+    if let Some(best) = global_best {
         println!(
             "  {:<20} {:>6.1}x (surrogate acc {:.1}%)",
             "EDCompress",
             best.state.compression_rate(&net, cfg.idx_bits),
             best.accuracy * 100.0
         );
-        println!(
-            "\nEDCompress wins energy despite a lower compression rate — the paper's Figure 1 point."
-        );
+        println!("\nEDCompress wins energy despite a lower compression rate — Figure 1's point.");
     }
 }

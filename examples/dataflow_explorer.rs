@@ -3,14 +3,18 @@
 //!
 //! Ranks all 15 loop-pair dataflows for each paper network, before and
 //! after compression, and shows how optimization reorders the ranking
-//! (§4.2: X:Y moves from worst to near-best on VGG-16).
+//! (§4.2: X:Y moves from worst to near-best on VGG-16). Both rankings
+//! share one cost cache, so the second query reuses every per-layer
+//! spatial mapping the first one derived (`energy::evaluate_batch`
+//! underneath).
 //!
 //! ```bash
 //! cargo run --release --example dataflow_explorer [--net vgg16_cifar]
 //! ```
 
 use edcompress::compress::CompressionState;
-use edcompress::coordinator::sweep::rank_dataflows;
+use edcompress::coordinator::sweep::rank_dataflows_cached;
+use edcompress::energy::cache::CostCache;
 use edcompress::prelude::*;
 
 fn main() {
@@ -35,8 +39,9 @@ fn main() {
         // per-layer search noise.
         let after = CompressionState::uniform(&net, 4.0, 0.3);
 
-        let rank_before = rank_dataflows(&net, &before, &cfg);
-        let rank_after = rank_dataflows(&net, &after, &cfg);
+        let mut cache = CostCache::new(&net, &cfg);
+        let rank_before = rank_dataflows_cached(&net, &before, &cfg, &mut cache);
+        let rank_after = rank_dataflows_cached(&net, &after, &cfg, &mut cache);
 
         println!("\n=== {} ===", net.name);
         println!(
@@ -67,7 +72,7 @@ fn main() {
 
         // Area-optimal choice (the deployment guidance of the abstract).
         let mut by_area = rank_after.clone();
-        by_area.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+        by_area.sort_by(|a, b| a.2.total_cmp(&b.2));
         println!(
             "recommended: energy-optimal {} ({:.3} uJ), area-optimal {} ({:.3} mm2)",
             rank_after[0].0.label(),

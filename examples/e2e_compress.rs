@@ -65,15 +65,8 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     let base_acc = oracle.harness.base_accuracy;
-    println!(
-        "[{:7.1?}] pretrained LeNet-5 on synth-MNIST: accuracy {:.4}",
-        t0.elapsed(),
-        base_acc
-    );
-    anyhow::ensure!(
-        base_acc > 0.7,
-        "pretraining failed to learn (accuracy {base_acc})"
-    );
+    println!("[{:7.1?}] pretrained LeNet-5: accuracy {:.4}", t0.elapsed(), base_acc);
+    anyhow::ensure!(base_acc > 0.7, "pretraining failed to learn (accuracy {base_acc})");
 
     // --- EDCompress search with REAL fine-tuning per step ---
     let net = model::zoo::lenet5();
@@ -129,12 +122,10 @@ fn main() -> anyhow::Result<()> {
         outcome.area_improvement()
     );
     if let Some(b) = &outcome.best {
+        let p_pct: Vec<i64> = b.state.p.iter().map(|p| (p * 100.0).round() as i64).collect();
         println!("accuracy at best point: {:.4}", b.accuracy);
         println!("Q (bits):        {:?}", b.state.all_bits());
-        println!(
-            "P (remaining %): {:?}",
-            b.state.p.iter().map(|p| (p * 100.0).round() as i64).collect::<Vec<_>>()
-        );
+        println!("P (remaining %): {:?}", p_pct);
     }
     println!("episode energy trace (last step of each):");
     for ep in &outcome.episodes {
@@ -152,10 +143,7 @@ fn main() -> anyhow::Result<()> {
     checkpoint::save(&outcome, std::path::Path::new("reports/e2e_lenet5_fxfy.json"))?;
     println!("saved outcome to reports/e2e_lenet5_fxfy.json");
 
-    anyhow::ensure!(
-        outcome.energy_improvement() > 1.5,
-        "end-to-end improvement below 1.5x"
-    );
+    anyhow::ensure!(outcome.energy_improvement() > 1.5, "end-to-end improvement below 1.5x");
     println!("E2E OK");
     Ok(())
 }

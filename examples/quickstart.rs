@@ -1,6 +1,7 @@
 //! Quickstart: the public API in ~60 lines.
 //!
-//! 1. Cost a network under a dataflow with the analytic accelerator model.
+//! 1. Cost a network under the paper's four dataflows with the batched
+//!    evaluator (one pass over the layers, shared across dataflows).
 //! 2. Run a (small) EDCompress search with the surrogate oracle.
 //! 3. If artifacts are built, execute the L1 Pallas kernel through PJRT.
 //!
@@ -8,8 +9,9 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use edcompress::envs::{CompressionEnv, EnvConfig};
 use edcompress::coordinator::{Coordinator, SearchConfig};
+use edcompress::energy::cache::CostCache;
+use edcompress::envs::{CompressionEnv, EnvConfig};
 use edcompress::prelude::*;
 use edcompress::rl::sac::SacConfig;
 
@@ -20,9 +22,11 @@ fn main() -> anyhow::Result<()> {
     let net = model::zoo::lenet5();
     let cfg = EnergyConfig::default();
     let state = CompressionState::uniform(&net, 8.0, 1.0);
+    let dataflows = Dataflow::paper_four();
+    let mut cache = CostCache::new(&net, &cfg);
+    let reports = energy::evaluate_batch(&net, &state, &dataflows, &cfg, &mut cache);
     println!("Uncompressed LeNet-5 (8-bit weights, no pruning):");
-    for df in Dataflow::paper_four() {
-        let rep = energy::evaluate(&net, &state, df, &cfg);
+    for (df, rep) in dataflows.iter().zip(&reports) {
         println!(
             "  {:<6} {:>8.3} uJ  ({:>5.1}% data movement)  {:>7.3} mm2",
             df.label(),
@@ -34,13 +38,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- 2. A small EDCompress search (surrogate oracle) ---
     let oracle = SurrogateOracle::new(&net, 0);
-    let env = CompressionEnv::new(
-        net,
-        Dataflow::FXFY,
-        Box::new(oracle),
-        EnvConfig::default(),
-        cfg,
-    );
+    let env_cfg = EnvConfig::default();
+    let env = CompressionEnv::new(net, Dataflow::FXFY, Box::new(oracle), env_cfg, cfg);
     let search = SearchConfig {
         episodes: 20,
         sac: SacConfig {
@@ -60,10 +59,11 @@ fn main() -> anyhow::Result<()> {
         outcome.area_improvement()
     );
     if let Some(b) = &outcome.best {
+        let p_pct: Vec<i64> = b.state.p.iter().map(|p| (p * 100.0).round() as i64).collect();
         println!(
             "  best point: Q = {:?} bits, P = {:?}%, accuracy {:.3}",
             b.state.all_bits(),
-            b.state.p.iter().map(|p| (p * 100.0).round() as i64).collect::<Vec<_>>(),
+            p_pct,
             b.accuracy
         );
     }

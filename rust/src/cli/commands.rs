@@ -16,6 +16,7 @@ use std::path::Path;
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "compress" => cmd_compress(args),
+        "search" => cmd_search(args),
         "sweep" => cmd_sweep(args),
         "table" => cmd_table(args),
         "figure" => cmd_figure(args),
@@ -113,16 +114,10 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Multi-network, multi-dataflow search sweep through the bounded worker
-/// pool (`--nets a,b,c`, `--dataflows paper|all|X:Y,CI:CO,...`).
-fn cmd_sweep(args: &Args) -> Result<()> {
-    let mut nets = Vec::new();
-    for name in args.str_or("nets", "lenet5").split(',') {
-        let name = name.trim();
-        nets.push(zoo::by_name(name).ok_or_else(|| anyhow!("unknown net '{name}'"))?);
-    }
-    let df_arg = args.str_or("dataflows", "paper");
-    let dataflows = match df_arg.as_str() {
+/// Parse `paper|all|X:Y,CI:CO,...` into a dataflow list (shared by the
+/// `sweep` and `search` commands).
+fn parse_dataflows(arg: &str) -> Result<Vec<Dataflow>> {
+    Ok(match arg {
         "paper" => Dataflow::paper_four().to_vec(),
         "all" => Dataflow::all_fifteen(),
         list => {
@@ -135,7 +130,131 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             }
             v
         }
+    })
+}
+
+/// Multi-seed orchestrated search with resumable snapshots: runs N
+/// independent SAC searches concurrently (distinct seeds, dataflow
+/// priors cycled across them), merges their episode streams into a
+/// Pareto archive over (energy, accuracy, area) and snapshots the whole
+/// fleet after every round so a killed run resumes bit-identically
+/// (`--resume snapshot.json`).
+fn cmd_search(args: &Args) -> Result<()> {
+    use crate::coordinator::orchestrator::{self, Orchestrator, OrchestratorSpec};
+    use std::path::PathBuf;
+
+    let resume = args.get("resume").map(|s| s.to_string());
+    // Flag values first; on resume the snapshot header wins for the
+    // run-shaping scalars, so the interrupted run's shape is reproduced
+    // without re-passing every flag.
+    let mut name = args.str_or("net", "lenet5");
+    let mut seeds = args.usize_or("seeds", 4)?;
+    let mut base_seed = args.u64_or("seed", 0)?;
+    let mut episodes = args.usize_or("episodes", 8)?;
+    let mut chunk = args.usize_or("chunk", 2)?;
+    let mut max_steps = args.usize_or("steps", crate::envs::EnvConfig::default().max_steps)?;
+    let mut dataflows = parse_dataflows(&args.str_or("dataflows", "paper"))?;
+
+    let snapshot_json = match &resume {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading snapshot {path}"))?;
+            let j = crate::util::json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            let h = orchestrator::read_header(&j)
+                .ok_or_else(|| anyhow!("{path} is not an orchestration snapshot"))?;
+            name = h.network;
+            seeds = h.seeds;
+            base_seed = h.base_seed;
+            episodes = h.episodes_per_seed;
+            chunk = h.chunk_episodes;
+            max_steps = h.max_steps;
+            dataflows = h.dataflows;
+            Some(j)
+        }
+        None => None,
     };
+
+    if seeds == 0 {
+        bail!("--seeds must be at least 1");
+    }
+    if chunk == 0 {
+        bail!("--chunk must be at least 1");
+    }
+    let net = zoo::by_name(&name).ok_or_else(|| anyhow!("unknown net '{name}'"))?;
+    let mut spec = OrchestratorSpec::new(net, seeds, base_seed);
+    spec.dataflows = dataflows;
+    spec.env.max_steps = max_steps;
+    spec.search.episodes = episodes;
+    spec.chunk_episodes = chunk;
+
+    let mut orch = match &snapshot_json {
+        Some(j) => Orchestrator::from_snapshot(j, spec)?,
+        None => Orchestrator::new(spec),
+    };
+    // Always resumable: an explicit --snapshot wins, a resumed run keeps
+    // updating its own file, and a fresh run defaults under reports/.
+    orch.snapshot_path = Some(
+        args.get("snapshot")
+            .map(PathBuf::from)
+            .or_else(|| resume.as_ref().map(PathBuf::from))
+            .unwrap_or_else(|| PathBuf::from(format!("reports/search_{name}.json"))),
+    );
+
+    println!(
+        "orchestrating {name}: {seeds} seeds x {episodes} episodes on {} workers{}",
+        sweep::worker_count(seeds),
+        if resume.is_some() { " (resumed)" } else { "" },
+    );
+    let res = orch.run()?;
+
+    println!(
+        "{:<6} {:<8} {:>10} {:>12} {:>10}",
+        "seed", "dataflow", "episodes", "E improv.", "best acc"
+    );
+    for (i, o) in res.outcomes.iter().enumerate() {
+        let acc = o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN);
+        println!(
+            "{:<6} {:<8} {:>10} {:>11.2}x {:>10.4}",
+            i,
+            o.dataflow,
+            o.episodes.len(),
+            o.energy_improvement(),
+            acc
+        );
+    }
+    println!();
+    println!("{}", tables::pareto_table(&res.archive).render());
+    let (curve, csv) = figures::fleet_best_so_far(&res);
+    println!("{}", curve.render());
+    if !csv.is_empty() {
+        println!("fleet series written to {csv}");
+    }
+    if let Some(p) = &orch.snapshot_path {
+        println!("resumable snapshot at {}", p.display());
+    }
+    if !res.failures.is_empty() {
+        bail!(
+            "{} seeds failed: {}",
+            res.failures.len(),
+            res.failures
+                .iter()
+                .map(|(i, m)| format!("seed {i} ({m})"))
+                .collect::<Vec<_>>()
+                .join("; ")
+        );
+    }
+    Ok(())
+}
+
+/// Multi-network, multi-dataflow search sweep through the bounded worker
+/// pool (`--nets a,b,c`, `--dataflows paper|all|X:Y,CI:CO,...`).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut nets = Vec::new();
+    for name in args.str_or("nets", "lenet5").split(',') {
+        let name = name.trim();
+        nets.push(zoo::by_name(name).ok_or_else(|| anyhow!("unknown net '{name}'"))?);
+    }
+    let dataflows = parse_dataflows(&args.str_or("dataflows", "paper"))?;
 
     let mut spec = sweep::SweepSpec::new(nets, dataflows, args.u64_or("seed", 0)?);
     spec.search.episodes = args.usize_or("episodes", 8)?;
@@ -319,6 +438,27 @@ mod tests {
     fn cost_and_explore_run() {
         dispatch(&argv(&["cost", "--net", "lenet5", "--q", "4", "--p", "0.5"])).unwrap();
         dispatch(&argv(&["explore", "--net", "lenet5"])).unwrap();
+    }
+
+    #[test]
+    fn search_command_runs_and_resumes() {
+        let dir = std::env::temp_dir().join("edc_cli_search_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let snap = dir.join("run.json");
+        let snap_s = snap.to_str().unwrap();
+        dispatch(&argv(&[
+            "search", "--net", "lenet5", "--seeds", "2", "--episodes", "1", "--steps", "4",
+            "--chunk", "1", "--dataflows", "X:Y", "--snapshot", snap_s,
+        ]))
+        .unwrap();
+        assert!(snap.exists(), "snapshot not written");
+        // Resuming a completed run is a no-op that still reports results.
+        dispatch(&argv(&["search", "--resume", snap_s])).unwrap();
+        assert!(dispatch(&argv(&["search", "--net", "bogus9000"])).is_err());
+        // Bad scalars are CLI errors, not library panics.
+        assert!(dispatch(&argv(&["search", "--seeds", "0"])).is_err());
+        assert!(dispatch(&argv(&["search", "--chunk", "0"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -4,6 +4,17 @@
 //! at the coordinator level we additionally persist the *search* result —
 //! the best (Q, P) vectors and the episode curves — so long sweeps can be
 //! resumed and the report generators can run offline from saved runs.
+//!
+//! Two kinds of file share this module's codecs:
+//!
+//! - **outcome** (`version` 1): one [`SearchOutcome`], written by
+//!   `edc compress --out` and [`save`].
+//! - **orchestration** (`version` 2): a resumable multi-seed snapshot,
+//!   written by [`orchestrator::Orchestrator`](super::orchestrator) —
+//!   seed slots, serialized agents and the Pareto archive.
+//!
+//! The full schemas and the forward-compatibility rules are documented
+//! in `docs/checkpoints.md` at the repository root.
 
 use super::{EpisodeRecord, SearchOutcome};
 use crate::compress::CompressionState;
@@ -11,9 +22,14 @@ use crate::envs::BestPoint;
 use crate::util::json::{self, Json};
 use std::path::Path;
 
+/// Schema version written into single-search outcome files.
+pub const OUTCOME_VERSION: f64 = 1.0;
+
 pub fn outcome_to_json(o: &SearchOutcome) -> Json {
     let mut j = Json::obj();
-    j.set("network", Json::Str(o.network.clone()))
+    j.set("version", Json::Num(OUTCOME_VERSION))
+        .set("kind", Json::Str("outcome".into()))
+        .set("network", Json::Str(o.network.clone()))
         .set("dataflow", Json::Str(o.dataflow.clone()))
         .set("start_energy", Json::Num(o.start_energy))
         .set("start_area", Json::Num(o.start_area))
@@ -28,7 +44,7 @@ pub fn outcome_to_json(o: &SearchOutcome) -> Json {
     j
 }
 
-fn episode_to_json(e: &EpisodeRecord) -> Json {
+pub(crate) fn episode_to_json(e: &EpisodeRecord) -> Json {
     let mut j = Json::obj();
     j.set("episode", Json::Num(e.episode as f64))
         .set("steps", Json::Num(e.steps as f64))
@@ -41,7 +57,7 @@ fn episode_to_json(e: &EpisodeRecord) -> Json {
     j
 }
 
-fn best_to_json(b: &BestPoint) -> Json {
+pub(crate) fn best_to_json(b: &BestPoint) -> Json {
     let mut j = Json::obj();
     j.set("q", Json::from_f64s(&b.state.q))
         .set("p", Json::from_f64s(&b.state.p))
@@ -52,7 +68,7 @@ fn best_to_json(b: &BestPoint) -> Json {
     j
 }
 
-fn best_from_json(j: &Json) -> Option<BestPoint> {
+pub(crate) fn best_from_json(j: &Json) -> Option<BestPoint> {
     Some(BestPoint {
         state: CompressionState::from_parts(
             j.get("q")?.to_f64s()?,
@@ -65,21 +81,23 @@ fn best_from_json(j: &Json) -> Option<BestPoint> {
     })
 }
 
+pub(crate) fn episode_from_json(e: &Json) -> Option<EpisodeRecord> {
+    Some(EpisodeRecord {
+        episode: e.num_or("episode", 0.0) as usize,
+        steps: e.num_or("steps", 0.0) as usize,
+        total_reward: e.num_or("total_reward", 0.0),
+        energy_curve: e.get("energy_curve")?.to_f64s()?,
+        accuracy_curve: e.get("accuracy_curve")?.to_f64s()?,
+        best: e.get("best").and_then(best_from_json),
+    })
+}
+
 pub fn outcome_from_json(j: &Json) -> Option<SearchOutcome> {
     let episodes = j
         .get("episodes")?
         .as_arr()?
         .iter()
-        .filter_map(|e| {
-            Some(EpisodeRecord {
-                episode: e.num_or("episode", 0.0) as usize,
-                steps: e.num_or("steps", 0.0) as usize,
-                total_reward: e.num_or("total_reward", 0.0),
-                energy_curve: e.get("energy_curve")?.to_f64s()?,
-                accuracy_curve: e.get("accuracy_curve")?.to_f64s()?,
-                best: e.get("best").and_then(best_from_json),
-            })
-        })
+        .filter_map(episode_from_json)
         .collect();
     Some(SearchOutcome {
         network: j.str_or("network", ""),
@@ -152,6 +170,23 @@ mod tests {
         let (b1, b2) = (back.best.unwrap(), o.best.unwrap());
         assert_eq!(b1.state, b2.state);
         assert_eq!(b1.energy, b2.energy);
+    }
+
+    #[test]
+    fn outcome_files_are_versioned_and_tolerate_legacy() {
+        let j = outcome_to_json(&sample_outcome());
+        assert_eq!(j.num_or("version", 0.0), OUTCOME_VERSION);
+        assert_eq!(j.str_or("kind", ""), "outcome");
+        // Pre-versioning files (no version/kind) still load as v1.
+        let legacy = match j {
+            Json::Obj(mut m) => {
+                m.remove("version");
+                m.remove("kind");
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        assert!(outcome_from_json(&legacy).is_some());
     }
 
     #[test]

@@ -1,8 +1,23 @@
-//! Episode orchestration: runs the SAC agent against a compression
-//! environment for many episodes, tracks the global best admissible
-//! point, and records the curves Figure 5 plots.
+//! Search orchestration — the outer loop of the paper's Figure 2.
+//!
+//! The paper recasts compression as a multi-step RL problem; this module
+//! owns everything *around* the agent/environment interaction:
+//!
+//! - [`Coordinator`] drives one SAC agent against one
+//!   [`CompressionEnv`](crate::envs::CompressionEnv) for many episodes,
+//!   tracks the global best admissible point, and records the per-step
+//!   energy/accuracy curves Figure 5 plots.
+//! - [`sweep`] fans `(network × dataflow)` searches over a bounded worker
+//!   pool — the workhorse behind every table and figure.
+//! - [`orchestrator`] runs N independent seeds of the *same* search
+//!   concurrently, merges their episode streams into a NaN-safe Pareto
+//!   archive over (energy, accuracy, area), and periodically snapshots
+//!   the whole fleet so a killed run resumes bit-identically.
+//! - [`checkpoint`] is the JSON persistence layer for single-search
+//!   outcomes and orchestration snapshots (format: docs/checkpoints.md).
 
 pub mod checkpoint;
+pub mod orchestrator;
 pub mod sweep;
 
 use crate::envs::{BestPoint, CompressionEnv};
@@ -86,34 +101,35 @@ impl Coordinator {
         Coordinator { env, agent, cfg }
     }
 
-    /// Run the full multi-episode search.
-    pub fn run(&mut self) -> SearchOutcome {
-        // "Before EDCompress" reference = 16-bit activations, 8-bit dense
-        // weights (Figure 6's solid bars) — the improvement factors the
-        // paper headlines are against this point.
+    /// Wrap an existing agent — used by the multi-seed orchestrator to
+    /// continue a search from a restored [`SacAgent::snapshot`].
+    pub fn with_agent(env: CompressionEnv, agent: SacAgent, cfg: SearchConfig) -> Coordinator {
+        assert_eq!(agent.state_dim(), env.state_dim(), "agent/env state dim mismatch");
+        assert_eq!(agent.action_dim(), env.action_dim(), "agent/env action dim mismatch");
+        Coordinator { env, agent, cfg }
+    }
+
+    /// The paper's "before EDCompress" reference point: (energy, area) of
+    /// the 16-bit-activation, 8-bit dense-weight start state (Figure 6's
+    /// solid bars) plus the uncompressed base accuracy. The improvement
+    /// factors the paper headlines are against this point.
+    pub fn reference(&self) -> (f64, f64, f64) {
         let rep = crate::energy::baseline_cost(
             &self.env.net,
             self.env.dataflow,
             &self.env.energy_cfg,
         );
-        let start_energy = rep.total_energy();
-        let start_area = rep.total_area;
         let base_acc = self.env.accuracy_floor() / self.env.cfg.threshold_frac;
+        (rep.total_energy(), rep.total_area, base_acc)
+    }
+
+    /// Run the full multi-episode search.
+    pub fn run(&mut self) -> SearchOutcome {
+        let (start_energy, start_area, base_acc) = self.reference();
 
         let mut episodes = Vec::with_capacity(self.cfg.episodes);
-        let mut global_best: Option<BestPoint> = None;
-
         for ep in 0..self.cfg.episodes {
             let rec = self.run_episode(ep);
-            if let Some(b) = &rec.best {
-                if global_best
-                    .as_ref()
-                    .map(|g| b.energy < g.energy)
-                    .unwrap_or(true)
-                {
-                    global_best = Some(b.clone());
-                }
-            }
             if self.cfg.verbose {
                 log::info!(
                     "episode {ep}: steps={} reward={:.3} best_energy={:.3e}",
@@ -124,6 +140,7 @@ impl Coordinator {
             }
             episodes.push(rec);
         }
+        let global_best = fold_best(&episodes);
 
         SearchOutcome {
             network: self.env.net.name.clone(),
@@ -136,7 +153,10 @@ impl Coordinator {
         }
     }
 
-    fn run_episode(&mut self, episode: usize) -> EpisodeRecord {
+    /// Run one episode, returning its Figure-5 record. Public so the
+    /// orchestrator can interleave episodes of many seeds between
+    /// snapshots; `episode` only labels the record.
+    pub fn run_episode(&mut self, episode: usize) -> EpisodeRecord {
         let mut state = self.env.reset();
         let mut rec = EpisodeRecord {
             episode,
@@ -170,6 +190,21 @@ impl Coordinator {
         rec.best = self.env.best().cloned();
         rec
     }
+}
+
+/// Global best admissible point across a slice of episode records —
+/// lowest energy wins, earlier episodes win ties (matching the online
+/// fold `run` used to do).
+pub fn fold_best(episodes: &[EpisodeRecord]) -> Option<BestPoint> {
+    let mut best: Option<BestPoint> = None;
+    for rec in episodes {
+        if let Some(b) = &rec.best {
+            if best.as_ref().map(|g| b.energy < g.energy).unwrap_or(true) {
+                best = Some(b.clone());
+            }
+        }
+    }
+    best
 }
 
 #[cfg(test)]

@@ -1,0 +1,853 @@
+//! Multi-seed parallel search orchestration with checkpoint/resume.
+//!
+//! A single SAC search is cheap but high-variance: the quality of the
+//! found (dataflow, quantization, pruning) configuration depends heavily
+//! on search breadth. Practical deployments (HAQ-style hardware-aware
+//! search, ECC's energy-constrained optimization) therefore run many
+//! independent searches and keep only the Pareto-best energy / accuracy /
+//! area trade-offs. This module does exactly that:
+//!
+//! - [`Orchestrator`] runs `seeds` independent searches — each with its
+//!   own deterministic agent and oracle streams derived via
+//!   [`seed_stream`], optionally under distinct dataflow priors —
+//!   concurrently over the same bounded worker pool the sweeps use.
+//! - Every admissible best point streams into a [`ParetoArchive`], a
+//!   NaN-safe non-dominated set over (energy ↓, accuracy ↑, area ↓).
+//! - Between rounds of `chunk_episodes` episodes per seed, the whole
+//!   orchestration — per-seed episode records, full agent state
+//!   ([`SacAgent::snapshot`]) and the archive — is snapshotted to disk,
+//!   so a killed run resumes *bit-identically* to an uninterrupted one
+//!   (asserted by `tests/orchestrator_resume.rs`).
+//!
+//! The snapshot file format is documented in `docs/checkpoints.md`.
+//!
+//! # Determinism model
+//!
+//! Every chunk rebuilds its environment from `(network, dataflow,
+//! oracle_seed)` and then restores the oracle's stream token, so the
+//! sequence of floating-point operations a seed performs is a pure
+//! function of the spec — independent of worker scheduling, of where
+//! chunk boundaries fall, and of whether the agent crossed a
+//! serialize/deserialize cycle (f32/f64 survive the JSON round-trip
+//! exactly; see `rl::sac`'s checkpoint serialization notes).
+
+use super::checkpoint::{episode_from_json, episode_to_json};
+use super::sweep::run_pool;
+use super::{fold_best, Coordinator, EpisodeRecord, SearchConfig, SearchOutcome};
+use crate::compress::CompressionState;
+use crate::dataflow::Dataflow;
+use crate::energy::EnergyConfig;
+use crate::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
+use crate::model::Network;
+use crate::rl::sac::SacAgent;
+use crate::util::json::{self, Json};
+use crate::util::rng::seed_stream;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::cmp::Ordering;
+use std::path::{Path, PathBuf};
+
+/// Schema version written into orchestration snapshot files.
+pub const ORCHESTRATION_VERSION: f64 = 2.0;
+
+// ---------- Pareto archive ----------
+
+/// One admissible point on (or once on) the energy/accuracy/area frontier.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    /// Which concurrent search found it.
+    pub seed_index: usize,
+    /// Dataflow label the seed searched under.
+    pub dataflow: String,
+    /// Episode (within the seed) and step (within the episode).
+    pub episode: usize,
+    pub step: usize,
+    /// The (Q, P) configuration.
+    pub state: CompressionState,
+    /// Energy in joules (minimized).
+    pub energy: f64,
+    /// Accuracy in [0, 1] (maximized).
+    pub accuracy: f64,
+    /// Area in mm^2 (minimized).
+    pub area: f64,
+}
+
+impl ParetoPoint {
+    /// Weak-Pareto dominance with at least one strict improvement.
+    fn dominates(&self, other: &ParetoPoint) -> bool {
+        self.energy <= other.energy
+            && self.area <= other.area
+            && self.accuracy >= other.accuracy
+            && (self.energy < other.energy
+                || self.area < other.area
+                || self.accuracy > other.accuracy)
+    }
+
+    fn same_objectives(&self, other: &ParetoPoint) -> bool {
+        self.energy == other.energy
+            && self.area == other.area
+            && self.accuracy == other.accuracy
+    }
+}
+
+/// A non-dominated set over (energy ↓, accuracy ↑, area ↓), kept sorted
+/// by energy ascending (ties: area ascending, then accuracy descending)
+/// so serialization and iteration order are deterministic.
+///
+/// NaN-safe by construction: a candidate with any non-finite objective is
+/// rejected at [`insert`](ParetoArchive::insert), so the dominance
+/// comparisons below never see an unordered value.
+#[derive(Clone, Debug, Default)]
+pub struct ParetoArchive {
+    points: Vec<ParetoPoint>,
+}
+
+impl ParetoArchive {
+    pub fn new() -> ParetoArchive {
+        ParetoArchive::default()
+    }
+
+    pub fn points(&self) -> &[ParetoPoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The lowest-energy point of the frontier (the paper's headline).
+    pub fn best_energy(&self) -> Option<&ParetoPoint> {
+        self.points.first()
+    }
+
+    /// Offer a candidate. Returns `true` if it joined the frontier
+    /// (evicting any points it dominates), `false` if it was dominated,
+    /// duplicated an existing point's objectives, or carried a non-finite
+    /// objective.
+    pub fn insert(&mut self, p: ParetoPoint) -> bool {
+        if !(p.energy.is_finite() && p.area.is_finite() && p.accuracy.is_finite()) {
+            return false;
+        }
+        if self
+            .points
+            .iter()
+            .any(|q| q.dominates(&p) || q.same_objectives(&p))
+        {
+            return false;
+        }
+        self.points.retain(|q| !p.dominates(q));
+        let pos = self.points.partition_point(|q| match q.energy.total_cmp(&p.energy) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => match q.area.total_cmp(&p.area) {
+                Ordering::Less => true,
+                Ordering::Greater => false,
+                Ordering::Equal => q.accuracy.total_cmp(&p.accuracy).is_gt(),
+            },
+        });
+        self.points.insert(pos, p);
+        true
+    }
+}
+
+// ---------- Orchestration spec and state ----------
+
+/// Configuration of a multi-seed orchestrated search.
+#[derive(Clone, Debug)]
+pub struct OrchestratorSpec {
+    pub net: Network,
+    /// Number of independent searches (distinct agent/oracle streams).
+    pub seeds: usize,
+    /// Root seed; per-seed streams are derived with [`seed_stream`].
+    pub base_seed: u64,
+    /// Dataflow priors: seed `i` searches under `dataflows[i % len]`.
+    pub dataflows: Vec<Dataflow>,
+    pub env: EnvConfig,
+    pub energy: EnergyConfig,
+    /// Per-seed budget: `search.episodes` episodes per seed.
+    pub search: SearchConfig,
+    /// Episodes each seed advances between snapshots (the checkpoint
+    /// granularity; also the unit of work handed to the pool).
+    pub chunk_episodes: usize,
+}
+
+impl OrchestratorSpec {
+    pub fn new(net: Network, seeds: usize, base_seed: u64) -> OrchestratorSpec {
+        OrchestratorSpec {
+            net,
+            seeds,
+            base_seed,
+            dataflows: vec![Dataflow::XY],
+            env: EnvConfig::default(),
+            energy: EnergyConfig::default(),
+            search: SearchConfig::default(),
+            chunk_episodes: 4,
+        }
+    }
+
+    /// Fingerprint of everything that shapes the floating-point stream of
+    /// the run. A snapshot stores this and `resume` refuses a spec whose
+    /// fingerprint differs — resuming under changed hyper-parameters
+    /// cannot reproduce the interrupted run.
+    fn fingerprint(&self) -> u64 {
+        let labels: Vec<String> = self.dataflows.iter().map(|d| d.label()).collect();
+        fnv1a(&format!(
+            "{}|{}|{}|{}|{:?}|{:?}|{:?}|{:?}",
+            self.net.name,
+            self.seeds,
+            self.base_seed,
+            self.chunk_episodes,
+            labels,
+            self.env,
+            self.energy,
+            self.search,
+        ))
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Per-seed search progress. The live agent is held here between rounds;
+/// snapshots serialize it via [`SacAgent::snapshot`].
+pub struct SeedSlot {
+    pub seed_index: usize,
+    pub dataflow: Dataflow,
+    pub sac_seed: u64,
+    pub oracle_seed: u64,
+    pub episodes_done: usize,
+    /// Oracle stream token at the last episode boundary (0 = fresh; see
+    /// `AccuracyOracle::state_token`).
+    pub oracle_token: u64,
+    /// Panic message if this seed's worker died; the seed is then
+    /// excluded from further rounds but its completed records survive.
+    pub failed: Option<String>,
+    pub records: Vec<EpisodeRecord>,
+    agent: Option<SacAgent>,
+}
+
+/// Final product of an orchestration: per-seed outcomes plus the merged
+/// Pareto frontier.
+pub struct OrchestrationResult {
+    pub network: String,
+    /// Per-seed outcomes, in seed order (failed seeds keep the episodes
+    /// they completed).
+    pub outcomes: Vec<SearchOutcome>,
+    pub archive: ParetoArchive,
+    /// (seed_index, panic message) of any seed whose worker died.
+    pub failures: Vec<(usize, String)>,
+}
+
+/// Runs N independent SAC searches concurrently with periodic resumable
+/// snapshots. See the module docs for the determinism model.
+pub struct Orchestrator {
+    pub spec: OrchestratorSpec,
+    pub slots: Vec<SeedSlot>,
+    pub archive: ParetoArchive,
+    /// When set, [`run_round`](Orchestrator::run_round) snapshots here
+    /// after merging each round (atomic tmp-file + rename).
+    pub snapshot_path: Option<PathBuf>,
+}
+
+struct ChunkJob {
+    slot: usize,
+    net: Network,
+    df: Dataflow,
+    env: EnvConfig,
+    energy: EnergyConfig,
+    search: SearchConfig,
+    agent: Option<SacAgent>,
+    oracle_seed: u64,
+    oracle_token: u64,
+    start_episode: usize,
+    count: usize,
+}
+
+struct ChunkOut {
+    agent: SacAgent,
+    records: Vec<EpisodeRecord>,
+    oracle_token: u64,
+}
+
+/// Advance one seed by `count` episodes. Rebuilds the environment from
+/// scratch and realigns the oracle stream, so the result is independent
+/// of which worker runs it and of previous chunk boundaries.
+fn run_chunk(job: ChunkJob) -> ChunkOut {
+    let oracle = SurrogateOracle::new(&job.net, job.oracle_seed);
+    let env = CompressionEnv::new(job.net, job.df, Box::new(oracle), job.env, job.energy);
+    let mut coord = match job.agent {
+        Some(agent) => Coordinator::with_agent(env, agent, job.search),
+        None => Coordinator::new(env, job.search),
+    };
+    if job.oracle_token != 0 {
+        coord.env.restore_oracle_state(job.oracle_token);
+    }
+    let mut records = Vec::with_capacity(job.count);
+    for ep in job.start_episode..job.start_episode + job.count {
+        records.push(coord.run_episode(ep));
+    }
+    let oracle_token = coord.env.oracle_state_token();
+    let Coordinator { agent, .. } = coord;
+    ChunkOut {
+        agent,
+        records,
+        oracle_token,
+    }
+}
+
+impl Orchestrator {
+    pub fn new(spec: OrchestratorSpec) -> Orchestrator {
+        assert!(spec.seeds > 0, "need at least one seed");
+        assert!(!spec.dataflows.is_empty(), "need at least one dataflow prior");
+        assert!(spec.chunk_episodes > 0, "chunk_episodes must be positive");
+        let slots = (0..spec.seeds)
+            .map(|i| SeedSlot {
+                seed_index: i,
+                dataflow: spec.dataflows[i % spec.dataflows.len()],
+                sac_seed: seed_stream(spec.base_seed, 2 * i as u64),
+                oracle_seed: seed_stream(spec.base_seed, 2 * i as u64 + 1),
+                episodes_done: 0,
+                oracle_token: 0,
+                failed: None,
+                records: Vec::new(),
+                agent: None,
+            })
+            .collect();
+        Orchestrator {
+            spec,
+            slots,
+            archive: ParetoArchive::new(),
+            snapshot_path: None,
+        }
+    }
+
+    /// Have all seeds either finished their budget or failed?
+    pub fn is_complete(&self) -> bool {
+        self.slots
+            .iter()
+            .all(|s| s.failed.is_some() || s.episodes_done >= self.spec.search.episodes)
+    }
+
+    /// Run one round: every live, unfinished seed advances by up to
+    /// `chunk_episodes` episodes through the bounded worker pool, the
+    /// episode streams merge into the archive (in seed order, so the
+    /// merge is deterministic), and — if a snapshot path is set — the
+    /// whole orchestration is persisted. Returns `true` when complete.
+    pub fn run_round(&mut self) -> Result<bool> {
+        let total = self.spec.search.episodes;
+        let mut jobs = Vec::new();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if slot.failed.is_some() || slot.episodes_done >= total {
+                continue;
+            }
+            let count = (total - slot.episodes_done).min(self.spec.chunk_episodes);
+            let mut search = self.spec.search.clone();
+            search.sac.seed = slot.sac_seed;
+            jobs.push(ChunkJob {
+                slot: i,
+                net: self.spec.net.clone(),
+                df: slot.dataflow,
+                env: self.spec.env.clone(),
+                energy: self.spec.energy.clone(),
+                search,
+                agent: slot.agent.take(),
+                oracle_seed: slot.oracle_seed,
+                oracle_token: slot.oracle_token,
+                start_episode: slot.episodes_done,
+                count,
+            });
+        }
+        if jobs.is_empty() {
+            return Ok(true);
+        }
+        let idxs: Vec<usize> = jobs.iter().map(|j| j.slot).collect();
+        let results = run_pool(jobs, run_chunk);
+        for (result, slot_idx) in results.into_iter().zip(idxs) {
+            let seed_index = self.slots[slot_idx].seed_index;
+            match result {
+                Ok(chunk) => {
+                    for rec in &chunk.records {
+                        if let Some(b) = &rec.best {
+                            self.archive.insert(ParetoPoint {
+                                seed_index,
+                                dataflow: self.slots[slot_idx].dataflow.label(),
+                                episode: rec.episode,
+                                step: b.step,
+                                state: b.state.clone(),
+                                energy: b.energy,
+                                accuracy: b.accuracy,
+                                area: b.area,
+                            });
+                        }
+                    }
+                    let slot = &mut self.slots[slot_idx];
+                    slot.episodes_done += chunk.records.len();
+                    slot.oracle_token = chunk.oracle_token;
+                    slot.records.extend(chunk.records);
+                    slot.agent = Some(chunk.agent);
+                    if self.spec.search.verbose {
+                        log::info!(
+                            "seed {seed_index}: {}/{total} episodes, frontier {} points",
+                            self.slots[slot_idx].episodes_done,
+                            self.archive.len(),
+                        );
+                    }
+                }
+                Err(msg) => {
+                    log::warn!("seed {seed_index} worker died: {msg}");
+                    self.slots[slot_idx].failed = Some(msg);
+                }
+            }
+        }
+        if let Some(path) = self.snapshot_path.clone() {
+            self.save_snapshot(&path)?;
+        }
+        Ok(self.is_complete())
+    }
+
+    /// Run rounds to completion and assemble the result.
+    pub fn run(&mut self) -> Result<OrchestrationResult> {
+        while !self.run_round()? {}
+        Ok(self.result())
+    }
+
+    /// Assemble the current (possibly partial) result.
+    pub fn result(&self) -> OrchestrationResult {
+        let outcomes = self
+            .slots
+            .iter()
+            .map(|slot| {
+                let rep =
+                    crate::energy::baseline_cost(&self.spec.net, slot.dataflow, &self.spec.energy);
+                SearchOutcome {
+                    network: self.spec.net.name.clone(),
+                    dataflow: slot.dataflow.label(),
+                    episodes: slot.records.clone(),
+                    best: fold_best(&slot.records),
+                    start_energy: rep.total_energy(),
+                    start_area: rep.total_area,
+                    base_accuracy: self.spec.net.base_accuracy,
+                }
+            })
+            .collect();
+        OrchestrationResult {
+            network: self.spec.net.name.clone(),
+            outcomes,
+            archive: self.archive.clone(),
+            failures: self
+                .slots
+                .iter()
+                .filter_map(|s| s.failed.clone().map(|m| (s.seed_index, m)))
+                .collect(),
+        }
+    }
+
+    // ---------- snapshot / resume ----------
+
+    /// Serialize the full orchestration state (schema v2; see
+    /// `docs/checkpoints.md`).
+    pub fn snapshot_to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("version", Json::Num(ORCHESTRATION_VERSION))
+            .set("kind", Json::Str("orchestration".into()))
+            .set("network", Json::Str(self.spec.net.name.clone()))
+            .set("seeds", Json::Num(self.spec.seeds as f64))
+            .set("base_seed", Json::Str(self.spec.base_seed.to_string()))
+            .set("episodes_per_seed", Json::Num(self.spec.search.episodes as f64))
+            .set("chunk_episodes", Json::Num(self.spec.chunk_episodes as f64))
+            .set("max_steps", Json::Num(self.spec.env.max_steps as f64))
+            .set(
+                "dataflows",
+                Json::Arr(
+                    self.spec
+                        .dataflows
+                        .iter()
+                        .map(|d| Json::Str(d.label()))
+                        .collect(),
+                ),
+            )
+            .set("fingerprint", Json::Str(self.spec.fingerprint().to_string()))
+            .set("slots", Json::Arr(self.slots.iter().map(slot_to_json).collect()))
+            .set(
+                "archive",
+                Json::Arr(self.archive.points().iter().map(point_to_json).collect()),
+            );
+        j
+    }
+
+    /// Persist atomically (tmp file + rename): a kill during the write
+    /// leaves the previous snapshot intact.
+    pub fn save_snapshot(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.snapshot_to_json().to_string())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Resume a killed orchestration from a snapshot file. `spec` must be
+    /// the configuration of the original run (validated against the
+    /// stored fingerprint); the dynamic state — episode records, agents,
+    /// oracle tokens, archive — comes from the file. The resumed run
+    /// produces results bit-identical to an uninterrupted one.
+    pub fn resume(path: &Path, spec: OrchestratorSpec) -> Result<Orchestrator> {
+        let text = std::fs::read_to_string(path)?;
+        let j = json::parse(&text).map_err(|e| anyhow!("parsing snapshot {path:?}: {e}"))?;
+        let mut orch = Orchestrator::from_snapshot(&j, spec)?;
+        orch.snapshot_path = Some(path.to_path_buf());
+        Ok(orch)
+    }
+
+    /// [`resume`](Orchestrator::resume) from already-parsed JSON.
+    pub fn from_snapshot(j: &Json, spec: OrchestratorSpec) -> Result<Orchestrator> {
+        ensure!(
+            j.str_or("kind", "") == "orchestration",
+            "not an orchestration snapshot (kind = {:?})",
+            j.str_or("kind", "<missing>")
+        );
+        let version = j.num_or("version", 0.0);
+        ensure!(
+            version == ORCHESTRATION_VERSION,
+            "unsupported snapshot version {version} (this build reads v{ORCHESTRATION_VERSION})"
+        );
+        ensure!(
+            j.str_or("network", "") == spec.net.name,
+            "snapshot is for network '{}', spec wants '{}'",
+            j.str_or("network", ""),
+            spec.net.name
+        );
+        let stored = j
+            .get("fingerprint")
+            .and_then(|f| f.as_str())
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| anyhow!("snapshot missing config fingerprint"))?;
+        ensure!(
+            stored == spec.fingerprint(),
+            "snapshot was created under a different configuration; resume with \
+             the original settings (seeds, seed, episodes, steps, dataflows, \
+             search hyper-parameters)"
+        );
+
+        let mut orch = Orchestrator::new(spec);
+        let slots_j = j
+            .get("slots")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("snapshot missing slots"))?;
+        ensure!(
+            slots_j.len() == orch.slots.len(),
+            "snapshot has {} seeds, spec has {}",
+            slots_j.len(),
+            orch.slots.len()
+        );
+
+        // Agent dimensions are a property of (network, env config); ask a
+        // throwaway environment rather than duplicating the formula.
+        let probe = CompressionEnv::new(
+            orch.spec.net.clone(),
+            orch.slots[0].dataflow,
+            Box::new(SurrogateOracle::new(&orch.spec.net, 0)),
+            orch.spec.env.clone(),
+            orch.spec.energy.clone(),
+        );
+        use crate::rl::Env as _;
+        let (state_dim, action_dim) = (probe.state_dim(), probe.action_dim());
+        drop(probe);
+
+        for (slot, sj) in orch.slots.iter_mut().zip(slots_j) {
+            ensure!(
+                sj.str_or("dataflow", "") == slot.dataflow.label(),
+                "seed {} dataflow mismatch",
+                slot.seed_index
+            );
+            // The stored streams must equal the ones re-derived from
+            // base_seed — a stale or hand-edited snapshot cannot
+            // silently continue under different randomness.
+            ensure!(
+                get_u64(sj, "sac_seed") == Some(slot.sac_seed)
+                    && get_u64(sj, "oracle_seed") == Some(slot.oracle_seed),
+                "seed {}: stored RNG streams don't match the re-derived ones",
+                slot.seed_index
+            );
+            slot.episodes_done = sj.num_or("episodes_done", 0.0) as usize;
+            slot.oracle_token = get_u64(sj, "oracle_token")
+                .ok_or_else(|| anyhow!("seed {} missing oracle_token", slot.seed_index))?;
+            slot.failed = sj.get("failed").and_then(|f| f.as_str()).map(String::from);
+            slot.records = sj
+                .get("records")
+                .and_then(|r| r.as_arr())
+                .ok_or_else(|| anyhow!("seed {} missing records", slot.seed_index))?
+                .iter()
+                .map(episode_from_json)
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| anyhow!("seed {} has malformed records", slot.seed_index))?;
+            ensure!(
+                slot.records.len() == slot.episodes_done,
+                "seed {}: {} records but {} episodes done",
+                slot.seed_index,
+                slot.records.len(),
+                slot.episodes_done
+            );
+            if let Some(aj) = sj.get("agent") {
+                let mut cfg = orch.spec.search.sac.clone();
+                cfg.seed = slot.sac_seed;
+                slot.agent = Some(
+                    SacAgent::restore(state_dim, action_dim, cfg, aj).ok_or_else(|| {
+                        anyhow!("seed {}: agent snapshot rejected", slot.seed_index)
+                    })?,
+                );
+            } else if slot.episodes_done > 0 && slot.failed.is_none() {
+                bail!("seed {}: progressed but no agent stored", slot.seed_index);
+            }
+        }
+
+        if let Some(points) = j.get("archive").and_then(|a| a.as_arr()) {
+            for pj in points {
+                let p = point_from_json(pj)
+                    .ok_or_else(|| anyhow!("malformed archive point in snapshot"))?;
+                orch.archive.insert(p);
+            }
+        }
+        Ok(orch)
+    }
+}
+
+/// The human-readable core of a snapshot — lets `edc search --resume`
+/// rebuild the matching [`OrchestratorSpec`] without re-passing flags.
+pub struct SnapshotHeader {
+    pub network: String,
+    pub seeds: usize,
+    pub base_seed: u64,
+    pub episodes_per_seed: usize,
+    pub chunk_episodes: usize,
+    pub max_steps: usize,
+    pub dataflows: Vec<Dataflow>,
+}
+
+/// Read the header fields of a parsed orchestration snapshot.
+pub fn read_header(j: &Json) -> Option<SnapshotHeader> {
+    if j.str_or("kind", "") != "orchestration" {
+        return None;
+    }
+    let dataflows = j
+        .get("dataflows")?
+        .as_arr()?
+        .iter()
+        .map(|d| Dataflow::parse(d.as_str()?))
+        .collect::<Option<Vec<_>>>()?;
+    Some(SnapshotHeader {
+        network: j.str_or("network", ""),
+        seeds: j.num_or("seeds", 0.0) as usize,
+        base_seed: get_u64(j, "base_seed")?,
+        episodes_per_seed: j.num_or("episodes_per_seed", 0.0) as usize,
+        chunk_episodes: j.num_or("chunk_episodes", 0.0) as usize,
+        max_steps: j.num_or("max_steps", 0.0) as usize,
+        dataflows,
+    })
+}
+
+fn get_u64(j: &Json, key: &str) -> Option<u64> {
+    j.get(key)?.as_str()?.parse().ok()
+}
+
+fn slot_to_json(s: &SeedSlot) -> Json {
+    let mut j = Json::obj();
+    j.set("seed_index", Json::Num(s.seed_index as f64))
+        .set("dataflow", Json::Str(s.dataflow.label()))
+        .set("sac_seed", Json::Str(s.sac_seed.to_string()))
+        .set("oracle_seed", Json::Str(s.oracle_seed.to_string()))
+        .set("episodes_done", Json::Num(s.episodes_done as f64))
+        .set("oracle_token", Json::Str(s.oracle_token.to_string()))
+        .set(
+            "records",
+            Json::Arr(s.records.iter().map(episode_to_json).collect()),
+        );
+    if let Some(msg) = &s.failed {
+        j.set("failed", Json::Str(msg.clone()));
+    }
+    if let Some(agent) = &s.agent {
+        j.set("agent", agent.snapshot());
+    }
+    j
+}
+
+fn point_to_json(p: &ParetoPoint) -> Json {
+    let mut j = Json::obj();
+    j.set("seed_index", Json::Num(p.seed_index as f64))
+        .set("dataflow", Json::Str(p.dataflow.clone()))
+        .set("episode", Json::Num(p.episode as f64))
+        .set("step", Json::Num(p.step as f64))
+        .set("q", Json::from_f64s(&p.state.q))
+        .set("p", Json::from_f64s(&p.state.p))
+        .set("energy", Json::Num(p.energy))
+        .set("accuracy", Json::Num(p.accuracy))
+        .set("area", Json::Num(p.area));
+    j
+}
+
+fn point_from_json(j: &Json) -> Option<ParetoPoint> {
+    Some(ParetoPoint {
+        seed_index: j.num_or("seed_index", 0.0) as usize,
+        dataflow: j.str_or("dataflow", ""),
+        episode: j.num_or("episode", 0.0) as usize,
+        step: j.num_or("step", 0.0) as usize,
+        state: CompressionState::from_parts(j.get("q")?.to_f64s()?, j.get("p")?.to_f64s()?),
+        energy: j.get("energy")?.as_f64()?,
+        accuracy: j.get("accuracy")?.as_f64()?,
+        area: j.get("area")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::rl::sac::SacConfig;
+
+    fn pt(energy: f64, accuracy: f64, area: f64) -> ParetoPoint {
+        ParetoPoint {
+            seed_index: 0,
+            dataflow: "X:Y".into(),
+            episode: 0,
+            step: 1,
+            state: CompressionState::from_parts(vec![4.0], vec![0.5]),
+            energy,
+            accuracy,
+            area,
+        }
+    }
+
+    #[test]
+    fn archive_keeps_only_non_dominated() {
+        let mut a = ParetoArchive::new();
+        assert!(a.insert(pt(2.0, 0.98, 1.0)));
+        // Dominated on every axis.
+        assert!(!a.insert(pt(3.0, 0.97, 2.0)));
+        // Dominates the first point: evicts it.
+        assert!(a.insert(pt(1.0, 0.99, 0.5)));
+        assert_eq!(a.len(), 1);
+        // Trade-off: worse energy, better accuracy — both stay.
+        assert!(a.insert(pt(1.5, 0.995, 0.5)));
+        assert_eq!(a.len(), 2);
+        // Sorted by energy ascending.
+        assert!(a.points()[0].energy <= a.points()[1].energy);
+        assert_eq!(a.best_energy().unwrap().energy, 1.0);
+    }
+
+    #[test]
+    fn archive_rejects_nan_and_duplicates() {
+        let mut a = ParetoArchive::new();
+        assert!(!a.insert(pt(f64::NAN, 0.9, 1.0)));
+        assert!(!a.insert(pt(1.0, f64::NAN, 1.0)));
+        assert!(!a.insert(pt(1.0, 0.9, f64::INFINITY)));
+        assert!(a.is_empty());
+        assert!(a.insert(pt(1.0, 0.9, 1.0)));
+        assert!(!a.insert(pt(1.0, 0.9, 1.0)), "exact duplicate must not grow the set");
+        assert_eq!(a.len(), 1);
+    }
+
+    fn tiny_spec(seeds: usize, episodes: usize) -> OrchestratorSpec {
+        let mut spec = OrchestratorSpec::new(zoo::lenet5(), seeds, 7);
+        spec.dataflows = vec![Dataflow::XY, Dataflow::FXFY];
+        spec.env.max_steps = 6;
+        spec.chunk_episodes = 2;
+        spec.search = SearchConfig {
+            episodes,
+            sac: SacConfig {
+                hidden: vec![24, 24],
+                warmup_steps: 12,
+                batch_size: 12,
+                updates_per_step: 1,
+                ..SacConfig::default()
+            },
+            verbose: false,
+        };
+        spec
+    }
+
+    #[test]
+    fn orchestrated_search_completes_all_seeds() {
+        let mut orch = Orchestrator::new(tiny_spec(3, 3));
+        let res = orch.run().expect("orchestration failed");
+        assert_eq!(res.outcomes.len(), 3);
+        assert!(res.failures.is_empty());
+        for (i, out) in res.outcomes.iter().enumerate() {
+            assert_eq!(out.episodes.len(), 3, "seed {i}");
+            // Seeds cycle over the dataflow priors.
+            let want = [Dataflow::XY, Dataflow::FXFY, Dataflow::XY][i].label();
+            assert_eq!(out.dataflow, want);
+        }
+        // Every archive point is mutually non-dominated.
+        let pts = res.archive.points();
+        for x in pts {
+            for y in pts {
+                assert!(!x.dominates(y), "archive holds a dominated point");
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_get_distinct_deterministic_streams() {
+        let a = Orchestrator::new(tiny_spec(4, 1));
+        let b = Orchestrator::new(tiny_spec(4, 1));
+        for (x, y) in a.slots.iter().zip(&b.slots) {
+            assert_eq!(x.sac_seed, y.sac_seed);
+            assert_eq!(x.oracle_seed, y.oracle_seed);
+        }
+        let mut seen = std::collections::HashSet::new();
+        for s in &a.slots {
+            assert!(seen.insert(s.sac_seed));
+            assert!(seen.insert(s.oracle_seed));
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_mid_run() {
+        let spec = tiny_spec(2, 4);
+        let mut orch = Orchestrator::new(spec.clone());
+        orch.run_round().unwrap();
+        assert!(!orch.is_complete());
+        let j = orch.snapshot_to_json();
+        // Text round-trip like a real file.
+        let parsed = json::parse(&j.to_string()).unwrap();
+        assert!(read_header(&parsed).is_some());
+        let resumed = Orchestrator::from_snapshot(&parsed, spec).expect("resume failed");
+        for (a, b) in orch.slots.iter().zip(&resumed.slots) {
+            assert_eq!(a.episodes_done, b.episodes_done);
+            assert_eq!(a.oracle_token, b.oracle_token);
+            assert_eq!(a.records.len(), b.records.len());
+        }
+        assert_eq!(orch.archive.len(), resumed.archive.len());
+        for (x, y) in orch.archive.points().iter().zip(resumed.archive.points()) {
+            assert_eq!(x.energy.to_bits(), y.energy.to_bits());
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+            assert_eq!(x.area.to_bits(), y.area.to_bits());
+        }
+    }
+
+    #[test]
+    fn resume_rejects_changed_configuration() {
+        let spec = tiny_spec(2, 4);
+        let mut orch = Orchestrator::new(spec.clone());
+        orch.run_round().unwrap();
+        let parsed = json::parse(&orch.snapshot_to_json().to_string()).unwrap();
+        let mut other = spec.clone();
+        other.env.max_steps = 7;
+        assert!(Orchestrator::from_snapshot(&parsed, other).is_err());
+        let mut other = spec;
+        other.search.sac.lr = 9e-3;
+        assert!(Orchestrator::from_snapshot(&parsed, other).is_err());
+    }
+}

@@ -137,8 +137,9 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 
 /// Run `jobs` through a bounded worker pool, preserving job order in the
 /// results. A job that panics yields `Err(panic message)` in its slot;
-/// the other jobs keep running.
-fn run_pool<J, R, F>(jobs: Vec<J>, f: F) -> Vec<Result<R, String>>
+/// the other jobs keep running. Shared with `coordinator::orchestrator`,
+/// which streams per-seed episode chunks through the same pool.
+pub(crate) fn run_pool<J, R, F>(jobs: Vec<J>, f: F) -> Vec<Result<R, String>>
 where
     J: Send,
     R: Send,
@@ -218,6 +219,25 @@ fn sort_rows_by_energy(rows: &mut [(Dataflow, f64, f64)]) {
 /// Rank all 15 dataflows for a network at a fixed compression state —
 /// the "find the optimal dataflow type" use-case of the abstract. One
 /// batched pass shares per-layer mappings and costs across dataflows.
+///
+/// Returns `(dataflow, energy in J, area in mm^2)` rows sorted by energy
+/// ascending (NaN-safe: any NaN sorts last).
+///
+/// # Examples
+///
+/// ```
+/// use edcompress::compress::CompressionState;
+/// use edcompress::coordinator::sweep::rank_dataflows;
+/// use edcompress::energy::EnergyConfig;
+/// use edcompress::model::zoo;
+///
+/// let net = zoo::lenet5();
+/// let state = CompressionState::uniform(&net, 8.0, 1.0);
+/// let rows = rank_dataflows(&net, &state, &EnergyConfig::default());
+/// assert_eq!(rows.len(), 15); // all C(6,2) loop pairs
+/// // Sorted by energy: the first row is the recommended dataflow.
+/// assert!(rows.windows(2).all(|w| w[0].1 <= w[1].1));
+/// ```
 pub fn rank_dataflows(
     net: &Network,
     state: &crate::compress::CompressionState,

@@ -171,6 +171,27 @@ where
 /// Quantization is consumed at the rounded integer depth (paper §3.3) and
 /// pruning at the [`cache::snap_p`] grid — see `energy::cache` for why
 /// both are part of the model rather than cache-side approximations.
+///
+/// # Examples
+///
+/// ```
+/// use edcompress::compress::CompressionState;
+/// use edcompress::dataflow::Dataflow;
+/// use edcompress::energy::{self, EnergyConfig};
+/// use edcompress::model::zoo;
+///
+/// let net = zoo::lenet5();
+/// let cfg = EnergyConfig::default();
+/// // 8-bit weights, no pruning — the paper's starting point.
+/// let dense = CompressionState::uniform(&net, 8.0, 1.0);
+/// let before = energy::evaluate(&net, &dense, Dataflow::XY, &cfg);
+/// assert_eq!(before.per_layer.len(), net.num_compute_layers());
+///
+/// // Compressing to 4 bits / 50% kept weights must cost less energy.
+/// let compressed = CompressionState::uniform(&net, 4.0, 0.5);
+/// let after = energy::evaluate(&net, &compressed, Dataflow::XY, &cfg);
+/// assert!(after.total_energy() < before.total_energy());
+/// ```
 pub fn evaluate(
     net: &Network,
     state: &CompressionState,
@@ -252,6 +273,26 @@ pub fn evaluate_incremental(
 /// layers, sharing per-layer work (key derivation, cached mappings and
 /// costs) across all dataflows. Result `i` is bit-identical to
 /// `evaluate(net, state, dfs[i], cfg)`.
+///
+/// # Examples
+///
+/// ```
+/// use edcompress::compress::CompressionState;
+/// use edcompress::dataflow::Dataflow;
+/// use edcompress::energy::{self, cache::CostCache, EnergyConfig};
+/// use edcompress::model::zoo;
+///
+/// let net = zoo::lenet5();
+/// let cfg = EnergyConfig::default();
+/// let state = CompressionState::uniform(&net, 6.0, 0.6);
+/// let dfs = Dataflow::all_fifteen();
+/// let mut cache = CostCache::new(&net, &cfg);
+/// let reports = energy::evaluate_batch(&net, &state, &dfs, &cfg, &mut cache);
+/// assert_eq!(reports.len(), 15);
+/// // Each report is bit-identical to the corresponding single evaluate.
+/// let full = energy::evaluate(&net, &state, dfs[0], &cfg);
+/// assert_eq!(reports[0].total_energy().to_bits(), full.total_energy().to_bits());
+/// ```
 pub fn evaluate_batch(
     net: &Network,
     state: &CompressionState,

@@ -5,6 +5,13 @@
 //! continuous deltas for Q and P (Eq. 2). Reward: accuracy-ratio to the
 //! lambda power times the inverse energy ratio (Eq. 4). Episodes abort
 //! when accuracy falls below a threshold or the step limit is reached.
+//!
+//! Role in the pipeline: this is where the paper's two objectives meet —
+//! each step re-costs the network through `energy::evaluate` (via the
+//! incremental evaluator) and re-measures accuracy through an
+//! [`AccuracyOracle`] (the analytic [`SurrogateOracle`] for sweeps, the
+//! PJRT fine-tuning oracle for end-to-end runs), and the combination
+//! becomes the reward the `rl` agent maximizes.
 
 pub mod surrogate;
 
@@ -30,6 +37,16 @@ pub trait AccuracyOracle {
     fn reset(&mut self);
     /// Uncompressed reference accuracy.
     fn base_accuracy(&self) -> f64;
+    /// Opaque token capturing any oracle-internal stream position (e.g.
+    /// the surrogate's evaluation-jitter counter) so a checkpointed
+    /// search can resume bit-identically. Stateless oracles keep the
+    /// defaults.
+    fn state_token(&self) -> u64 {
+        0
+    }
+    /// Restore the position captured by
+    /// [`state_token`](AccuracyOracle::state_token).
+    fn restore_state_token(&mut self, _token: u64) {}
 }
 
 /// Which compression knobs the agent may move (Figure 7's ablation).
@@ -221,6 +238,21 @@ impl CompressionEnv {
     /// Accuracy floor below which the episode aborts.
     pub fn accuracy_floor(&self) -> f64 {
         self.cfg.threshold_frac * self.oracle.base_accuracy()
+    }
+
+    /// The oracle's internal stream position (see
+    /// [`AccuracyOracle::state_token`]) — recorded by orchestration
+    /// snapshots at episode boundaries.
+    pub fn oracle_state_token(&self) -> u64 {
+        self.oracle.state_token()
+    }
+
+    /// Restore the oracle stream position. Only meaningful at an episode
+    /// boundary (the next `reset` starts the episode from pristine model
+    /// state; the token realigns oracle-internal streams like the
+    /// surrogate's evaluation jitter).
+    pub fn restore_oracle_state(&mut self, token: u64) {
+        self.oracle.restore_state_token(token);
     }
 }
 

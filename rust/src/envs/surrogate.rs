@@ -130,6 +130,14 @@ impl AccuracyOracle for SurrogateOracle {
     fn base_accuracy(&self) -> f64 {
         self.base_acc
     }
+
+    fn state_token(&self) -> u64 {
+        self.evals
+    }
+
+    fn restore_state_token(&mut self, token: u64) {
+        self.evals = token;
+    }
 }
 
 #[cfg(test)]
@@ -212,6 +220,26 @@ mod tests {
             acc_fc1 > acc_conv1,
             "fc1-pruned {acc_fc1} should beat conv1-pruned {acc_conv1}"
         );
+    }
+
+    #[test]
+    fn state_token_realigns_jitter_stream() {
+        let net = zoo::lenet5();
+        let s = CompressionState::uniform(&net, 5.0, 0.6);
+        let mut cont = SurrogateOracle::new(&net, 3);
+        let mut split = SurrogateOracle::new(&net, 3);
+        for _ in 0..4 {
+            cont.evaluate(&s);
+            split.evaluate(&s);
+        }
+        let token = split.state_token();
+        // A freshly built oracle restored to the token continues exactly
+        // where the continuous one is.
+        let mut resumed = SurrogateOracle::new(&net, 3);
+        resumed.restore_state_token(token);
+        for _ in 0..4 {
+            assert_eq!(cont.evaluate(&s).to_bits(), resumed.evaluate(&s).to_bits());
+        }
     }
 
     #[test]

@@ -37,6 +37,25 @@ impl Adam {
         self.t
     }
 
+    /// The full optimizer state (first/second moments and step count), for
+    /// checkpointing. Restore with [`Adam::restore_state`].
+    pub fn state(&self) -> (&[Tensor], &[Tensor], u64) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Overwrite the optimizer state with a previously captured one. The
+    /// moment tensors must match the shapes this optimizer was built for.
+    pub fn restore_state(&mut self, m: Vec<Tensor>, v: Vec<Tensor>, t: u64) {
+        assert_eq!(m.len(), self.m.len(), "adam moment count changed");
+        assert_eq!(v.len(), self.v.len(), "adam moment count changed");
+        for (new, old) in m.iter().zip(&self.m).chain(v.iter().zip(&self.v)) {
+            assert_eq!(new.shape(), old.shape(), "adam moment shape changed");
+        }
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
+
     /// Apply one update. `params` and `grads` must be in the same, fixed
     /// order used at construction.
     pub fn step(&mut self, params: Vec<&mut Tensor>, grads: &[&Tensor]) {
@@ -98,6 +117,29 @@ mod tests {
                 "scale {scale}: step {}",
                 x.data()[0]
             );
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_continues_identically() {
+        let mut x1 = Tensor::from_vec(&[2], vec![1.0, -2.0]);
+        let mut opt1 = Adam::for_params(&[&x1], 0.05);
+        let g = Tensor::from_vec(&[2], vec![0.3, -0.7]);
+        for _ in 0..5 {
+            opt1.step(vec![&mut x1], &[&g]);
+        }
+        // Capture, rebuild a fresh optimizer, restore, and continue.
+        let (m, v, t) = opt1.state();
+        let (m, v) = (m.to_vec(), v.to_vec());
+        let mut x2 = x1.clone();
+        let mut opt2 = Adam::for_params(&[&x2], 0.05);
+        opt2.restore_state(m, v, t);
+        for _ in 0..5 {
+            opt1.step(vec![&mut x1], &[&g]);
+            opt2.step(vec![&mut x2], &[&g]);
+        }
+        for (a, b) in x1.data().iter().zip(x2.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -174,6 +174,69 @@ pub fn fig5(episodes: usize, seed: u64) -> (Vec<Table>, Vec<String>) {
     (tables, csvs)
 }
 
+/// Figure-5-style best-so-far curve for a multi-seed orchestrated search:
+/// interleaves the fleet's episodes (the seeds run concurrently) and
+/// tracks the lowest admissible energy any seed has reached. Returns the
+/// per-episode summary table and the CSV path of the full per-step series
+/// (`seed, episode, step, energy_uj, fleet_best_uj`).
+pub fn fleet_best_so_far(
+    res: &crate::coordinator::orchestrator::OrchestrationResult,
+) -> (Table, String) {
+    let max_ep = res.outcomes.iter().map(|o| o.episodes.len()).max().unwrap_or(0);
+    let mut t = Table::new(
+        &format!(
+            "Fleet best-so-far energy ({}, {} seeds)",
+            res.network,
+            res.outcomes.len()
+        ),
+        &["Episode", "Best E (uJ)", "Improvement", "Found by"],
+    );
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut best = f64::INFINITY;
+    let mut best_start = f64::NAN;
+    let mut best_seed = 0usize;
+    for ep in 0..max_ep {
+        for (si, out) in res.outcomes.iter().enumerate() {
+            let Some(rec) = out.episodes.get(ep) else { continue };
+            for (step, &e) in rec.energy_curve.iter().enumerate() {
+                // The episode's best point becomes visible at the step
+                // that found it (BestPoint.step is 1-based), not before.
+                if let Some(b) = &rec.best {
+                    if step + 1 >= b.step && b.energy < best {
+                        best = b.energy;
+                        best_start = out.start_energy;
+                        best_seed = si;
+                    }
+                }
+                rows.push(vec![
+                    si as f64,
+                    ep as f64,
+                    step as f64,
+                    e * 1e6,
+                    if best.is_finite() { best * 1e6 } else { f64::NAN },
+                ]);
+            }
+        }
+        if best.is_finite() {
+            t.row(vec![
+                format!("{ep}"),
+                format!("{:.4}", best * 1e6),
+                format!("{:.1}x", best_start / best),
+                format!("seed {best_seed}"),
+            ]);
+        } else {
+            t.row(vec![format!("{ep}"), "-".into(), "-".into(), "-".into()]);
+        }
+    }
+    let path = write_csv(
+        &format!("fleet_{}.csv", res.network),
+        &["seed", "episode", "step", "energy_uj", "fleet_best_uj"],
+        &rows,
+    )
+    .unwrap_or_default();
+    (t, path)
+}
+
 /// Figure 6: energy breakdown (PE vs data movement) before/after EDC for
 /// the three networks x four dataflows.
 pub fn fig6(episodes: usize, seed: u64) -> Table {
@@ -255,6 +318,53 @@ mod tests {
     fn fig6_rows_cover_networks_and_dataflows() {
         let t = fig6(2, 1);
         assert_eq!(t.rows.len(), 12); // 3 nets x 4 dataflows
+    }
+
+    #[test]
+    fn fleet_curve_tracks_running_best() {
+        use crate::compress::CompressionState;
+        use crate::coordinator::orchestrator::{OrchestrationResult, ParetoArchive};
+        use crate::coordinator::EpisodeRecord;
+        use crate::envs::BestPoint;
+        let rec = |episode: usize, e: f64| EpisodeRecord {
+            episode,
+            steps: 2,
+            total_reward: 0.0,
+            energy_curve: vec![e * 1.5, e],
+            accuracy_curve: vec![0.99, 0.99],
+            best: Some(BestPoint {
+                state: CompressionState::from_parts(vec![4.0], vec![0.5]),
+                energy: e,
+                area: 1.0,
+                accuracy: 0.99,
+                step: 2,
+            }),
+        };
+        let out = |records: Vec<EpisodeRecord>| SearchOutcome {
+            network: "lenet5".into(),
+            dataflow: "X:Y".into(),
+            episodes: records,
+            best: None,
+            start_energy: 4e-6,
+            start_area: 1.0,
+            base_accuracy: 0.993,
+        };
+        let res = OrchestrationResult {
+            network: "lenet5".into(),
+            outcomes: vec![
+                out(vec![rec(0, 2e-6), rec(1, 1.5e-6)]),
+                out(vec![rec(0, 3e-6), rec(1, 1e-6)]),
+            ],
+            archive: ParetoArchive::new(),
+            failures: vec![],
+        };
+        let (t, csv) = fleet_best_so_far(&res);
+        assert_eq!(t.rows.len(), 2);
+        // Episode 0 fleet best = 2e-6 J; episode 1 improves to 1e-6 J.
+        assert!(t.rows[0][1].contains("2.0000"), "{:?}", t.rows[0]);
+        assert!(t.rows[1][1].contains("1.0000"), "{:?}", t.rows[1]);
+        assert!(t.rows[1][3].contains("seed 1"));
+        assert!(std::path::Path::new(&csv).exists());
     }
 
     #[test]

@@ -44,6 +44,32 @@ fn edc_cost(net: &Network, out: &SearchOutcome, df: Dataflow, cfg: &EnergyConfig
     }
 }
 
+/// Render a multi-seed orchestration's Pareto frontier over
+/// (energy, accuracy, area) — the fleet-level counterpart of the paper's
+/// per-search Table 4 rows. Points arrive sorted by energy ascending.
+pub fn pareto_table(archive: &crate::coordinator::orchestrator::ParetoArchive) -> Table {
+    let mut t = Table::new(
+        "Pareto frontier over (energy, accuracy, area) across the seed fleet",
+        &["E (uJ)", "Accuracy", "A (mm2)", "Seed", "Dataflow", "Ep", "Q (bits)", "P (%)"],
+    );
+    for p in archive.points() {
+        t.row(vec![
+            format!("{:.4}", p.energy * 1e6),
+            format!("{:.4}", p.accuracy),
+            format!("{:.3}", p.area),
+            format!("{}", p.seed_index),
+            p.dataflow.clone(),
+            format!("{}", p.episode),
+            format!("{:?}", p.state.all_bits()),
+            format!(
+                "{:?}",
+                p.state.p.iter().map(|v| (v * 100.0).round() as i64).collect::<Vec<_>>()
+            ),
+        ]);
+    }
+    t
+}
+
 /// Generic "us vs. baselines across four dataflows" renderer used by
 /// Tables 2 and 3 (the paper normalizes every column to the best Ours
 /// entry).
@@ -229,6 +255,30 @@ mod tests {
         for t in &tables {
             assert_eq!(t.rows.len(), 5); // conv1 conv2 fc1 fc2 + Total
         }
+    }
+
+    #[test]
+    fn pareto_table_lists_frontier_points() {
+        use crate::compress::CompressionState;
+        use crate::coordinator::orchestrator::{ParetoArchive, ParetoPoint};
+        let mut archive = ParetoArchive::new();
+        for (e, acc) in [(2e-6, 0.99), (1e-6, 0.98)] {
+            archive.insert(ParetoPoint {
+                seed_index: 0,
+                dataflow: "X:Y".into(),
+                episode: 1,
+                step: 3,
+                state: CompressionState::from_parts(vec![4.0, 3.0], vec![0.5, 0.2]),
+                energy: e,
+                accuracy: acc,
+                area: 0.5,
+            });
+        }
+        let t = pareto_table(&archive);
+        assert_eq!(t.rows.len(), 2);
+        // Sorted by energy ascending.
+        assert!(t.rows[0][0].contains("1.0000"), "{:?}", t.rows[0]);
+        assert!(t.render().contains("X:Y"));
     }
 
     #[test]

@@ -1,6 +1,14 @@
 //! Reinforcement learning: environment abstraction, replay buffer and a
 //! from-scratch soft actor-critic (SAC) implementation (Haarnoja et al.,
 //! 2018 — the algorithm the paper's §4 uses).
+//!
+//! Role in the pipeline: the paper recasts compression as a multi-step
+//! decision problem (Eq. 1–4), so the searcher is an RL agent. Each
+//! `coordinator` episode drives [`SacAgent`] against
+//! [`envs::CompressionEnv`](crate::envs::CompressionEnv) through the
+//! [`Env`] trait; the agent's full state is checkpointable
+//! ([`SacAgent::snapshot`](sac::SacAgent::snapshot)) so orchestrated
+//! searches can be killed and resumed bit-identically.
 
 pub mod replay;
 pub mod sac;

@@ -62,6 +62,22 @@ impl ReplayBuffer {
     pub fn as_slice(&self) -> &[Transition] {
         &self.data
     }
+
+    /// Ring-head index (the next slot to be overwritten once full).
+    /// Exposed, with [`ReplayBuffer::from_parts`], so search checkpoints
+    /// can capture the buffer exactly.
+    pub fn head(&self) -> usize {
+        self.head
+    }
+
+    /// Rebuild a buffer at an exact point of its FIFO history, as captured
+    /// by [`ReplayBuffer::as_slice`] and [`ReplayBuffer::head`].
+    pub fn from_parts(cap: usize, data: Vec<Transition>, head: usize) -> ReplayBuffer {
+        assert!(cap > 0);
+        assert!(data.len() <= cap, "replay data {} exceeds capacity {cap}", data.len());
+        assert!(head == 0 || head < data.len(), "head {head} out of range");
+        ReplayBuffer { cap, data, head }
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +120,22 @@ mod tests {
             seen[x.reward as usize] = true;
         }
         assert!(seen.iter().all(|&x| x), "uniform sampling missed an element");
+    }
+
+    #[test]
+    fn from_parts_restores_ring_position() {
+        let mut b = ReplayBuffer::new(3);
+        for i in 0..5 {
+            b.push(t(i as f32));
+        }
+        let mut r = ReplayBuffer::from_parts(b.capacity(), b.as_slice().to_vec(), b.head());
+        // Both buffers must evict in lock-step from here on.
+        b.push(t(99.0));
+        r.push(t(99.0));
+        let got: Vec<f32> = b.as_slice().iter().map(|x| x.reward).collect();
+        let want: Vec<f32> = r.as_slice().iter().map(|x| x.reward).collect();
+        assert_eq!(got, want);
+        assert_eq!(b.head(), r.head());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 use super::replay::{ReplayBuffer, Transition};
 use crate::nn::{Activation, Adam, Mlp};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 const LOG_STD_MIN: f32 = -8.0;
@@ -421,6 +422,221 @@ impl SacAgent {
     }
 }
 
+// ---------- checkpoint serialization ----------
+//
+// Everything below exists so an orchestrated search can be killed and
+// resumed bit-identically (see `coordinator::orchestrator` and
+// docs/checkpoints.md). f32 values survive the JSON round-trip exactly:
+// they widen losslessly to f64, the writer emits shortest-round-trip
+// decimals, and the parser returns the identical f64. Non-finite values
+// serialize to `null`, which `restore` rejects instead of corrupting the
+// agent silently.
+
+fn tensor_to_json(t: &Tensor) -> Json {
+    let mut j = Json::obj();
+    j.set(
+        "shape",
+        Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+    )
+    .set("data", f32s_to_json(t.data()));
+    j
+}
+
+fn tensor_from_json(j: &Json) -> Option<Tensor> {
+    let shape: Vec<usize> = j
+        .get("shape")?
+        .to_f64s()?
+        .iter()
+        .map(|&v| v as usize)
+        .collect();
+    let data = f32s_from_json(j.get("data")?)?;
+    if shape.iter().product::<usize>() != data.len() {
+        return None;
+    }
+    Some(Tensor::from_vec(&shape, data))
+}
+
+fn f32s_to_json(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Strict decode: any non-number (e.g. a `null` from a NaN) fails the
+/// restore rather than silently shifting the array.
+fn f32s_from_json(j: &Json) -> Option<Vec<f32>> {
+    let raw = j.as_arr()?;
+    let mut out = Vec::with_capacity(raw.len());
+    for v in raw {
+        out.push(v.as_f64()? as f32);
+    }
+    Some(out)
+}
+
+fn mlp_to_json(m: &Mlp) -> Json {
+    let mut j = Json::obj();
+    j.set(
+        "tensors",
+        Json::Arr(m.params().into_iter().map(tensor_to_json).collect()),
+    );
+    j
+}
+
+fn mlp_restore(m: &mut Mlp, j: &Json) -> Option<()> {
+    let tensors = j.get("tensors")?.as_arr()?;
+    let mut params = m.params_mut();
+    if tensors.len() != params.len() {
+        return None;
+    }
+    for (dst, tj) in params.iter_mut().zip(tensors) {
+        let t = tensor_from_json(tj)?;
+        if t.shape() != dst.shape() {
+            return None;
+        }
+        **dst = t;
+    }
+    Some(())
+}
+
+fn adam_to_json(a: &Adam) -> Json {
+    let (m, v, t) = a.state();
+    let mut j = Json::obj();
+    j.set("m", Json::Arr(m.iter().map(tensor_to_json).collect()))
+        .set("v", Json::Arr(v.iter().map(tensor_to_json).collect()))
+        .set("t", Json::Str(t.to_string()));
+    j
+}
+
+fn adam_restore(a: &mut Adam, j: &Json) -> Option<()> {
+    let decode = |key: &str| -> Option<Vec<Tensor>> {
+        j.get(key)?.as_arr()?.iter().map(tensor_from_json).collect()
+    };
+    let (m, v) = (decode("m")?, decode("v")?);
+    let t: u64 = j.get("t")?.as_str()?.parse().ok()?;
+    let (m0, v0, _) = a.state();
+    if m.len() != m0.len() || v.len() != v0.len() {
+        return None;
+    }
+    for (new, old) in m.iter().zip(m0).chain(v.iter().zip(v0)) {
+        if new.shape() != old.shape() {
+            return None;
+        }
+    }
+    a.restore_state(m, v, t);
+    Some(())
+}
+
+fn rng_to_json(r: &Rng) -> Json {
+    let (s, spare) = r.state();
+    let mut j = Json::obj();
+    // u64 words exceed f64's integer range; encode as decimal strings.
+    j.set(
+        "s",
+        Json::Arr(s.iter().map(|w| Json::Str(w.to_string())).collect()),
+    );
+    if let Some(v) = spare {
+        j.set("spare", Json::Num(v));
+    }
+    j
+}
+
+fn rng_from_json(j: &Json) -> Option<Rng> {
+    let words = j.get("s")?.as_arr()?;
+    if words.len() != 4 {
+        return None;
+    }
+    let mut s = [0u64; 4];
+    for (dst, w) in s.iter_mut().zip(words) {
+        *dst = w.as_str()?.parse().ok()?;
+    }
+    Some(Rng::from_state(s, j.get("spare").and_then(|v| v.as_f64())))
+}
+
+fn transition_to_json(t: &Transition) -> Json {
+    let mut j = Json::obj();
+    j.set("s", f32s_to_json(&t.state))
+        .set("a", f32s_to_json(&t.action))
+        .set("r", Json::Num(t.reward as f64))
+        .set("n", f32s_to_json(&t.next_state))
+        .set("d", Json::Num(t.done as f64));
+    j
+}
+
+fn transition_from_json(j: &Json) -> Option<Transition> {
+    Some(Transition {
+        state: f32s_from_json(j.get("s")?)?,
+        action: f32s_from_json(j.get("a")?)?,
+        reward: j.get("r")?.as_f64()? as f32,
+        next_state: f32s_from_json(j.get("n")?)?,
+        done: j.get("d")?.as_f64()? as f32,
+    })
+}
+
+impl SacAgent {
+    /// Serialize the complete dynamic state — actor, twin critics and
+    /// their targets, optimizer moments, temperature, replay buffer and
+    /// the RNG stream position — such that [`SacAgent::restore`] continues
+    /// the search bit-identically to an agent that was never serialized.
+    ///
+    /// Static hyper-parameters ([`SacConfig`]) are *not* stored; they
+    /// travel with the caller (see docs/checkpoints.md for the rationale).
+    pub fn snapshot(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("env_steps", Json::Num(self.env_steps as f64))
+            .set("log_alpha", Json::Num(self.log_alpha as f64))
+            .set("rng", rng_to_json(&self.rng))
+            .set("actor", mlp_to_json(&self.actor))
+            .set("q1", mlp_to_json(&self.q1))
+            .set("q2", mlp_to_json(&self.q2))
+            .set("q1_target", mlp_to_json(&self.q1_target))
+            .set("q2_target", mlp_to_json(&self.q2_target))
+            .set("actor_opt", adam_to_json(&self.actor_opt))
+            .set("q1_opt", adam_to_json(&self.q1_opt))
+            .set("q2_opt", adam_to_json(&self.q2_opt))
+            .set("replay_head", Json::Num(self.replay.head() as f64))
+            .set(
+                "replay",
+                Json::Arr(self.replay.as_slice().iter().map(transition_to_json).collect()),
+            );
+        j
+    }
+
+    /// Rebuild an agent from a [`SacAgent::snapshot`]. `cfg` must be the
+    /// configuration the snapshotted agent ran with (same `hidden`,
+    /// `replay_capacity`, learning rates, ...). Returns `None` when the
+    /// snapshot doesn't match the architecture or contains non-finite
+    /// values.
+    pub fn restore(
+        state_dim: usize,
+        action_dim: usize,
+        cfg: SacConfig,
+        j: &Json,
+    ) -> Option<SacAgent> {
+        let mut agent = SacAgent::new(state_dim, action_dim, cfg);
+        agent.env_steps = j.get("env_steps")?.as_f64()? as usize;
+        agent.log_alpha = j.get("log_alpha")?.as_f64()? as f32;
+        agent.rng = rng_from_json(j.get("rng")?)?;
+        mlp_restore(&mut agent.actor, j.get("actor")?)?;
+        mlp_restore(&mut agent.q1, j.get("q1")?)?;
+        mlp_restore(&mut agent.q2, j.get("q2")?)?;
+        mlp_restore(&mut agent.q1_target, j.get("q1_target")?)?;
+        mlp_restore(&mut agent.q2_target, j.get("q2_target")?)?;
+        adam_restore(&mut agent.actor_opt, j.get("actor_opt")?)?;
+        adam_restore(&mut agent.q1_opt, j.get("q1_opt")?)?;
+        adam_restore(&mut agent.q2_opt, j.get("q2_opt")?)?;
+        let head = j.get("replay_head")?.as_f64()? as usize;
+        let data: Vec<Transition> = j
+            .get("replay")?
+            .as_arr()?
+            .iter()
+            .map(transition_from_json)
+            .collect::<Option<Vec<_>>>()?;
+        if data.len() > agent.cfg.replay_capacity || (head != 0 && head >= data.len()) {
+            return None;
+        }
+        agent.replay = ReplayBuffer::from_parts(agent.cfg.replay_capacity, data, head);
+        Some(agent)
+    }
+}
+
 /// Concatenate two matrices along columns: [B, n1] ++ [B, n2] -> [B, n1+n2].
 pub fn concat_cols(a: &Tensor, b: &Tensor) -> Tensor {
     let rows = a.rows();
@@ -587,6 +803,72 @@ mod tests {
                 "head[{i}]: fd={fd} an={an}"
             );
         }
+    }
+
+    /// A restored agent must be indistinguishable from one that was never
+    /// serialized: identical actions and identical update statistics,
+    /// bit for bit, through the full JSON text round-trip.
+    #[test]
+    fn snapshot_restore_is_bit_identical() {
+        let cfg = SacConfig {
+            hidden: vec![16, 16],
+            warmup_steps: 8,
+            batch_size: 8,
+            updates_per_step: 1,
+            seed: 33,
+            ..SacConfig::default()
+        };
+        let mut a = SacAgent::new(3, 2, cfg.clone());
+        let mut env_rng = Rng::new(4);
+        let mut s = vec![0.1, -0.2, 0.3];
+        for step in 0..40 {
+            let act = a.act(&s);
+            let s2: Vec<f64> = s.iter().map(|v| (v + 0.1 * act[0]).tanh()).collect();
+            a.observe(&s, &act, env_rng.range(-1.0, 1.0), &s2, step % 10 == 9);
+            a.maybe_update();
+            s = s2;
+        }
+
+        let text = a.snapshot().to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let mut b = SacAgent::restore(3, 2, cfg, &parsed).expect("restore failed");
+
+        for step in 0..30 {
+            let (x, y) = (a.act(&s), b.act(&s));
+            for (u, v) in x.iter().zip(&y) {
+                assert_eq!(u.to_bits(), v.to_bits(), "action diverged at step {step}");
+            }
+            let s2: Vec<f64> = s.iter().map(|v| (v + 0.05 * x[0]).tanh()).collect();
+            let r = env_rng.range(-1.0, 1.0);
+            a.observe(&s, &x, r, &s2, false);
+            b.observe(&s, &y, r, &s2, false);
+            let (ua, ub) = (a.maybe_update(), b.maybe_update());
+            assert_eq!(ua.is_some(), ub.is_some());
+            if let (Some(ua), Some(ub)) = (ua, ub) {
+                assert_eq!(ua.q1_loss.to_bits(), ub.q1_loss.to_bits(), "step {step}");
+                assert_eq!(ua.policy_loss.to_bits(), ub.policy_loss.to_bits(), "step {step}");
+                assert_eq!(ua.alpha.to_bits(), ub.alpha.to_bits(), "step {step}");
+            }
+            s = s2;
+        }
+    }
+
+    #[test]
+    fn restore_rejects_architecture_mismatch() {
+        let cfg = SacConfig {
+            hidden: vec![16, 16],
+            ..SacConfig::default()
+        };
+        let agent = SacAgent::new(3, 2, cfg.clone());
+        let snap = agent.snapshot();
+        // Wrong state dimension -> tensor shapes can't match.
+        assert!(SacAgent::restore(4, 2, cfg.clone(), &snap).is_none());
+        // Wrong hidden widths -> tensor shapes can't match.
+        let other = SacConfig {
+            hidden: vec![8, 8],
+            ..cfg
+        };
+        assert!(SacAgent::restore(3, 2, other, &snap).is_none());
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Resume determinism for the multi-seed orchestrator: a search killed
+//! mid-run and resumed from its snapshot must produce a final Pareto
+//! archive (and per-seed episode streams) bit-identical to an
+//! uninterrupted run with the same configuration.
+
+use edcompress::coordinator::orchestrator::{
+    OrchestrationResult, Orchestrator, OrchestratorSpec,
+};
+use edcompress::coordinator::SearchConfig;
+use edcompress::dataflow::Dataflow;
+use edcompress::model::zoo;
+use edcompress::rl::sac::SacConfig;
+use std::path::PathBuf;
+
+fn spec() -> OrchestratorSpec {
+    let mut spec = OrchestratorSpec::new(zoo::lenet5(), 2, 13);
+    spec.dataflows = vec![Dataflow::XY, Dataflow::FXFY];
+    spec.env.max_steps = 6;
+    spec.chunk_episodes = 2;
+    spec.search = SearchConfig {
+        episodes: 6,
+        sac: SacConfig {
+            hidden: vec![24, 24],
+            warmup_steps: 12,
+            batch_size: 12,
+            updates_per_step: 1,
+            ..SacConfig::default()
+        },
+        verbose: false,
+    };
+    spec
+}
+
+fn temp_snapshot(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("edc_orch_resume_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn assert_results_bit_identical(a: &OrchestrationResult, b: &OrchestrationResult) {
+    // Pareto archive: same frontier, bit for bit, in the same order.
+    assert_eq!(a.archive.len(), b.archive.len(), "frontier sizes differ");
+    for (x, y) in a.archive.points().iter().zip(b.archive.points()) {
+        assert_eq!(x.energy.to_bits(), y.energy.to_bits(), "frontier energy differs");
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "frontier accuracy differs");
+        assert_eq!(x.area.to_bits(), y.area.to_bits(), "frontier area differs");
+        assert_eq!(x.seed_index, y.seed_index);
+        assert_eq!(x.episode, y.episode);
+        assert_eq!(x.step, y.step);
+        assert_eq!(x.state, y.state, "frontier (Q, P) state differs");
+    }
+    // Per-seed episode streams: every curve sample identical.
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (oa, ob) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(oa.dataflow, ob.dataflow);
+        assert_eq!(oa.episodes.len(), ob.episodes.len());
+        for (ea, eb) in oa.episodes.iter().zip(&ob.episodes) {
+            assert_eq!(ea.steps, eb.steps, "episode {} lengths differ", ea.episode);
+            assert_eq!(
+                ea.total_reward.to_bits(),
+                eb.total_reward.to_bits(),
+                "episode {} rewards differ",
+                ea.episode
+            );
+            for (x, y) in ea.energy_curve.iter().zip(&eb.energy_curve) {
+                assert_eq!(x.to_bits(), y.to_bits(), "episode {} energy curve differs", ea.episode);
+            }
+        }
+    }
+}
+
+/// The acceptance-criteria test: kill after the first snapshot, resume
+/// from disk, and compare against an uninterrupted run.
+#[test]
+fn resumed_run_matches_uninterrupted_bit_for_bit() {
+    // Uninterrupted reference (snapshots along the way, like a real run).
+    let ref_path = temp_snapshot("uninterrupted.json");
+    let mut uninterrupted = Orchestrator::new(spec());
+    uninterrupted.snapshot_path = Some(ref_path.clone());
+    let expect = uninterrupted.run().expect("uninterrupted run failed");
+
+    // "Killed" run: advance one round (writing its snapshot), then drop
+    // the orchestrator — all in-memory agents and records are lost.
+    let kill_path = temp_snapshot("killed.json");
+    {
+        let mut killed = Orchestrator::new(spec());
+        killed.snapshot_path = Some(kill_path.clone());
+        let done = killed.run_round().expect("first round failed");
+        assert!(!done, "budget too small: run finished before the kill point");
+    }
+
+    // Resume from the on-disk snapshot and finish.
+    let mut resumed = Orchestrator::resume(&kill_path, spec()).expect("resume failed");
+    for slot in &resumed.slots {
+        assert_eq!(slot.episodes_done, 2, "resume lost mid-run progress");
+    }
+    let got = resumed.run().expect("resumed run failed");
+
+    assert_results_bit_identical(&expect, &got);
+    std::fs::remove_file(&ref_path).ok();
+    std::fs::remove_file(&kill_path).ok();
+}
+
+/// Killing at a different point (two rounds in) must converge to the same
+/// final state — the snapshot boundary must not leak into the results.
+#[test]
+fn kill_point_does_not_change_results() {
+    let path_a = temp_snapshot("kill_round1.json");
+    let path_b = temp_snapshot("kill_round2.json");
+
+    let run_with_kill = |path: &PathBuf, rounds: usize| -> OrchestrationResult {
+        {
+            let mut orch = Orchestrator::new(spec());
+            orch.snapshot_path = Some(path.clone());
+            for _ in 0..rounds {
+                assert!(!orch.run_round().unwrap(), "finished before kill point");
+            }
+        }
+        let mut resumed = Orchestrator::resume(path, spec()).expect("resume failed");
+        resumed.run().expect("resumed run failed")
+    };
+
+    let a = run_with_kill(&path_a, 1);
+    let b = run_with_kill(&path_b, 2);
+    assert_results_bit_identical(&a, &b);
+    std::fs::remove_file(&path_a).ok();
+    std::fs::remove_file(&path_b).ok();
+}
