@@ -1,12 +1,19 @@
 //! Micro-benchmarks of the L3 hot paths (EXPERIMENTS.md §Perf):
-//! cost-model evaluation (full, batched, incremental), SAC update step,
-//! GEMM kernel, env step, and — when artifacts exist — the PJRT execute
+//! cost-model evaluation (full, batched, incremental), the fleet-shared
+//! cost cache versus private per-seed caches, SAC update step, GEMM
+//! kernel, env step, and — when artifacts exist — the PJRT execute
 //! round-trip.
 //!
 //! The incremental-engine sections print explicit speedup factors:
 //! `evaluate_incremental` + `CostCache` versus full re-evaluation over a
 //! recorded 32-step `CompressionEnv` episode, and `evaluate_batch` versus
-//! 15 individual `evaluate` calls for `rank_dataflows`.
+//! 15 individual `evaluate` calls for `rank_dataflows`. The fleet section
+//! *asserts* that a 4-seed fleet on one `SharedCostCache` reaches a
+//! higher steady-state hit-rate than 4 private caches.
+//!
+//! Run with `--test` (e.g. `cargo bench --bench perf_hotpaths -- --test`)
+//! for the CI smoke mode: only the shared-cache fleet comparison runs,
+//! with its hit-rate assertion, in a few seconds.
 #[path = "common.rs"]
 mod common;
 use common::{banner, BenchTimer};
@@ -35,6 +42,122 @@ fn episode_trajectory(net: &Network, steps: usize) -> Vec<CompressionState> {
         traj.push(state.clone());
     }
     traj
+}
+
+/// Per-seed trajectories for the fleet benchmark: each seed follows the
+/// shared base episode but deviates on ~25% of its steps, modelling N
+/// searches exploring the same region of the compression space (which is
+/// exactly when fleet-wide cache sharing pays).
+fn fleet_trajectories(net: &Network, steps: usize, seeds: usize) -> Vec<Vec<CompressionState>> {
+    let base = episode_trajectory(net, steps);
+    (0..seeds)
+        .map(|i| {
+            let mut rng = Rng::new(100 + i as u64);
+            base.iter()
+                .map(|s| {
+                    let mut s = s.clone();
+                    if rng.below(4) == 0 {
+                        let slot = rng.below(s.num_layers());
+                        s.q[slot] = (s.q[slot] + rng.range(-1.0, 1.0)).clamp(1.0, 8.0);
+                        s.p[slot] = (s.p[slot] + rng.range(-0.2, 0.2)).clamp(0.02, 1.0);
+                    }
+                    s
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The fleet-wide cache claim: N concurrent seeds over one
+/// `SharedCostCache` must reach a higher steady-state hit-rate than the
+/// same N seeds on private caches, because a miss any seed pays is a hit
+/// for every other seed. Asserted, not just printed.
+fn bench_fleet_shared_vs_private(
+    net: &Network,
+    df: Dataflow,
+    cfg: &EnergyConfig,
+    seeds: usize,
+    steps: usize,
+) {
+    let trajs = fleet_trajectories(net, steps, seeds);
+    let passes = 2;
+
+    // Private fleet: one evaluator+cache per seed, all seeds concurrent.
+    let t0 = std::time::Instant::now();
+    let (mut private_hits, mut private_misses) = (0u64, 0u64);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = trajs
+            .iter()
+            .map(|traj| {
+                scope.spawn(move || {
+                    let mut ev = cache::IncrementalEvaluator::new(net, df, cfg);
+                    for _ in 0..passes {
+                        for s in traj {
+                            ev.evaluate(net, s, cfg);
+                        }
+                    }
+                    (ev.hits(), ev.misses())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (hits, misses) = h.join().expect("private fleet worker died");
+            private_hits += hits;
+            private_misses += misses;
+        }
+    });
+    let t_private = t0.elapsed();
+
+    // Shared fleet: same trajectories, one cache for everyone.
+    let shared = cache::SharedCostCache::new(net, cfg);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for traj in &trajs {
+            let shared = &shared;
+            scope.spawn(move || {
+                let mut ev = cache::IncrementalEvaluator::with_shared(net, df, cfg, shared);
+                for _ in 0..passes {
+                    for s in traj {
+                        ev.evaluate(net, s, cfg);
+                    }
+                }
+            });
+        }
+    });
+    let t_shared = t0.elapsed();
+
+    // Rates are computed from *deterministic* quantities so the CI gate
+    // cannot flake on thread scheduling: total lookups (hits+misses —
+    // every lookup increments exactly one counter) and, for the shared
+    // fleet, the number of distinct cached keys (`len()`). The raw miss
+    // counter would also charge racing first-fill double-computes, which
+    // depend on how the threads interleave.
+    let private_lookups = private_hits + private_misses;
+    let private_rate = private_hits as f64 / private_lookups.max(1) as f64;
+    let shared_lookups = shared.hits() + shared.misses();
+    let shared_cold = shared.len() as u64;
+    let shared_rate = 1.0 - shared_cold as f64 / shared_lookups.max(1) as f64;
+    println!(
+        "  fleet of {seeds} seeds on {} {} ({} steps x {passes} passes): hit-rate \
+         shared {:.3} ({} distinct keys, {} raw misses) vs private {:.3} ({} misses), \
+         wall {:?} vs {:?}",
+        net.name,
+        df.label(),
+        steps,
+        shared_rate,
+        shared_cold,
+        shared.misses(),
+        private_rate,
+        private_misses,
+        t_shared,
+        t_private,
+    );
+    // Acceptance gate: fleet-wide steady-state hit-rate must beat private
+    // caches by a clear margin (cross-seed dedup of the miss set).
+    assert!(
+        shared_rate >= private_rate + 0.05,
+        "shared-cache fleet hit-rate {shared_rate:.3} not clearly above private {private_rate:.3}"
+    );
 }
 
 fn bench_incremental_vs_full(net: &Network, df: Dataflow, cfg: &EnergyConfig, min_speedup: f64) {
@@ -70,8 +193,8 @@ fn bench_incremental_vs_full(net: &Network, df: Dataflow, cfg: &EnergyConfig, mi
         "  -> incremental speedup {:.1}x over full re-evaluation ({} steps, cache: {} hits / {} misses)",
         speedup,
         steps,
-        ev.cache().hits(),
-        ev.cache().misses()
+        ev.hits(),
+        ev.misses()
     );
     // Acceptance gate: >= 5x on the steady-state episode for the
     // deep-network case (vgg16_cifar, where per-layer work dominates);
@@ -114,8 +237,17 @@ fn bench_batch_vs_individual(net: &Network, cfg: &EnergyConfig) {
 }
 
 fn main() {
-    banner("L3 hot paths");
     let cfg = EnergyConfig::default();
+    // `--test` (CI smoke mode): only the asserted shared-cache fleet
+    // comparison, small enough for every PR.
+    if std::env::args().any(|a| a == "--test") {
+        banner("fleet-shared cache (smoke)");
+        bench_fleet_shared_vs_private(&zoo::vgg16_cifar(), Dataflow::XY, &cfg, 4, 16);
+        println!("bench smoke OK");
+        return;
+    }
+
+    banner("L3 hot paths");
 
     // 1. Cost-model evaluation (called on every RL step in sweeps).
     for net in [zoo::lenet5(), zoo::vgg16_cifar(), zoo::mobilenet_v1()] {
@@ -131,7 +263,11 @@ fn main() {
     bench_incremental_vs_full(&zoo::lenet5(), Dataflow::XY, &cfg, 3.0);
     bench_incremental_vs_full(&zoo::vgg16_cifar(), Dataflow::CICO, &cfg, 5.0);
 
-    // 3. All-15-dataflow ranking: batched+cached vs individual.
+    // 3. Fleet-wide shared cache vs private per-seed caches (asserted).
+    banner("fleet-shared cache");
+    bench_fleet_shared_vs_private(&zoo::vgg16_cifar(), Dataflow::XY, &cfg, 4, 32);
+
+    // 4. All-15-dataflow ranking: batched+cached vs individual.
     banner("dataflow ranking");
     bench_batch_vs_individual(&zoo::vgg16_cifar(), &cfg);
     {
@@ -144,7 +280,7 @@ fn main() {
         t.report();
     }
 
-    // 4. GEMM kernel (SAC's inner loop).
+    // 5. GEMM kernel (SAC's inner loop).
     banner("RL substrate");
     {
         let mut rng = Rng::new(1);
@@ -155,7 +291,7 @@ fn main() {
         t.report();
     }
 
-    // 5. SAC update step at LeNet env dimensions.
+    // 6. SAC update step at LeNet env dimensions.
     {
         let net = zoo::lenet5();
         let oracle = SurrogateOracle::new(&net, 0);
@@ -191,7 +327,7 @@ fn main() {
         t.report();
     }
 
-    // 6. PJRT execute round-trip (skipped without artifacts).
+    // 7. PJRT execute round-trip (skipped without artifacts).
     if edcompress::runtime::artifacts_available("lenet5") {
         use edcompress::runtime::{literal, Runtime};
         let rt = Runtime::cpu().expect("pjrt");

@@ -114,6 +114,19 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Do two paths name the same snapshot file? Textual equality first,
+/// then canonicalization when both resolve (the target may not exist
+/// yet, in which case only the textual check applies).
+fn same_snapshot_file(a: &Path, b: &Path) -> bool {
+    if a == b {
+        return true;
+    }
+    match (a.canonicalize(), b.canonicalize()) {
+        (Ok(x), Ok(y)) => x == y,
+        _ => false,
+    }
+}
+
 /// Parse `paper|all|X:Y,CI:CO,...` into a dataflow list (shared by the
 /// `sweep` and `search` commands).
 fn parse_dataflows(arg: &str) -> Result<Vec<Dataflow>> {
@@ -135,19 +148,40 @@ fn parse_dataflows(arg: &str) -> Result<Vec<Dataflow>> {
 
 /// Multi-seed orchestrated search with resumable snapshots: runs N
 /// independent SAC searches concurrently (distinct seeds, dataflow
-/// priors cycled across them), merges their episode streams into a
-/// Pareto archive over (energy, accuracy, area) and snapshots the whole
-/// fleet after every round so a killed run resumes bit-identically
-/// (`--resume snapshot.json`).
+/// priors cycled across them) over one fleet-shared cost cache, merges
+/// their episode streams into a Pareto archive over (energy, accuracy,
+/// area) and snapshots the whole fleet after every round so a killed run
+/// resumes bit-identically (`--resume snapshot.json`). A *new* run can
+/// instead warm-start from a previous run's snapshot
+/// (`--warm-start prev.json`): its archive, replay seeding, dataflow
+/// priors and cache pre-population carry over (see
+/// `coordinator::orchestrator::WarmStart`).
 fn cmd_search(args: &Args) -> Result<()> {
-    use crate::coordinator::orchestrator::{self, Orchestrator, OrchestratorSpec};
+    use crate::coordinator::orchestrator::{self, Orchestrator, OrchestratorSpec, WarmStart};
     use std::path::PathBuf;
 
     let resume = args.get("resume").map(|s| s.to_string());
+    let warm_path = args.get("warm-start").map(|s| s.to_string());
+    if resume.is_some() && warm_path.is_some() {
+        bail!(
+            "--resume and --warm-start are mutually exclusive: --resume continues \
+             the same run bit-identically, --warm-start begins a new one seeded \
+             from an old run's results"
+        );
+    }
+    let warm = match &warm_path {
+        Some(p) => Some(WarmStart::load(Path::new(p))?),
+        None => None,
+    };
+
     // Flag values first; on resume the snapshot header wins for the
     // run-shaping scalars, so the interrupted run's shape is reproduced
-    // without re-passing every flag.
-    let mut name = args.str_or("net", "lenet5");
+    // without re-passing every flag. A warm start only adopts the
+    // network name (when --net is absent): everything else is a new run.
+    let mut name = match (&warm, args.get("net")) {
+        (Some(w), None) => w.network.clone(),
+        _ => args.str_or("net", "lenet5"),
+    };
     let mut seeds = args.usize_or("seeds", 4)?;
     let mut base_seed = args.u64_or("seed", 0)?;
     let mut episodes = args.usize_or("episodes", 8)?;
@@ -159,9 +193,15 @@ fn cmd_search(args: &Args) -> Result<()> {
         Some(path) => {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading snapshot {path}"))?;
-            let j = crate::util::json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
-            let h = orchestrator::read_header(&j)
-                .ok_or_else(|| anyhow!("{path} is not an orchestration snapshot"))?;
+            let j = crate::util::json::parse(&text).map_err(|e| {
+                anyhow!("snapshot {path} is not valid JSON (truncated or corrupt file?): {e}")
+            })?;
+            let h = orchestrator::read_header(&j).ok_or_else(|| {
+                anyhow!(
+                    "{path} is not an orchestration snapshot (expected kind \
+                     \"orchestration\" with a complete header; `edc search` writes one)"
+                )
+            })?;
             name = h.network;
             seeds = h.seeds;
             base_seed = h.base_seed;
@@ -187,19 +227,57 @@ fn cmd_search(args: &Args) -> Result<()> {
     spec.search.episodes = episodes;
     spec.chunk_episodes = chunk;
 
-    let mut orch = match &snapshot_json {
-        Some(j) => Orchestrator::from_snapshot(j, spec)?,
-        None => Orchestrator::new(spec),
-    };
     // Always resumable: an explicit --snapshot wins, a resumed run keeps
-    // updating its own file, and a fresh run defaults under reports/.
-    orch.snapshot_path = Some(
-        args.get("snapshot")
-            .map(PathBuf::from)
-            .or_else(|| resume.as_ref().map(PathBuf::from))
-            .unwrap_or_else(|| PathBuf::from(format!("reports/search_{name}.json"))),
-    );
+    // updating its own file, and a fresh run defaults under reports/ —
+    // but a warm-started run must never write over the snapshot it was
+    // seeded from (that would destroy the previous run's resumable
+    // state): an explicit --snapshot equal to the source is refused, and
+    // a colliding default (chained warm starts) picks the next name.
+    let snapshot_path = if let Some(s) = args.get("snapshot") {
+        let p = PathBuf::from(s);
+        if let Some(wp) = &warm_path {
+            if same_snapshot_file(&p, Path::new(wp)) {
+                bail!(
+                    "--snapshot {s} is the same file as the --warm-start source; \
+                     writing the new run's snapshot there would destroy the run \
+                     being seeded from — choose a different snapshot path"
+                );
+            }
+        }
+        p
+    } else if let Some(r) = &resume {
+        PathBuf::from(r)
+    } else {
+        let mut p = PathBuf::from(if warm.is_some() {
+            format!("reports/search_{name}_warm.json")
+        } else {
+            format!("reports/search_{name}.json")
+        });
+        if let Some(wp) = &warm_path {
+            if same_snapshot_file(&p, Path::new(wp)) {
+                p = PathBuf::from(format!("reports/search_{name}_warm2.json"));
+            }
+        }
+        p
+    };
 
+    let mut orch = match (&snapshot_json, &warm) {
+        (Some(j), _) => Orchestrator::from_snapshot(j, spec)
+            .with_context(|| format!("resuming {}", resume.as_deref().unwrap_or("snapshot")))?,
+        (None, Some(w)) => Orchestrator::with_warm_start(spec, w)?,
+        (None, None) => Orchestrator::new(spec),
+    };
+    orch.snapshot_path = Some(snapshot_path);
+
+    if let (Some(w), Some(p)) = (&warm, &warm_path) {
+        println!(
+            "warm-started from {p}: {} frontier points, {} cache-seed states, \
+             priors reordered to {:?}",
+            w.points.len(),
+            w.states.len(),
+            orch.spec.dataflows.iter().map(|d| d.label()).collect::<Vec<_>>(),
+        );
+    }
     println!(
         "orchestrating {name}: {seeds} seeds x {episodes} episodes on {} workers{}",
         sweep::worker_count(seeds),
@@ -458,6 +536,74 @@ mod tests {
         // Bad scalars are CLI errors, not library panics.
         assert!(dispatch(&argv(&["search", "--seeds", "0"])).is_err());
         assert!(dispatch(&argv(&["search", "--chunk", "0"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn search_command_warm_starts_from_previous_snapshot() {
+        let dir = std::env::temp_dir().join("edc_cli_warm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let src = dir.join("src_run.json");
+        let src_s = src.to_str().unwrap();
+        dispatch(&argv(&[
+            "search", "--net", "lenet5", "--seeds", "2", "--episodes", "2", "--steps", "6",
+            "--chunk", "1", "--dataflows", "X:Y,FX:FY", "--snapshot", src_s,
+        ]))
+        .unwrap();
+        // Warm-started run: adopts the network from the snapshot, writes
+        // its own snapshot, leaves the source intact.
+        let warm_snap = dir.join("warm_run.json");
+        let src_bytes = std::fs::read(&src).unwrap();
+        dispatch(&argv(&[
+            "search", "--warm-start", src_s, "--seeds", "2", "--episodes", "1", "--steps", "4",
+            "--chunk", "1", "--dataflows", "X:Y", "--snapshot", warm_snap.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(warm_snap.exists(), "warm-started run wrote no snapshot");
+        assert_eq!(std::fs::read(&src).unwrap(), src_bytes, "source snapshot was clobbered");
+        // --resume and --warm-start together are rejected.
+        assert!(dispatch(&argv(&["search", "--resume", src_s, "--warm-start", src_s])).is_err());
+        // Writing the new snapshot over the warm-start source is refused
+        // (it would destroy the run being seeded from).
+        assert!(
+            dispatch(&argv(&["search", "--warm-start", src_s, "--snapshot", src_s])).is_err()
+        );
+        assert_eq!(std::fs::read(&src).unwrap(), src_bytes, "refused run still wrote the file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_and_warm_start_fail_readably_on_corrupt_snapshots() {
+        let dir = std::env::temp_dir().join("edc_cli_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let snap = dir.join("good.json");
+        let snap_s = snap.to_str().unwrap();
+        dispatch(&argv(&[
+            "search", "--net", "lenet5", "--seeds", "2", "--episodes", "1", "--steps", "4",
+            "--chunk", "1", "--dataflows", "X:Y", "--snapshot", snap_s,
+        ]))
+        .unwrap();
+
+        // Mid-file truncation: a readable error naming the file, not a panic.
+        let full = std::fs::read_to_string(&snap).unwrap();
+        let trunc = dir.join("truncated.json");
+        std::fs::write(&trunc, &full[..full.len() / 2]).unwrap();
+        let trunc_s = trunc.to_str().unwrap();
+        let err = dispatch(&argv(&["search", "--resume", trunc_s])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated.json"), "error doesn't name the file: {msg}");
+        let err = dispatch(&argv(&["search", "--warm-start", trunc_s])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated.json"), "error doesn't name the file: {msg}");
+
+        // Schema mismatch: a non-orchestration JSON file is refused.
+        let outcome = dir.join("outcome.json");
+        std::fs::write(&outcome, r#"{"version": 1, "kind": "outcome", "episodes": []}"#).unwrap();
+        assert!(dispatch(&argv(&["search", "--resume", outcome.to_str().unwrap()])).is_err());
+        assert!(dispatch(&argv(&["search", "--warm-start", outcome.to_str().unwrap()])).is_err());
+
+        // Missing file: readable error too.
+        assert!(dispatch(&argv(&["search", "--warm-start", "no/such/file.json"])).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

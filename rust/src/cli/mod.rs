@@ -3,6 +3,7 @@
 //! ```text
 //! edc compress --net lenet5 --dataflow X:Y [--oracle surrogate|pjrt] ...
 //! edc search  --net lenet5 --seeds 4 [--resume run.json] [--snapshot run.json]
+//!             [--warm-start prev_run.json]
 //! edc sweep   --nets lenet5,vgg16_cifar [--dataflows paper|all|X:Y,..]
 //! edc table   --id 2|3|4   [--episodes N] [--seed S]
 //! edc figure  --id 1|4|5|6|7 [--episodes N] [--seed S]
@@ -41,10 +42,11 @@ pub fn usage() -> &'static str {
        compress   run the EDCompress search (--net, --dataflow, --oracle,\n\
                   --episodes, --steps, --seed, --mode, --lambda, --gamma,\n\
                   --out result.json)\n\
-       search     multi-seed orchestrated search with a Pareto archive and\n\
-                  resumable snapshots (--net, --seeds, --episodes, --steps,\n\
-                  --seed, --dataflows, --chunk, --snapshot run.json,\n\
-                  --resume run.json)\n\
+       search     multi-seed orchestrated search over a fleet-shared cost\n\
+                  cache, with a Pareto archive and resumable snapshots\n\
+                  (--net, --seeds, --episodes, --steps, --seed, --dataflows,\n\
+                  --chunk, --snapshot run.json, --resume run.json,\n\
+                  --warm-start prev_run.json)\n\
        sweep      search many (network x dataflow) pairs on a bounded\n\
                   worker pool (--nets a,b,c --dataflows paper|all|X:Y,..,\n\
                   --episodes, --steps, --seed)\n\

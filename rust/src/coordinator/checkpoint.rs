@@ -9,9 +9,11 @@
 //!
 //! - **outcome** (`version` 1): one [`SearchOutcome`], written by
 //!   `edc compress --out` and [`save`].
-//! - **orchestration** (`version` 2): a resumable multi-seed snapshot,
-//!   written by [`orchestrator::Orchestrator`](super::orchestrator) —
-//!   seed slots, serialized agents and the Pareto archive.
+//! - **orchestration** (`version` 3; v2 still readable): a resumable
+//!   multi-seed snapshot, written by
+//!   [`orchestrator::Orchestrator`](super::orchestrator) — seed slots,
+//!   serialized agents, the Pareto archive and the cache-seed payload
+//!   that `edc search --warm-start` consumes.
 //!
 //! The full schemas and the forward-compatibility rules are documented
 //! in `docs/checkpoints.md` at the repository root.
@@ -68,12 +70,29 @@ pub(crate) fn best_to_json(b: &BestPoint) -> Json {
     j
 }
 
+/// `{"q": [...], "p": [...]}` codec for a [`CompressionState`] — shared
+/// by best points, archive points and the v3 cache-seed payload.
+pub(crate) fn state_to_json(s: &CompressionState) -> Json {
+    let mut j = Json::obj();
+    j.set("q", Json::from_f64s(&s.q)).set("p", Json::from_f64s(&s.p));
+    j
+}
+
+/// Length-checked decode: mismatched `q`/`p` arrays in a corrupt file
+/// return `None` (a readable load error upstream) instead of tripping
+/// `CompressionState::from_parts`' assert and panicking the CLI.
+pub(crate) fn state_from_json(j: &Json) -> Option<CompressionState> {
+    let q = j.get("q")?.to_f64s()?;
+    let p = j.get("p")?.to_f64s()?;
+    if q.len() != p.len() {
+        return None;
+    }
+    Some(CompressionState::from_parts(q, p))
+}
+
 pub(crate) fn best_from_json(j: &Json) -> Option<BestPoint> {
     Some(BestPoint {
-        state: CompressionState::from_parts(
-            j.get("q")?.to_f64s()?,
-            j.get("p")?.to_f64s()?,
-        ),
+        state: state_from_json(j)?,
         energy: j.num_or("energy", 0.0),
         area: j.num_or("area", 0.0),
         accuracy: j.num_or("accuracy", 0.0),
@@ -187,6 +206,22 @@ mod tests {
             _ => unreachable!(),
         };
         assert!(outcome_from_json(&legacy).is_some());
+    }
+
+    #[test]
+    fn mismatched_qp_lengths_fail_cleanly_instead_of_panicking() {
+        let text = r#"{"q": [4.0, 3.0], "p": [0.5], "energy": 1.0, "area": 0.4, "accuracy": 0.9, "step": 1}"#;
+        let j = json::parse(text).unwrap();
+        assert!(best_from_json(&j).is_none());
+        assert!(state_from_json(&j).is_none());
+    }
+
+    #[test]
+    fn state_codec_roundtrips() {
+        let s = CompressionState::from_parts(vec![4.0, 3.5], vec![0.5, 0.25]);
+        let j = state_to_json(&s);
+        let back = state_from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, s);
     }
 
     #[test]

@@ -11,13 +11,23 @@
 //!   own deterministic agent and oracle streams derived via
 //!   [`seed_stream`], optionally under distinct dataflow priors —
 //!   concurrently over the same bounded worker pool the sweeps use.
+//! - All seeds share one fleet-wide [`SharedCostCache`], so a layer cost
+//!   any seed computes is a hit for every other seed (bit-identical to
+//!   private caches; see `energy::cache` and `tests/shared_cache.rs`).
 //! - Every admissible best point streams into a [`ParetoArchive`], a
 //!   NaN-safe non-dominated set over (energy ↓, accuracy ↑, area ↓).
 //! - Between rounds of `chunk_episodes` episodes per seed, the whole
 //!   orchestration — per-seed episode records, full agent state
-//!   ([`SacAgent::snapshot`]) and the archive — is snapshotted to disk,
-//!   so a killed run resumes *bit-identically* to an uninterrupted one
-//!   (asserted by `tests/orchestrator_resume.rs`).
+//!   ([`SacAgent::snapshot`]), the archive and the visited-state
+//!   cache-seed payload — is snapshotted to disk, so a killed run
+//!   resumes *bit-identically* to an uninterrupted one (asserted by
+//!   `tests/orchestrator_resume.rs`).
+//! - A *new* run can [`warm-start`](Orchestrator::with_warm_start) from
+//!   a previous run's snapshot: the old Pareto archive seeds the new
+//!   archive, its frontier dataflows are promoted in the priors, each
+//!   agent's replay buffer is pre-seeded with transitions toward the old
+//!   frontier, and the shared cache is pre-populated from the visited
+//!   states.
 //!
 //! The snapshot file format is documented in `docs/checkpoints.md`.
 //!
@@ -31,23 +41,36 @@
 //! serialize/deserialize cycle (f32/f64 survive the JSON round-trip
 //! exactly; see `rl::sac`'s checkpoint serialization notes).
 
-use super::checkpoint::{episode_from_json, episode_to_json};
+use super::checkpoint::{episode_from_json, episode_to_json, state_from_json, state_to_json};
 use super::sweep::run_pool;
 use super::{fold_best, Coordinator, EpisodeRecord, SearchConfig, SearchOutcome};
-use crate::compress::CompressionState;
+use crate::compress::{CompressionLimits, CompressionState};
 use crate::dataflow::Dataflow;
+use crate::energy::cache::{SharedCostCache, SlotKey};
 use crate::energy::EnergyConfig;
 use crate::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
 use crate::model::Network;
 use crate::rl::sac::SacAgent;
 use crate::util::json::{self, Json};
 use crate::util::rng::seed_stream;
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::cmp::Ordering;
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 
-/// Schema version written into orchestration snapshot files.
-pub const ORCHESTRATION_VERSION: f64 = 2.0;
+/// Schema version written into orchestration snapshot files. v3 adds the
+/// `cache_seed` visited-state payload; v2 files (no payload) still load.
+pub const ORCHESTRATION_VERSION: f64 = 3.0;
+
+/// Oldest snapshot schema this build still reads.
+pub const MIN_READ_VERSION: f64 = 2.0;
+
+/// Bound on the snapshotted visited-state list: enough to re-warm a
+/// fleet cache without letting snapshots grow with run length.
+const CACHE_SEED_CAP: usize = 256;
+
+/// Archive points (per seed) turned into warm-start replay transitions.
+const WARM_REPLAY_POINTS: usize = 32;
 
 // ---------- Pareto archive ----------
 
@@ -172,6 +195,11 @@ pub struct OrchestratorSpec {
     /// Episodes each seed advances between snapshots (the checkpoint
     /// granularity; also the unit of work handed to the pool).
     pub chunk_episodes: usize,
+    /// Share one [`SharedCostCache`] across all seeds (default). Results
+    /// are bit-identical either way (pinned by `tests/shared_cache.rs`),
+    /// so this knob exists to benchmark/bisect against private caches and
+    /// is deliberately *not* part of the resume fingerprint.
+    pub shared_cache: bool,
 }
 
 impl OrchestratorSpec {
@@ -185,13 +213,15 @@ impl OrchestratorSpec {
             energy: EnergyConfig::default(),
             search: SearchConfig::default(),
             chunk_episodes: 4,
+            shared_cache: true,
         }
     }
 
     /// Fingerprint of everything that shapes the floating-point stream of
     /// the run. A snapshot stores this and `resume` refuses a spec whose
     /// fingerprint differs — resuming under changed hyper-parameters
-    /// cannot reproduce the interrupted run.
+    /// cannot reproduce the interrupted run. (`shared_cache` is excluded:
+    /// it cannot change the stream.)
     fn fingerprint(&self) -> u64 {
         let labels: Vec<String> = self.dataflows.iter().map(|d| d.label()).collect();
         fnv1a(&format!(
@@ -256,6 +286,15 @@ pub struct Orchestrator {
     /// When set, [`run_round`](Orchestrator::run_round) snapshots here
     /// after merging each round (atomic tmp-file + rename).
     pub snapshot_path: Option<PathBuf>,
+    /// Fleet-wide layer-cost cache every seed's evaluator borrows
+    /// (`None` when `spec.shared_cache` is off: private per-seed caches).
+    pub shared_cache: Option<SharedCostCache>,
+    /// Deduped (Q, P) states the fleet visited (bounded by
+    /// `CACHE_SEED_CAP`); snapshotted as the v3 cache-seed payload so
+    /// the next run — or this one after a resume — can pre-populate its
+    /// shared cache.
+    cache_seed: Vec<CompressionState>,
+    cache_seed_keys: HashSet<Vec<SlotKey>>,
 }
 
 struct ChunkJob {
@@ -270,6 +309,7 @@ struct ChunkJob {
     oracle_token: u64,
     start_episode: usize,
     count: usize,
+    shared: Option<SharedCostCache>,
 }
 
 struct ChunkOut {
@@ -280,19 +320,39 @@ struct ChunkOut {
 
 /// Advance one seed by `count` episodes. Rebuilds the environment from
 /// scratch and realigns the oracle stream, so the result is independent
-/// of which worker runs it and of previous chunk boundaries.
+/// of which worker runs it and of previous chunk boundaries (the shared
+/// cache only memoizes pure functions, so it is scheduling-neutral too).
 fn run_chunk(job: ChunkJob) -> ChunkOut {
-    let oracle = SurrogateOracle::new(&job.net, job.oracle_seed);
-    let env = CompressionEnv::new(job.net, job.df, Box::new(oracle), job.env, job.energy);
-    let mut coord = match job.agent {
-        Some(agent) => Coordinator::with_agent(env, agent, job.search),
-        None => Coordinator::new(env, job.search),
+    let ChunkJob {
+        net,
+        df,
+        env,
+        energy,
+        search,
+        agent,
+        oracle_seed,
+        oracle_token,
+        start_episode,
+        count,
+        shared,
+        slot: _,
+    } = job;
+    let oracle = SurrogateOracle::new(&net, oracle_seed);
+    let env = match &shared {
+        Some(cache) => {
+            CompressionEnv::with_shared_cache(net, df, Box::new(oracle), env, energy, cache)
+        }
+        None => CompressionEnv::new(net, df, Box::new(oracle), env, energy),
     };
-    if job.oracle_token != 0 {
-        coord.env.restore_oracle_state(job.oracle_token);
+    let mut coord = match agent {
+        Some(agent) => Coordinator::with_agent(env, agent, search),
+        None => Coordinator::new(env, search),
+    };
+    if oracle_token != 0 {
+        coord.env.restore_oracle_state(oracle_token);
     }
-    let mut records = Vec::with_capacity(job.count);
-    for ep in job.start_episode..job.start_episode + job.count {
+    let mut records = Vec::with_capacity(count);
+    for ep in start_episode..start_episode + count {
         records.push(coord.run_episode(ep));
     }
     let oracle_token = coord.env.oracle_state_token();
@@ -322,11 +382,47 @@ impl Orchestrator {
                 agent: None,
             })
             .collect();
+        let shared_cache = if spec.shared_cache {
+            Some(SharedCostCache::new(&spec.net, &spec.energy))
+        } else {
+            None
+        };
         Orchestrator {
             spec,
             slots,
             archive: ParetoArchive::new(),
             snapshot_path: None,
+            shared_cache,
+            cache_seed: Vec::new(),
+            cache_seed_keys: HashSet::new(),
+        }
+    }
+
+    /// Record a visited (Q, P) state in the bounded cache-seed list,
+    /// deduped by its bucketed cache-key signature (two states with the
+    /// same signature hit the exact same cache entries).
+    fn note_visited(&mut self, state: &CompressionState) {
+        if self.cache_seed.len() >= CACHE_SEED_CAP {
+            return;
+        }
+        let sig: Vec<SlotKey> = (0..state.num_layers()).map(|s| SlotKey::of(state, s)).collect();
+        if self.cache_seed_keys.insert(sig) {
+            self.cache_seed.push(state.clone());
+        }
+    }
+
+    /// The snapshotted visited-state list (the v3 cache-seed payload).
+    pub fn cache_seed(&self) -> &[CompressionState] {
+        &self.cache_seed
+    }
+
+    /// Pre-populate the fleet cache from every recorded visited state
+    /// under every dataflow prior. No-op with private caches.
+    fn prewarm_shared_cache(&self) {
+        if let Some(cache) = &self.shared_cache {
+            for state in &self.cache_seed {
+                cache.prewarm(&self.spec.net, &self.spec.energy, state, &self.spec.dataflows);
+            }
         }
     }
 
@@ -364,6 +460,7 @@ impl Orchestrator {
                 oracle_token: slot.oracle_token,
                 start_episode: slot.episodes_done,
                 count,
+                shared: self.shared_cache.clone(),
             });
         }
         if jobs.is_empty() {
@@ -377,6 +474,7 @@ impl Orchestrator {
                 Ok(chunk) => {
                     for rec in &chunk.records {
                         if let Some(b) = &rec.best {
+                            self.note_visited(&b.state);
                             self.archive.insert(ParetoPoint {
                                 seed_index,
                                 dataflow: self.slots[slot_idx].dataflow.label(),
@@ -453,7 +551,7 @@ impl Orchestrator {
 
     // ---------- snapshot / resume ----------
 
-    /// Serialize the full orchestration state (schema v2; see
+    /// Serialize the full orchestration state (schema v3; see
     /// `docs/checkpoints.md`).
     pub fn snapshot_to_json(&self) -> Json {
         let mut j = Json::obj();
@@ -480,6 +578,10 @@ impl Orchestrator {
             .set(
                 "archive",
                 Json::Arr(self.archive.points().iter().map(point_to_json).collect()),
+            )
+            .set(
+                "cache_seed",
+                Json::Arr(self.cache_seed.iter().map(state_to_json).collect()),
             );
         j
     }
@@ -520,8 +622,9 @@ impl Orchestrator {
         );
         let version = j.num_or("version", 0.0);
         ensure!(
-            version == ORCHESTRATION_VERSION,
-            "unsupported snapshot version {version} (this build reads v{ORCHESTRATION_VERSION})"
+            (MIN_READ_VERSION..=ORCHESTRATION_VERSION).contains(&version),
+            "unsupported snapshot version {version} (this build reads \
+             v{MIN_READ_VERSION}..v{ORCHESTRATION_VERSION})"
         );
         ensure!(
             j.str_or("network", "") == spec.net.name,
@@ -620,7 +723,229 @@ impl Orchestrator {
                 orch.archive.insert(p);
             }
         }
+        // v3: visited-state payload — restore it (so the next snapshot
+        // keeps carrying it) and re-warm the fleet cache, which a resume
+        // otherwise starts cold. Purely a performance payload: values it
+        // pre-computes are bitwise what the run would compute anyway.
+        if let Some(states) = j.get("cache_seed").and_then(|a| a.as_arr()) {
+            let want = orch.spec.net.num_compute_layers();
+            for sj in states {
+                let s = state_from_json(sj)
+                    .ok_or_else(|| anyhow!("malformed cache-seed state in snapshot"))?;
+                ensure!(
+                    s.num_layers() == want,
+                    "cache-seed state has {} layers, network has {want}",
+                    s.num_layers()
+                );
+                orch.note_visited(&s);
+            }
+            orch.prewarm_shared_cache();
+        }
         Ok(orch)
+    }
+}
+
+// ---------- cross-run warm start ----------
+
+/// Payload a *new* orchestration extracts from a *previous* run's
+/// snapshot (schema v2 or v3): the old Pareto archive plus the
+/// visited-state cache-seed list. Unlike resume, warm-starting imposes no
+/// fingerprint match — the new run may use different seeds, budgets or
+/// priors; only the network must agree.
+pub struct WarmStart {
+    pub network: String,
+    /// The previous run's Pareto frontier, in its stored (energy-sorted)
+    /// order.
+    pub points: Vec<ParetoPoint>,
+    /// Visited states for cache pre-population (v3 `cache_seed`; derived
+    /// from the archive for v2 files, which carry no payload).
+    pub states: Vec<CompressionState>,
+}
+
+impl WarmStart {
+    /// Read a warm-start payload from a snapshot file, with readable
+    /// errors for missing, truncated or schema-mismatched files.
+    pub fn load(path: &Path) -> Result<WarmStart> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading warm-start snapshot {}", path.display()))?;
+        let j = json::parse(&text).map_err(|e| {
+            anyhow!(
+                "warm-start snapshot {} is not valid JSON (truncated or corrupt file?): {e}",
+                path.display()
+            )
+        })?;
+        WarmStart::from_json(&j).with_context(|| format!("warm-start snapshot {}", path.display()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<WarmStart> {
+        ensure!(
+            j.str_or("kind", "") == "orchestration",
+            "not an orchestration snapshot (kind = {:?}; `edc search` writes one)",
+            j.str_or("kind", "<missing>")
+        );
+        let version = j.num_or("version", 0.0);
+        ensure!(
+            (MIN_READ_VERSION..=ORCHESTRATION_VERSION).contains(&version),
+            "unsupported snapshot version {version} (this build reads \
+             v{MIN_READ_VERSION}..v{ORCHESTRATION_VERSION})"
+        );
+        let network = j.str_or("network", "");
+        ensure!(!network.is_empty(), "snapshot missing its network name");
+        let mut points = Vec::new();
+        if let Some(arr) = j.get("archive").and_then(|a| a.as_arr()) {
+            for pj in arr {
+                points.push(
+                    point_from_json(pj)
+                        .ok_or_else(|| anyhow!("malformed archive point in snapshot"))?,
+                );
+            }
+        }
+        let mut states = Vec::new();
+        if let Some(arr) = j.get("cache_seed").and_then(|a| a.as_arr()) {
+            for sj in arr {
+                states.push(
+                    state_from_json(sj)
+                        .ok_or_else(|| anyhow!("malformed cache-seed state in snapshot"))?,
+                );
+            }
+        }
+        if states.is_empty() {
+            states = points.iter().map(|p| p.state.clone()).collect();
+        }
+        Ok(WarmStart {
+            network,
+            points,
+            states,
+        })
+    }
+
+    /// Reorder dataflow priors so the ones that actually produced
+    /// frontier points in the previous run come first (by frontier count
+    /// descending; stable, so ties keep the caller's order and a run
+    /// without a frontier keeps its priors unchanged).
+    pub fn reorder_priors(&self, dataflows: Vec<Dataflow>) -> Vec<Dataflow> {
+        let mut counted: Vec<(usize, Dataflow)> = dataflows
+            .into_iter()
+            .map(|d| {
+                let label = d.label();
+                (self.points.iter().filter(|p| p.dataflow == label).count(), d)
+            })
+            .collect();
+        counted.sort_by(|a, b| b.0.cmp(&a.0));
+        counted.into_iter().map(|(_, d)| d).collect()
+    }
+}
+
+/// Raw `[-1, 1]` action whose step-0 application moves `from` as far
+/// toward `to` as one move allows (the Eq. 1 inverse at `gamma^0 = 1`).
+fn action_toward(
+    from: &CompressionState,
+    to: &CompressionState,
+    lim: &CompressionLimits,
+) -> Vec<f64> {
+    let l = from.num_layers();
+    let mut action = vec![0.0; 2 * l];
+    for i in 0..l {
+        action[i] = ((to.q[i] - from.q[i]) / lim.dq_max).clamp(-1.0, 1.0);
+        action[l + i] = ((to.p[i] - from.p[i]) / lim.dp_max).clamp(-1.0, 1.0);
+    }
+    action
+}
+
+impl Orchestrator {
+    /// Begin a **new** orchestration warm-started from a previous run's
+    /// snapshot payload:
+    ///
+    /// 1. the old Pareto archive seeds the new archive (points that the
+    ///    new run later dominates are evicted as usual);
+    /// 2. dataflow priors are reordered so the old frontier's dataflows
+    ///    are assigned to seeds first;
+    /// 3. every seed's replay buffer is pre-seeded with one genuine
+    ///    environment transition toward each of the first 32 frontier
+    ///    points, so learning starts from known-good regions instead of
+    ///    blank warmup;
+    /// 4. the fleet's shared cost cache is pre-populated from the
+    ///    previous run's visited states.
+    ///
+    /// Everything here is a pure function of `(spec, warm)`, so a
+    /// warm-started run snapshots and resumes bit-identically like any
+    /// other (asserted by `tests/orchestrator_resume.rs`). Note the spec
+    /// the resumed run must present is the one this constructor produced
+    /// (`self.spec`, with reordered priors), not the pre-warm-start one.
+    pub fn with_warm_start(mut spec: OrchestratorSpec, warm: &WarmStart) -> Result<Orchestrator> {
+        ensure!(
+            warm.network == spec.net.name,
+            "warm-start snapshot is for network '{}', this search targets '{}'",
+            warm.network,
+            spec.net.name
+        );
+        let want = spec.net.num_compute_layers();
+        for s in warm.states.iter().chain(warm.points.iter().map(|p| &p.state)) {
+            ensure!(
+                s.num_layers() == want,
+                "warm-start state has {} layers, network '{}' has {want}",
+                s.num_layers(),
+                spec.net.name
+            );
+        }
+        let dataflows = std::mem::take(&mut spec.dataflows);
+        spec.dataflows = warm.reorder_priors(dataflows);
+        let mut orch = Orchestrator::new(spec);
+        for p in &warm.points {
+            orch.note_visited(&p.state);
+            orch.archive.insert(p.clone());
+        }
+        for s in &warm.states {
+            orch.note_visited(s);
+        }
+        orch.prewarm_shared_cache();
+        orch.seed_replay_from(&warm.points);
+        Ok(orch)
+    }
+
+    /// Pre-seed every seed's agent with one transition toward each of the
+    /// first [`WARM_REPLAY_POINTS`] archive points, through a throwaway
+    /// probe environment on the seed's own deterministic streams. (The
+    /// probe's oracle consumption is discarded: chunks always rebuild
+    /// their oracle from `oracle_seed` + the stored token.)
+    fn seed_replay_from(&mut self, points: &[ParetoPoint]) {
+        if points.is_empty() {
+            return;
+        }
+        use crate::rl::Env as _;
+        let take = points.len().min(WARM_REPLAY_POINTS);
+        let spec = &self.spec;
+        let shared = &self.shared_cache;
+        for slot in &mut self.slots {
+            let oracle = SurrogateOracle::new(&spec.net, slot.oracle_seed);
+            let mut env = match shared {
+                Some(cache) => CompressionEnv::with_shared_cache(
+                    spec.net.clone(),
+                    slot.dataflow,
+                    Box::new(oracle),
+                    spec.env.clone(),
+                    spec.energy.clone(),
+                    cache,
+                ),
+                None => CompressionEnv::new(
+                    spec.net.clone(),
+                    slot.dataflow,
+                    Box::new(oracle),
+                    spec.env.clone(),
+                    spec.energy.clone(),
+                ),
+            };
+            let mut sac = spec.search.sac.clone();
+            sac.seed = slot.sac_seed;
+            let mut agent = SacAgent::new(env.state_dim(), env.action_dim(), sac);
+            for p in points.iter().take(take) {
+                let s = env.reset();
+                let action = action_toward(env.current_state(), &p.state, &spec.env.limits);
+                let (s2, r, done) = env.step(&action);
+                agent.observe(&s, &action, r, &s2, done);
+            }
+            slot.agent = Some(agent);
+        }
     }
 }
 
@@ -703,7 +1028,9 @@ fn point_from_json(j: &Json) -> Option<ParetoPoint> {
         dataflow: j.str_or("dataflow", ""),
         episode: j.num_or("episode", 0.0) as usize,
         step: j.num_or("step", 0.0) as usize,
-        state: CompressionState::from_parts(j.get("q")?.to_f64s()?, j.get("p")?.to_f64s()?),
+        // Length-checked: a corrupt file fails the load instead of
+        // tripping an assert deep in CompressionState.
+        state: state_from_json(j)?,
         energy: j.get("energy")?.as_f64()?,
         accuracy: j.get("accuracy")?.as_f64()?,
         area: j.get("area")?.as_f64()?,
@@ -835,6 +1162,110 @@ mod tests {
             assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
             assert_eq!(x.area.to_bits(), y.area.to_bits());
         }
+    }
+
+    #[test]
+    fn v2_snapshots_without_cache_seed_still_load() {
+        let spec = tiny_spec(2, 4);
+        let mut orch = Orchestrator::new(spec.clone());
+        orch.run_round().unwrap();
+        let legacy = match orch.snapshot_to_json() {
+            Json::Obj(mut m) => {
+                m.remove("cache_seed");
+                m.insert("version".to_string(), Json::Num(2.0));
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        let parsed = json::parse(&legacy.to_string()).unwrap();
+        let resumed = Orchestrator::from_snapshot(&parsed, spec.clone()).expect("v2 load failed");
+        assert_eq!(resumed.slots[0].episodes_done, orch.slots[0].episodes_done);
+        // Out-of-range versions are refused.
+        for bad_version in [1.0, 4.0] {
+            let bad = match orch.snapshot_to_json() {
+                Json::Obj(mut m) => {
+                    m.insert("version".to_string(), Json::Num(bad_version));
+                    Json::Obj(m)
+                }
+                _ => unreachable!(),
+            };
+            assert!(Orchestrator::from_snapshot(&bad, spec.clone()).is_err());
+        }
+    }
+
+    fn warm_point(df: &str, energy: f64, accuracy: f64, area: f64) -> ParetoPoint {
+        ParetoPoint {
+            seed_index: 0,
+            dataflow: df.into(),
+            episode: 0,
+            step: 3,
+            state: CompressionState::from_parts(vec![4.0; 4], vec![0.5; 4]),
+            energy,
+            accuracy,
+            area,
+        }
+    }
+
+    #[test]
+    fn warm_start_seeds_archive_priors_replay_and_cache() {
+        let warm = WarmStart {
+            network: "lenet5".into(),
+            // Both frontier points came from FX:FY in the "previous run".
+            points: vec![
+                warm_point("FX:FY", 1e-6, 0.99, 0.5),
+                warm_point("FX:FY", 2e-6, 0.995, 0.4),
+            ],
+            states: vec![CompressionState::from_parts(vec![3.0; 4], vec![0.25; 4])],
+        };
+        let orch = Orchestrator::with_warm_start(tiny_spec(2, 2), &warm).unwrap();
+        // The frontier's dataflow is promoted to the first prior slot.
+        assert_eq!(orch.spec.dataflows[0], Dataflow::FXFY);
+        assert_eq!(orch.slots[0].dataflow, Dataflow::FXFY);
+        // Archive carries both (mutually non-dominated) warm points.
+        assert_eq!(orch.archive.len(), 2);
+        // Every seed got a pre-seeded agent with warm replay transitions.
+        for slot in &orch.slots {
+            let agent = slot.agent.as_ref().expect("no warm agent");
+            assert_eq!(agent.replay.len(), 2, "seed {}", slot.seed_index);
+        }
+        // Visited states recorded and the fleet cache pre-populated.
+        assert!(!orch.cache_seed().is_empty());
+        assert!(!orch.shared_cache.as_ref().unwrap().is_empty());
+    }
+
+    #[test]
+    fn warm_start_rejects_mismatched_network_or_layout() {
+        let wrong_net = WarmStart {
+            network: "vgg16_cifar".into(),
+            points: vec![],
+            states: vec![],
+        };
+        assert!(Orchestrator::with_warm_start(tiny_spec(1, 1), &wrong_net).is_err());
+        let wrong_layers = WarmStart {
+            network: "lenet5".into(),
+            points: vec![],
+            states: vec![CompressionState::from_parts(vec![4.0; 2], vec![0.5; 2])],
+        };
+        assert!(Orchestrator::with_warm_start(tiny_spec(1, 1), &wrong_layers).is_err());
+    }
+
+    #[test]
+    fn reorder_priors_is_stable_and_count_ordered() {
+        let warm = WarmStart {
+            network: "lenet5".into(),
+            points: vec![warm_point("CI:CO", 1e-6, 0.99, 0.5)],
+            states: vec![],
+        };
+        let got = warm.reorder_priors(vec![Dataflow::XY, Dataflow::CICO, Dataflow::FXFY]);
+        assert_eq!(got, vec![Dataflow::CICO, Dataflow::XY, Dataflow::FXFY]);
+        // No frontier at all: priors unchanged.
+        let empty = WarmStart {
+            network: "lenet5".into(),
+            points: vec![],
+            states: vec![],
+        };
+        let same = empty.reorder_priors(vec![Dataflow::XY, Dataflow::FXFY]);
+        assert_eq!(same, vec![Dataflow::XY, Dataflow::FXFY]);
     }
 
     #[test]

@@ -10,10 +10,12 @@
 
 use super::{Coordinator, SearchConfig, SearchOutcome};
 use crate::dataflow::Dataflow;
+use crate::energy::cache::SharedCostCache;
 use crate::energy::{self, EnergyConfig};
 use crate::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
 use crate::model::Network;
-use std::collections::VecDeque;
+use crate::util::lock_ignore_poison;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 
@@ -26,6 +28,11 @@ pub struct SweepSpec {
     pub energy: EnergyConfig,
     pub search: SearchConfig,
     pub seed: u64,
+    /// Share one [`SharedCostCache`] across every job of the same
+    /// network (default). Bit-identical to private per-job caches —
+    /// sharing changes hit/miss timing, never cost values — so this
+    /// exists only to benchmark/bisect against the private path.
+    pub shared_cache: bool,
 }
 
 impl SweepSpec {
@@ -37,6 +44,7 @@ impl SweepSpec {
             energy: EnergyConfig::default(),
             search: SearchConfig::default(),
             seed,
+            shared_cache: true,
         }
     }
 
@@ -50,8 +58,18 @@ impl SweepSpec {
         SweepSpec::new(vec![net], Dataflow::all_fifteen(), seed)
     }
 
-    /// The job list in output order: network-major, then dataflow.
+    /// The job list in output order: network-major, then dataflow. All
+    /// jobs of the same network carry a handle on that network's shared
+    /// cost cache (unless `shared_cache` is off).
     fn jobs(&self) -> Vec<SweepJob> {
+        let caches: HashMap<String, SharedCostCache> = if self.shared_cache {
+            self.nets
+                .iter()
+                .map(|n| (n.name.clone(), SharedCostCache::new(n, &self.energy)))
+                .collect()
+        } else {
+            HashMap::new()
+        };
         let mut jobs = Vec::with_capacity(self.nets.len() * self.dataflows.len());
         for net in &self.nets {
             for df in &self.dataflows {
@@ -67,6 +85,16 @@ impl SweepSpec {
                     energy: self.energy.clone(),
                     search,
                     oracle_seed: self.seed.wrapping_add(i),
+                    // Structural compatibility check: if the spec holds
+                    // two *different* networks under one name, only the
+                    // jobs whose network matches the cache stored for
+                    // that name (the map keeps the last-built one) get
+                    // it; the rest fall back to private caches instead
+                    // of reading the wrong entries.
+                    shared: caches
+                        .get(&net.name)
+                        .filter(|c| c.compatible_with(net, &self.energy))
+                        .cloned(),
                 });
             }
         }
@@ -81,6 +109,8 @@ struct SweepJob {
     energy: EnergyConfig,
     search: SearchConfig,
     oracle_seed: u64,
+    /// Fleet cache for this job's network (None = private per-job cache).
+    shared: Option<SharedCostCache>,
 }
 
 /// A job that died inside the worker pool.
@@ -139,6 +169,13 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 /// results. A job that panics yields `Err(panic message)` in its slot;
 /// the other jobs keep running. Shared with `coordinator::orchestrator`,
 /// which streams per-seed episode chunks through the same pool.
+///
+/// Mutex poisoning is recovered everywhere (`lock_ignore_poison`): the
+/// queue is pop-only and each result slot is written once, so a panic
+/// while holding either lock leaves them valid. The old
+/// `into_inner().unwrap()` here panicked on a poisoned slot, killing
+/// every *completed* outcome of the pool; now a poisoned-but-filled slot
+/// returns its result and an unfilled one surfaces as that job's `Err`.
 pub(crate) fn run_pool<J, R, F>(jobs: Vec<J>, f: F) -> Vec<Result<R, String>>
 where
     J: Send,
@@ -155,10 +192,10 @@ where
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                let job = queue.lock().unwrap().pop_front();
+                let job = lock_ignore_poison(&queue).pop_front();
                 let Some((idx, job)) = job else { break };
                 let outcome = catch_unwind(AssertUnwindSafe(|| f(job))).map_err(panic_message);
-                *slots[idx].lock().unwrap() = Some(outcome);
+                *lock_ignore_poison(&slots[idx]) = Some(outcome);
             });
         }
     });
@@ -166,8 +203,11 @@ where
         .into_iter()
         .map(|slot| {
             slot.into_inner()
-                .unwrap()
-                .expect("worker pool finished with an unfilled slot")
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .unwrap_or_else(|| {
+                    Err("worker pool lost this job's result (worker died before writing it)"
+                        .to_string())
+                })
         })
         .collect()
 }
@@ -185,9 +225,23 @@ pub fn run_surrogate_sweep(spec: &SweepSpec) -> Result<Vec<SearchOutcome>, Sweep
         .map(|j| (j.net.name.clone(), j.df.label()))
         .collect();
     let results = run_pool(jobs, |job: SweepJob| {
-        let oracle = SurrogateOracle::new(&job.net, job.oracle_seed);
-        let env = CompressionEnv::new(job.net, job.df, Box::new(oracle), job.env, job.energy);
-        Coordinator::new(env, job.search).run()
+        let SweepJob {
+            net,
+            df,
+            env,
+            energy,
+            search,
+            oracle_seed,
+            shared,
+        } = job;
+        let oracle = SurrogateOracle::new(&net, oracle_seed);
+        let env = match &shared {
+            Some(cache) => {
+                CompressionEnv::with_shared_cache(net, df, Box::new(oracle), env, energy, cache)
+            }
+            None => CompressionEnv::new(net, df, Box::new(oracle), env, energy),
+        };
+        Coordinator::new(env, search).run()
     });
 
     let mut completed = Vec::new();
@@ -316,6 +370,32 @@ mod tests {
         assert_eq!(got[1].1, "FX:FY");
         assert_eq!(got[2].1, "X:Y");
         assert_eq!(got[3].1, "FX:FY");
+    }
+
+    #[test]
+    fn shared_cache_sweep_matches_private_cache_sweep() {
+        let mut spec = SweepSpec::new(vec![zoo::lenet5()], vec![Dataflow::XY, Dataflow::FXFY], 5);
+        spec.env.max_steps = 6;
+        spec.search = tiny_search();
+        let mut private_spec = spec.clone();
+        private_spec.shared_cache = false;
+        let shared = run_surrogate_sweep(&spec).expect("shared sweep");
+        let private = run_surrogate_sweep(&private_spec).expect("private sweep");
+        assert_eq!(shared.len(), private.len());
+        for (a, b) in shared.iter().zip(&private) {
+            assert_eq!(a.dataflow, b.dataflow);
+            assert_eq!(a.episodes.len(), b.episodes.len());
+            for (ea, eb) in a.episodes.iter().zip(&b.episodes) {
+                assert_eq!(ea.total_reward.to_bits(), eb.total_reward.to_bits());
+                for (x, y) in ea.energy_curve.iter().zip(&eb.energy_curve) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "energy curve diverged");
+                }
+            }
+            assert_eq!(
+                a.best.as_ref().map(|p| p.energy.to_bits()),
+                b.best.as_ref().map(|p| p.energy.to_bits()),
+            );
+        }
     }
 
     #[test]

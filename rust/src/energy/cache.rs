@@ -41,28 +41,58 @@
 //! network or config requires a fresh `CostCache`; [`Mapping`]s
 //! additionally depend only on `(layer, dataflow, pe_cap)` and are cached
 //! forever in [`CostCache::mapping`].
+//!
+//! # Fleet-wide sharing
+//!
+//! Because the per-layer cost is a pure function of `(layer, dataflow,
+//! mapping, bits, snapped p, config)`, cache entries are identical no
+//! matter which search computes them. [`SharedCostCache`] exploits this:
+//! a sharded, lock-striped concurrent cache that every seed of an
+//! orchestration (and every job of a sweep over the same network) shares
+//! through [`IncrementalEvaluator::with_shared`]. Sharing changes *when*
+//! an entry is a hit, never *what* it contains, so episode streams under
+//! a shared cache are bit-identical to private-cache runs (pinned by
+//! `tests/shared_cache.rs`).
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::constants::EnergyConfig;
 use super::{accumulate_area, layer_cost, total_area_of, CostReport, LayerCost};
 use crate::compress::CompressionState;
 use crate::dataflow::{spatial, Dataflow};
 use crate::model::Network;
+use crate::util::lock_ignore_poison;
 
 /// Number of buckets of the pruning-ratio grid (see module docs).
 pub const P_BUCKETS: u32 = 128;
 
-/// Bucket index of a pruning remaining-fraction `p` in [0, 1].
+/// Out-of-band bucket index for a NaN remaining-fraction. A NaN used to
+/// flow through `round().clamp(..) as u32` to bucket 0, silently aliasing
+/// the p=0 cache entry; giving it a dedicated bucket keeps a bad action
+/// from poisoning the (possibly fleet-shared) cache, and
+/// [`p_from_bucket`] maps it back to NaN so the cost surfaces as
+/// non-finite instead of masquerading as a fully-pruned layer.
+pub const NAN_P_BUCKET: u32 = u32::MAX;
+
+/// Bucket index of a pruning remaining-fraction `p` in [0, 1]. NaN maps
+/// to [`NAN_P_BUCKET`] (never to a real grid point); ±inf clamp to the
+/// grid ends.
 pub fn p_bucket(p: f64) -> u32 {
+    if p.is_nan() {
+        return NAN_P_BUCKET;
+    }
     (p * P_BUCKETS as f64).round().clamp(0.0, P_BUCKETS as f64) as u32
 }
 
-/// Representative pruning fraction of a bucket (exact dyadic rational).
+/// Representative pruning fraction of a bucket (exact dyadic rational;
+/// NaN for the [`NAN_P_BUCKET`] sentinel).
 pub fn p_from_bucket(bucket: u32) -> f64 {
+    if bucket == NAN_P_BUCKET {
+        return f64::NAN;
+    }
     bucket as f64 / P_BUCKETS as f64
 }
 
@@ -84,10 +114,17 @@ pub struct SlotKey {
 
 impl SlotKey {
     /// Key of compression slot `slot` in `state`.
+    ///
+    /// A NaN remaining-fraction is a bug in the caller (a bad action got
+    /// past the env's clamps); debug builds assert on it here at the
+    /// cache-key boundary, release builds key it under [`NAN_P_BUCKET`]
+    /// so the resulting non-finite cost can't alias a real entry.
     pub fn of(state: &CompressionState, slot: usize) -> SlotKey {
+        let p = state.remaining(slot);
+        debug_assert!(!p.is_nan(), "NaN pruning remaining-fraction at slot {slot}");
         SlotKey {
             bits: state.bits(slot),
-            p_bucket: p_bucket(state.remaining(slot)),
+            p_bucket: p_bucket(p),
         }
     }
 }
@@ -112,6 +149,25 @@ fn config_fingerprint(cfg: &EnergyConfig) -> u64 {
         cfg.reg_bit_area,
     ] {
         v.to_bits().hash(&mut h);
+    }
+    h.finish()
+}
+
+/// Structural fingerprint of the network a cache is pinned to: name,
+/// compute-layer indices and per-layer size proxies (params, MACs, fmap
+/// elements). Two *same-named* but structurally different networks must
+/// not share a cache — name equality alone would serve one network the
+/// other's costs (or index out of bounds when layer counts differ).
+fn network_fingerprint(net: &Network) -> u64 {
+    let mut h = DefaultHasher::new();
+    net.name.hash(&mut h);
+    let compute = net.compute_layers();
+    compute.hash(&mut h);
+    for &li in &compute {
+        let layer = &net.layers[li];
+        layer.params().hash(&mut h);
+        layer.macs().hash(&mut h);
+        layer.fmap_elems().hash(&mut h);
     }
     h.finish()
 }
@@ -213,13 +269,238 @@ impl CostCache {
     }
 }
 
+// ---------- fleet-shared concurrent cache ----------
+
+/// Number of lock stripes of a [`SharedCostCache`]. Entries spread by key
+/// hash, so contention between N concurrent seeds is ~N/16 per stripe.
+const SHARD_COUNT: usize = 16;
+
+#[derive(Default)]
+struct Shard {
+    /// `spatial::map_layer` memo, keyed by (slot, dataflow).
+    mappings: HashMap<(u32, Dataflow), spatial::Mapping>,
+    costs: HashMap<(u32, Dataflow, SlotKey), Arc<LayerCost>>,
+    hits: u64,
+    misses: u64,
+}
+
+struct SharedInner {
+    net_name: String,
+    net_fingerprint: u64,
+    /// Global layer index of each compression slot.
+    compute: Vec<usize>,
+    pe_cap: usize,
+    fingerprint: u64,
+    shards: Vec<Mutex<Shard>>,
+}
+
+/// A concurrent [`CostCache`]: one sharded, lock-striped memo of per-layer
+/// costs and spatial mappings that a whole fleet of searches over the same
+/// `(network, EnergyConfig)` shares. Cloning is cheap (an `Arc` bump) and
+/// every clone addresses the same storage.
+///
+/// Sharing is sound because the per-layer cost function is pure: two
+/// threads racing on the same miss compute bitwise-identical values —
+/// the first insert wins,
+/// and every later hit returns that entry's `Arc`. The only observable
+/// difference from a private cache is the hit/miss accounting (a racing
+/// pair records two misses for one stored entry), never a cost value —
+/// which is what keeps fleet episode streams bit-identical to
+/// private-cache runs.
+///
+/// Locks are never held while a cost is computed, and shard poisoning is
+/// recovered (a memo map stays valid through a panic), so one dying
+/// worker cannot stall or abort the rest of the fleet.
+#[derive(Clone)]
+pub struct SharedCostCache {
+    inner: Arc<SharedInner>,
+}
+
+impl SharedCostCache {
+    pub fn new(net: &Network, cfg: &EnergyConfig) -> SharedCostCache {
+        SharedCostCache {
+            inner: Arc::new(SharedInner {
+                net_name: net.name.clone(),
+                net_fingerprint: network_fingerprint(net),
+                compute: net.compute_layers(),
+                pe_cap: cfg.pe_cap,
+                fingerprint: config_fingerprint(cfg),
+                shards: (0..SHARD_COUNT).map(|_| Mutex::new(Shard::default())).collect(),
+            }),
+        }
+    }
+
+    /// Is this cache pinned to exactly this `(network, config)` pair?
+    /// Structural, not just name-based: a same-named but different
+    /// network (changed layers/shapes) is rejected too.
+    pub fn compatible_with(&self, net: &Network, cfg: &EnergyConfig) -> bool {
+        self.inner.net_fingerprint == network_fingerprint(net)
+            && self.inner.fingerprint == config_fingerprint(cfg)
+    }
+
+    pub fn network_name(&self) -> &str {
+        &self.inner.net_name
+    }
+
+    fn shard_index<K: Hash>(key: &K) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        h.finish() as usize % SHARD_COUNT
+    }
+
+    /// The spatial mapping of slot `slot` under `df`, computed at most
+    /// once per (layer, dataflow) fleet-wide (modulo a benign first-fill
+    /// race, which both sides resolve to the same value).
+    pub fn mapping(&self, net: &Network, slot: usize, df: Dataflow) -> spatial::Mapping {
+        let si = Self::shard_index(&(slot as u32, df));
+        if let Some(m) = lock_ignore_poison(&self.inner.shards[si])
+            .mappings
+            .get(&(slot as u32, df))
+        {
+            return *m;
+        }
+        let layer = &net.layers[self.inner.compute[slot]];
+        let fresh = spatial::map_layer(layer, df, self.inner.pe_cap);
+        *lock_ignore_poison(&self.inner.shards[si])
+            .mappings
+            .entry((slot as u32, df))
+            .or_insert(fresh)
+    }
+
+    /// The memoized cost of slot `slot` under `df` at the bucketed
+    /// compression point `key` — the concurrent analogue of
+    /// [`CostCache::layer_cost`], bit-identical to it by construction.
+    pub fn layer_cost(
+        &self,
+        net: &Network,
+        cfg: &EnergyConfig,
+        slot: usize,
+        df: Dataflow,
+        key: SlotKey,
+    ) -> Arc<LayerCost> {
+        debug_assert_eq!(
+            self.inner.fingerprint,
+            config_fingerprint(cfg),
+            "SharedCostCache used with a different EnergyConfig than it was built for"
+        );
+        // Cheap per-call tripwire; the full structural check
+        // ([`SharedCostCache::compatible_with`]) runs once at evaluator
+        // construction, not on the hot path.
+        debug_assert_eq!(
+            self.inner.net_name,
+            net.name,
+            "SharedCostCache used with a different network"
+        );
+        let full_key = (slot as u32, df, key);
+        let si = Self::shard_index(&full_key);
+        {
+            let mut shard = lock_ignore_poison(&self.inner.shards[si]);
+            if let Some(c) = shard.costs.get(&full_key) {
+                shard.hits += 1;
+                return Arc::clone(c);
+            }
+        }
+        // Miss: compute outside the lock so other stripes (and this one)
+        // stay available; first insert wins on a racing double-compute.
+        let mapping = self.mapping(net, slot, df);
+        let layer = &net.layers[self.inner.compute[slot]];
+        let fresh = Arc::new(layer_cost(
+            layer,
+            df,
+            &mapping,
+            key.bits,
+            p_from_bucket(key.p_bucket),
+            cfg,
+        ));
+        let mut shard = lock_ignore_poison(&self.inner.shards[si]);
+        shard.misses += 1;
+        Arc::clone(shard.costs.entry(full_key).or_insert(fresh))
+    }
+
+    /// Pre-populate every `(slot, dataflow)` cost of `state` so a search
+    /// that revisits it starts on hits. Returns the number of entries
+    /// newly computed (0 if everything was already cached).
+    pub fn prewarm(
+        &self,
+        net: &Network,
+        cfg: &EnergyConfig,
+        state: &CompressionState,
+        dfs: &[Dataflow],
+    ) -> usize {
+        assert_eq!(
+            state.num_layers(),
+            self.inner.compute.len(),
+            "prewarm state has {} layers, cache expects {}",
+            state.num_layers(),
+            self.inner.compute.len()
+        );
+        let before = self.misses();
+        for &df in dfs {
+            for slot in 0..self.inner.compute.len() {
+                let key = SlotKey::of(state, slot);
+                let _ = self.layer_cost(net, cfg, slot, df, key);
+            }
+        }
+        (self.misses() - before) as usize
+    }
+
+    /// Fleet-wide hit count (sums the stripes; a point-in-time snapshot
+    /// under concurrency).
+    pub fn hits(&self) -> u64 {
+        self.inner.shards.iter().map(|s| lock_ignore_poison(s).hits).sum()
+    }
+
+    /// Fleet-wide miss count (each computed entry; racing double-computes
+    /// of the same key each count).
+    pub fn misses(&self) -> u64 {
+        self.inner.shards.iter().map(|s| lock_ignore_poison(s).misses).sum()
+    }
+
+    /// Number of distinct cached layer costs across all stripes.
+    pub fn len(&self) -> usize {
+        self.inner.shards.iter().map(|s| lock_ignore_poison(s).costs.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Where an [`IncrementalEvaluator`] stores its memoized layer costs:
+/// an owned per-search [`CostCache`], or a handle on the fleet-wide
+/// [`SharedCostCache`].
+enum CacheBackend {
+    Private(CostCache),
+    Shared(SharedCostCache),
+}
+
+impl CacheBackend {
+    fn layer_cost(
+        &mut self,
+        net: &Network,
+        cfg: &EnergyConfig,
+        slot: usize,
+        df: Dataflow,
+        key: SlotKey,
+    ) -> Arc<LayerCost> {
+        match self {
+            CacheBackend::Private(c) => c.layer_cost(net, cfg, slot, df, key),
+            CacheBackend::Shared(c) => c.layer_cost(net, cfg, slot, df, key),
+        }
+    }
+}
+
 /// Stateful incremental evaluator for one (network, dataflow) pair — the
 /// `CompressionEnv::step` fast path. Tracks the last-seen [`SlotKey`] per
 /// layer and recomputes (or re-fetches) only the layers whose key moved;
-/// unchanged layers cost a key comparison.
+/// unchanged layers cost a key comparison. Backed by a private
+/// [`CostCache`] ([`new`](IncrementalEvaluator::new)) or by the
+/// fleet-wide [`SharedCostCache`]
+/// ([`with_shared`](IncrementalEvaluator::with_shared)); both paths are
+/// bit-identical.
 pub struct IncrementalEvaluator {
     df: Dataflow,
-    cache: CostCache,
+    backend: CacheBackend,
     keys: Vec<Option<SlotKey>>,
     costs: Vec<Option<Arc<LayerCost>>>,
 }
@@ -229,7 +510,31 @@ impl IncrementalEvaluator {
         let n = net.num_compute_layers();
         IncrementalEvaluator {
             df,
-            cache: CostCache::new(net, cfg),
+            backend: CacheBackend::Private(CostCache::new(net, cfg)),
+            keys: vec![None; n],
+            costs: vec![None; n],
+        }
+    }
+
+    /// An evaluator that borrows the fleet-wide cache instead of owning
+    /// its own. Panics if `cache` was built for a different
+    /// `(network, config)` — a silent mismatch would serve stale costs.
+    pub fn with_shared(
+        net: &Network,
+        df: Dataflow,
+        cfg: &EnergyConfig,
+        cache: &SharedCostCache,
+    ) -> IncrementalEvaluator {
+        assert!(
+            cache.compatible_with(net, cfg),
+            "SharedCostCache was built for network '{}', evaluator wants '{}' (or configs differ)",
+            cache.network_name(),
+            net.name
+        );
+        let n = net.num_compute_layers();
+        IncrementalEvaluator {
+            df,
+            backend: CacheBackend::Shared(cache.clone()),
             keys: vec![None; n],
             costs: vec![None; n],
         }
@@ -239,8 +544,26 @@ impl IncrementalEvaluator {
         self.df
     }
 
-    pub fn cache(&self) -> &CostCache {
-        &self.cache
+    /// Is this evaluator on the fleet-wide shared cache?
+    pub fn is_shared(&self) -> bool {
+        matches!(self.backend, CacheBackend::Shared(_))
+    }
+
+    /// Cache hit count: this evaluator's own cache when private, the
+    /// fleet-wide total when shared.
+    pub fn hits(&self) -> u64 {
+        match &self.backend {
+            CacheBackend::Private(c) => c.hits(),
+            CacheBackend::Shared(c) => c.hits(),
+        }
+    }
+
+    /// Cache miss count (same scope as [`hits`](IncrementalEvaluator::hits)).
+    pub fn misses(&self) -> u64 {
+        match &self.backend {
+            CacheBackend::Private(c) => c.misses(),
+            CacheBackend::Shared(c) => c.misses(),
+        }
     }
 
     /// Total (energy, area) of `state` — bit-identical to
@@ -263,7 +586,7 @@ impl IncrementalEvaluator {
         for slot in 0..self.keys.len() {
             let key = SlotKey::of(state, slot);
             if self.keys[slot] != Some(key) {
-                self.costs[slot] = Some(self.cache.layer_cost(net, cfg, slot, self.df, key));
+                self.costs[slot] = Some(self.backend.layer_cost(net, cfg, slot, self.df, key));
                 self.keys[slot] = Some(key);
             }
         }
@@ -384,7 +707,115 @@ mod tests {
             assert_eq!(e.to_bits(), full.total_energy().to_bits(), "energy step {step}");
             assert_eq!(a.to_bits(), full.total_area.to_bits(), "area step {step}");
         }
-        assert!(ev.cache().hits() > 0, "expected some cache hits");
+        assert!(ev.hits() > 0, "expected some cache hits");
+    }
+
+    #[test]
+    fn nan_p_gets_its_own_bucket_and_propagates() {
+        assert_eq!(p_bucket(f64::NAN), NAN_P_BUCKET);
+        assert_ne!(p_bucket(f64::NAN), p_bucket(0.0), "NaN must not alias the p=0 entry");
+        assert!(p_from_bucket(NAN_P_BUCKET).is_nan());
+        assert!(snap_p(f64::NAN).is_nan(), "snap_p must propagate NaN, not launder it");
+        // Infinities clamp to the grid ends (still finite keys).
+        assert_eq!(p_bucket(f64::INFINITY), P_BUCKETS);
+        assert_eq!(p_bucket(f64::NEG_INFINITY), 0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "NaN pruning remaining-fraction")]
+    fn slot_key_asserts_on_nan_in_debug_builds() {
+        let net = zoo::lenet5();
+        let mut s = crate::compress::CompressionState::uniform(&net, 8.0, 1.0);
+        s.p[0] = f64::NAN;
+        let _ = SlotKey::of(&s, 0);
+    }
+
+    #[test]
+    fn shared_cache_matches_private_cache_bitwise() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let shared = SharedCostCache::new(&net, &cfg);
+        let mut private = CostCache::new(&net, &cfg);
+        for slot in 0..net.num_compute_layers() {
+            for df in [Dataflow::XY, Dataflow::CICO] {
+                for bits in [2u32, 5, 8] {
+                    let key = SlotKey { bits, p_bucket: 40 + bits };
+                    let a = shared.layer_cost(&net, &cfg, slot, df, key);
+                    let b = private.layer_cost(&net, &cfg, slot, df, key);
+                    assert_eq!(a.total_energy().to_bits(), b.total_energy().to_bits());
+                    assert_eq!(a.total_area().to_bits(), b.total_area().to_bits());
+                    assert_eq!(a.pes, b.pes);
+                }
+            }
+        }
+        // Repeat lookups hit and return the stored entry.
+        let key = SlotKey { bits: 5, p_bucket: 45 };
+        let first = shared.layer_cost(&net, &cfg, 0, Dataflow::XY, key);
+        let again = shared.layer_cost(&net, &cfg, 0, Dataflow::XY, key);
+        assert!(Arc::ptr_eq(&first, &again));
+        assert!(shared.hits() >= 1);
+        assert_eq!(shared.len(), private.len());
+    }
+
+    #[test]
+    fn shared_evaluator_matches_private_evaluator() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let shared = SharedCostCache::new(&net, &cfg);
+        let mut ev_shared = IncrementalEvaluator::with_shared(&net, Dataflow::FXFY, &cfg, &shared);
+        let mut ev_private = IncrementalEvaluator::new(&net, Dataflow::FXFY, &cfg);
+        assert!(ev_shared.is_shared() && !ev_private.is_shared());
+        let mut state = crate::compress::CompressionState::uniform(&net, 8.0, 1.0);
+        for step in 0..12 {
+            let slot = step % state.num_layers();
+            state.q[slot] = (state.q[slot] - 0.7).clamp(1.0, 8.0);
+            state.p[slot] = (state.p[slot] - 0.11).clamp(0.02, 1.0);
+            let (e1, a1) = ev_shared.evaluate(&net, &state, &cfg);
+            let (e2, a2) = ev_private.evaluate(&net, &state, &cfg);
+            assert_eq!(e1.to_bits(), e2.to_bits(), "energy step {step}");
+            assert_eq!(a1.to_bits(), a2.to_bits(), "area step {step}");
+        }
+    }
+
+    #[test]
+    fn shared_cache_prewarm_turns_misses_into_hits() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let shared = SharedCostCache::new(&net, &cfg);
+        let state = crate::compress::CompressionState::uniform(&net, 6.0, 0.5);
+        let dfs = [Dataflow::XY, Dataflow::CICO];
+        let computed = shared.prewarm(&net, &cfg, &state, &dfs);
+        assert_eq!(computed, net.num_compute_layers() * dfs.len());
+        assert_eq!(shared.prewarm(&net, &cfg, &state, &dfs), 0, "second prewarm is all hits");
+        let misses_before = shared.misses();
+        let mut ev = IncrementalEvaluator::with_shared(&net, Dataflow::XY, &cfg, &shared);
+        ev.evaluate(&net, &state, &cfg);
+        assert_eq!(shared.misses(), misses_before, "prewarmed state must evaluate hit-only");
+    }
+
+    #[test]
+    fn compatibility_is_structural_not_name_based() {
+        let lenet = zoo::lenet5();
+        let mut impostor = zoo::vgg16_cifar();
+        impostor.name = lenet.name.clone();
+        let cfg = EnergyConfig::default();
+        let cache = SharedCostCache::new(&lenet, &cfg);
+        assert!(cache.compatible_with(&lenet, &cfg));
+        assert!(
+            !cache.compatible_with(&impostor, &cfg),
+            "a same-named but structurally different network must not share the cache"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "was built for network")]
+    fn shared_evaluator_rejects_mismatched_network() {
+        let lenet = zoo::lenet5();
+        let vgg = zoo::vgg16_cifar();
+        let cfg = EnergyConfig::default();
+        let shared = SharedCostCache::new(&lenet, &cfg);
+        let _ = IncrementalEvaluator::with_shared(&vgg, Dataflow::XY, &cfg, &shared);
     }
 
     #[test]

@@ -141,8 +141,38 @@ impl CompressionEnv {
         cfg: EnvConfig,
         energy_cfg: EnergyConfig,
     ) -> CompressionEnv {
-        let state = CompressionState::uniform(&net, cfg.q0, cfg.p0);
         let evaluator = energy::cache::IncrementalEvaluator::new(&net, dataflow, &energy_cfg);
+        Self::build(net, dataflow, oracle, cfg, energy_cfg, evaluator)
+    }
+
+    /// An environment whose incremental evaluator borrows the fleet-wide
+    /// [`energy::cache::SharedCostCache`] instead of owning a private
+    /// cache — bit-identical to [`CompressionEnv::new`] (sharing changes
+    /// hit/miss timing, never cost values; pinned by
+    /// `tests/shared_cache.rs`). Panics if `cache` was built for a
+    /// different `(network, EnergyConfig)`.
+    pub fn with_shared_cache(
+        net: Network,
+        dataflow: Dataflow,
+        oracle: Box<dyn AccuracyOracle>,
+        cfg: EnvConfig,
+        energy_cfg: EnergyConfig,
+        cache: &energy::cache::SharedCostCache,
+    ) -> CompressionEnv {
+        let evaluator =
+            energy::cache::IncrementalEvaluator::with_shared(&net, dataflow, &energy_cfg, cache);
+        Self::build(net, dataflow, oracle, cfg, energy_cfg, evaluator)
+    }
+
+    fn build(
+        net: Network,
+        dataflow: Dataflow,
+        oracle: Box<dyn AccuracyOracle>,
+        cfg: EnvConfig,
+        energy_cfg: EnergyConfig,
+        evaluator: energy::cache::IncrementalEvaluator,
+    ) -> CompressionEnv {
+        let state = CompressionState::uniform(&net, cfg.q0, cfg.p0);
         let mut env = CompressionEnv {
             net,
             dataflow,
@@ -453,6 +483,44 @@ mod tests {
             assert_eq!(o1, o2, "obs step {step}");
             assert_eq!(d1, d2, "done step {step}");
             assert_eq!(fast.last_energy().to_bits(), slow.last_energy().to_bits());
+            if d1 {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn shared_cache_env_matches_private_env_bitwise() {
+        // Two envs over the same oracle stream: one on the fleet-shared
+        // cache, one on a private cache. Rewards, observations and
+        // termination must agree bit-for-bit.
+        let net = zoo::lenet5();
+        let energy_cfg = EnergyConfig::default();
+        let shared = energy::cache::SharedCostCache::new(&net, &energy_cfg);
+        let mut a = CompressionEnv::with_shared_cache(
+            net.clone(),
+            Dataflow::XY,
+            Box::new(SurrogateOracle::new(&net, 11)),
+            EnvConfig::default(),
+            energy_cfg.clone(),
+            &shared,
+        );
+        let mut b = CompressionEnv::new(
+            net.clone(),
+            Dataflow::XY,
+            Box::new(SurrogateOracle::new(&net, 11)),
+            EnvConfig::default(),
+            energy_cfg,
+        );
+        assert_eq!(a.reset(), b.reset());
+        let mut action = vec![-0.3; 8];
+        for step in 0..16 {
+            action[step % 8] = -0.3 + 0.15 * (step % 2) as f64;
+            let (o1, r1, d1) = a.step(&action);
+            let (o2, r2, d2) = b.step(&action);
+            assert_eq!(r1.to_bits(), r2.to_bits(), "reward step {step}");
+            assert_eq!(o1, o2, "obs step {step}");
+            assert_eq!(d1, d2, "done step {step}");
             if d1 {
                 break;
             }

@@ -21,6 +21,16 @@ pub fn fmt_sig(v: f64, digits: usize) -> String {
     format!("{:.*}", dec.min(6), v)
 }
 
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// Only sound where the protected data's invariants hold at every panic
+/// point — pure memo caches, write-once result slots, pop-only queues.
+/// For those, poisoning is a taint flag with no information: propagating
+/// it would escalate one contained worker panic into a process abort.
+pub fn lock_ignore_poison<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Clamp helper for f64 (std's `clamp` panics on NaN bounds; ours is total).
 pub fn clampf(v: f64, lo: f64, hi: f64) -> f64 {
     if v < lo {
@@ -48,5 +58,16 @@ mod tests {
         assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
         assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
         assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn lock_ignore_poison_recovers_the_data() {
+        let m = std::sync::Mutex::new(7);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("poison the mutex");
+        }));
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_ignore_poison(&m), 7);
     }
 }

@@ -4,7 +4,7 @@
 //! uninterrupted run with the same configuration.
 
 use edcompress::coordinator::orchestrator::{
-    OrchestrationResult, Orchestrator, OrchestratorSpec,
+    OrchestrationResult, Orchestrator, OrchestratorSpec, WarmStart,
 };
 use edcompress::coordinator::SearchConfig;
 use edcompress::dataflow::Dataflow;
@@ -99,6 +99,55 @@ fn resumed_run_matches_uninterrupted_bit_for_bit() {
     assert_results_bit_identical(&expect, &got);
     std::fs::remove_file(&ref_path).ok();
     std::fs::remove_file(&kill_path).ok();
+}
+
+/// A `--warm-start`ed run is itself resumable bit-identically: killing it
+/// after its first snapshot and resuming must converge to the same final
+/// archive and episode streams as an uninterrupted warm-started run.
+/// (The warm seeding — archive points, reordered priors, pre-seeded
+/// replay, cache pre-population — is a pure function of (spec, warm
+/// payload), and everything dynamic it creates is captured by the first
+/// snapshot.)
+#[test]
+fn warm_started_run_resumes_bit_identically() {
+    // Source run: completes and leaves a snapshot to warm-start from.
+    let src_path = temp_snapshot("warm_source.json");
+    let mut src = Orchestrator::new(spec());
+    src.snapshot_path = Some(src_path.clone());
+    src.run().expect("source run failed");
+    let warm = WarmStart::load(&src_path).expect("warm-start load failed");
+
+    // The warm-started run uses a different base seed: genuinely new.
+    let make = || {
+        let mut s = spec();
+        s.base_seed = 99;
+        Orchestrator::with_warm_start(s, &warm).expect("warm start failed")
+    };
+
+    // Uninterrupted warm-started reference.
+    let ref_path = temp_snapshot("warm_uninterrupted.json");
+    let mut reference = make();
+    reference.snapshot_path = Some(ref_path.clone());
+    let expect = reference.run().expect("uninterrupted warm run failed");
+
+    // Kill after one round, then resume from disk. The resume spec must
+    // be the warm-started one (with reordered priors) — `make()` yields
+    // exactly that deterministically.
+    let kill_path = temp_snapshot("warm_killed.json");
+    {
+        let mut killed = make();
+        killed.snapshot_path = Some(kill_path.clone());
+        let done = killed.run_round().expect("first warm round failed");
+        assert!(!done, "budget too small: warm run finished before the kill point");
+    }
+    let resumed_spec = make().spec.clone();
+    let mut resumed = Orchestrator::resume(&kill_path, resumed_spec).expect("warm resume failed");
+    let got = resumed.run().expect("resumed warm run failed");
+
+    assert_results_bit_identical(&expect, &got);
+    for p in [&src_path, &ref_path, &kill_path] {
+        std::fs::remove_file(p).ok();
+    }
 }
 
 /// Killing at a different point (two rounds in) must converge to the same

@@ -163,6 +163,33 @@ fn prop_incremental_evaluator_tracks_episode_exactly() {
 }
 
 #[test]
+fn prop_shared_evaluator_matches_private_evaluator() {
+    // The fleet-shared cache path must be bit-identical to the private
+    // path for any network, dataflow and trajectory — sharing changes
+    // hit/miss timing, never values.
+    check("shared cache == private cache", 10, |rng| {
+        let net = random_network(rng);
+        let df = random_dataflow(rng);
+        let cfg = EnergyConfig::default();
+        let shared = cache::SharedCostCache::new(&net, &cfg);
+        let mut ev_shared = cache::IncrementalEvaluator::with_shared(&net, df, &cfg, &shared);
+        let mut ev_private = cache::IncrementalEvaluator::new(&net, df, &cfg);
+        let limits = edcompress::compress::CompressionLimits::default();
+        let l = net.num_compute_layers();
+        let mut state = CompressionState::uniform(&net, 8.0, 1.0);
+        for t in 0..12 {
+            let action: Vec<f64> = (0..2 * l).map(|_| rng.range(-1.0, 1.0)).collect();
+            state.apply_action(&action, t, &limits);
+            let (e1, a1) = ev_shared.evaluate(&net, &state, &cfg);
+            let (e2, a2) = ev_private.evaluate(&net, &state, &cfg);
+            ensure(e1.to_bits() == e2.to_bits(), format!("energy diverged at step {t}"))?;
+            ensure(a1.to_bits() == a2.to_bits(), format!("area diverged at step {t}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_snap_p_is_monotone_and_tight() {
     check("snap_p monotone/tight", 200, |rng| {
         let a = rng.range(0.0, 1.0);

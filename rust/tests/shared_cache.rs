@@ -1,0 +1,185 @@
+//! Fleet-shared cost cache: concurrency stress (values bitwise equal to
+//! a private, single-threaded cache) and end-to-end bit-identity of an
+//! N-seed orchestration under `SharedCostCache` versus private caches.
+
+use edcompress::coordinator::orchestrator::{
+    OrchestrationResult, Orchestrator, OrchestratorSpec, WarmStart,
+};
+use edcompress::coordinator::SearchConfig;
+use edcompress::dataflow::Dataflow;
+use edcompress::energy::cache::{CostCache, SharedCostCache, SlotKey};
+use edcompress::energy::EnergyConfig;
+use edcompress::model::zoo;
+use edcompress::rl::sac::SacConfig;
+
+/// 8 threads hammer overlapping keys in interleaved orders; every cached
+/// value must be bitwise identical to a fresh private-cache computation.
+#[test]
+fn concurrent_lookups_are_bitwise_identical_to_private_cache() {
+    let net = zoo::vgg16_cifar();
+    let cfg = EnergyConfig::default();
+    let shared = SharedCostCache::new(&net, &cfg);
+    let dfs = [Dataflow::XY, Dataflow::CICO, Dataflow::FXFY];
+    let mut keys = Vec::new();
+    for slot in 0..net.num_compute_layers() {
+        for &df in &dfs {
+            for bits in [2u32, 5, 8] {
+                for p_bucket in [13u32, 64, 128] {
+                    keys.push((slot, df, SlotKey { bits, p_bucket }));
+                }
+            }
+        }
+    }
+    let threads: usize = 8;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let keys = &keys;
+            let shared = &shared;
+            let net = &net;
+            let cfg = &cfg;
+            scope.spawn(move || {
+                // Each thread walks the key list with a different stride
+                // and offset, so lookups race across shards and keys.
+                for i in 0..keys.len() * 2 {
+                    let (slot, df, key) = keys[(i * (t + 1) + t) % keys.len()];
+                    let cost = shared.layer_cost(net, cfg, slot, df, key);
+                    assert!(cost.total_energy().is_finite());
+                }
+            });
+        }
+    });
+    assert_eq!(shared.len(), keys.len(), "racing fills must dedup to one entry per key");
+    assert!(shared.hits() > 0 && shared.misses() > 0);
+    let mut reference = CostCache::new(&net, &cfg);
+    for &(slot, df, key) in &keys {
+        let s = shared.layer_cost(&net, &cfg, slot, df, key);
+        let p = reference.layer_cost(&net, &cfg, slot, df, key);
+        assert_eq!(s.total_energy().to_bits(), p.total_energy().to_bits());
+        assert_eq!(s.total_area().to_bits(), p.total_area().to_bits());
+        assert_eq!(s.pes, p.pes);
+    }
+}
+
+fn fleet_spec(shared: bool) -> OrchestratorSpec {
+    let mut spec = OrchestratorSpec::new(zoo::lenet5(), 4, 21);
+    spec.dataflows = vec![Dataflow::XY, Dataflow::FXFY];
+    spec.env.max_steps = 6;
+    spec.chunk_episodes = 2;
+    spec.shared_cache = shared;
+    spec.search = SearchConfig {
+        episodes: 4,
+        sac: SacConfig {
+            hidden: vec![24, 24],
+            warmup_steps: 12,
+            batch_size: 12,
+            updates_per_step: 1,
+            ..SacConfig::default()
+        },
+        verbose: false,
+    };
+    spec
+}
+
+fn assert_results_bit_identical(a: &OrchestrationResult, b: &OrchestrationResult) {
+    assert_eq!(a.archive.len(), b.archive.len(), "frontier sizes differ");
+    for (x, y) in a.archive.points().iter().zip(b.archive.points()) {
+        assert_eq!(x.energy.to_bits(), y.energy.to_bits(), "frontier energy differs");
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "frontier accuracy differs");
+        assert_eq!(x.area.to_bits(), y.area.to_bits(), "frontier area differs");
+        assert_eq!((x.seed_index, x.episode, x.step), (y.seed_index, y.episode, y.step));
+        assert_eq!(x.state, y.state, "frontier (Q, P) state differs");
+    }
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (oa, ob) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(oa.dataflow, ob.dataflow);
+        assert_eq!(oa.episodes.len(), ob.episodes.len());
+        for (ea, eb) in oa.episodes.iter().zip(&ob.episodes) {
+            assert_eq!(ea.steps, eb.steps, "episode {} lengths differ", ea.episode);
+            assert_eq!(
+                ea.total_reward.to_bits(),
+                eb.total_reward.to_bits(),
+                "episode {} rewards differ",
+                ea.episode
+            );
+            for (x, y) in ea.energy_curve.iter().zip(&eb.energy_curve) {
+                assert_eq!(x.to_bits(), y.to_bits(), "episode {} energy curve differs", ea.episode);
+            }
+        }
+    }
+}
+
+/// The acceptance-criteria stress test: a 4-seed orchestration on the
+/// shared cache produces byte-identical episode streams and Pareto
+/// archive to the same seeds run on private caches.
+#[test]
+fn shared_cache_fleet_is_bit_identical_to_private_caches() {
+    let mut shared = Orchestrator::new(fleet_spec(true));
+    assert!(shared.shared_cache.is_some());
+    let a = shared.run().expect("shared-cache fleet failed");
+    let mut private = Orchestrator::new(fleet_spec(false));
+    assert!(private.shared_cache.is_none());
+    let b = private.run().expect("private-cache fleet failed");
+    assert_results_bit_identical(&a, &b);
+    // The fleet actually exercised the shared cache.
+    let cache = shared.shared_cache.as_ref().unwrap();
+    assert!(cache.hits() > 0, "fleet never hit the shared cache");
+}
+
+/// Warm-start wiring end to end from a real file: the new run's archive
+/// starts from the old frontier and the fleet cache is pre-populated, so
+/// re-evaluating any archive state is hit-only.
+#[test]
+fn warm_start_from_file_prepopulates_archive_and_cache() {
+    let dir = std::env::temp_dir().join("edc_shared_cache_warm_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("source.json");
+    let mut src = Orchestrator::new(fleet_spec(true));
+    src.snapshot_path = Some(path.clone());
+    let src_result = src.run().expect("source run failed");
+
+    let warm = WarmStart::load(&path).expect("warm-start load failed");
+    assert_eq!(warm.network, "lenet5");
+    assert_eq!(warm.points.len(), src_result.archive.len());
+
+    let orch = Orchestrator::with_warm_start(fleet_spec(true), &warm).unwrap();
+    assert_eq!(orch.archive.len(), warm.points.len());
+    if !warm.states.is_empty() {
+        let cache = orch.shared_cache.as_ref().unwrap();
+        let misses_before = cache.misses();
+        for s in &warm.states {
+            cache.prewarm(&orch.spec.net, &orch.spec.energy, s, &orch.spec.dataflows);
+        }
+        assert_eq!(cache.misses(), misses_before, "warm states were not pre-populated");
+    }
+
+    // A truncated file fails readably (no panic) for warm starts too.
+    let full = std::fs::read_to_string(&path).unwrap();
+    let trunc = dir.join("truncated.json");
+    std::fs::write(&trunc, &full[..full.len() / 2]).unwrap();
+    let err = WarmStart::load(&trunc).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated.json"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// NaN keys stay out of band even under the shared cache: a NaN
+/// remaining-fraction never aliases the p=0 bucket.
+#[test]
+fn nan_bucket_cannot_alias_real_entries() {
+    use edcompress::energy::cache::{p_bucket, p_from_bucket, NAN_P_BUCKET};
+    assert_eq!(p_bucket(f64::NAN), NAN_P_BUCKET);
+    assert_ne!(p_bucket(f64::NAN), p_bucket(0.0));
+    assert!(p_from_bucket(NAN_P_BUCKET).is_nan());
+
+    let net = zoo::lenet5();
+    let cfg = EnergyConfig::default();
+    let shared = SharedCostCache::new(&net, &cfg);
+    let zero_key = SlotKey { bits: 4, p_bucket: p_bucket(0.0) };
+    let nan_key = SlotKey { bits: 4, p_bucket: NAN_P_BUCKET };
+    let zero_cost = shared.layer_cost(&net, &cfg, 0, Dataflow::XY, zero_key);
+    let nan_cost = shared.layer_cost(&net, &cfg, 0, Dataflow::XY, nan_key);
+    assert!(zero_cost.total_energy().is_finite(), "p=0 entry must stay clean");
+    assert!(nan_cost.total_energy().is_nan(), "NaN entry must surface as NaN");
+    // Looking the NaN entry up did not corrupt the p=0 entry.
+    let again = shared.layer_cost(&net, &cfg, 0, Dataflow::XY, zero_key);
+    assert_eq!(again.total_energy().to_bits(), zero_cost.total_energy().to_bits());
+}
