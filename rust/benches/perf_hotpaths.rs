@@ -9,11 +9,14 @@
 //! recorded 32-step `CompressionEnv` episode, and `evaluate_batch` versus
 //! 15 individual `evaluate` calls for `rank_dataflows`. The fleet section
 //! *asserts* that a 4-seed fleet on one `SharedCostCache` reaches a
-//! higher steady-state hit-rate than 4 private caches.
+//! higher steady-state hit-rate than 4 private caches, and the serve
+//! section *asserts* that two concurrent same-network jobs on one
+//! `edc serve` daemon beat two sequential standalone runs on shared-cache
+//! hit-rate (the daemon's registry dedups the cross-job miss set).
 //!
 //! Run with `--test` (e.g. `cargo bench --bench perf_hotpaths -- --test`)
-//! for the CI smoke mode: only the shared-cache fleet comparison runs,
-//! with its hit-rate assertion, in a few seconds.
+//! for the CI smoke mode: only the two asserted cache comparisons run,
+//! in well under a minute.
 #[path = "common.rs"]
 mod common;
 use common::{banner, BenchTimer};
@@ -160,6 +163,105 @@ fn bench_fleet_shared_vs_private(
     );
 }
 
+/// The serve-path cache claim (CI gate): two concurrent same-network
+/// jobs on one `edc serve` daemon reach a higher shared-cache hit-rate
+/// than the same two jobs run sequentially as standalone searches, each
+/// with its own per-run cache — the daemon's fingerprint-keyed registry
+/// dedups the cross-job miss set. Rates are computed from deterministic
+/// quantities (total lookups and distinct cached keys — both pure
+/// functions of the bit-identical episode streams), so the gate cannot
+/// flake on thread scheduling.
+fn bench_serve_shared_vs_sequential() {
+    use edcompress::coordinator::orchestrator::{Orchestrator, OrchestratorSpec};
+    use edcompress::coordinator::service::{Client, ServeConfig, Service};
+    use edcompress::util::json::Json;
+
+    fn spec(seed: u64) -> OrchestratorSpec {
+        let mut s = OrchestratorSpec::new(zoo::lenet5(), 2, seed);
+        s.dataflows = vec![Dataflow::XY];
+        s.env.max_steps = 6;
+        s.search.episodes = 2;
+        s.chunk_episodes = 1;
+        s
+    }
+
+    // Sequential standalone: each run builds its own fleet cache.
+    let t0 = std::time::Instant::now();
+    let (mut seq_lookups, mut seq_distinct) = (0u64, 0u64);
+    for seed in [11u64, 22] {
+        let mut orch = Orchestrator::new(spec(seed));
+        orch.run().expect("standalone run failed");
+        let cache = orch.shared_cache.as_ref().expect("spec defaults to a shared cache");
+        seq_lookups += cache.hits() + cache.misses();
+        seq_distinct += cache.len() as u64;
+    }
+    let t_seq = t0.elapsed();
+    let seq_rate = 1.0 - seq_distinct as f64 / seq_lookups.max(1) as f64;
+
+    // Daemon: the same two jobs, concurrently, over one registry cache.
+    let dir = std::env::temp_dir().join(format!("edc_bench_serve_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let svc = Service::start(ServeConfig {
+        dir: dir.clone(),
+        max_concurrent_jobs: 2,
+        ..ServeConfig::default()
+    })
+    .expect("daemon failed to start");
+    let mut client = Client::connect(&svc.addr().to_string()).expect("connect");
+    let t0 = std::time::Instant::now();
+    let ids: Vec<u64> = [11u64, 22]
+        .iter()
+        .map(|seed| {
+            let mut j = Json::obj();
+            j.set("net", Json::Str("lenet5".into()))
+                .set("seeds", Json::Num(2.0))
+                .set("episodes", Json::Num(2.0))
+                .set("chunk", Json::Num(1.0))
+                .set("steps", Json::Num(6.0))
+                .set("seed", Json::Str(seed.to_string()))
+                .set("dataflows", Json::Str("X:Y".into()));
+            client.submit(&j).expect("submit")
+        })
+        .collect();
+    for id in ids {
+        let s = client
+            .wait_done(id, std::time::Duration::from_secs(600))
+            .expect("wait_done");
+        assert_eq!(s.str_or("state", ""), "done", "daemon job failed");
+    }
+    let t_serve = t0.elapsed();
+    let status = client.status(None).expect("status");
+    let caches = status.get("caches").and_then(|a| a.as_arr()).expect("cache stats");
+    assert_eq!(caches.len(), 1, "both jobs must share one registry cache");
+    let hits = caches[0].num_or("hits", 0.0) as u64;
+    let misses = caches[0].num_or("misses", 0.0) as u64;
+    let distinct = caches[0].num_or("entries", 0.0) as u64;
+    let lookups = (hits + misses).max(1);
+    let serve_rate = 1.0 - distinct as f64 / lookups as f64;
+    client.shutdown().expect("shutdown");
+    svc.wait().expect("daemon drain");
+    std::fs::remove_dir_all(&dir).ok();
+
+    println!(
+        "  serve path: 2 concurrent daemon jobs hit-rate {serve_rate:.3} ({distinct} distinct \
+         keys / {lookups} lookups, wall {t_serve:?}) vs 2 sequential standalone runs \
+         {seq_rate:.3} ({seq_distinct} distinct / {seq_lookups} lookups, wall {t_seq:?})"
+    );
+    // The runs are bit-identical either way, so total lookups must match;
+    // the daemon's distinct-key union can only be smaller than the
+    // standalone sum, strictly so because both jobs visit the shared
+    // start state. Asserted, not just printed.
+    assert_eq!(
+        seq_lookups, lookups,
+        "daemon jobs must do exactly the standalone evaluation work"
+    );
+    assert!(
+        serve_rate > seq_rate,
+        "serve-path shared-cache hit-rate {serve_rate:.3} not above the sequential \
+         standalone rate {seq_rate:.3}"
+    );
+}
+
 fn bench_incremental_vs_full(net: &Network, df: Dataflow, cfg: &EnergyConfig, min_speedup: f64) {
     let steps = 32;
     let traj = episode_trajectory(net, steps);
@@ -243,6 +345,8 @@ fn main() {
     if std::env::args().any(|a| a == "--test") {
         banner("fleet-shared cache (smoke)");
         bench_fleet_shared_vs_private(&zoo::vgg16_cifar(), Dataflow::XY, &cfg, 4, 16);
+        banner("edc serve shared cache (smoke)");
+        bench_serve_shared_vs_sequential();
         println!("bench smoke OK");
         return;
     }
@@ -266,6 +370,11 @@ fn main() {
     // 3. Fleet-wide shared cache vs private per-seed caches (asserted).
     banner("fleet-shared cache");
     bench_fleet_shared_vs_private(&zoo::vgg16_cifar(), Dataflow::XY, &cfg, 4, 32);
+
+    // 3b. The `edc serve` daemon path: concurrent same-network jobs on
+    // one registry cache vs sequential standalone runs (asserted).
+    banner("edc serve shared cache");
+    bench_serve_shared_vs_sequential();
 
     // 4. All-15-dataflow ranking: batched+cached vs individual.
     banner("dataflow ranking");

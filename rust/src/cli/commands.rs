@@ -3,21 +3,28 @@
 use super::args::Args;
 use crate::compress::CompressionState;
 use crate::config::{parse_mode, RunConfig};
-use crate::coordinator::{checkpoint, sweep, Coordinator};
+use crate::coordinator::{checkpoint, service, sweep, Coordinator};
 use crate::dataflow::Dataflow;
 use crate::energy;
 use crate::envs::{CompressionEnv, SurrogateOracle};
 use crate::model::zoo;
 use crate::report::{figures, tables};
 use crate::train::{PjrtOracle, TrainConfig};
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "compress" => cmd_compress(args),
         "search" => cmd_search(args),
         "sweep" => cmd_sweep(args),
+        "serve" => cmd_serve(args),
+        "submit" => cmd_submit(args),
+        "status" => cmd_status(args),
+        "result" => cmd_result(args),
+        "cancel" => cmd_cancel(args),
+        "shutdown" => cmd_shutdown(args),
         "table" => cmd_table(args),
         "figure" => cmd_figure(args),
         "explore" => cmd_explore(args),
@@ -128,22 +135,10 @@ fn same_snapshot_file(a: &Path, b: &Path) -> bool {
 }
 
 /// Parse `paper|all|X:Y,CI:CO,...` into a dataflow list (shared by the
-/// `sweep` and `search` commands).
+/// `sweep` and `search` commands and, via the same
+/// [`Dataflow::parse_list`], by the serve protocol).
 fn parse_dataflows(arg: &str) -> Result<Vec<Dataflow>> {
-    Ok(match arg {
-        "paper" => Dataflow::paper_four().to_vec(),
-        "all" => Dataflow::all_fifteen(),
-        list => {
-            let mut v = Vec::new();
-            for s in list.split(',') {
-                v.push(
-                    Dataflow::parse(s.trim())
-                        .ok_or_else(|| anyhow!("unknown dataflow '{}'", s.trim()))?,
-                );
-            }
-            v
-        }
-    })
+    Dataflow::parse_list(arg).map_err(|e| anyhow!(e))
 }
 
 /// Multi-seed orchestrated search with resumable snapshots: runs N
@@ -383,6 +378,203 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `edc serve`: the persistent search-service daemon (protocol:
+/// docs/serve.md). Search/sweep jobs submitted over a local TCP socket
+/// multiplex concurrent orchestrations over one persistent bounded
+/// worker pool, structurally-identical networks share one fleet cost
+/// cache, every running job snapshots on its round cadence, and graceful
+/// shutdown drains queued + running jobs into resumable v3 snapshots that
+/// `edc serve --resume-dir <dir>` picks back up bit-identically.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::service::{ServeConfig, Service};
+    let resume_dir = args.get("resume-dir").map(str::to_string);
+    if let (Some(r), Some(d)) = (&resume_dir, args.get("dir")) {
+        if r != d {
+            bail!("--dir and --resume-dir name different directories; pass just one");
+        }
+    }
+    let dir = resume_dir.clone().unwrap_or_else(|| args.str_or("dir", "reports/serve"));
+    let port = args.u64_or("port", 0)?;
+    if port > u16::MAX as u64 {
+        bail!("--port must fit in 16 bits");
+    }
+    let jobs = args.usize_or("jobs", 2)?;
+    if jobs == 0 {
+        bail!("--jobs must be at least 1");
+    }
+    let cfg = ServeConfig {
+        dir: PathBuf::from(&dir),
+        port: port as u16,
+        max_concurrent_jobs: jobs,
+        workers: args.usize_or("workers", 0)?,
+        resume: resume_dir.is_some(),
+    };
+    let svc = Service::start(cfg)?;
+    println!(
+        "edc serve listening on {} ({jobs} job slots over a {}-worker pool; snapshots in {dir}{})",
+        svc.addr(),
+        svc.workers(),
+        if resume_dir.is_some() { ", resumed" } else { "" },
+    );
+    println!(
+        "clients: edc submit|status|result|cancel|shutdown [--addr {}] (or --dir {dir})",
+        svc.addr()
+    );
+    svc.wait()
+}
+
+/// Resolve the daemon address for a client subcommand: `--addr` wins,
+/// otherwise the `serve.addr` discovery file the daemon writes into its
+/// snapshot directory (`--dir`, default `reports/serve`).
+fn serve_addr(args: &Args) -> Result<String> {
+    if let Some(a) = args.get("addr") {
+        return Ok(a.to_string());
+    }
+    let dir = args.str_or("dir", "reports/serve");
+    let path = Path::new(&dir).join(service::ADDR_FILE);
+    let text = std::fs::read_to_string(&path).map_err(|_| {
+        anyhow!(
+            "no --addr given and no address file at {} — is `edc serve` running? \
+             (pass --addr host:port, or --dir pointing at the daemon's snapshot dir)",
+            path.display()
+        )
+    })?;
+    Ok(text.trim().to_string())
+}
+
+fn serve_client(args: &Args) -> Result<service::Client> {
+    service::Client::connect(&serve_addr(args)?)
+}
+
+/// `edc submit`: queue a search (default) or sweep job on a running
+/// daemon. Only flags the user passed travel in the request; the daemon
+/// fills in the same defaults `edc search`/`edc sweep` use.
+fn cmd_submit(args: &Args) -> Result<()> {
+    let kind = args.str_or("kind", "search");
+    let mut req = Json::obj();
+    req.set("kind", Json::Str(kind.clone()));
+    for key in ["net", "nets", "dataflows"] {
+        if let Some(v) = args.get(key) {
+            req.set(key, Json::Str(v.to_string()));
+        }
+    }
+    for key in ["seeds", "episodes", "chunk", "steps"] {
+        if args.get(key).is_some() {
+            req.set(key, Json::Num(args.usize_or(key, 0)? as f64));
+        }
+    }
+    if args.get("seed").is_some() {
+        // Seeds ride as strings so the full u64 range survives (the same
+        // convention as checkpoint files).
+        req.set("seed", Json::Str(args.u64_or("seed", 0)?.to_string()));
+    }
+    let mut client = serve_client(args)?;
+    let job = client.submit(&req)?;
+    println!("job {job} queued ({kind}); poll with: edc status --job {job}");
+    Ok(())
+}
+
+fn print_job_line(j: &Json) {
+    let mut line = format!(
+        "job {:<3} {:<7} {:<22} {:<10} {:>4}/{:<4} episodes, round {}, frontier {}, \
+         cache hit-rate {:.3}",
+        j.num_or("id", 0.0) as u64,
+        j.str_or("kind", "?"),
+        j.str_or("target", "?"),
+        j.str_or("state", "?"),
+        j.num_or("episodes_done", 0.0) as usize,
+        j.num_or("episodes_total", 0.0) as usize,
+        j.num_or("round", 0.0) as usize,
+        j.num_or("frontier", 0.0) as usize,
+        j.num_or("cache_hit_rate", 0.0),
+    );
+    if let Some(err) = j.get("error").and_then(|e| e.as_str()) {
+        line.push_str(" — error: ");
+        line.push_str(err);
+    }
+    println!("{line}");
+}
+
+/// `edc status`: one job (`--job N`) or the whole daemon.
+fn cmd_status(args: &Args) -> Result<()> {
+    let mut client = serve_client(args)?;
+    if args.get("job").is_some() {
+        let s = client.status(Some(args.u64_or("job", 0)?))?;
+        print_job_line(&s);
+        return Ok(());
+    }
+    let s = client.status(None)?;
+    println!(
+        "edc serve at {} — {} pool workers, snapshots in {}",
+        s.str_or("addr", "?"),
+        s.num_or("workers", 0.0) as usize,
+        s.str_or("dir", "?"),
+    );
+    match s.get("jobs").and_then(|a| a.as_arr()) {
+        Some([]) | None => println!("no jobs submitted yet"),
+        Some(jobs) => {
+            for j in jobs {
+                print_job_line(j);
+            }
+        }
+    }
+    if let Some(caches) = s.get("caches").and_then(|a| a.as_arr()) {
+        for c in caches {
+            let (hits, misses) = (c.num_or("hits", 0.0), c.num_or("misses", 0.0));
+            let rate = if hits + misses > 0.0 { hits / (hits + misses) } else { 0.0 };
+            println!(
+                "fleet cache {}: {} entries, hit-rate {rate:.3}",
+                c.str_or("network", "?"),
+                c.num_or("entries", 0.0) as usize,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `edc result --job N`: the Pareto table, per-seed summary and fleet
+/// best-so-far curve of a finished job.
+fn cmd_result(args: &Args) -> Result<()> {
+    if args.get("job").is_none() {
+        bail!("result wants --job N");
+    }
+    let mut client = serve_client(args)?;
+    let r = client.result(args.u64_or("job", 0)?)?;
+    print!("{}", r.str_or("rendered", ""));
+    if let Some(snap) = r.get("summary").and_then(|s| s.get("snapshot")).and_then(|s| s.as_str()) {
+        println!("resumable snapshot at {snap}");
+    }
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    if args.get("job").is_none() {
+        bail!("cancel wants --job N");
+    }
+    let mut client = serve_client(args)?;
+    let r = client.cancel(args.u64_or("job", 0)?)?;
+    println!(
+        "job {}: {}",
+        r.num_or("job", 0.0) as u64,
+        r.str_or("state", "?")
+    );
+    Ok(())
+}
+
+/// `edc shutdown`: graceful drain — queued and running jobs land in
+/// resumable snapshots, then the daemon exits.
+fn cmd_shutdown(args: &Args) -> Result<()> {
+    let mut client = serve_client(args)?;
+    let r = client.shutdown()?;
+    println!(
+        "daemon shutting down: {} queued jobs drained to snapshots, {} running jobs \
+         finishing their round",
+        r.num_or("queued_drained", 0.0) as usize,
+        r.num_or("running_draining", 0.0) as usize,
+    );
+    Ok(())
+}
+
 fn cmd_table(args: &Args) -> Result<()> {
     let id = args.usize_or("id", 0)?;
     let episodes = args.usize_or("episodes", crate::report::episode_budget())?;
@@ -604,6 +796,47 @@ mod tests {
 
         // Missing file: readable error too.
         assert!(dispatch(&argv(&["search", "--warm-start", "no/such/file.json"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_client_commands_roundtrip() {
+        use crate::coordinator::service::{Client, ServeConfig, Service};
+        let dir = std::env::temp_dir().join("edc_cli_serve_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let svc = Service::start(ServeConfig {
+            dir: dir.clone(),
+            max_concurrent_jobs: 1,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = svc.addr().to_string();
+        let dir_s = dir.to_str().unwrap();
+
+        dispatch(&argv(&[
+            "submit", "--addr", &addr, "--net", "lenet5", "--seeds", "1", "--episodes", "1",
+            "--steps", "4", "--chunk", "1", "--dataflows", "X:Y",
+        ]))
+        .unwrap();
+        // Address discovery through the daemon's serve.addr file.
+        dispatch(&argv(&["status", "--dir", dir_s])).unwrap();
+        // Unknown job and premature/absent flags error readably.
+        assert!(dispatch(&argv(&["result", "--addr", &addr, "--job", "99"])).is_err());
+        assert!(dispatch(&argv(&["result", "--addr", &addr])).is_err());
+        assert!(dispatch(&argv(&["cancel", "--addr", &addr])).is_err());
+
+        let mut c = Client::connect(&addr).unwrap();
+        let s = c.wait_done(1, std::time::Duration::from_secs(300)).unwrap();
+        assert_eq!(s.str_or("state", ""), "done");
+        dispatch(&argv(&["status", "--addr", &addr, "--job", "1"])).unwrap();
+        dispatch(&argv(&["result", "--addr", &addr, "--job", "1"])).unwrap();
+        // Cancelling a finished job is an error, not a state change.
+        assert!(dispatch(&argv(&["cancel", "--addr", &addr, "--job", "1"])).is_err());
+        dispatch(&argv(&["shutdown", "--addr", &addr])).unwrap();
+        svc.wait().unwrap();
+        // Disagreeing --dir/--resume-dir is refused before binding.
+        assert!(dispatch(&argv(&["serve", "--dir", "a", "--resume-dir", "b"])).is_err());
+        assert!(dispatch(&argv(&["serve", "--jobs", "0"])).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

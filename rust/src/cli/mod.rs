@@ -5,6 +5,13 @@
 //! edc search  --net lenet5 --seeds 4 [--resume run.json] [--snapshot run.json]
 //!             [--warm-start prev_run.json]
 //! edc sweep   --nets lenet5,vgg16_cifar [--dataflows paper|all|X:Y,..]
+//! edc serve   [--dir reports/serve] [--port 0] [--jobs 2] [--workers 0]
+//!             [--resume-dir reports/serve]       # search-service daemon
+//! edc submit  [--addr host:port] --net lenet5 [--kind search|sweep] ...
+//! edc status  [--addr host:port] [--job N]
+//! edc result  [--addr host:port] --job N
+//! edc cancel  [--addr host:port] --job N
+//! edc shutdown [--addr host:port]
 //! edc table   --id 2|3|4   [--episodes N] [--seed S]
 //! edc figure  --id 1|4|5|6|7 [--episodes N] [--seed S]
 //! edc explore --net vgg16  [--q 8] [--p 1.0]   # rank all 15 dataflows
@@ -50,6 +57,17 @@ pub fn usage() -> &'static str {
        sweep      search many (network x dataflow) pairs on a bounded\n\
                   worker pool (--nets a,b,c --dataflows paper|all|X:Y,..,\n\
                   --episodes, --steps, --seed)\n\
+       serve      persistent search-service daemon: jobs multiplex over\n\
+                  one worker pool and share fleet cost caches; graceful\n\
+                  shutdown drains to resumable snapshots (--dir, --port,\n\
+                  --jobs, --workers, --resume-dir; protocol: docs/serve.md)\n\
+       submit     queue a job on a running daemon (--addr or --dir,\n\
+                  --kind search|sweep, then the search/sweep flags)\n\
+       status     daemon or per-job progress (--addr/--dir, [--job N])\n\
+       result     Pareto table + summary of a finished job (--job N)\n\
+       cancel     cancel a queued/running job (--job N; running jobs\n\
+                  keep a resumable snapshot)\n\
+       shutdown   gracefully drain the daemon to resumable snapshots\n\
        table      regenerate a paper table (--id 2|3|4, --episodes, --seed)\n\
        figure     regenerate a paper figure (--id 1|4|5|6|7, --episodes, --seed)\n\
        explore    rank all 15 dataflows for a network (--net, --q, --p)\n\

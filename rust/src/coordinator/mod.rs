@@ -13,11 +13,18 @@
 //!   concurrently, merges their episode streams into a NaN-safe Pareto
 //!   archive over (energy, accuracy, area), and periodically snapshots
 //!   the whole fleet so a killed run resumes bit-identically.
+//! - [`service`] is the `edc serve` daemon: a long-running process that
+//!   accepts search/sweep job submissions over a local newline-delimited
+//!   JSON socket, multiplexes concurrent orchestrations over one
+//!   persistent bounded worker pool, shares fleet cost caches across
+//!   structurally-identical jobs, and drains to resumable snapshots on
+//!   graceful shutdown (protocol: docs/serve.md).
 //! - [`checkpoint`] is the JSON persistence layer for single-search
 //!   outcomes and orchestration snapshots (format: docs/checkpoints.md).
 
 pub mod checkpoint;
 pub mod orchestrator;
+pub mod service;
 pub mod sweep;
 
 use crate::envs::{BestPoint, CompressionEnv};

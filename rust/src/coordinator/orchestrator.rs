@@ -52,6 +52,7 @@ use crate::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
 use crate::model::Network;
 use crate::rl::sac::SacAgent;
 use crate::util::json::{self, Json};
+use crate::util::pool::WorkPool;
 use crate::util::rng::seed_stream;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::cmp::Ordering;
@@ -434,11 +435,29 @@ impl Orchestrator {
     }
 
     /// Run one round: every live, unfinished seed advances by up to
-    /// `chunk_episodes` episodes through the bounded worker pool, the
-    /// episode streams merge into the archive (in seed order, so the
-    /// merge is deterministic), and — if a snapshot path is set — the
-    /// whole orchestration is persisted. Returns `true` when complete.
+    /// `chunk_episodes` episodes through a round-local bounded worker
+    /// pool, the episode streams merge into the archive (in seed order,
+    /// so the merge is deterministic), and — if a snapshot path is set —
+    /// the whole orchestration is persisted. Returns `true` when
+    /// complete.
     pub fn run_round(&mut self) -> Result<bool> {
+        self.run_round_with(|jobs| run_pool(jobs, run_chunk))
+    }
+
+    /// [`run_round`](Orchestrator::run_round) over a caller-owned
+    /// persistent [`WorkPool`] — the entry point the `edc serve` daemon
+    /// drives, so the chunk jobs of many concurrent orchestrations
+    /// interleave in one machine-bounded queue. Bit-identical to
+    /// `run_round`: `run_chunk` is a pure function of its job, so
+    /// *where* it executes cannot change its result.
+    pub fn run_round_on(&mut self, pool: &WorkPool) -> Result<bool> {
+        self.run_round_with(|jobs| pool.run_batch(jobs, run_chunk))
+    }
+
+    fn run_round_with<F>(&mut self, exec: F) -> Result<bool>
+    where
+        F: FnOnce(Vec<ChunkJob>) -> Vec<Result<ChunkOut, String>>,
+    {
         let total = self.spec.search.episodes;
         let mut jobs = Vec::new();
         for (i, slot) in self.slots.iter_mut().enumerate() {
@@ -467,7 +486,7 @@ impl Orchestrator {
             return Ok(true);
         }
         let idxs: Vec<usize> = jobs.iter().map(|j| j.slot).collect();
-        let results = run_pool(jobs, run_chunk);
+        let results = exec(jobs);
         for (result, slot_idx) in results.into_iter().zip(idxs) {
             let seed_index = self.slots[slot_idx].seed_index;
             match result {
@@ -516,6 +535,39 @@ impl Orchestrator {
     pub fn run(&mut self) -> Result<OrchestrationResult> {
         while !self.run_round()? {}
         Ok(self.result())
+    }
+
+    /// [`run`](Orchestrator::run) over a caller-owned persistent
+    /// [`WorkPool`] (see [`run_round_on`](Orchestrator::run_round_on)).
+    pub fn run_on(&mut self, pool: &WorkPool) -> Result<OrchestrationResult> {
+        while !self.run_round_on(pool)? {}
+        Ok(self.result())
+    }
+
+    /// Replace this orchestration's fleet cache with a caller-owned one
+    /// (typically from a
+    /// [`SharedCacheRegistry`](crate::energy::cache::SharedCacheRegistry),
+    /// so structurally-identical jobs of an `edc serve` daemon pool their
+    /// layer costs). The cache is re-warmed from the visited-state list,
+    /// so a resumed orchestration keeps its prewarm benefit on the new
+    /// storage. No-op when the spec runs with private caches
+    /// (`shared_cache: false`); rejected when the cache was built for a
+    /// different `(network, EnergyConfig)`. Purely a performance knob:
+    /// the cache memoizes a pure function, so swapping it can never
+    /// change an episode stream (pinned by `tests/shared_cache.rs`).
+    pub fn set_shared_cache(&mut self, cache: SharedCostCache) -> Result<()> {
+        ensure!(
+            cache.compatible_with(&self.spec.net, &self.spec.energy),
+            "shared cache was built for network '{}', this orchestration targets '{}' \
+             (or the energy configs differ)",
+            cache.network_name(),
+            self.spec.net.name
+        );
+        if self.shared_cache.is_some() {
+            self.shared_cache = Some(cache);
+            self.prewarm_shared_cache();
+        }
+        Ok(())
     }
 
     /// Assemble the current (possibly partial) result.
@@ -1008,7 +1060,7 @@ fn slot_to_json(s: &SeedSlot) -> Json {
     j
 }
 
-fn point_to_json(p: &ParetoPoint) -> Json {
+pub(crate) fn point_to_json(p: &ParetoPoint) -> Json {
     let mut j = Json::obj();
     j.set("seed_index", Json::Num(p.seed_index as f64))
         .set("dataflow", Json::Str(p.dataflow.clone()))
@@ -1266,6 +1318,38 @@ mod tests {
         };
         let same = empty.reorder_priors(vec![Dataflow::XY, Dataflow::FXFY]);
         assert_eq!(same, vec![Dataflow::XY, Dataflow::FXFY]);
+    }
+
+    #[test]
+    fn pooled_round_and_registry_cache_are_bit_identical() {
+        use crate::energy::cache::SharedCacheRegistry;
+        use crate::util::pool::WorkPool;
+        let spec = tiny_spec(2, 3);
+        let mut a = Orchestrator::new(spec.clone());
+        let res_a = a.run().unwrap();
+        // Same spec, but driven like `edc serve` drives it: an external
+        // persistent pool and a registry-owned fleet cache.
+        let pool = WorkPool::new(2);
+        let registry = SharedCacheRegistry::new();
+        let mut b = Orchestrator::new(spec);
+        let cache = registry.for_network(&b.spec.net, &b.spec.energy);
+        b.set_shared_cache(cache).unwrap();
+        let res_b = b.run_on(&pool).unwrap();
+        assert_eq!(res_a.archive.len(), res_b.archive.len());
+        for (x, y) in res_a.archive.points().iter().zip(res_b.archive.points()) {
+            assert_eq!(x.energy.to_bits(), y.energy.to_bits());
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+            assert_eq!(x.area.to_bits(), y.area.to_bits());
+        }
+        for (sa, sb) in res_a.outcomes.iter().zip(&res_b.outcomes) {
+            for (ea, eb) in sa.episodes.iter().zip(&sb.episodes) {
+                assert_eq!(ea.total_reward.to_bits(), eb.total_reward.to_bits());
+            }
+        }
+        // A cache built for a different network is refused.
+        let mut c = Orchestrator::new(tiny_spec(1, 1));
+        let wrong = SharedCostCache::new(&zoo::vgg16_cifar(), &c.spec.energy);
+        assert!(c.set_shared_cache(wrong).is_err());
     }
 
     #[test]

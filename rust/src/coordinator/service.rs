@@ -1,0 +1,1506 @@
+//! `edc serve` — a persistent search-service daemon.
+//!
+//! EDCompress's value on a real deployment comes from running *many*
+//! energy-aware searches: per network, per dataflow prior, per seed —
+//! the same "compression as a repeated, hardware-conditioned
+//! optimization service" shape that energy-constrained compression (ECC)
+//! and energy-aware pruning frame. This module turns the one-shot
+//! orchestrator into that service:
+//!
+//! - [`Service`] is a long-running daemon on a local TCP socket speaking
+//!   a **newline-delimited JSON** protocol (one request object per line,
+//!   one response object per line; reference: `docs/serve.md`).
+//! - It holds **one persistent bounded [`WorkPool`]** for the whole
+//!   process; every chunk of every orchestration and every sweep job
+//!   flows through that single machine-bounded queue, so N concurrent
+//!   jobs multiplex instead of oversubscribing.
+//! - Jobs targeting **structurally-identical networks share one fleet
+//!   cache** through a [`SharedCacheRegistry`] keyed by the network's
+//!   structural fingerprint — a layer cost any job computes is a hit for
+//!   every later job of the daemon's lifetime.
+//! - Every running search job **snapshots on its normal round cadence**
+//!   (the v3 schema of `docs/checkpoints.md`, unchanged), and graceful
+//!   shutdown drains queued and running jobs into resumable snapshots so
+//!   `edc serve --resume-dir` picks the whole fleet back up
+//!   **bit-identically**.
+//!
+//! Because the worker pool only changes *where* a pure chunk function
+//! executes, and the fleet cache only memoizes a pure function, a job
+//! run through the daemon produces episode streams and Pareto archives
+//! bit-identical to the same spec run standalone via `edc search`
+//! (pinned by `tests/service_daemon.rs`).
+//!
+//! # Job lifecycle
+//!
+//! ```text
+//! submit ──► queued ──► running ──► done ──► (result served)
+//!               │           │  │
+//!               │  cancel   │  └─ seed worker errors ──► failed
+//!               ▼           ▼
+//!           cancelled   cancelled (after a final round snapshot)
+//!
+//! shutdown: queued and running jobs return to `queued`, each with a
+//! resumable snapshot on disk; `edc serve --resume-dir DIR` re-enqueues
+//! them.
+//! ```
+//!
+//! # Example
+//!
+//! ```
+//! use edcompress::coordinator::service::{Client, ServeConfig, Service};
+//!
+//! let dir = std::env::temp_dir().join(format!("edc_serve_doc_{}", std::process::id()));
+//! let svc = Service::start(ServeConfig { dir: dir.clone(), ..ServeConfig::default() }).unwrap();
+//! let mut client = Client::connect(&svc.addr().to_string()).unwrap();
+//! let pong = client.ping().unwrap();
+//! assert_eq!(pong.str_or("service", ""), "edc-serve");
+//! client.shutdown().unwrap();
+//! svc.wait().unwrap();
+//! std::fs::remove_dir_all(&dir).ok();
+//! ```
+
+use super::orchestrator::{self, OrchestrationResult, Orchestrator, OrchestratorSpec};
+use super::sweep::{self, SweepSpec};
+use super::SearchOutcome;
+use crate::dataflow::Dataflow;
+use crate::energy::cache::SharedCacheRegistry;
+use crate::envs::EnvConfig;
+use crate::model::zoo;
+use crate::report::{figures, tables};
+use crate::util::json::{self, Json};
+use crate::util::lock_ignore_poison;
+use crate::util::pool::{panic_message, WorkPool};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Name of the address-discovery file the daemon writes into its
+/// snapshot directory (`<dir>/serve.addr`), so client subcommands find a
+/// daemon started with an ephemeral port without passing `--addr`.
+pub const ADDR_FILE: &str = "serve.addr";
+
+// ---------- configuration ----------
+
+/// Daemon configuration (`edc serve` flags map onto this 1:1).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Snapshot directory: per-job resumable snapshots
+    /// (`job_<id>.json`), queued sweep specs (`job_<id>.sweep.json`) and
+    /// the [`ADDR_FILE`] live here.
+    pub dir: PathBuf,
+    /// TCP port on 127.0.0.1; 0 picks an ephemeral port (the bound
+    /// address is printed and written to the [`ADDR_FILE`]).
+    pub port: u16,
+    /// Jobs advanced concurrently; queued jobs beyond this wait. Each
+    /// running job is driven by one lightweight runner thread, but all
+    /// heavy compute flows through the single shared worker pool.
+    pub max_concurrent_jobs: usize,
+    /// Worker threads of the shared pool; 0 sizes it to the machine
+    /// (`available_parallelism`).
+    pub workers: usize,
+    /// Rescan `dir` at startup and re-enqueue every job snapshot found
+    /// (the `--resume-dir` path).
+    pub resume: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            dir: PathBuf::from("reports/serve"),
+            port: 0,
+            max_concurrent_jobs: 2,
+            workers: 0,
+            resume: false,
+        }
+    }
+}
+
+// ---------- job specs ----------
+
+/// A search job: the same scalars `edc search` takes, resolved against
+/// the same defaults. Everything else (SAC hyper-parameters, energy
+/// config) is the library default, exactly as in the standalone CLI — so
+/// a daemon job and an `edc search` run with the same flags are the same
+/// run, bit for bit.
+#[derive(Clone, Debug)]
+pub struct SearchJobSpec {
+    pub net: String,
+    pub seeds: usize,
+    pub base_seed: u64,
+    pub episodes: usize,
+    pub chunk: usize,
+    pub max_steps: usize,
+    pub dataflows: Vec<Dataflow>,
+}
+
+impl SearchJobSpec {
+    pub fn to_orchestrator_spec(&self) -> Result<OrchestratorSpec> {
+        let net = zoo::by_name(&self.net).ok_or_else(|| anyhow!("unknown net '{}'", self.net))?;
+        let mut spec = OrchestratorSpec::new(net, self.seeds, self.base_seed);
+        spec.dataflows = self.dataflows.clone();
+        spec.env.max_steps = self.max_steps;
+        spec.search.episodes = self.episodes;
+        spec.chunk_episodes = self.chunk;
+        Ok(spec)
+    }
+}
+
+/// A sweep job: `edc sweep`'s flags. Sweeps have no mid-run snapshot
+/// (each (network, dataflow) pair is one indivisible pool job); their
+/// queued spec is persisted instead, so a shutdown re-runs them from
+/// scratch on resume — deterministic, so the outcome is unchanged.
+#[derive(Clone, Debug)]
+pub struct SweepJobSpec {
+    pub nets: Vec<String>,
+    pub dataflows: Vec<Dataflow>,
+    pub episodes: usize,
+    pub max_steps: usize,
+    pub seed: u64,
+}
+
+impl SweepJobSpec {
+    pub fn to_sweep_spec(&self) -> Result<SweepSpec> {
+        let nets = self
+            .nets
+            .iter()
+            .map(|n| zoo::by_name(n).ok_or_else(|| anyhow!("unknown net '{n}'")))
+            .collect::<Result<Vec<_>>>()?;
+        let mut spec = SweepSpec::new(nets, self.dataflows.clone(), self.seed);
+        spec.search.episodes = self.episodes;
+        spec.env.max_steps = self.max_steps;
+        Ok(spec)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", Json::Str("sweep-job".into()))
+            .set("version", Json::Num(1.0))
+            .set("nets", Json::Str(self.nets.join(",")))
+            .set(
+                "dataflows",
+                Json::Arr(self.dataflows.iter().map(|d| Json::Str(d.label())).collect()),
+            )
+            .set("episodes", Json::Num(self.episodes as f64))
+            .set("steps", Json::Num(self.max_steps as f64))
+            .set("seed", Json::Str(self.seed.to_string()));
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<SweepJobSpec> {
+        ensure!(
+            j.str_or("kind", "") == "sweep-job",
+            "not a sweep-job spec file (kind = {:?})",
+            j.str_or("kind", "<missing>")
+        );
+        let nets: Vec<String> = j
+            .str_or("nets", "")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        ensure!(!nets.is_empty(), "sweep-job spec has no networks");
+        let dataflows = j
+            .get("dataflows")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("sweep-job spec missing dataflows"))?
+            .iter()
+            .map(|d| d.as_str().and_then(Dataflow::parse))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("sweep-job spec has a malformed dataflow"))?;
+        Ok(SweepJobSpec {
+            nets,
+            dataflows,
+            episodes: j.num_or("episodes", 8.0) as usize,
+            max_steps: j.num_or("steps", EnvConfig::default().max_steps as f64) as usize,
+            seed: field_u64(j, "seed", 0)?,
+        })
+    }
+}
+
+/// What a `submit` request asks for.
+#[derive(Clone, Debug)]
+pub enum JobSpec {
+    Search(SearchJobSpec),
+    Sweep(SweepJobSpec),
+}
+
+impl JobSpec {
+    /// Parse a `submit` request body. Field names and defaults mirror
+    /// the `edc search` / `edc sweep` flags; everything is validated
+    /// here so a queued job can no longer fail on malformed input.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use edcompress::coordinator::service::JobSpec;
+    /// use edcompress::util::json;
+    ///
+    /// let req = json::parse(
+    ///     r#"{"cmd":"submit","net":"lenet5","seeds":2,"episodes":4,"dataflows":"X:Y"}"#,
+    /// )
+    /// .unwrap();
+    /// let JobSpec::Search(s) = JobSpec::from_request(&req).unwrap() else {
+    ///     panic!("default kind is search");
+    /// };
+    /// assert_eq!((s.net.as_str(), s.seeds, s.episodes), ("lenet5", 2, 4));
+    /// assert_eq!(s.chunk, 2, "unspecified fields take the edc search defaults");
+    ///
+    /// // Unknown networks and malformed scalars are rejected at submit time.
+    /// let bad = json::parse(r#"{"cmd":"submit","net":"resnet9000"}"#).unwrap();
+    /// assert!(JobSpec::from_request(&bad).is_err());
+    /// ```
+    pub fn from_request(req: &Json) -> Result<JobSpec> {
+        let kind = req.str_or("kind", "search");
+        match kind.as_str() {
+            "search" => {
+                let net = req.str_or("net", "lenet5");
+                ensure!(zoo::by_name(&net).is_some(), "unknown net '{net}'");
+                let spec = SearchJobSpec {
+                    net,
+                    seeds: field_min1(req, "seeds", 4)?,
+                    base_seed: field_u64(req, "seed", 0)?,
+                    episodes: field_min1(req, "episodes", 8)?,
+                    chunk: field_min1(req, "chunk", 2)?,
+                    max_steps: field_min1(req, "steps", EnvConfig::default().max_steps)?,
+                    dataflows: parse_dataflows_field(req)?,
+                };
+                Ok(JobSpec::Search(spec))
+            }
+            "sweep" => {
+                let nets: Vec<String> = req
+                    .str_or("nets", "lenet5")
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                ensure!(!nets.is_empty(), "sweep needs at least one network");
+                for n in &nets {
+                    ensure!(zoo::by_name(n).is_some(), "unknown net '{n}'");
+                }
+                let spec = SweepJobSpec {
+                    nets,
+                    dataflows: parse_dataflows_field(req)?,
+                    episodes: field_min1(req, "episodes", 8)?,
+                    max_steps: field_min1(req, "steps", EnvConfig::default().max_steps)?,
+                    seed: field_u64(req, "seed", 0)?,
+                };
+                Ok(JobSpec::Sweep(spec))
+            }
+            other => bail!("unknown job kind '{other}' (search|sweep)"),
+        }
+    }
+
+    fn kind_label(&self) -> &'static str {
+        match self {
+            JobSpec::Search(_) => "search",
+            JobSpec::Sweep(_) => "sweep",
+        }
+    }
+
+    fn target(&self) -> String {
+        match self {
+            JobSpec::Search(s) => s.net.clone(),
+            JobSpec::Sweep(s) => s.nets.join(","),
+        }
+    }
+
+    fn total_episodes(&self) -> usize {
+        match self {
+            JobSpec::Search(s) => s.seeds * s.episodes,
+            JobSpec::Sweep(s) => s.nets.len() * s.dataflows.len() * s.episodes,
+        }
+    }
+}
+
+fn parse_dataflows_field(req: &Json) -> Result<Vec<Dataflow>> {
+    let arg = req.str_or("dataflows", "paper");
+    Dataflow::parse_list(&arg).map_err(|e| anyhow!(e))
+}
+
+/// Unsigned-integer request field: accepts a JSON number (integral, in
+/// f64's exact range) or a decimal string (for full-range u64 seeds,
+/// matching the checkpoint convention).
+fn field_u64(j: &Json, key: &str, default: u64) -> Result<u64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(Json::Num(v)) if *v >= 0.0 && v.fract() == 0.0 && *v < 9.007_199_254_740_992e15 => {
+            Ok(*v as u64)
+        }
+        Some(Json::Str(s)) => s
+            .parse()
+            .map_err(|_| anyhow!("field '{key}' wants an unsigned integer, got '{s}'")),
+        Some(other) => bail!("field '{key}' wants an unsigned integer, got {other}"),
+    }
+}
+
+fn field_min1(j: &Json, key: &str, default: usize) -> Result<usize> {
+    let v = field_u64(j, key, default as u64)?;
+    ensure!(v >= 1, "field '{key}' must be at least 1");
+    usize::try_from(v).map_err(|_| anyhow!("field '{key}' is out of range"))
+}
+
+// ---------- job registry ----------
+
+/// Lifecycle state of a submitted job (see the module-level diagram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn label(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+}
+
+#[derive(Clone, Default)]
+struct Progress {
+    /// Completed snapshot rounds (search jobs; derived, so it survives
+    /// resume).
+    rounds: usize,
+    episodes_done: usize,
+    episodes_total: usize,
+    /// Current Pareto-frontier size (search jobs).
+    frontier: usize,
+    /// Counters of the job's fleet cache — shared with every other job
+    /// on the same network, which is the point.
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+#[derive(Clone)]
+struct JobResultPayload {
+    summary: Json,
+    rendered: String,
+}
+
+struct JobEntry {
+    id: u64,
+    spec: JobSpec,
+    state: JobState,
+    cancel: Arc<AtomicBool>,
+    progress: Progress,
+    error: Option<String>,
+    result: Option<JobResultPayload>,
+    /// Search jobs: the resumable v3 snapshot. Sweep jobs: the persisted
+    /// spec (removed on completion).
+    snapshot: PathBuf,
+}
+
+struct Registry {
+    next_id: u64,
+    jobs: BTreeMap<u64, JobEntry>,
+    pending: VecDeque<u64>,
+}
+
+enum Verdict {
+    Done(JobResultPayload),
+    /// Shutdown drain: back to `queued`, resumable snapshot on disk.
+    Suspended,
+    Cancelled,
+}
+
+// ---------- the daemon ----------
+
+struct ServiceInner {
+    cfg: ServeConfig,
+    addr: SocketAddr,
+    registry: Mutex<Registry>,
+    /// Signaled on submit / cancel / shutdown; paired with `registry`.
+    scheduler: Condvar,
+    shutdown: AtomicBool,
+    pool: WorkPool,
+    caches: SharedCacheRegistry,
+}
+
+/// A running `edc serve` daemon. [`start`](Service::start) binds the
+/// socket and spawns the acceptor and job-runner threads;
+/// [`wait`](Service::wait) blocks until a `shutdown` request (or
+/// [`shutdown`](Service::shutdown)) has drained everything.
+pub struct Service {
+    inner: Arc<ServiceInner>,
+    accept: Option<JoinHandle<()>>,
+    runners: Vec<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Service {
+    /// Bind 127.0.0.1 and start serving. Creates `cfg.dir`, writes the
+    /// [`ADDR_FILE`], and — with `cfg.resume` — re-enqueues every job
+    /// snapshot found in the directory.
+    pub fn start(cfg: ServeConfig) -> Result<Service> {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating snapshot dir {}", cfg.dir.display()))?;
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        let addr = listener.local_addr()?;
+        let workers = if cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            cfg.workers
+        };
+        let inner = Arc::new(ServiceInner {
+            addr,
+            registry: Mutex::new(Registry {
+                next_id: 1,
+                jobs: BTreeMap::new(),
+                pending: VecDeque::new(),
+            }),
+            scheduler: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            pool: WorkPool::new(workers),
+            caches: SharedCacheRegistry::new(),
+            cfg,
+        });
+        std::fs::write(inner.cfg.dir.join(ADDR_FILE), format!("{addr}\n"))?;
+        // Always scan for existing job files — even without --resume-dir
+        // the id counter must start past them, so a fresh submit can
+        // never collide with (and silently resume) a previous daemon
+        // run's snapshot. Only `resume` re-enqueues what is found.
+        inner.rescan_jobs(inner.cfg.resume)?;
+        let runners = (0..inner.cfg.max_concurrent_jobs.max(1))
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || runner_loop(&inner))
+            })
+            .collect();
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let inner = Arc::clone(&inner);
+            let conns = Arc::clone(&conns);
+            std::thread::spawn(move || accept_loop(&inner, listener, &conns))
+        };
+        Ok(Service {
+            inner,
+            accept: Some(accept),
+            runners,
+            conns,
+        })
+    }
+
+    /// The bound address (`127.0.0.1:<port>`).
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr
+    }
+
+    /// Worker threads of the shared pool.
+    pub fn workers(&self) -> usize {
+        self.inner.pool.size()
+    }
+
+    /// Initiate graceful shutdown programmatically (equivalent to a
+    /// `shutdown` request): stop accepting jobs, drain queued jobs into
+    /// resumable snapshots, let running jobs finish their current round
+    /// and snapshot. Call [`wait`](Service::wait) to block until done.
+    pub fn shutdown(&self) {
+        self.inner.begin_shutdown();
+    }
+
+    /// Block until the daemon has fully shut down (all connections,
+    /// runners and pool workers joined), then remove the [`ADDR_FILE`].
+    pub fn wait(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *lock_ignore_poison(&self.conns));
+        for h in conns {
+            let _ = h.join();
+        }
+        for h in self.runners.drain(..) {
+            let _ = h.join();
+        }
+        std::fs::remove_file(self.inner.cfg.dir.join(ADDR_FILE)).ok();
+        Ok(())
+    }
+}
+
+// ---------- request handling ----------
+
+fn ok_json() -> Json {
+    let mut j = Json::obj();
+    j.set("ok", Json::Bool(true));
+    j
+}
+
+fn err_json(msg: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", Json::Bool(false)).set("error", Json::Str(msg.to_string()));
+    j
+}
+
+/// Fail with the daemon's error message if a response says `ok: false`.
+pub fn ensure_ok(resp: &Json) -> Result<()> {
+    if resp.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+        Ok(())
+    } else {
+        bail!("daemon error: {}", resp.str_or("error", "malformed response"))
+    }
+}
+
+impl ServiceInner {
+    fn handle(&self, req: &Json) -> Json {
+        match self.handle_inner(req) {
+            Ok(j) => j,
+            Err(e) => err_json(&format!("{e:#}")),
+        }
+    }
+
+    fn handle_inner(&self, req: &Json) -> Result<Json> {
+        let cmd = req.str_or("cmd", "");
+        ensure!(
+            !cmd.is_empty(),
+            "request missing 'cmd' (submit|status|result|cancel|ping|shutdown)"
+        );
+        match cmd.as_str() {
+            "ping" => {
+                let mut j = ok_json();
+                j.set("service", Json::Str("edc-serve".into()))
+                    .set("version", Json::Str(env!("CARGO_PKG_VERSION").into()));
+                Ok(j)
+            }
+            "submit" => self.handle_submit(req),
+            "status" => self.handle_status(req),
+            "result" => self.handle_result(req),
+            "cancel" => self.handle_cancel(req),
+            "shutdown" => Ok(self.handle_shutdown()),
+            other => bail!("unknown cmd '{other}' (submit|status|result|cancel|ping|shutdown)"),
+        }
+    }
+
+    fn handle_submit(&self, req: &Json) -> Result<Json> {
+        let spec = JobSpec::from_request(req)?;
+        let snapshot_name = |id: u64| match &spec {
+            JobSpec::Search(_) => format!("job_{id}.json"),
+            JobSpec::Sweep(_) => format!("job_{id}.sweep.json"),
+        };
+        let (id, snapshot) = {
+            let mut reg = lock_ignore_poison(&self.registry);
+            // Checked *inside* the registry critical section: the drain in
+            // `begin_shutdown` sets the flag before taking this lock, so a
+            // submit either lands in `pending` before the drain reads it
+            // (and is persisted) or observes the flag here and is refused —
+            // never accepted-then-silently-lost.
+            ensure!(
+                !self.shutdown.load(Ordering::SeqCst),
+                "daemon is shutting down and not accepting jobs"
+            );
+            let id = reg.next_id;
+            reg.next_id += 1;
+            let snapshot = self.cfg.dir.join(snapshot_name(id));
+            let entry = JobEntry {
+                id,
+                state: JobState::Queued,
+                cancel: Arc::new(AtomicBool::new(false)),
+                progress: Progress {
+                    episodes_total: spec.total_episodes(),
+                    ..Progress::default()
+                },
+                error: None,
+                result: None,
+                snapshot: snapshot.clone(),
+                spec,
+            };
+            reg.jobs.insert(id, entry);
+            reg.pending.push_back(id);
+            (id, snapshot)
+        };
+        self.scheduler.notify_all();
+        let mut j = ok_json();
+        j.set("job", Json::Num(id as f64))
+            .set("state", Json::Str("queued".into()))
+            .set("snapshot", Json::Str(snapshot.display().to_string()));
+        Ok(j)
+    }
+
+    fn handle_status(&self, req: &Json) -> Result<Json> {
+        let reg = lock_ignore_poison(&self.registry);
+        if req.get("job").is_some() {
+            let id = field_u64(req, "job", 0)?;
+            let e = reg.jobs.get(&id).ok_or_else(|| anyhow!("no such job {id}"))?;
+            let mut j = ok_json();
+            merge_status(&mut j, e);
+            return Ok(j);
+        }
+        let jobs: Vec<Json> = reg
+            .jobs
+            .values()
+            .map(|e| {
+                let mut j = Json::obj();
+                merge_status(&mut j, e);
+                j
+            })
+            .collect();
+        drop(reg);
+        let caches: Vec<Json> = self
+            .caches
+            .stats()
+            .into_iter()
+            .map(|s| {
+                let mut j = Json::obj();
+                j.set("network", Json::Str(s.network))
+                    .set("entries", Json::Num(s.entries as f64))
+                    .set("hits", Json::Num(s.hits as f64))
+                    .set("misses", Json::Num(s.misses as f64));
+                j
+            })
+            .collect();
+        let mut j = ok_json();
+        j.set("addr", Json::Str(self.addr.to_string()))
+            .set("dir", Json::Str(self.cfg.dir.display().to_string()))
+            .set("workers", Json::Num(self.pool.size() as f64))
+            .set("jobs", Json::Arr(jobs))
+            .set("caches", Json::Arr(caches));
+        Ok(j)
+    }
+
+    fn handle_result(&self, req: &Json) -> Result<Json> {
+        ensure!(req.get("job").is_some(), "result wants a 'job' field");
+        let id = field_u64(req, "job", 0)?;
+        let reg = lock_ignore_poison(&self.registry);
+        let e = reg.jobs.get(&id).ok_or_else(|| anyhow!("no such job {id}"))?;
+        match e.state {
+            JobState::Done => {
+                let payload = e.result.clone().ok_or_else(|| {
+                    anyhow!("job {id} is done but its result was not retained")
+                })?;
+                let mut j = ok_json();
+                j.set("job", Json::Num(id as f64))
+                    .set("state", Json::Str("done".into()))
+                    .set("summary", payload.summary)
+                    .set("rendered", Json::Str(payload.rendered));
+                Ok(j)
+            }
+            JobState::Failed => bail!(
+                "job {id} failed: {}",
+                e.error.as_deref().unwrap_or("unknown error")
+            ),
+            JobState::Cancelled => {
+                if e.snapshot.exists() {
+                    bail!(
+                        "job {id} was cancelled (snapshot kept at {} for a manual \
+                         `edc search --resume`/`--warm-start`)",
+                        e.snapshot.display()
+                    );
+                }
+                bail!("job {id} was cancelled before it started");
+            }
+            s => bail!(
+                "job {id} is not finished yet ({}; {}/{} episodes)",
+                s.label(),
+                e.progress.episodes_done,
+                e.progress.episodes_total
+            ),
+        }
+    }
+
+    fn handle_cancel(&self, req: &Json) -> Result<Json> {
+        ensure!(req.get("job").is_some(), "cancel wants a 'job' field");
+        let id = field_u64(req, "job", 0)?;
+        let mut guard = lock_ignore_poison(&self.registry);
+        // Reborrow the guard once so `jobs` and `pending` split cleanly.
+        let reg = &mut *guard;
+        let e = reg
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("no such job {id}"))?;
+        let state = match e.state {
+            JobState::Queued => {
+                e.state = JobState::Cancelled;
+                if matches!(e.spec, JobSpec::Sweep(_)) {
+                    std::fs::remove_file(&e.snapshot).ok();
+                } else {
+                    // A re-enqueued suspended job may already have a
+                    // snapshot on disk; shelve it so --resume-dir does
+                    // not resurrect the cancelled job.
+                    shelve_cancelled_snapshot(e);
+                }
+                reg.pending.retain(|&p| p != id);
+                "cancelled"
+            }
+            JobState::Running => {
+                // A running sweep has no round boundary to stop at — its
+                // (network × dataflow) pairs are already in the pool — so
+                // promising "cancelling" would be a lie; see docs/serve.md.
+                ensure!(
+                    matches!(e.spec, JobSpec::Search(_)),
+                    "job {id} is a running sweep, which cannot be interrupted \
+                     mid-run (it will complete); cancel only affects queued sweeps"
+                );
+                e.cancel.store(true, Ordering::SeqCst);
+                // The runner notices at its next round boundary, writes a
+                // final snapshot and flips the state to cancelled.
+                "cancelling"
+            }
+            s => bail!("job {id} is already {}", s.label()),
+        };
+        drop(guard);
+        let mut j = ok_json();
+        j.set("job", Json::Num(id as f64)).set("state", Json::Str(state.into()));
+        Ok(j)
+    }
+
+    fn handle_shutdown(&self) -> Json {
+        let (queued, running) = self.begin_shutdown();
+        let mut j = ok_json();
+        j.set("shutdown", Json::Bool(true))
+            .set("queued_drained", Json::Num(queued as f64))
+            .set("running_draining", Json::Num(running as f64));
+        j
+    }
+
+    /// Idempotently start the graceful drain. Returns (queued jobs
+    /// drained to disk, running jobs still finishing their round).
+    fn begin_shutdown(&self) -> (usize, usize) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            let reg = lock_ignore_poison(&self.registry);
+            let running = reg.jobs.values().filter(|e| e.state == JobState::Running).count();
+            return (reg.pending.len(), running);
+        }
+        // Once the flag is set and the lock has been held once, `pending`
+        // is frozen: runners re-check the flag under this same lock
+        // before popping. So snapshot the queued specs under the lock,
+        // then do the (potentially slow) persistence outside it — status
+        // and cancel stay responsive during the drain.
+        let (to_persist, running) = {
+            let reg = lock_ignore_poison(&self.registry);
+            let running = reg.jobs.values().filter(|e| e.state == JobState::Running).count();
+            let specs: Vec<(u64, JobSpec, PathBuf)> = reg
+                .pending
+                .iter()
+                .filter_map(|id| {
+                    reg.jobs.get(id).map(|e| (e.id, e.spec.clone(), e.snapshot.clone()))
+                })
+                .collect();
+            (specs, running)
+        };
+        let mut queued = 0usize;
+        let mut failed: Vec<(u64, String)> = Vec::new();
+        for (id, spec, snapshot) in to_persist {
+            match persist_queued_job(&spec, &snapshot) {
+                Ok(()) => queued += 1,
+                Err(err) => {
+                    log::warn!("draining queued job {id}: {err:#}");
+                    failed.push((id, format!("{err:#}")));
+                }
+            }
+        }
+        if !failed.is_empty() {
+            let mut reg = lock_ignore_poison(&self.registry);
+            for (id, msg) in failed {
+                if let Some(e) = reg.jobs.get_mut(&id) {
+                    e.state = JobState::Failed;
+                    e.error = Some(msg);
+                }
+            }
+        }
+        self.scheduler.notify_all();
+        // Wake the acceptor out of its blocking accept().
+        let _ = TcpStream::connect(self.addr);
+        (queued, running)
+    }
+
+    // ---------- startup rescan (--resume-dir) ----------
+
+    /// Scan the snapshot dir for `job_<id>.*` files. The id counter is
+    /// always advanced past every id found — including shelved
+    /// `.cancelled` snapshots — so a fresh daemon over an old directory
+    /// never reuses an id; with `enqueue`, resumable files
+    /// (`job_<id>.json`, `job_<id>.sweep.json`) are also re-enqueued.
+    fn rescan_jobs(&self, enqueue: bool) -> Result<()> {
+        let mut max_id = 0u64;
+        let mut found: Vec<(u64, PathBuf, bool)> = Vec::new();
+        for entry in std::fs::read_dir(&self.cfg.dir)
+            .with_context(|| format!("scanning {}", self.cfg.dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let Some(rest) = name.strip_prefix("job_") else { continue };
+            if let Some(id) = rest.split('.').next().and_then(|d| d.parse::<u64>().ok()) {
+                max_id = max_id.max(id);
+            }
+            if let Some(id) = rest.strip_suffix(".sweep.json").and_then(|s| s.parse().ok()) {
+                found.push((id, entry.path(), true));
+            } else if let Some(id) = rest.strip_suffix(".json").and_then(|s| s.parse().ok()) {
+                found.push((id, entry.path(), false));
+            }
+        }
+        found.sort_by_key(|f| f.0);
+        let mut reg = lock_ignore_poison(&self.registry);
+        reg.next_id = reg.next_id.max(max_id + 1);
+        if !enqueue {
+            return Ok(());
+        }
+        for (id, path, is_sweep) in found {
+            let spec = match read_job_spec(&path, is_sweep) {
+                Ok(s) => s,
+                Err(e) => {
+                    log::warn!("skipping {}: {e:#}", path.display());
+                    continue;
+                }
+            };
+            let entry = JobEntry {
+                id,
+                state: JobState::Queued,
+                cancel: Arc::new(AtomicBool::new(false)),
+                progress: Progress {
+                    episodes_total: spec.total_episodes(),
+                    ..Progress::default()
+                },
+                error: None,
+                result: None,
+                snapshot: path,
+                spec,
+            };
+            reg.jobs.insert(id, entry);
+            reg.pending.push_back(id);
+        }
+        log::info!("resume scan: {} jobs re-enqueued", reg.pending.len());
+        Ok(())
+    }
+
+    // ---------- job execution ----------
+
+    fn run_job(&self, id: u64) {
+        let (spec, cancel, snapshot) = {
+            let mut reg = lock_ignore_poison(&self.registry);
+            let Some(e) = reg.jobs.get_mut(&id) else { return };
+            if e.state != JobState::Queued {
+                return;
+            }
+            e.state = JobState::Running;
+            (e.spec.clone(), Arc::clone(&e.cancel), e.snapshot.clone())
+        };
+        let verdict = catch_unwind(AssertUnwindSafe(|| match &spec {
+            JobSpec::Search(s) => self.run_search_job(id, s, &cancel, &snapshot),
+            JobSpec::Sweep(s) => self.run_sweep_job(id, s, &cancel, &snapshot),
+        }));
+        let mut reg = lock_ignore_poison(&self.registry);
+        let Some(e) = reg.jobs.get_mut(&id) else { return };
+        match verdict {
+            Ok(Ok(Verdict::Done(payload))) => {
+                e.state = JobState::Done;
+                e.result = Some(payload);
+            }
+            Ok(Ok(Verdict::Suspended)) => {
+                // Drained at shutdown: queued again, snapshot on disk,
+                // ready for --resume-dir.
+                e.state = JobState::Queued;
+            }
+            Ok(Ok(Verdict::Cancelled)) => {
+                e.state = JobState::Cancelled;
+                shelve_cancelled_snapshot(e);
+            }
+            Ok(Err(err)) => {
+                e.state = JobState::Failed;
+                e.error = Some(format!("{err:#}"));
+            }
+            Err(payload) => {
+                e.state = JobState::Failed;
+                e.error = Some(panic_message(payload));
+            }
+        }
+    }
+
+    fn run_search_job(
+        &self,
+        id: u64,
+        spec: &SearchJobSpec,
+        cancel: &Arc<AtomicBool>,
+        snap: &Path,
+    ) -> Result<Verdict> {
+        let ospec = spec.to_orchestrator_spec()?;
+        let mut orch = if snap.exists() {
+            Orchestrator::resume(snap, ospec)
+                .with_context(|| format!("resuming job {id} from {}", snap.display()))?
+        } else {
+            let mut o = Orchestrator::new(ospec);
+            o.snapshot_path = Some(snap.to_path_buf());
+            o
+        };
+        // Join the daemon-wide fleet cache for this network's structure.
+        let cache = self.caches.for_network(&orch.spec.net, &orch.spec.energy);
+        orch.set_shared_cache(cache)?;
+        self.update_search_progress(id, &orch);
+        loop {
+            if cancel.load(Ordering::SeqCst) {
+                orch.save_snapshot(snap)?;
+                return Ok(Verdict::Cancelled);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                orch.save_snapshot(snap)?;
+                return Ok(Verdict::Suspended);
+            }
+            let done = orch.run_round_on(&self.pool)?;
+            self.update_search_progress(id, &orch);
+            if done {
+                break;
+            }
+        }
+        let res = orch.result();
+        if !res.failures.is_empty() {
+            bail!(
+                "{} seeds failed: {}",
+                res.failures.len(),
+                res.failures
+                    .iter()
+                    .map(|(i, m)| format!("seed {i} ({m})"))
+                    .collect::<Vec<_>>()
+                    .join("; ")
+            );
+        }
+        Ok(Verdict::Done(render_search_result(&res, snap)))
+    }
+
+    fn run_sweep_job(
+        &self,
+        id: u64,
+        spec: &SweepJobSpec,
+        cancel: &Arc<AtomicBool>,
+        snap: &Path,
+    ) -> Result<Verdict> {
+        // Persist the spec first: a kill or drain before completion
+        // leaves the job re-runnable from --resume-dir.
+        std::fs::write(snap, spec.to_json().to_string())
+            .with_context(|| format!("writing sweep spec {}", snap.display()))?;
+        if cancel.load(Ordering::SeqCst) {
+            std::fs::remove_file(snap).ok();
+            return Ok(Verdict::Cancelled);
+        }
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Ok(Verdict::Suspended);
+        }
+        let sspec = spec.to_sweep_spec()?;
+        let outs = sweep::run_surrogate_sweep_on(&sspec, &self.pool, Some(&self.caches))
+            .map_err(|e| anyhow!("{e}"))?;
+        {
+            let mut reg = lock_ignore_poison(&self.registry);
+            if let Some(e) = reg.jobs.get_mut(&id) {
+                e.progress.episodes_done = e.progress.episodes_total;
+            }
+        }
+        // Done: drop the spec so --resume-dir doesn't re-run it — unless
+        // the daemon is draining, in which case the in-memory result is
+        // about to be unreachable (no new connections, process exiting):
+        // keep the spec so a --resume-dir restart re-runs the
+        // deterministic sweep and can serve the result then.
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Ok(Verdict::Suspended);
+        }
+        std::fs::remove_file(snap).ok();
+        Ok(Verdict::Done(render_sweep_result(&outs)))
+    }
+
+    fn update_search_progress(&self, id: u64, orch: &Orchestrator) {
+        let chunk = orch.spec.chunk_episodes.max(1);
+        let done: usize = orch.slots.iter().map(|s| s.episodes_done).sum();
+        let max_done = orch.slots.iter().map(|s| s.episodes_done).max().unwrap_or(0);
+        let (hits, misses) = match &orch.shared_cache {
+            Some(c) => (c.hits(), c.misses()),
+            None => (0, 0),
+        };
+        let mut reg = lock_ignore_poison(&self.registry);
+        if let Some(e) = reg.jobs.get_mut(&id) {
+            e.progress.rounds = max_done.div_ceil(chunk);
+            e.progress.episodes_done = done;
+            e.progress.episodes_total = orch.spec.seeds * orch.spec.search.episodes;
+            e.progress.frontier = orch.archive.len();
+            e.progress.cache_hits = hits;
+            e.progress.cache_misses = misses;
+        }
+    }
+}
+
+/// Write the resumable on-disk form of a still-queued job at shutdown:
+/// search jobs get a fresh round-0 v3 snapshot (unless one already
+/// exists from an earlier suspension), sweep jobs their spec file.
+fn persist_queued_job(spec: &JobSpec, snapshot: &Path) -> Result<()> {
+    match spec {
+        JobSpec::Search(s) => {
+            if !snapshot.exists() {
+                Orchestrator::new(s.to_orchestrator_spec()?).save_snapshot(snapshot)?;
+            }
+            Ok(())
+        }
+        JobSpec::Sweep(s) => {
+            std::fs::write(snapshot, s.to_json().to_string())
+                .with_context(|| format!("writing {}", snapshot.display()))?;
+            Ok(())
+        }
+    }
+}
+
+/// Move a cancelled search job's snapshot out of the rescan namespace
+/// (`job_<id>.json` → `job_<id>.json.cancelled`): `--resume-dir` must
+/// not resurrect a job the user explicitly cancelled, but the state
+/// stays on disk for a manual `edc search --resume`/`--warm-start`.
+fn shelve_cancelled_snapshot(e: &mut JobEntry) {
+    if matches!(e.spec, JobSpec::Sweep(_)) || !e.snapshot.exists() {
+        return;
+    }
+    let shelved = PathBuf::from(format!("{}.cancelled", e.snapshot.display()));
+    if std::fs::rename(&e.snapshot, &shelved).is_ok() {
+        e.snapshot = shelved;
+    }
+}
+
+fn read_job_spec(path: &Path, is_sweep: bool) -> Result<JobSpec> {
+    let text = std::fs::read_to_string(path)?;
+    let j = json::parse(&text)
+        .map_err(|e| anyhow!("not valid JSON (truncated or corrupt file?): {e}"))?;
+    if is_sweep {
+        Ok(JobSpec::Sweep(SweepJobSpec::from_json(&j)?))
+    } else {
+        let h = orchestrator::read_header(&j)
+            .ok_or_else(|| anyhow!("not an orchestration snapshot (no readable header)"))?;
+        Ok(JobSpec::Search(SearchJobSpec {
+            net: h.network,
+            seeds: h.seeds,
+            base_seed: h.base_seed,
+            episodes: h.episodes_per_seed,
+            chunk: h.chunk_episodes,
+            max_steps: h.max_steps,
+            dataflows: h.dataflows,
+        }))
+    }
+}
+
+fn merge_status(j: &mut Json, e: &JobEntry) {
+    let p = &e.progress;
+    let lookups = p.cache_hits + p.cache_misses;
+    j.set("id", Json::Num(e.id as f64))
+        .set("kind", Json::Str(e.spec.kind_label().into()))
+        .set("target", Json::Str(e.spec.target()))
+        .set("state", Json::Str(e.state.label().into()))
+        .set("episodes_done", Json::Num(p.episodes_done as f64))
+        .set("episodes_total", Json::Num(p.episodes_total as f64))
+        .set("round", Json::Num(p.rounds as f64))
+        .set("frontier", Json::Num(p.frontier as f64))
+        .set("cache_hits", Json::Num(p.cache_hits as f64))
+        .set("cache_misses", Json::Num(p.cache_misses as f64))
+        .set(
+            "cache_hit_rate",
+            Json::Num(if lookups > 0 { p.cache_hits as f64 / lookups as f64 } else { 0.0 }),
+        )
+        .set("snapshot", Json::Str(e.snapshot.display().to_string()));
+    if let Some(err) = &e.error {
+        j.set("error", Json::Str(err.clone()));
+    }
+}
+
+fn render_search_result(res: &OrchestrationResult, snap: &Path) -> JobResultPayload {
+    use std::fmt::Write as _;
+    let mut rendered = String::new();
+    let _ = writeln!(
+        rendered,
+        "{:<6} {:<8} {:>10} {:>12} {:>10}",
+        "seed", "dataflow", "episodes", "E improv.", "best acc"
+    );
+    for (i, o) in res.outcomes.iter().enumerate() {
+        let acc = o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN);
+        let _ = writeln!(
+            rendered,
+            "{:<6} {:<8} {:>10} {:>11.2}x {:>10.4}",
+            i,
+            o.dataflow,
+            o.episodes.len(),
+            o.energy_improvement(),
+            acc
+        );
+    }
+    rendered.push('\n');
+    rendered.push_str(&tables::pareto_table(&res.archive).render());
+    let (curve, _rows) = figures::fleet_best_table(res);
+    rendered.push_str(&curve.render());
+
+    let outcomes: Vec<Json> = res
+        .outcomes
+        .iter()
+        .enumerate()
+        .map(|(i, o)| {
+            let mut j = Json::obj();
+            j.set("seed", Json::Num(i as f64))
+                .set("dataflow", Json::Str(o.dataflow.clone()))
+                .set("episodes", Json::Num(o.episodes.len() as f64))
+                .set("energy_improvement", Json::Num(o.energy_improvement()))
+                .set("area_improvement", Json::Num(o.area_improvement()))
+                .set(
+                    "best_accuracy",
+                    Json::Num(o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN)),
+                );
+            j
+        })
+        .collect();
+    let mut summary = Json::obj();
+    summary
+        .set("network", Json::Str(res.network.clone()))
+        .set("outcomes", Json::Arr(outcomes))
+        .set(
+            "archive",
+            Json::Arr(res.archive.points().iter().map(orchestrator::point_to_json).collect()),
+        )
+        .set("snapshot", Json::Str(snap.display().to_string()));
+    JobResultPayload { summary, rendered }
+}
+
+fn render_sweep_result(outs: &[SearchOutcome]) -> JobResultPayload {
+    use std::fmt::Write as _;
+    let mut rendered = String::new();
+    let _ = writeln!(
+        rendered,
+        "{:<16} {:<8} {:>12} {:>12} {:>10}",
+        "network", "dataflow", "E improv.", "A improv.", "best acc"
+    );
+    let mut rows = Vec::with_capacity(outs.len());
+    for o in outs {
+        let acc = o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN);
+        let _ = writeln!(
+            rendered,
+            "{:<16} {:<8} {:>11.2}x {:>11.2}x {:>10.4}",
+            o.network,
+            o.dataflow,
+            o.energy_improvement(),
+            o.area_improvement(),
+            acc
+        );
+        let mut j = Json::obj();
+        j.set("network", Json::Str(o.network.clone()))
+            .set("dataflow", Json::Str(o.dataflow.clone()))
+            .set("energy_improvement", Json::Num(o.energy_improvement()))
+            .set("area_improvement", Json::Num(o.area_improvement()))
+            .set("best_accuracy", Json::Num(acc));
+        rows.push(j);
+    }
+    let mut summary = Json::obj();
+    summary.set("rows", Json::Arr(rows));
+    JobResultPayload { summary, rendered }
+}
+
+// ---------- threads ----------
+
+fn runner_loop(inner: &Arc<ServiceInner>) {
+    loop {
+        let id = {
+            let mut reg = lock_ignore_poison(&inner.registry);
+            loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(id) = reg.pending.pop_front() {
+                    break id;
+                }
+                reg = inner.scheduler.wait(reg).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        inner.run_job(id);
+    }
+}
+
+fn accept_loop(
+    inner: &Arc<ServiceInner>,
+    listener: TcpListener,
+    conns: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    for stream in listener.incoming() {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let inner = Arc::clone(inner);
+        let h = std::thread::spawn(move || serve_conn(&inner, stream));
+        let mut conns = lock_ignore_poison(conns);
+        // Reap finished connection handlers so a long-lived daemon's
+        // handle list stays proportional to *live* connections, not to
+        // every connection ever accepted.
+        conns.retain(|c| !c.is_finished());
+        conns.push(h);
+    }
+}
+
+fn serve_conn(inner: &Arc<ServiceInner>, stream: TcpStream) {
+    // A read timeout lets the handler notice daemon shutdown even while
+    // a client holds an idle connection open.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                let trimmed = line.trim().to_string();
+                line.clear();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                // A malformed line gets a readable error response and
+                // the connection survives for the next request.
+                let resp = match json::parse(&trimmed) {
+                    Ok(req) => inner.handle(&req),
+                    Err(e) => err_json(&format!(
+                        "request is not valid JSON ({e}); the protocol is one JSON object \
+                         per line — see docs/serve.md"
+                    )),
+                };
+                if writeln!(writer, "{resp}").is_err() {
+                    break;
+                }
+                // Close after the response once a drain has begun — a
+                // client polling faster than the read timeout must not
+                // keep this handler (and Service::wait) alive.
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+// ---------- client ----------
+
+/// A blocking client for the `edc serve` protocol (one connection, any
+/// number of sequential requests). Powers the `edc submit | status |
+/// result | cancel | shutdown` subcommands and the integration tests.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a daemon at `host:port`.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to edc serve at {addr} (is it running?)"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader })
+    }
+
+    /// Send one request object, read one response object.
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.writer, "{req}")?;
+        self.writer.flush()?;
+        let mut lin = String::new();
+        let n = self.reader.read_line(&mut lin)?;
+        ensure!(n > 0, "daemon closed the connection");
+        json::parse(lin.trim()).map_err(|e| anyhow!("daemon sent invalid JSON: {e}"))
+    }
+
+    pub fn ping(&mut self) -> Result<Json> {
+        let resp = self.request(&cmd_obj("ping"))?;
+        ensure_ok(&resp)?;
+        Ok(resp)
+    }
+
+    /// Submit a job. `fields` is the submit body (`net`, `seeds`,
+    /// `episodes`, ... — see [`JobSpec::from_request`]); the `cmd` key is
+    /// added here. Returns the assigned job id.
+    ///
+    /// # Examples
+    ///
+    /// A full submit → poll → result session against an in-process
+    /// daemon (the tiniest possible job, so this doubles as the doctest
+    /// of the submit/poll/shutdown API):
+    ///
+    /// ```
+    /// use edcompress::coordinator::service::{Client, ServeConfig, Service};
+    /// use edcompress::util::json::Json;
+    /// use std::time::Duration;
+    ///
+    /// let dir = std::env::temp_dir().join(format!("edc_submit_doc_{}", std::process::id()));
+    /// let svc = Service::start(ServeConfig { dir: dir.clone(), ..ServeConfig::default() }).unwrap();
+    /// let mut client = Client::connect(&svc.addr().to_string()).unwrap();
+    ///
+    /// let mut job = Json::obj();
+    /// job.set("net", Json::Str("lenet5".into()))
+    ///     .set("seeds", Json::Num(1.0))
+    ///     .set("episodes", Json::Num(1.0))
+    ///     .set("chunk", Json::Num(1.0))
+    ///     .set("steps", Json::Num(4.0))
+    ///     .set("dataflows", Json::Str("X:Y".into()));
+    /// let id = client.submit(&job).unwrap();
+    ///
+    /// let status = client.wait_done(id, Duration::from_secs(300)).unwrap();
+    /// assert_eq!(status.str_or("state", ""), "done");
+    /// let result = client.result(id).unwrap();
+    /// assert!(result.str_or("rendered", "").contains("Pareto"));
+    ///
+    /// client.shutdown().unwrap();
+    /// svc.wait().unwrap();
+    /// std::fs::remove_dir_all(&dir).ok();
+    /// ```
+    pub fn submit(&mut self, fields: &Json) -> Result<u64> {
+        let mut req = fields.clone();
+        ensure!(
+            matches!(req, Json::Obj(_)),
+            "submit fields must be a JSON object"
+        );
+        req.set("cmd", Json::Str("submit".into()));
+        let resp = self.request(&req)?;
+        ensure_ok(&resp)?;
+        Ok(resp.num_or("job", 0.0) as u64)
+    }
+
+    /// Status of one job (`Some(id)`) or the whole daemon (`None`).
+    pub fn status(&mut self, job: Option<u64>) -> Result<Json> {
+        let mut req = cmd_obj("status");
+        if let Some(id) = job {
+            req.set("job", Json::Num(id as f64));
+        }
+        let resp = self.request(&req)?;
+        ensure_ok(&resp)?;
+        Ok(resp)
+    }
+
+    /// Result of a finished job (error if it is not `done`).
+    pub fn result(&mut self, job: u64) -> Result<Json> {
+        let mut req = cmd_obj("result");
+        req.set("job", Json::Num(job as f64));
+        let resp = self.request(&req)?;
+        ensure_ok(&resp)?;
+        Ok(resp)
+    }
+
+    pub fn cancel(&mut self, job: u64) -> Result<Json> {
+        let mut req = cmd_obj("cancel");
+        req.set("job", Json::Num(job as f64));
+        let resp = self.request(&req)?;
+        ensure_ok(&resp)?;
+        Ok(resp)
+    }
+
+    /// Request a graceful shutdown (queued + running jobs drain into
+    /// resumable snapshots).
+    pub fn shutdown(&mut self) -> Result<Json> {
+        let resp = self.request(&cmd_obj("shutdown"))?;
+        ensure_ok(&resp)?;
+        Ok(resp)
+    }
+
+    /// Poll `status` until the job reaches a terminal state (`done`,
+    /// `failed`, `cancelled`), returning that status object. Note that a
+    /// daemon drain is not terminal — a drained job returns to `queued`
+    /// and this keeps polling until the daemon closes the connection or
+    /// the timeout fires; poll `status` directly to observe a drain.
+    pub fn wait_done(&mut self, job: u64, timeout: Duration) -> Result<Json> {
+        let start = Instant::now();
+        loop {
+            let s = self.status(Some(job))?;
+            match s.str_or("state", "").as_str() {
+                "done" | "failed" | "cancelled" => return Ok(s),
+                _ => {}
+            }
+            ensure!(
+                start.elapsed() < timeout,
+                "job {job} did not finish within {timeout:?} (last state: {})",
+                s.str_or("state", "?")
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+fn cmd_obj(cmd: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("cmd", Json::Str(cmd.to_string()));
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_parses_defaults_and_rejects_bad_fields() {
+        let req = json::parse(r#"{"cmd":"submit"}"#).unwrap();
+        let JobSpec::Search(s) = JobSpec::from_request(&req).unwrap() else {
+            panic!("default kind must be search");
+        };
+        assert_eq!(s.net, "lenet5");
+        assert_eq!(s.seeds, 4);
+        assert_eq!(s.episodes, 8);
+        assert_eq!(s.chunk, 2);
+        assert_eq!(s.dataflows.len(), 4, "default priors are the paper four");
+        assert_eq!(JobSpec::Search(s).total_episodes(), 32);
+
+        for bad in [
+            r#"{"cmd":"submit","net":"resnet9000"}"#,
+            r#"{"cmd":"submit","seeds":0}"#,
+            r#"{"cmd":"submit","chunk":0}"#,
+            r#"{"cmd":"submit","seeds":1.5}"#,
+            r#"{"cmd":"submit","seeds":"three"}"#,
+            r#"{"cmd":"submit","dataflows":"Q:R"}"#,
+            r#"{"cmd":"submit","kind":"mystery"}"#,
+            r#"{"cmd":"submit","kind":"sweep","nets":"lenet5,bogus"}"#,
+        ] {
+            let req = json::parse(bad).unwrap();
+            assert!(JobSpec::from_request(&req).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn sweep_spec_roundtrips_through_json() {
+        let spec = SweepJobSpec {
+            nets: vec!["lenet5".into(), "vgg16_cifar".into()],
+            dataflows: vec![Dataflow::XY, Dataflow::CICO],
+            episodes: 3,
+            max_steps: 9,
+            seed: u64::MAX - 7,
+        };
+        let back = SweepJobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.nets, spec.nets);
+        assert_eq!(back.dataflows, spec.dataflows);
+        assert_eq!(back.episodes, 3);
+        assert_eq!(back.max_steps, 9);
+        assert_eq!(back.seed, u64::MAX - 7, "u64 seeds survive via string encoding");
+        // Full-range seed also survives a text round-trip of the file.
+        let text = spec.to_json().to_string();
+        let re = SweepJobSpec::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(re.seed, u64::MAX - 7);
+    }
+
+    #[test]
+    fn u64_fields_accept_numbers_and_strings() {
+        let j = json::parse(r#"{"a":7,"b":"18446744073709551615","c":-1,"d":2.5}"#).unwrap();
+        assert_eq!(field_u64(&j, "a", 0).unwrap(), 7);
+        assert_eq!(field_u64(&j, "b", 0).unwrap(), u64::MAX);
+        assert_eq!(field_u64(&j, "missing", 42).unwrap(), 42);
+        assert!(field_u64(&j, "c", 0).is_err());
+        assert!(field_u64(&j, "d", 0).is_err());
+    }
+
+    #[test]
+    fn job_state_labels_cover_the_lifecycle() {
+        let all = [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Done,
+            JobState::Failed,
+            JobState::Cancelled,
+        ];
+        let labels: Vec<&str> = all.iter().map(|s| s.label()).collect();
+        assert_eq!(labels, vec!["queued", "running", "done", "failed", "cancelled"]);
+    }
+}

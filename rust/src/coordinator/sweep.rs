@@ -10,14 +10,12 @@
 
 use super::{Coordinator, SearchConfig, SearchOutcome};
 use crate::dataflow::Dataflow;
-use crate::energy::cache::SharedCostCache;
+use crate::energy::cache::{SharedCacheRegistry, SharedCostCache};
 use crate::energy::{self, EnergyConfig};
 use crate::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
 use crate::model::Network;
-use crate::util::lock_ignore_poison;
-use std::collections::{HashMap, VecDeque};
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::Mutex;
+use crate::util::pool::WorkPool;
+use std::collections::HashMap;
 
 /// One sweep request: each network searched under each dataflow.
 #[derive(Clone, Debug)]
@@ -60,9 +58,13 @@ impl SweepSpec {
 
     /// The job list in output order: network-major, then dataflow. All
     /// jobs of the same network carry a handle on that network's shared
-    /// cost cache (unless `shared_cache` is off).
-    fn jobs(&self) -> Vec<SweepJob> {
-        let caches: HashMap<String, SharedCostCache> = if self.shared_cache {
+    /// cost cache (unless `shared_cache` is off). With a `registry`, the
+    /// caches come from the caller's [`SharedCacheRegistry`] — keyed by
+    /// structural fingerprint, so this sweep's jobs join any fleet the
+    /// registry already serves (the `edc serve` path); without one, a
+    /// fresh per-sweep cache per network.
+    fn jobs(&self, registry: Option<&SharedCacheRegistry>) -> Vec<SweepJob> {
+        let local: HashMap<String, SharedCostCache> = if self.shared_cache && registry.is_none() {
             self.nets
                 .iter()
                 .map(|n| (n.name.clone(), SharedCostCache::new(n, &self.energy)))
@@ -78,6 +80,23 @@ impl SweepSpec {
                 // Decorrelate agent seeds across jobs but keep determinism
                 // (same formula as the original per-dataflow threads).
                 search.sac.seed = self.seed.wrapping_add(i * 7919);
+                let shared = if !self.shared_cache {
+                    None
+                } else if let Some(reg) = registry {
+                    // Fingerprint-keyed: always structurally correct.
+                    Some(reg.for_network(net, &self.energy))
+                } else {
+                    // Structural compatibility check: if the spec holds
+                    // two *different* networks under one name, only the
+                    // jobs whose network matches the cache stored for
+                    // that name (the map keeps the last-built one) get
+                    // it; the rest fall back to private caches instead
+                    // of reading the wrong entries.
+                    local
+                        .get(&net.name)
+                        .filter(|c| c.compatible_with(net, &self.energy))
+                        .cloned()
+                };
                 jobs.push(SweepJob {
                     net: net.clone(),
                     df: *df,
@@ -85,16 +104,7 @@ impl SweepSpec {
                     energy: self.energy.clone(),
                     search,
                     oracle_seed: self.seed.wrapping_add(i),
-                    // Structural compatibility check: if the spec holds
-                    // two *different* networks under one name, only the
-                    // jobs whose network matches the cache stored for
-                    // that name (the map keeps the last-built one) get
-                    // it; the rest fall back to private caches instead
-                    // of reading the wrong entries.
-                    shared: caches
-                        .get(&net.name)
-                        .filter(|c| c.compatible_with(net, &self.energy))
-                        .cloned(),
+                    shared,
                 });
             }
         }
@@ -155,76 +165,52 @@ pub fn worker_count(jobs: usize) -> usize {
     hw.min(jobs).max(1)
 }
 
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "worker panicked (non-string payload)".to_string()
-    }
-}
-
-/// Run `jobs` through a bounded worker pool, preserving job order in the
-/// results. A job that panics yields `Err(panic message)` in its slot;
-/// the other jobs keep running. Shared with `coordinator::orchestrator`,
-/// which streams per-seed episode chunks through the same pool.
-///
-/// Mutex poisoning is recovered everywhere (`lock_ignore_poison`): the
-/// queue is pop-only and each result slot is written once, so a panic
-/// while holding either lock leaves them valid. The old
-/// `into_inner().unwrap()` here panicked on a poisoned slot, killing
-/// every *completed* outcome of the pool; now a poisoned-but-filled slot
-/// returns its result and an unfilled one surfaces as that job's `Err`.
+/// Run `jobs` through a throwaway bounded worker pool, preserving job
+/// order in the results. A job that panics yields `Err(panic message)`
+/// in its slot; the other jobs keep running. This is the standalone-CLI
+/// convenience over [`WorkPool::run_batch`] — long-lived callers
+/// (`coordinator::service`) hold one persistent [`WorkPool`] instead and
+/// pass it to the `_on` entry points, so every orchestration and sweep
+/// of the process shares one bounded queue.
 pub(crate) fn run_pool<J, R, F>(jobs: Vec<J>, f: F) -> Vec<Result<R, String>>
 where
-    J: Send,
-    R: Send,
-    F: Fn(J) -> R + Sync,
+    J: Send + 'static,
+    R: Send + 'static,
+    F: Fn(J) -> R + Send + Sync + 'static,
 {
-    let n = jobs.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let queue: Mutex<VecDeque<(usize, J)>> = Mutex::new(jobs.into_iter().enumerate().collect());
-    let slots: Vec<Mutex<Option<Result<R, String>>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    let workers = worker_count(n);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let job = lock_ignore_poison(&queue).pop_front();
-                let Some((idx, job)) = job else { break };
-                let outcome = catch_unwind(AssertUnwindSafe(|| f(job))).map_err(panic_message);
-                *lock_ignore_poison(&slots[idx]) = Some(outcome);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|slot| {
-            slot.into_inner()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .unwrap_or_else(|| {
-                    Err("worker pool lost this job's result (worker died before writing it)"
-                        .to_string())
-                })
-        })
-        .collect()
+    WorkPool::new(worker_count(jobs.len())).run_batch(jobs, f)
 }
 
-/// Run the sweep with the surrogate oracle through the bounded pool.
+/// Run the sweep with the surrogate oracle through a sweep-local bounded
+/// pool.
 ///
 /// On success the outcomes are in job order (network-major, then
 /// dataflow, matching `spec.nets` × `spec.dataflows`). If any job
 /// panics, the error carries the failed (network, dataflow) pairs *and*
 /// every completed outcome.
 pub fn run_surrogate_sweep(spec: &SweepSpec) -> Result<Vec<SearchOutcome>, SweepError> {
-    let jobs = spec.jobs();
+    let pool = WorkPool::new(worker_count(spec.nets.len() * spec.dataflows.len()));
+    run_surrogate_sweep_on(spec, &pool, None)
+}
+
+/// [`run_surrogate_sweep`] over a caller-owned persistent [`WorkPool`]
+/// and (optionally) a caller-owned [`SharedCacheRegistry`] — the entry
+/// point the `edc serve` daemon drives, so concurrent sweep and search
+/// jobs multiplex over one machine-bounded pool and same-network jobs
+/// join one fleet cache. Results are bit-identical to the standalone
+/// path: the pool only changes scheduling and the cache only memoizes a
+/// pure function.
+pub fn run_surrogate_sweep_on(
+    spec: &SweepSpec,
+    pool: &WorkPool,
+    caches: Option<&SharedCacheRegistry>,
+) -> Result<Vec<SearchOutcome>, SweepError> {
+    let jobs = spec.jobs(caches);
     let labels: Vec<(String, String)> = jobs
         .iter()
         .map(|j| (j.net.name.clone(), j.df.label()))
         .collect();
-    let results = run_pool(jobs, |job: SweepJob| {
+    let results = pool.run_batch(jobs, |job: SweepJob| {
         let SweepJob {
             net,
             df,

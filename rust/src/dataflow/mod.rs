@@ -148,6 +148,38 @@ impl Dataflow {
         Some(Dataflow::new(pa, pb))
     }
 
+    /// Parse the CLI/serve-protocol dataflow selector: `paper` (the four
+    /// evaluated dataflows in table order), `all` (all 15 loop pairs), or
+    /// a comma-separated label list like `X:Y,CI:CO`. Errors name the
+    /// offending token.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use edcompress::dataflow::Dataflow;
+    ///
+    /// assert_eq!(Dataflow::parse_list("paper").unwrap().len(), 4);
+    /// assert_eq!(Dataflow::parse_list("all").unwrap().len(), 15);
+    /// assert_eq!(
+    ///     Dataflow::parse_list("X:Y, fx:fy").unwrap(),
+    ///     vec![Dataflow::XY, Dataflow::FXFY],
+    /// );
+    /// assert!(Dataflow::parse_list("Q:R").unwrap_err().contains("Q:R"));
+    /// ```
+    pub fn parse_list(arg: &str) -> Result<Vec<Dataflow>, String> {
+        match arg {
+            "paper" => Ok(Self::paper_four().to_vec()),
+            "all" => Ok(Self::all_fifteen()),
+            list => list
+                .split(',')
+                .map(|s| {
+                    let s = s.trim();
+                    Dataflow::parse(s).ok_or_else(|| format!("unknown dataflow '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
     pub fn dims(&self) -> [LoopDim; 2] {
         [self.a, self.b]
     }

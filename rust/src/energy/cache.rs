@@ -466,6 +466,97 @@ impl SharedCostCache {
     }
 }
 
+// ---------- per-fingerprint registry of fleet caches ----------
+
+/// Point-in-time statistics of one registered fleet cache.
+#[derive(Clone, Debug)]
+pub struct CacheStats {
+    pub network: String,
+    /// Distinct cached layer costs.
+    pub entries: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// A process-wide registry of [`SharedCostCache`]s keyed by the
+/// *structural* `(network, EnergyConfig)` fingerprint pair — the
+/// `edc serve` daemon's way of making every job that targets a
+/// structurally-identical network borrow the same fleet cache, across
+/// orchestrations and sweeps alike and for the whole life of the
+/// process.
+///
+/// Keying by fingerprint (not name) means two different networks that
+/// happen to share a name get *different* caches, and the same network
+/// under a different [`EnergyConfig`] does too — the registry can never
+/// hand out a cache whose entries were computed under other assumptions.
+/// Cloning the registry is an `Arc` bump; all clones address the same
+/// map.
+///
+/// # Examples
+///
+/// ```
+/// use edcompress::energy::cache::SharedCacheRegistry;
+/// use edcompress::energy::EnergyConfig;
+/// use edcompress::model::zoo;
+///
+/// let registry = SharedCacheRegistry::new();
+/// let cfg = EnergyConfig::default();
+/// let a = registry.for_network(&zoo::lenet5(), &cfg);
+/// let b = registry.for_network(&zoo::lenet5(), &cfg);
+/// // Same structure -> same cache (one registry entry, shared storage).
+/// assert_eq!(registry.len(), 1);
+/// assert!(a.compatible_with(&zoo::lenet5(), &cfg) && b.compatible_with(&zoo::lenet5(), &cfg));
+/// // A different network gets its own cache.
+/// registry.for_network(&zoo::vgg16_cifar(), &cfg);
+/// assert_eq!(registry.len(), 2);
+/// ```
+#[derive(Clone, Default)]
+pub struct SharedCacheRegistry {
+    inner: Arc<Mutex<HashMap<(u64, u64), SharedCostCache>>>,
+}
+
+impl SharedCacheRegistry {
+    pub fn new() -> SharedCacheRegistry {
+        SharedCacheRegistry::default()
+    }
+
+    /// The fleet cache for this `(network, config)` pair, created on
+    /// first request. Every later caller with a structurally-identical
+    /// network receives a handle on the same storage.
+    pub fn for_network(&self, net: &Network, cfg: &EnergyConfig) -> SharedCostCache {
+        let key = (network_fingerprint(net), config_fingerprint(cfg));
+        lock_ignore_poison(&self.inner)
+            .entry(key)
+            .or_insert_with(|| SharedCostCache::new(net, cfg))
+            .clone()
+    }
+
+    /// Number of distinct `(network, config)` caches registered.
+    pub fn len(&self) -> usize {
+        lock_ignore_poison(&self.inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-cache statistics, sorted by network name for stable output
+    /// (the `edc serve` status report).
+    pub fn stats(&self) -> Vec<CacheStats> {
+        let mut out: Vec<CacheStats> = lock_ignore_poison(&self.inner)
+            .values()
+            .map(|c| CacheStats {
+                network: c.network_name().to_string(),
+                entries: c.len(),
+                hits: c.hits(),
+                misses: c.misses(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.network.cmp(&b.network));
+        out
+    }
+}
+
 /// Where an [`IncrementalEvaluator`] stores its memoized layer costs:
 /// an owned per-search [`CostCache`], or a handle on the fleet-wide
 /// [`SharedCostCache`].
@@ -660,6 +751,30 @@ mod tests {
         s.q[0] = 4.45;
         s.p[0] = 0.5001;
         assert_eq!(SlotKey::of(&s, 0), k);
+    }
+
+    #[test]
+    fn registry_shares_by_structure_not_name() {
+        let net = zoo::lenet5();
+        let cfg = EnergyConfig::default();
+        let registry = SharedCacheRegistry::new();
+        let a = registry.for_network(&net, &cfg);
+        // Warm one entry through the first handle...
+        let key = SlotKey { bits: 6, p_bucket: 64 };
+        let _ = a.layer_cost(&net, &cfg, 0, Dataflow::XY, key);
+        // ...and observe it through a second handle to the same key pair.
+        let b = registry.for_network(&net, &cfg);
+        assert_eq!(b.len(), 1, "second handle must see the first handle's entry");
+        assert_eq!(registry.len(), 1);
+        // Same name, different structure: a *different* cache.
+        let mut other = zoo::lenet5();
+        other.layers.truncate(other.layers.len() - 1);
+        let c = registry.for_network(&other, &cfg);
+        assert_eq!(registry.len(), 2);
+        assert!(c.is_empty());
+        let stats = registry.stats();
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().any(|s| s.entries == 1 && s.misses == 1));
     }
 
     #[test]

@@ -182,6 +182,23 @@ pub fn fig5(episodes: usize, seed: u64) -> (Vec<Table>, Vec<String>) {
 pub fn fleet_best_so_far(
     res: &crate::coordinator::orchestrator::OrchestrationResult,
 ) -> (Table, String) {
+    let (t, rows) = fleet_best_table(res);
+    let path = write_csv(
+        &format!("fleet_{}.csv", res.network),
+        &["seed", "episode", "step", "energy_uj", "fleet_best_uj"],
+        &rows,
+    )
+    .unwrap_or_default();
+    (t, path)
+}
+
+/// The table of [`fleet_best_so_far`] plus the raw per-step rows, with
+/// no CSV side effect — used by the `edc serve` daemon, where concurrent
+/// same-network jobs finishing together must not race on one
+/// `reports/fleet_<net>.csv` file.
+pub fn fleet_best_table(
+    res: &crate::coordinator::orchestrator::OrchestrationResult,
+) -> (Table, Vec<Vec<f64>>) {
     let max_ep = res.outcomes.iter().map(|o| o.episodes.len()).max().unwrap_or(0);
     let mut t = Table::new(
         &format!(
@@ -228,13 +245,7 @@ pub fn fleet_best_so_far(
             t.row(vec![format!("{ep}"), "-".into(), "-".into(), "-".into()]);
         }
     }
-    let path = write_csv(
-        &format!("fleet_{}.csv", res.network),
-        &["seed", "episode", "step", "energy_uj", "fleet_best_uj"],
-        &rows,
-    )
-    .unwrap_or_default();
-    (t, path)
+    (t, rows)
 }
 
 /// Figure 6: energy breakdown (PE vs data movement) before/after EDC for

@@ -7,6 +7,7 @@
 //! re-implemented here at the scale this project needs.
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,256 @@
+//! A persistent bounded worker pool.
+//!
+//! The sweeps and the orchestrator originally spun up a fresh set of
+//! scoped threads per batch of jobs (`run_pool` in
+//! `coordinator::sweep`). That is fine for a one-shot CLI run, but the
+//! `edc serve` daemon multiplexes *many concurrent orchestrations* over
+//! the lifetime of one process — it needs a single pool whose worker
+//! count bounds the machine-wide compute, with every job of every
+//! orchestration flowing through the same queue. [`WorkPool`] is that
+//! pool; `run_pool` is now a thin wrapper that builds a throwaway one.
+//!
+//! Semantics match the old scoped-thread pool exactly:
+//!
+//! - [`run_batch`](WorkPool::run_batch) preserves job order in its
+//!   results;
+//! - a job that panics yields `Err(panic message)` in its slot while the
+//!   other jobs keep running (workers survive task panics);
+//! - mutex/condvar poisoning is recovered (`lock_ignore_poison`): the
+//!   queue is pop-only and each result slot is written once, so the
+//!   protected invariants hold at every panic point.
+//!
+//! One rule: **never call `run_batch` from inside a pool task.** The
+//! caller blocks until its whole batch drains, so a task that submits
+//! and waits on a nested batch can deadlock a saturated pool. Batch
+//! callers are always dedicated driver threads (the CLI main thread, or
+//! an `edc serve` job runner).
+
+use crate::util::lock_ignore_poison;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// One batch job's write-once result cell.
+type Slot<R> = Mutex<Option<Result<R, String>>>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+    stop: AtomicBool,
+}
+
+/// Render a panic payload as a readable message (shared with the sweep's
+/// failure reports).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked (non-string payload)".to_string()
+    }
+}
+
+/// A fixed-size pool of worker threads consuming a shared task queue.
+///
+/// Dropping the pool initiates shutdown: workers finish every task
+/// already queued (so an in-flight [`run_batch`](WorkPool::run_batch)
+/// still completes), then exit and are joined.
+pub struct WorkPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkPool {
+    /// Spawn a pool of `size.max(1)` workers.
+    pub fn new(size: usize) -> WorkPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let workers = (0..size.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkPool { shared, workers }
+    }
+
+    /// A pool sized to the machine (`available_parallelism`, min 1).
+    pub fn machine_sized() -> WorkPool {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        WorkPool::new(hw)
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue one task. Panics inside the task are contained (the
+    /// worker survives); use [`run_batch`](WorkPool::run_batch) to
+    /// observe results or failures.
+    pub fn execute(&self, task: Task) {
+        lock_ignore_poison(&self.shared.queue).push_back(task);
+        self.shared.available.notify_one();
+    }
+
+    /// Run `jobs` through the pool and block until all of them finish,
+    /// preserving job order in the results. A job that panics yields
+    /// `Err(panic message)` in its slot; the rest keep running.
+    ///
+    /// Concurrent `run_batch` calls from different threads interleave
+    /// their tasks in the shared queue — this is exactly how `edc serve`
+    /// multiplexes orchestrations. Do not call from inside a pool task
+    /// (see the module docs).
+    pub fn run_batch<J, R, F>(&self, jobs: Vec<J>, f: F) -> Vec<Result<R, String>>
+    where
+        J: Send + 'static,
+        R: Send + 'static,
+        F: Fn(J) -> R + Send + Sync + 'static,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let f = Arc::new(f);
+        let slots: Arc<Vec<Slot<R>>> = Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let remaining = Arc::new((Mutex::new(n), Condvar::new()));
+        for (idx, job) in jobs.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let slots = Arc::clone(&slots);
+            let remaining = Arc::clone(&remaining);
+            self.execute(Box::new(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(|| f(job))).map_err(panic_message);
+                *lock_ignore_poison(&slots[idx]) = Some(outcome);
+                let (count, done) = &*remaining;
+                let mut left = lock_ignore_poison(count);
+                *left -= 1;
+                if *left == 0 {
+                    done.notify_all();
+                }
+            }));
+        }
+        let (count, done) = &*remaining;
+        let mut left = lock_ignore_poison(count);
+        while *left > 0 {
+            left = done.wait(left).unwrap_or_else(|e| e.into_inner());
+        }
+        drop(left);
+        slots
+            .iter()
+            .map(|slot| {
+                lock_ignore_poison(slot).take().unwrap_or_else(|| {
+                    Err("worker pool lost this job's result (worker died before writing it)"
+                        .to_string())
+                })
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut q = lock_ignore_poison(&shared.queue);
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(task) = task else { break };
+        let _ = catch_unwind(AssertUnwindSafe(task));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn batch_preserves_order_and_contains_panics() {
+        let pool = WorkPool::new(3);
+        let results = pool.run_batch(vec![1usize, 2, 3, 4, 5], |j| {
+            if j == 3 {
+                panic!("boom on {j}");
+            }
+            j * 10
+        });
+        assert_eq!(results.len(), 5);
+        assert_eq!(results[0], Ok(10));
+        assert_eq!(results[1], Ok(20));
+        assert!(results[2].as_ref().unwrap_err().contains("boom on 3"));
+        assert_eq!(results[3], Ok(40));
+        assert_eq!(results[4], Ok(50));
+        // Workers survived the panic: the pool still runs new batches.
+        assert_eq!(pool.run_batch(vec![7usize], |j| j + 1), vec![Ok(8)]);
+    }
+
+    #[test]
+    fn empty_batch_and_single_worker() {
+        let pool = WorkPool::new(1);
+        let empty: Vec<Result<u32, String>> = pool.run_batch(Vec::<u32>::new(), |j| j);
+        assert!(empty.is_empty());
+        assert_eq!(pool.size(), 1);
+        assert_eq!(WorkPool::new(0).size(), 1, "zero-size pool clamps to one worker");
+    }
+
+    #[test]
+    fn concurrent_batches_from_multiple_threads_interleave() {
+        let pool = Arc::new(WorkPool::new(2));
+        let ran = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for t in 0..3u64 {
+                let pool = Arc::clone(&pool);
+                let ran = Arc::clone(&ran);
+                scope.spawn(move || {
+                    let out = pool.run_batch((0..4u64).collect(), move |j| t * 100 + j);
+                    assert_eq!(out.len(), 4);
+                    for (j, r) in out.into_iter().enumerate() {
+                        assert_eq!(r, Ok(t * 100 + j as u64));
+                    }
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn drop_drains_queued_tasks() {
+        let hit = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkPool::new(1);
+            for _ in 0..8 {
+                let hit = Arc::clone(&hit);
+                pool.execute(Box::new(move || {
+                    hit.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            // Drop: workers must finish everything already queued.
+        }
+        assert_eq!(hit.load(Ordering::SeqCst), 8);
+    }
+}

@@ -1,0 +1,281 @@
+//! Integration tests for the `edc serve` daemon (coordinator::service):
+//! the full submit → progress → result lifecycle over a real TCP socket,
+//! protocol robustness against malformed requests, the shared fleet
+//! cache across concurrent same-network jobs, and the headline
+//! guarantees — daemon-run jobs are **bit-identical** to standalone
+//! `edc search` runs, and a graceful shutdown + `--resume-dir` restart
+//! resumes every in-flight job bit-identically.
+
+use edcompress::coordinator::orchestrator::{Orchestrator, OrchestratorSpec};
+use edcompress::coordinator::service::{Client, ServeConfig, Service};
+use edcompress::dataflow::Dataflow;
+use edcompress::model::zoo;
+use edcompress::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(600);
+
+fn test_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("edc_service_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn serve(dir: &PathBuf, slots: usize, resume: bool) -> Service {
+    Service::start(ServeConfig {
+        dir: dir.clone(),
+        port: 0,
+        max_concurrent_jobs: slots,
+        workers: 0,
+        resume,
+    })
+    .expect("daemon failed to start")
+}
+
+/// Submit body for a tiny search job (mirrors `edc search` flags).
+fn search_job(seed: &str, seeds: f64, episodes: f64, steps: f64, dataflows: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("net", Json::Str("lenet5".into()))
+        .set("seeds", Json::Num(seeds))
+        .set("episodes", Json::Num(episodes))
+        .set("chunk", Json::Num(1.0))
+        .set("steps", Json::Num(steps))
+        .set("seed", Json::Str(seed.into()))
+        .set("dataflows", Json::Str(dataflows.into()));
+    j
+}
+
+/// The exact spec a daemon job resolves to, for standalone comparison.
+fn standalone_spec(
+    seed: u64,
+    seeds: usize,
+    episodes: usize,
+    steps: usize,
+    dfs: &str,
+) -> OrchestratorSpec {
+    let mut spec = OrchestratorSpec::new(zoo::by_name("lenet5").unwrap(), seeds, seed);
+    spec.dataflows = Dataflow::parse_list(dfs).unwrap();
+    spec.env.max_steps = steps;
+    spec.search.episodes = episodes;
+    spec.chunk_episodes = 1;
+    spec
+}
+
+/// Run the spec standalone (private pool + cache) and return the bytes
+/// of its final snapshot.
+fn standalone_snapshot_bytes(spec: OrchestratorSpec, tag: &str) -> Vec<u8> {
+    let path =
+        std::env::temp_dir().join(format!("edc_service_cmp_{tag}_{}.json", std::process::id()));
+    std::fs::remove_file(&path).ok();
+    let mut orch = Orchestrator::new(spec);
+    orch.snapshot_path = Some(path.clone());
+    orch.run().expect("standalone run failed");
+    let bytes = std::fs::read(&path).expect("standalone snapshot missing");
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+#[test]
+fn lifecycle_submit_progress_result_over_a_real_socket() {
+    let dir = test_dir("lifecycle");
+    let svc = serve(&dir, 1, false);
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+
+    let pong = c.ping().unwrap();
+    assert_eq!(pong.str_or("service", ""), "edc-serve");
+
+    let id = c.submit(&search_job("7", 2.0, 2.0, 4.0, "X:Y")).unwrap();
+    assert_eq!(id, 1);
+
+    let s = c.wait_done(id, LONG).unwrap();
+    assert_eq!(s.str_or("state", ""), "done");
+    assert_eq!(s.num_or("episodes_done", 0.0), 4.0, "2 seeds x 2 episodes");
+    assert_eq!(s.num_or("episodes_total", 0.0), 4.0);
+    assert!(s.num_or("round", 0.0) >= 2.0, "chunk 1 means one round per episode");
+    assert!(
+        s.num_or("cache_hits", 0.0) + s.num_or("cache_misses", 0.0) > 0.0,
+        "fleet-cache counters must be reported"
+    );
+
+    let r = c.result(id).unwrap();
+    let rendered = r.str_or("rendered", "");
+    assert!(rendered.contains("Pareto"), "no Pareto table in: {rendered}");
+    assert!(rendered.contains("seed"), "no per-seed summary in: {rendered}");
+    let summary = r.get("summary").expect("result carries a summary");
+    assert_eq!(summary.str_or("network", ""), "lenet5");
+    assert_eq!(
+        summary.get("outcomes").and_then(|a| a.as_arr()).map(|a| a.len()),
+        Some(2)
+    );
+
+    // The snapshot is on disk in the daemon's dir, resumable schema.
+    let snap = dir.join("job_1.json");
+    assert!(snap.exists());
+    let j = json::parse(&std::fs::read_to_string(&snap).unwrap()).unwrap();
+    assert_eq!(j.str_or("kind", ""), "orchestration");
+
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+    assert!(!dir.join("serve.addr").exists(), "addr file must be cleaned up");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_requests_get_readable_errors_and_the_connection_survives() {
+    let dir = test_dir("malformed");
+    let svc = serve(&dir, 1, false);
+    let mut stream = TcpStream::connect(svc.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let send = |stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str| {
+        writeln!(stream, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        json::parse(resp.trim()).expect("daemon must answer JSON even to garbage")
+    };
+
+    // Not JSON at all: readable error naming the protocol.
+    let r = send(&mut stream, &mut reader, "this is not json");
+    assert_eq!(r.get("ok").and_then(|b| b.as_bool()), Some(false));
+    assert!(r.str_or("error", "").contains("JSON"), "error: {}", r.str_or("error", ""));
+
+    // Unknown command, missing fields, bad values: still errors, not drops.
+    for (req, needle) in [
+        (r#"{"cmd":"frobnicate"}"#, "frobnicate"),
+        (r#"{"no_cmd":1}"#, "cmd"),
+        (r#"{"cmd":"result"}"#, "job"),
+        (r#"{"cmd":"status","job":999}"#, "no such job"),
+        (r#"{"cmd":"submit","net":"resnet9000"}"#, "resnet9000"),
+        (r#"{"cmd":"submit","dataflows":"Q:R"}"#, "Q:R"),
+    ] {
+        let r = send(&mut stream, &mut reader, req);
+        assert_eq!(r.get("ok").and_then(|b| b.as_bool()), Some(false), "req: {req}");
+        let err = r.str_or("error", "");
+        assert!(err.contains(needle), "req {req}: error {err:?} lacks {needle:?}");
+    }
+
+    // The same connection still serves valid requests afterwards.
+    let r = send(&mut stream, &mut reader, r#"{"cmd":"ping"}"#);
+    assert_eq!(r.get("ok").and_then(|b| b.as_bool()), Some(true));
+    assert_eq!(r.str_or("service", ""), "edc-serve");
+
+    let r = send(&mut stream, &mut reader, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(r.get("ok").and_then(|b| b.as_bool()), Some(true));
+    drop(reader);
+    drop(stream);
+    svc.wait().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_same_network_jobs_share_one_cache_and_match_standalone_bit_identically() {
+    let dir = test_dir("concurrent");
+    let svc = serve(&dir, 2, false);
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+
+    // Two different runs of the same network, concurrently.
+    let a = c.submit(&search_job("11", 2.0, 2.0, 5.0, "X:Y,FX:FY")).unwrap();
+    let b = c.submit(&search_job("22", 2.0, 2.0, 5.0, "X:Y,FX:FY")).unwrap();
+    assert_eq!(c.wait_done(a, LONG).unwrap().str_or("state", ""), "done");
+    assert_eq!(c.wait_done(b, LONG).unwrap().str_or("state", ""), "done");
+
+    // One SharedCostCache served both jobs (fingerprint-keyed registry).
+    let status = c.status(None).unwrap();
+    let caches = status.get("caches").and_then(|x| x.as_arr()).unwrap();
+    assert_eq!(caches.len(), 1, "same network twice must not create two caches");
+    assert_eq!(caches[0].str_or("network", ""), "lenet5");
+    assert!(caches[0].num_or("hits", 0.0) > 0.0);
+
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+
+    // Each job's final snapshot is byte-identical to the same spec run
+    // standalone with a private pool and cache.
+    for (id, seed) in [(a, 11u64), (b, 22u64)] {
+        let daemon = std::fs::read(dir.join(format!("job_{id}.json"))).unwrap();
+        let standalone = standalone_snapshot_bytes(
+            standalone_spec(seed, 2, 2, 5, "X:Y,FX:FY"),
+            &format!("conc{id}"),
+        );
+        assert_eq!(daemon, standalone, "job {id} diverged from its standalone run");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn graceful_shutdown_drains_and_resume_dir_finishes_bit_identically() {
+    let dir = test_dir("resume");
+    let svc = serve(&dir, 1, false);
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+    let id = c.submit(&search_job("3", 1.0, 6.0, 5.0, "X:Y")).unwrap();
+
+    // Let at least one round land, then drain. (If the job races to
+    // done first, the resume path below still has to serve its result.)
+    let deadline = Instant::now() + LONG;
+    loop {
+        let s = c.status(Some(id)).unwrap();
+        if s.num_or("episodes_done", 0.0) >= 1.0 || s.str_or("state", "") == "done" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never made progress");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+    let snap = dir.join(format!("job_{id}.json"));
+    assert!(snap.exists(), "drain must leave a resumable snapshot");
+
+    // Restart over the same directory with the --resume-dir semantics.
+    let svc2 = serve(&dir, 1, true);
+    let mut c2 = Client::connect(&svc2.addr().to_string()).unwrap();
+    let s = c2.wait_done(id, LONG).unwrap();
+    assert_eq!(s.str_or("state", ""), "done");
+    assert_eq!(s.num_or("episodes_done", 0.0), 6.0);
+    let r = c2.result(id).unwrap();
+    assert!(r.str_or("rendered", "").contains("Pareto"));
+    // A new job id continues after the resumed ones.
+    let next = c2.submit(&search_job("9", 1.0, 1.0, 4.0, "X:Y")).unwrap();
+    assert!(next > id, "resumed registry must not reuse job ids");
+    c2.wait_done(next, LONG).unwrap();
+    c2.shutdown().unwrap();
+    svc2.wait().unwrap();
+
+    // The interrupted-then-resumed run equals the uninterrupted one.
+    let daemon = std::fs::read(&snap).unwrap();
+    let standalone = standalone_snapshot_bytes(standalone_spec(3, 1, 6, 5, "X:Y"), "resume");
+    assert_eq!(daemon, standalone, "resumed job diverged from an uninterrupted run");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_jobs_run_to_a_result_and_clean_up_their_spec_file() {
+    let dir = test_dir("sweep");
+    let svc = serve(&dir, 1, false);
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+    let mut j = Json::obj();
+    j.set("kind", Json::Str("sweep".into()))
+        .set("nets", Json::Str("lenet5".into()))
+        .set("dataflows", Json::Str("X:Y,FX:FY".into()))
+        .set("episodes", Json::Num(1.0))
+        .set("steps", Json::Num(4.0));
+    let id = c.submit(&j).unwrap();
+    let s = c.wait_done(id, LONG).unwrap();
+    assert_eq!(s.str_or("state", ""), "done");
+    let r = c.result(id).unwrap();
+    assert!(r.str_or("rendered", "").contains("lenet5"));
+    assert_eq!(
+        r.get("summary").and_then(|s| s.get("rows")).and_then(|a| a.as_arr()).map(|a| a.len()),
+        Some(2),
+        "one row per (network, dataflow) pair"
+    );
+    assert!(
+        !dir.join(format!("job_{id}.sweep.json")).exists(),
+        "completed sweep job must remove its queued-spec file"
+    );
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
