@@ -14,11 +14,21 @@
 //! `edc serve` daemon beat two sequential standalone runs on shared-cache
 //! hit-rate (the daemon's registry dedups the cross-job miss set).
 //!
+//! The train-kernel section *asserts* the PR-5 claims: the workspace
+//! (`TrainScratch`) `SacAgent::update_once` must be >= 2x faster than the
+//! kept-verbatim PR-4 allocating path (`update_once_reference`) at SAC's
+//! real shapes (batch 64, 64x166x128-class GEMMs), while performing
+//! **zero** steady-state heap allocations — counted by the thread-local
+//! counting allocator below — and producing bit-identical update stats.
+//!
 //! Run with `--test` (e.g. `cargo bench --bench perf_hotpaths -- --test`)
-//! for the CI smoke mode: only the two asserted cache comparisons run,
-//! in well under a minute.
+//! for the CI smoke mode: only the asserted gates run (train kernels,
+//! fleet cache, serve cache), in well under a minute.
 #[path = "common.rs"]
 mod common;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
 use common::{banner, BenchTimer};
 use edcompress::compress::CompressionState;
 use edcompress::dataflow::Dataflow;
@@ -29,6 +39,133 @@ use edcompress::rl::sac::{SacAgent, SacConfig};
 use edcompress::rl::Env;
 use edcompress::tensor::Tensor;
 use edcompress::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Thread-local counting allocator: every `alloc`/`realloc` on the calling
+// thread bumps a per-thread counter, so the zero-allocation gate is immune
+// to allocator traffic from the daemon/fleet benches' worker threads. The
+// thread-local slot is const-initialized (no lazy allocation), so reading
+// it inside the allocator cannot recurse; `try_with` tolerates TLS
+// teardown.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    // Forwarded explicitly so `vec![0.0; n]` (Tensor::zeros) keeps its
+    // calloc fast path — otherwise the default alloc+memset impl would
+    // slow the allocating reference down and flatter the speedup gate.
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by this thread so far.
+fn thread_allocs() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+/// Build one replay-filled SAC agent at the LeNet-5 env dimensions —
+/// deterministic, so two calls yield bit-identical agents whose scratch
+/// and reference update streams stay in lockstep.
+fn filled_sac_agent() -> SacAgent {
+    let net = zoo::lenet5();
+    let oracle = SurrogateOracle::new(&net, 0);
+    let mut env = CompressionEnv::new(
+        net,
+        Dataflow::XY,
+        Box::new(oracle),
+        EnvConfig::default(),
+        EnergyConfig::default(),
+    );
+    let mut agent = SacAgent::new(env.state_dim(), env.action_dim(), SacConfig::default());
+    let mut s = env.reset();
+    for _ in 0..256 {
+        let a = agent.act(&s);
+        let (s2, r, d) = env.step(&a);
+        agent.observe(&s, &a, r, &s2, d);
+        s = if d { env.reset() } else { s2 };
+    }
+    agent
+}
+
+/// The train-kernel gates (CI bench-smoke): zero steady-state allocations
+/// on the workspace `update_once`, >= 2x over the allocating reference,
+/// and bit-identical update stats while both paths run in lockstep.
+fn bench_train_kernels(iters: usize) {
+    let mut fast = filled_sac_agent();
+    let mut reference = filled_sac_agent();
+
+    // Lockstep warmup: the first scratch update allocates the workspace;
+    // the paired updates must report bit-identical losses throughout.
+    for i in 0..3 {
+        let uf = fast.update_once();
+        let ur = reference.update_once_reference();
+        assert_eq!(
+            uf.q1_loss.to_bits(),
+            ur.q1_loss.to_bits(),
+            "scratch vs reference q1 loss diverged at warmup update {i}"
+        );
+        assert_eq!(
+            uf.policy_loss.to_bits(),
+            ur.policy_loss.to_bits(),
+            "scratch vs reference policy loss diverged at warmup update {i}"
+        );
+    }
+
+    // Zero-allocation gate: steady-state scratch updates must never touch
+    // the allocator (thread-local count, so concurrent benches can't
+    // pollute it).
+    let before = thread_allocs();
+    let mut sink = 0.0;
+    for _ in 0..20 {
+        sink += fast.update_once().q1_loss;
+    }
+    let allocs = thread_allocs() - before;
+
+    // Speedup gate: scratch path vs the PR-4 allocating reference.
+    let mut t_fast = BenchTimer::new("SAC update_once SCRATCH (batch 64)");
+    t_fast.run(iters, || fast.update_once());
+    t_fast.report();
+    let mut t_ref = BenchTimer::new("SAC update_once REFERENCE (batch 64)");
+    t_ref.run(iters, || reference.update_once_reference());
+    t_ref.report();
+    let speedup = t_ref.mean_ns() / t_fast.mean_ns().max(1.0);
+    println!(
+        "  -> train-kernel speedup {speedup:.2}x, {allocs} steady-state allocations \
+         over 20 updates (loss sink {sink:.4})"
+    );
+    assert_eq!(
+        allocs, 0,
+        "steady-state update_once touched the allocator {allocs} times in 20 updates"
+    );
+    assert!(
+        speedup >= 2.0,
+        "train-kernel speedup {speedup:.2}x below the 2x gate over the allocating reference"
+    );
+}
 
 /// Record the state trajectory of one 32-step episode (policy-free, a
 /// fixed gentle compression action) so both evaluation paths see the
@@ -343,6 +480,8 @@ fn main() {
     // `--test` (CI smoke mode): only the asserted shared-cache fleet
     // comparison, small enough for every PR.
     if std::env::args().any(|a| a == "--test") {
+        banner("train kernels (smoke)");
+        bench_train_kernels(60);
         banner("fleet-shared cache (smoke)");
         bench_fleet_shared_vs_private(&zoo::vgg16_cifar(), Dataflow::XY, &cfg, 4, 16);
         banner("edc serve shared cache (smoke)");
@@ -400,7 +539,9 @@ fn main() {
         t.report();
     }
 
-    // 6. SAC update step at LeNet env dimensions.
+    // 6. SAC training kernels at LeNet env dimensions: scratch vs the
+    // allocating reference, with the 2x + zero-alloc gates.
+    bench_train_kernels(150);
     {
         let net = zoo::lenet5();
         let oracle = SurrogateOracle::new(&net, 0);
@@ -411,19 +552,6 @@ fn main() {
             EnvConfig::default(),
             cfg.clone(),
         );
-        let mut agent = SacAgent::new(env.state_dim(), env.action_dim(), SacConfig::default());
-        // Fill replay.
-        let mut s = env.reset();
-        for _ in 0..256 {
-            let a = agent.act(&s);
-            let (s2, r, d) = env.step(&a);
-            agent.observe(&s, &a, r, &s2, d);
-            s = if d { env.reset() } else { s2 };
-        }
-        let mut t = BenchTimer::new("SAC update_once (batch 64, 128x128)");
-        t.run(100, || agent.update_once());
-        t.report();
-
         let mut t = BenchTimer::new("CompressionEnv::step (surrogate)");
         let action = vec![-0.2; env.action_dim()];
         env.reset();

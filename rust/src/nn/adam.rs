@@ -61,25 +61,38 @@ impl Adam {
     pub fn step(&mut self, params: Vec<&mut Tensor>, grads: &[&Tensor]) {
         assert_eq!(params.len(), self.m.len(), "param count changed");
         assert_eq!(grads.len(), self.m.len(), "grad count mismatch");
+        self.step_pairs(params.into_iter().zip(grads.iter().copied()));
+    }
+
+    /// Fused, allocation-free update: consume `(param, grad)` pairs in the
+    /// fixed construction order, walking the moment vectors in one pass
+    /// instead of materializing `Vec<&mut Tensor>` / `Vec<&Tensor>` per
+    /// step. Bit-identical to [`Adam::step`] (same per-element math); the
+    /// SAC hot loop drives it with
+    /// `opt.step_pairs(net.params_iter_mut().zip(grads.iter()))`.
+    pub fn step_pairs<'p, 'g, I>(&mut self, pairs: I)
+    where
+        I: Iterator<Item = (&'p mut Tensor, &'g Tensor)>,
+    {
         self.t += 1;
-        let b1t = 1.0 - self.beta1.powi(self.t as i32);
-        let b2t = 1.0 - self.beta2.powi(self.t as i32);
-        for ((p, g), (m, v)) in params
-            .into_iter()
-            .zip(grads)
-            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
-        {
+        let (beta1, beta2, lr, eps) = (self.beta1, self.beta2, self.lr, self.eps);
+        let b1t = 1.0 - beta1.powi(self.t as i32);
+        let b2t = 1.0 - beta2.powi(self.t as i32);
+        let mut pairs = pairs;
+        for (m, v) in self.m.iter_mut().zip(self.v.iter_mut()) {
+            let (p, g) = pairs.next().expect("adam: fewer params than moments");
             assert_eq!(p.shape(), g.shape(), "adam shape mismatch");
             let (pd, gd) = (p.data_mut(), g.data());
             let (md, vd) = (m.data_mut(), v.data_mut());
             for i in 0..pd.len() {
-                md[i] = self.beta1 * md[i] + (1.0 - self.beta1) * gd[i];
-                vd[i] = self.beta2 * vd[i] + (1.0 - self.beta2) * gd[i] * gd[i];
+                md[i] = beta1 * md[i] + (1.0 - beta1) * gd[i];
+                vd[i] = beta2 * vd[i] + (1.0 - beta2) * gd[i] * gd[i];
                 let mhat = md[i] / b1t;
                 let vhat = vd[i] / b2t;
-                pd[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+                pd[i] -= lr * mhat / (vhat.sqrt() + eps);
             }
         }
+        assert!(pairs.next().is_none(), "adam: more params than moments");
     }
 }
 
@@ -118,6 +131,32 @@ mod tests {
                 x.data()[0]
             );
         }
+    }
+
+    /// The fused pair-iterator step and the Vec-based step must produce
+    /// bit-identical trajectories.
+    #[test]
+    fn step_pairs_matches_step_bitwise() {
+        let mut x1 = Tensor::from_vec(&[3], vec![0.5, -1.0, 2.0]);
+        let mut x2 = x1.clone();
+        let mut o1 = Adam::for_params(&[&x1], 0.03);
+        let mut o2 = Adam::for_params(&[&x2], 0.03);
+        let g = Tensor::from_vec(&[3], vec![0.1, -0.2, 0.33]);
+        for _ in 0..7 {
+            o1.step(vec![&mut x1], &[&g]);
+            o2.step_pairs([(&mut x2, &g)].into_iter());
+        }
+        for (a, b) in x1.data().iter().zip(x2.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer params")]
+    fn step_pairs_rejects_short_iterator() {
+        let x = Tensor::zeros(&[2]);
+        let mut opt = Adam::for_params(&[&x], 0.1);
+        opt.step_pairs(std::iter::empty::<(&mut Tensor, &Tensor)>());
     }
 
     #[test]

@@ -40,6 +40,14 @@ impl Linear {
         x.matmul(&self.w).add_row(&self.b)
     }
 
+    /// Workspace form of [`Linear::forward`]: `y = x @ w + b` written into
+    /// a caller-owned `[B, out]` tensor. Bit-identical for finite inputs
+    /// (see the `tensor` module docs), allocation-free.
+    pub fn forward_into(&self, x: &Tensor, y: &mut Tensor) {
+        x.matmul_into(&self.w, y);
+        y.add_row_into(&self.b);
+    }
+
     /// Backward pass. `x` is the layer input from the forward pass and
     /// `dy` the gradient flowing in from above; returns `dx` plus the
     /// parameter gradients.
@@ -48,6 +56,31 @@ impl Linear {
         let db = dy.sum_rows(); // [1, out]
         let dx = dy.matmul_nt(&self.w); // [B, in] = dy @ w^T
         (dx, LinearGrads { dw, db })
+    }
+
+    /// Workspace form of [`Linear::backward`]: writes `dw`/`db` into
+    /// `grads` and, when `dx` is `Some`, the input gradient into it. The
+    /// bottom layer of a critic update passes `None` and skips the `dx`
+    /// GEMM outright — the allocating path always paid it.
+    pub fn backward_into(
+        &self,
+        x: &Tensor,
+        dy: &Tensor,
+        grads: &mut LinearGrads,
+        dx: Option<&mut Tensor>,
+    ) {
+        x.matmul_tn_into(dy, &mut grads.dw);
+        dy.sum_rows_into(&mut grads.db);
+        if let Some(dx) = dx {
+            dy.matmul_nt_into(&self.w, dx);
+        }
+    }
+
+    /// Input gradient only (`dx = dy @ wᵀ`): backprop *through* the layer
+    /// without touching parameter gradients (the actor update
+    /// differentiates through the Q nets wrt the action input alone).
+    pub fn backward_input_into(&self, dy: &Tensor, dx: &mut Tensor) {
+        dy.matmul_nt_into(&self.w, dx);
     }
 
     /// Flat parameter views for the optimizer.

@@ -21,6 +21,53 @@ pub struct MlpCache {
     pub output: Tensor,
 }
 
+impl MlpCache {
+    /// Preallocate a cache for batch size `b`, for use with
+    /// [`Mlp::forward_cached_into`] — the training loop owns one per
+    /// network so the steady state never allocates.
+    pub fn for_batch(mlp: &Mlp, b: usize) -> MlpCache {
+        MlpCache {
+            inputs: mlp
+                .layers
+                .iter()
+                .map(|l| Tensor::zeros(&[b, l.fan_in()]))
+                .collect(),
+            output: Tensor::zeros(&[b, mlp.out_dim()]),
+        }
+    }
+}
+
+/// Caller-owned intermediate buffers for [`Mlp::backward_into`] /
+/// [`Mlp::backward_input_into`]: one upstream-gradient buffer per layer
+/// output. Reused across updates; sized once by [`MlpBackScratch::for_batch`].
+pub struct MlpBackScratch {
+    /// dys[i] holds the gradient flowing into layer i's output, [B, fan_out(i)].
+    dys: Vec<Tensor>,
+}
+
+impl MlpBackScratch {
+    /// Preallocate the per-layer gradient buffers for batch size `b`. One
+    /// scratch can serve several networks of identical architecture (the
+    /// twin critics and their targets share one).
+    pub fn for_batch(mlp: &Mlp, b: usize) -> MlpBackScratch {
+        MlpBackScratch {
+            dys: mlp
+                .layers
+                .iter()
+                .map(|l| Tensor::zeros(&[b, l.fan_out()]))
+                .collect(),
+        }
+    }
+}
+
+/// `dy *= act'(post)` elementwise — converting a post-activation gradient
+/// to a pre-activation one using the cached post-activation values.
+fn scale_by_act_deriv(dy: &mut Tensor, post: &Tensor, act: Activation) {
+    for (dv, &yv) in dy.data_mut().iter_mut().zip(post.data()) {
+        *dv *= act.deriv_from_output(yv);
+    }
+}
+
 /// Per-layer parameter gradients.
 pub struct MlpGrads {
     pub layers: Vec<LinearGrads>,
@@ -72,11 +119,11 @@ impl MlpGrads {
         n
     }
 
-    pub fn tensors(&self) -> Vec<&Tensor> {
-        self.layers
-            .iter()
-            .flat_map(|g| [&g.dw, &g.db])
-            .collect()
+    /// The gradient tensors in optimizer order, allocation-free (replaces
+    /// the old `tensors() -> Vec<&Tensor>` round-trip; zip with
+    /// [`Mlp::params_iter_mut`] for a fused [`Adam::step_pairs`](super::Adam::step_pairs)).
+    pub fn iter(&self) -> impl Iterator<Item = &Tensor> + '_ {
+        self.layers.iter().flat_map(|g| [&g.dw, &g.db])
     }
 }
 
@@ -129,6 +176,27 @@ impl Mlp {
         MlpCache { inputs, output: h }
     }
 
+    /// Workspace form of [`Mlp::forward_cached`]: records the forward pass
+    /// into a caller-owned, correctly-sized cache ([`MlpCache::for_batch`])
+    /// without allocating. Bit-identical for finite inputs.
+    pub fn forward_cached_into(&self, x: &Tensor, cache: &mut MlpCache) {
+        let last = self.layers.len() - 1;
+        cache.inputs[0].copy_from(x);
+        for i in 0..self.layers.len() {
+            let (head, tail) = cache.inputs.split_at_mut(i + 1);
+            let dst = if i == last {
+                &mut cache.output
+            } else {
+                &mut tail[0]
+            };
+            self.layers[i].forward_into(&head[i], dst);
+            if i != last {
+                let act = self.act;
+                dst.map_inplace(|v| act.apply(v));
+            }
+        }
+    }
+
     /// Backward from `dout` (gradient wrt the head output). Returns the
     /// gradient wrt the network input along with parameter grads.
     pub fn backward(&self, cache: &MlpCache, dout: &Tensor) -> (Tensor, MlpGrads) {
@@ -140,13 +208,7 @@ impl Mlp {
                 // dy currently is grad wrt post-activation of layer i;
                 // convert to grad wrt pre-activation using the cached
                 // *input of layer i+1* (== post-activation output of i).
-                let post = &cache.inputs[i + 1];
-                let act = self.act;
-                let mut d = dy.clone();
-                for (dv, &yv) in d.data_mut().iter_mut().zip(post.data()) {
-                    *dv *= act.deriv_from_output(yv);
-                }
-                dy = d;
+                scale_by_act_deriv(&mut dy, &cache.inputs[i + 1], self.act);
             }
             let (dx, g) = self.layers[i].backward(&cache.inputs[i], &dy);
             grads[i] = Some(g);
@@ -160,24 +222,91 @@ impl Mlp {
         )
     }
 
+    /// Workspace form of [`Mlp::backward`]: parameter gradients land in
+    /// `grads`, intermediate upstream gradients in `scratch`, and the
+    /// input gradient in `dx` when requested — passing `None` skips the
+    /// bottom layer's `dx` GEMM entirely (a critic update never uses it).
+    /// Bit-identical to [`Mlp::backward`] for finite inputs.
+    pub fn backward_into(
+        &self,
+        cache: &MlpCache,
+        dout: &Tensor,
+        scratch: &mut MlpBackScratch,
+        grads: &mut MlpGrads,
+        mut dx: Option<&mut Tensor>,
+    ) {
+        let last = self.layers.len() - 1;
+        scratch.dys[last].copy_from(dout);
+        for i in (0..self.layers.len()).rev() {
+            if i != last {
+                scale_by_act_deriv(&mut scratch.dys[i], &cache.inputs[i + 1], self.act);
+            }
+            let (head, tail) = scratch.dys.split_at_mut(i);
+            let dy = &tail[0];
+            let dxi = if i > 0 {
+                Some(&mut head[i - 1])
+            } else {
+                dx.as_deref_mut()
+            };
+            self.layers[i].backward_into(&cache.inputs[i], dy, &mut grads.layers[i], dxi);
+        }
+    }
+
+    /// Backprop `dout` through the network computing **only** the input
+    /// gradient — no parameter gradients. The actor update uses this to
+    /// differentiate the policy loss through the (frozen-for-this-step) Q
+    /// networks wrt the action input; the allocating path computed full
+    /// `MlpGrads` there and threw them away.
+    pub fn backward_input_into(
+        &self,
+        cache: &MlpCache,
+        dout: &Tensor,
+        scratch: &mut MlpBackScratch,
+        dx: &mut Tensor,
+    ) {
+        let last = self.layers.len() - 1;
+        scratch.dys[last].copy_from(dout);
+        for i in (0..self.layers.len()).rev() {
+            if i != last {
+                scale_by_act_deriv(&mut scratch.dys[i], &cache.inputs[i + 1], self.act);
+            }
+            let (head, tail) = scratch.dys.split_at_mut(i);
+            let dy = &tail[0];
+            let dxi = if i > 0 {
+                &mut head[i - 1]
+            } else {
+                &mut *dx
+            };
+            self.layers[i].backward_input_into(dy, dxi);
+        }
+    }
+
     pub fn params_mut(&mut self) -> Vec<&mut Tensor> {
-        self.layers
-            .iter_mut()
-            .flat_map(|l| l.params_mut())
-            .collect()
+        self.params_iter_mut().collect()
     }
 
     pub fn params(&self) -> Vec<&Tensor> {
-        self.layers.iter().flat_map(|l| l.params()).collect()
+        self.params_iter().collect()
+    }
+
+    /// Parameter tensors in optimizer order without the `Vec` round-trip.
+    pub fn params_iter(&self) -> impl Iterator<Item = &Tensor> + '_ {
+        self.layers.iter().flat_map(|l| [&l.w, &l.b])
+    }
+
+    /// Mutable parameter tensors in optimizer order, allocation-free.
+    pub fn params_iter_mut(&mut self) -> impl Iterator<Item = &mut Tensor> + '_ {
+        self.layers.iter_mut().flat_map(|l| [&mut l.w, &mut l.b])
     }
 
     pub fn param_count(&self) -> usize {
-        self.params().iter().map(|p| p.len()).sum()
+        self.params_iter().map(|p| p.len()).sum()
     }
 
-    /// Polyak soft update: self = (1-tau)*self + tau*src.
+    /// Polyak soft update: self = (1-tau)*self + tau*src. Allocation-free
+    /// (runs twice per SAC gradient update, inside the zero-alloc gate).
     pub fn soft_update_from(&mut self, src: &Mlp, tau: f32) {
-        for (dst, s) in self.params_mut().into_iter().zip(src.params()) {
+        for (dst, s) in self.params_iter_mut().zip(src.params_iter()) {
             dst.lerp_into(1.0 - tau, s, tau);
         }
     }
@@ -235,6 +364,62 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// True bitwise comparison (derived `PartialEq` would equate `-0.0`
+    /// and `+0.0` — the one divergence class the `*_into` kernels' FP
+    /// equivalence argument has to exclude).
+    fn assert_bits_eq(a: &Tensor, b: &Tensor, what: &str) {
+        assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
+        for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+            assert!(x.to_bits() == y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// The workspace forward/backward must be bit-identical to the
+    /// allocating path (finite inputs), including the dx-only variant.
+    #[test]
+    fn into_paths_match_allocating_bitwise() {
+        let mut rng = Rng::new(9);
+        for act in [Activation::Tanh, Activation::Relu] {
+            let mlp = Mlp::new(&[5, 12, 8, 3], act, &mut rng);
+            let x = Tensor::randn(&[6, 5], 1.0, &mut rng);
+            let cache0 = mlp.forward_cached(&x);
+            let mut cache = MlpCache::for_batch(&mlp, 6);
+            mlp.forward_cached_into(&x, &mut cache);
+            assert_bits_eq(&cache0.output, &cache.output, &format!("{act:?} output"));
+            for (i, (a, b)) in cache0.inputs.iter().zip(&cache.inputs).enumerate() {
+                assert_bits_eq(a, b, &format!("{act:?} inputs[{i}]"));
+            }
+
+            let dout = cache.output.clone();
+            let (dx0, grads0) = mlp.backward(&cache0, &dout);
+            let mut scratch = MlpBackScratch::for_batch(&mlp, 6);
+            let mut grads = MlpGrads::zeros_like(&mlp);
+            let mut dx = Tensor::zeros(&[6, 5]);
+            mlp.backward_into(&cache, &dout, &mut scratch, &mut grads, Some(&mut dx));
+            assert_bits_eq(&dx0, &dx, &format!("{act:?} dx"));
+            for (i, (g0, g)) in grads0.layers.iter().zip(&grads.layers).enumerate() {
+                assert_bits_eq(&g0.dw, &g.dw, &format!("{act:?} dw[{i}]"));
+                assert_bits_eq(&g0.db, &g.db, &format!("{act:?} db[{i}]"));
+            }
+
+            let mut dx2 = Tensor::zeros(&[6, 5]);
+            mlp.backward_input_into(&cache, &dout, &mut scratch, &mut dx2);
+            assert_bits_eq(&dx0, &dx2, &format!("{act:?} dx-only"));
+        }
+    }
+
+    #[test]
+    fn params_iter_matches_vec_order() {
+        let mut rng = Rng::new(13);
+        let mut mlp = Mlp::new(&[2, 3, 1], Activation::Relu, &mut rng);
+        let from_vec: Vec<Vec<usize>> = mlp.params().iter().map(|t| t.shape().to_vec()).collect();
+        let from_iter: Vec<Vec<usize>> =
+            mlp.params_iter().map(|t| t.shape().to_vec()).collect();
+        assert_eq!(from_vec, from_iter);
+        let n_mut = mlp.params_iter_mut().count();
+        assert_eq!(n_mut, from_vec.len());
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! the backward pass, and Adam. Gradients are verified against finite
 //! differences in the tests below — that check is the foundation the RL
 //! correctness rests on.
+//!
+//! Every forward/backward entry point has a workspace (`*_into`) twin
+//! writing into caller-owned buffers ([`MlpCache`], [`MlpBackScratch`],
+//! [`MlpGrads`]) so the SAC training loop runs allocation-free in the
+//! steady state; the twins are bit-identical to the allocating paths for
+//! finite inputs (pinned by `rust/tests/prop_train.rs`).
+
+#![deny(clippy::redundant_clone)]
 
 pub mod adam;
 pub mod linear;
@@ -12,7 +20,7 @@ pub mod mlp;
 
 pub use adam::Adam;
 pub use linear::Linear;
-pub use mlp::{Mlp, MlpCache, MlpGrads};
+pub use mlp::{Mlp, MlpBackScratch, MlpCache, MlpGrads};
 
 /// Hidden-layer activation functions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -10,6 +10,8 @@
 //! ([`SacAgent::snapshot`](sac::SacAgent::snapshot)) so orchestrated
 //! searches can be killed and resumed bit-identically.
 
+#![deny(clippy::redundant_clone)]
+
 pub mod replay;
 pub mod sac;
 

@@ -14,6 +14,31 @@ pub struct Transition {
     pub done: f32,
 }
 
+impl Transition {
+    /// Build a transition from the `f64` slices the [`crate::rl::Env`]
+    /// API speaks, narrowing each component in one pre-sized pass.
+    pub fn from_f64(
+        state: &[f64],
+        action: &[f64],
+        reward: f64,
+        next_state: &[f64],
+        done: bool,
+    ) -> Transition {
+        fn narrow(v: &[f64]) -> Vec<f32> {
+            // collect() on a mapped slice iterator pre-sizes from the
+            // exact size hint and fills in one pass.
+            v.iter().map(|&x| x as f32).collect()
+        }
+        Transition {
+            state: narrow(state),
+            action: narrow(action),
+            reward: reward as f32,
+            next_state: narrow(next_state),
+            done: if done { 1.0 } else { 0.0 },
+        }
+    }
+}
+
 /// Fixed-capacity FIFO replay buffer with uniform sampling.
 pub struct ReplayBuffer {
     cap: usize,

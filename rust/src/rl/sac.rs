@@ -10,10 +10,25 @@
 //! All gradients are hand-derived; `tests::gradcheck_policy_loss` verifies
 //! the full policy-gradient path (through tanh, the log-prob and the Q
 //! network) against finite differences.
+//!
+//! # The zero-allocation training path
+//!
+//! [`SacAgent::update_once`] runs on a persistent `TrainScratch`
+//! workspace owned by the agent: the minibatch tensors, every forward
+//! cache, every gradient buffer and the optimizer step reuse the same
+//! allocations update after update — the steady state performs **zero**
+//! heap allocations (asserted by the counting allocator in
+//! `benches/perf_hotpaths.rs`). The PR-4 allocating implementation is kept
+//! verbatim as [`SacAgent::update_once_reference`]; the scratch path is
+//! bit-identical to it (same floating-point operation order, same RNG
+//! stream — pinned by `rust/tests/prop_train.rs`), so episode streams,
+//! snapshots and the daemon≡standalone byte-identity guarantees are
+//! unchanged.
 
 use super::replay::{ReplayBuffer, Transition};
-use crate::nn::{Activation, Adam, Mlp};
-use crate::tensor::Tensor;
+use crate::nn::{Activation, Adam, Mlp, MlpBackScratch, MlpCache, MlpGrads};
+pub use crate::tensor::concat_cols;
+use crate::tensor::{concat_cols_into, Tensor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -95,6 +110,86 @@ pub struct SacAgent {
     pub replay: ReplayBuffer,
     rng: Rng,
     env_steps: usize,
+    /// Persistent training workspace (lazily built on the first update;
+    /// deliberately excluded from snapshots — it carries no state that
+    /// survives an update).
+    scratch: Option<Box<TrainScratch>>,
+}
+
+/// Preallocated buffers for one SAC gradient update: minibatch tensors,
+/// forward caches for the actor and the (twin, target) critics, backward
+/// scratch, gradient accumulators and every dout/dx intermediate. Sized
+/// once from the agent's dimensions; [`SacAgent::update_once`] reuses it
+/// so the steady-state update loop never touches the allocator.
+struct TrainScratch {
+    // Minibatch rows, filled in place by `sample_batch_into`.
+    s: Tensor,
+    a: Tensor,
+    r: Tensor,
+    s2: Tensor,
+    d: Tensor,
+    /// Bootstrap target `y`.
+    y: Tensor,
+    /// Target-policy actions and log-probs at `s2`.
+    a2: Tensor,
+    logp2: Tensor,
+    /// Shared `[B, state+action]` input buffer for every critic forward.
+    q_in: Tensor,
+    // Forward caches (the actor cache doubles for the target-policy
+    // forward; the q caches double for the target critics — each use is
+    // sequential within one update).
+    actor_cache: MlpCache,
+    q1_cache: MlpCache,
+    q2_cache: MlpCache,
+    // Backward scratch + gradient buffers.
+    actor_back: MlpBackScratch,
+    q_back: MlpBackScratch,
+    actor_grads: MlpGrads,
+    q_grads: MlpGrads,
+    // Per-update intermediates of the actor/critic losses.
+    d1: Tensor,
+    d2: Tensor,
+    dx1: Tensor,
+    dx2: Tensor,
+    dout_actor: Tensor,
+    eps_t: Tensor,
+    std_t: Tensor,
+    actions: Tensor,
+    clamped: Vec<bool>,
+    logp: Vec<f32>,
+}
+
+impl TrainScratch {
+    fn new(sd: usize, ad: usize, b: usize, actor: &Mlp, q: &Mlp) -> TrainScratch {
+        TrainScratch {
+            s: Tensor::zeros(&[b, sd]),
+            a: Tensor::zeros(&[b, ad]),
+            r: Tensor::zeros(&[b, 1]),
+            s2: Tensor::zeros(&[b, sd]),
+            d: Tensor::zeros(&[b, 1]),
+            y: Tensor::zeros(&[b, 1]),
+            a2: Tensor::zeros(&[b, ad]),
+            logp2: Tensor::zeros(&[b, 1]),
+            q_in: Tensor::zeros(&[b, sd + ad]),
+            actor_cache: MlpCache::for_batch(actor, b),
+            q1_cache: MlpCache::for_batch(q, b),
+            q2_cache: MlpCache::for_batch(q, b),
+            actor_back: MlpBackScratch::for_batch(actor, b),
+            q_back: MlpBackScratch::for_batch(q, b),
+            actor_grads: MlpGrads::zeros_like(actor),
+            q_grads: MlpGrads::zeros_like(q),
+            d1: Tensor::zeros(&[b, 1]),
+            d2: Tensor::zeros(&[b, 1]),
+            dx1: Tensor::zeros(&[b, sd + ad]),
+            dx2: Tensor::zeros(&[b, sd + ad]),
+            dout_actor: Tensor::zeros(&[b, 2 * ad]),
+            eps_t: Tensor::zeros(&[b, ad]),
+            std_t: Tensor::zeros(&[b, ad]),
+            actions: Tensor::zeros(&[b, ad]),
+            clamped: vec![false; b * ad],
+            logp: vec![0.0; b],
+        }
+    }
 }
 
 impl SacAgent {
@@ -133,6 +228,7 @@ impl SacAgent {
             replay,
             rng,
             env_steps: 0,
+            scratch: None,
             cfg,
         }
     }
@@ -199,13 +295,8 @@ impl SacAgent {
         next_state: &[f64],
         done: bool,
     ) {
-        self.replay.push(Transition {
-            state: state.iter().map(|&v| v as f32).collect(),
-            action: action.iter().map(|&v| v as f32).collect(),
-            reward: reward as f32,
-            next_state: next_state.iter().map(|&v| v as f32).collect(),
-            done: if done { 1.0 } else { 0.0 },
-        });
+        self.replay
+            .push(Transition::from_f64(state, action, reward, next_state, done));
     }
 
     /// Run the configured number of gradient updates if enough data is
@@ -221,8 +312,236 @@ impl SacAgent {
         last
     }
 
-    /// One SAC gradient update on a uniform minibatch.
+    /// One SAC gradient update on a uniform minibatch — the
+    /// zero-allocation path. Numerically and RNG-stream bit-identical to
+    /// [`SacAgent::update_once_reference`] (pinned by
+    /// `rust/tests/prop_train.rs`); all intermediates live in the agent's
+    /// persistent `TrainScratch` workspace.
     pub fn update_once(&mut self) -> UpdateStats {
+        let mut ws = self.scratch.take().unwrap_or_else(|| {
+            Box::new(TrainScratch::new(
+                self.state_dim,
+                self.action_dim,
+                self.cfg.batch_size,
+                &self.actor,
+                &self.q1,
+            ))
+        });
+        let stats = self.update_once_in(&mut ws);
+        self.scratch = Some(ws);
+        stats
+    }
+
+    fn update_once_in(&mut self, ws: &mut TrainScratch) -> UpdateStats {
+        let b = self.cfg.batch_size;
+        self.sample_batch_into(ws);
+
+        // ---- Target computation: y = r + gamma * (1-d) * (minQ'(s',a') - alpha*logp') ----
+        self.policy_forward_into(ws);
+        concat_cols_into(&ws.s2, &ws.a2, &mut ws.q_in);
+        self.q1_target.forward_cached_into(&ws.q_in, &mut ws.q1_cache);
+        self.q2_target.forward_cached_into(&ws.q_in, &mut ws.q2_cache);
+        let alpha = self.log_alpha.exp();
+        let gamma = self.cfg.gamma;
+        for i in 0..b {
+            let qmin = ws.q1_cache.output.data()[i].min(ws.q2_cache.output.data()[i]);
+            let soft = qmin - alpha * ws.logp2.data()[i];
+            ws.y.data_mut()[i] = ws.r.data()[i] + gamma * (1.0 - ws.d.data()[i]) * soft;
+        }
+
+        // ---- Critic updates (0.5 * MSE) ----
+        concat_cols_into(&ws.s, &ws.a, &mut ws.q_in);
+        let q1_loss = self.critic_update_in(true, ws);
+        let q2_loss = self.critic_update_in(false, ws);
+
+        // ---- Actor update ----
+        let (policy_loss, entropy) = self.actor_update_in(ws);
+
+        // ---- Temperature update ----
+        // alpha_loss = -log_alpha * mean(logp + target_entropy) (detached)
+        let mean_err = -(entropy as f32) + self.target_entropy; // mean(logp) = -entropy
+        self.log_alpha -= self.cfg.alpha_lr * (-mean_err);
+        self.log_alpha = self.log_alpha.clamp(-10.0, 3.0);
+
+        // ---- Polyak target updates ----
+        self.q1_target.soft_update_from(&self.q1, self.cfg.tau);
+        self.q2_target.soft_update_from(&self.q2, self.cfg.tau);
+
+        UpdateStats {
+            q1_loss,
+            q2_loss,
+            policy_loss,
+            alpha: self.log_alpha.exp() as f64,
+            entropy,
+        }
+    }
+
+    /// Fill the preallocated minibatch rows. Same RNG call sequence as the
+    /// reference [`SacAgent::sample_batch`] (all index draws interleave
+    /// with copies that never touch the RNG), so the sampled batch is
+    /// identical.
+    fn sample_batch_into(&mut self, ws: &mut TrainScratch) {
+        let (sd, ad) = (self.state_dim, self.action_dim);
+        let b = self.cfg.batch_size;
+        let n = self.replay.len();
+        for row in 0..b {
+            let i = self.rng.below(n);
+            let t = self.replay.sample_at(i);
+            ws.s.data_mut()[row * sd..(row + 1) * sd].copy_from_slice(&t.state);
+            ws.a.data_mut()[row * ad..(row + 1) * ad].copy_from_slice(&t.action);
+            ws.r.data_mut()[row] = t.reward;
+            ws.s2.data_mut()[row * sd..(row + 1) * sd].copy_from_slice(&t.next_state);
+            ws.d.data_mut()[row] = t.done;
+        }
+    }
+
+    /// Batched target-policy forward into `ws.a2` / `ws.logp2` — the
+    /// workspace form of [`SacAgent::policy_forward_batch`] (same values,
+    /// same RNG stream).
+    fn policy_forward_into(&mut self, ws: &mut TrainScratch) {
+        let b = ws.s2.rows();
+        let a_dim = self.action_dim;
+        self.actor.forward_cached_into(&ws.s2, &mut ws.actor_cache);
+        let out = &ws.actor_cache.output;
+        for i in 0..b {
+            let mut lp = 0.0f32;
+            for d in 0..a_dim {
+                let mean = out.data()[i * 2 * a_dim + d];
+                let log_std =
+                    out.data()[i * 2 * a_dim + a_dim + d].clamp(LOG_STD_MIN, LOG_STD_MAX);
+                let eps = self.rng.normal() as f32;
+                let u = mean + log_std.exp() * eps;
+                let act = u.tanh();
+                ws.a2.data_mut()[i * a_dim + d] = act;
+                lp += -0.5 * LN_2PI - log_std - 0.5 * eps * eps
+                    - (1.0 - act * act + SQUASH_ETA).ln();
+            }
+            ws.logp2.data_mut()[i] = lp;
+        }
+    }
+
+    /// Workspace critic update (expects `ws.q_in` prefilled); bit-identical
+    /// to the reference [`SacAgent::critic_update`] while skipping the
+    /// bottom-layer `dx` GEMM the reference computes and discards.
+    fn critic_update_in(&mut self, first: bool, ws: &mut TrainScratch) -> f64 {
+        let b = self.cfg.batch_size;
+        let (net, opt, cache) = if first {
+            (&mut self.q1, &mut self.q1_opt, &mut ws.q1_cache)
+        } else {
+            (&mut self.q2, &mut self.q2_opt, &mut ws.q2_cache)
+        };
+        net.forward_cached_into(&ws.q_in, cache);
+        let mut loss = 0.0f64;
+        for i in 0..b {
+            let err = cache.output.data()[i] - ws.y.data()[i];
+            loss += 0.5 * (err as f64) * (err as f64);
+            ws.d1.data_mut()[i] = err / b as f32;
+        }
+        loss /= b as f64;
+        net.backward_into(cache, &ws.d1, &mut ws.q_back, &mut ws.q_grads, None);
+        ws.q_grads.clip(self.cfg.grad_clip);
+        opt.step_pairs(net.params_iter_mut().zip(ws.q_grads.iter()));
+        loss
+    }
+
+    /// Workspace actor update; bit-identical to the reference
+    /// [`SacAgent::actor_update`] while backpropagating through the Q nets
+    /// with [`Mlp::backward_input_into`] (their parameter gradients were
+    /// computed and discarded by the reference).
+    fn actor_update_in(&mut self, ws: &mut TrainScratch) -> (f64, f64) {
+        let b = self.cfg.batch_size;
+        let a_dim = self.action_dim;
+        let alpha = self.log_alpha.exp();
+
+        self.actor.forward_cached_into(&ws.s, &mut ws.actor_cache);
+
+        // Sample eps, compute actions and logp.
+        ws.logp.fill(0.0);
+        for i in 0..b {
+            for d in 0..a_dim {
+                let mean = ws.actor_cache.output.data()[i * 2 * a_dim + d];
+                let raw_ls = ws.actor_cache.output.data()[i * 2 * a_dim + a_dim + d];
+                let ls = raw_ls.clamp(LOG_STD_MIN, LOG_STD_MAX);
+                ws.clamped[i * a_dim + d] = raw_ls != ls;
+                let std = ls.exp();
+                let eps = self.rng.normal() as f32;
+                let u = mean + std * eps;
+                let act = u.tanh();
+                ws.eps_t.data_mut()[i * a_dim + d] = eps;
+                ws.std_t.data_mut()[i * a_dim + d] = std;
+                ws.actions.data_mut()[i * a_dim + d] = act;
+                ws.logp[i] +=
+                    -0.5 * LN_2PI - ls - 0.5 * eps * eps - (1.0 - act * act + SQUASH_ETA).ln();
+            }
+        }
+
+        // Q(s, a) with gradient wrt the action input.
+        concat_cols_into(&ws.s, &ws.actions, &mut ws.q_in);
+        self.q1.forward_cached_into(&ws.q_in, &mut ws.q1_cache);
+        self.q2.forward_cached_into(&ws.q_in, &mut ws.q2_cache);
+        // Per-sample min; dout routes -1/B to the chosen branch.
+        ws.d1.fill(0.0);
+        ws.d2.fill(0.0);
+        let mut policy_loss = 0.0f64;
+        for i in 0..b {
+            let (q1v, q2v) = (ws.q1_cache.output.data()[i], ws.q2_cache.output.data()[i]);
+            let qmin = q1v.min(q2v);
+            policy_loss += (alpha * ws.logp[i] - qmin) as f64;
+            if q1v <= q2v {
+                ws.d1.data_mut()[i] = -1.0 / b as f32;
+            } else {
+                ws.d2.data_mut()[i] = -1.0 / b as f32;
+            }
+        }
+        policy_loss /= b as f64;
+        self.q1
+            .backward_input_into(&ws.q1_cache, &ws.d1, &mut ws.q_back, &mut ws.dx1);
+        self.q2
+            .backward_input_into(&ws.q2_cache, &ws.d2, &mut ws.q_back, &mut ws.dx2);
+
+        // Gradient wrt actions = action-columns of dQ_in.
+        let sd = self.state_dim;
+        for i in 0..b {
+            for d in 0..a_dim {
+                let act = ws.actions.data()[i * a_dim + d];
+                let dq_da = ws.dx1.data()[i * (sd + a_dim) + sd + d]
+                    + ws.dx2.data()[i * (sd + a_dim) + sd + d];
+                // d(mean alpha*logp)/da via the -ln(1-a^2+eta) term.
+                let dlogp_da = 2.0 * act / (1.0 - act * act + SQUASH_ETA);
+                let g_a = alpha * dlogp_da / b as f32 + dq_da;
+                let dtanh = 1.0 - act * act;
+                let dmean = g_a * dtanh;
+                let std = ws.std_t.data()[i * a_dim + d];
+                let eps = ws.eps_t.data()[i * a_dim + d];
+                // -alpha * d(log_std)/dls / B from logp
+                let mut dls = g_a * dtanh * std * eps - alpha / b as f32;
+                if ws.clamped[i * a_dim + d] {
+                    dls = 0.0;
+                }
+                ws.dout_actor.data_mut()[i * 2 * a_dim + d] = dmean;
+                ws.dout_actor.data_mut()[i * 2 * a_dim + a_dim + d] = dls;
+            }
+        }
+        self.actor.backward_into(
+            &ws.actor_cache,
+            &ws.dout_actor,
+            &mut ws.actor_back,
+            &mut ws.actor_grads,
+            None,
+        );
+        ws.actor_grads.clip(self.cfg.grad_clip);
+        self.actor_opt
+            .step_pairs(self.actor.params_iter_mut().zip(ws.actor_grads.iter()));
+
+        let entropy = -(ws.logp.iter().map(|&v| v as f64).sum::<f64>() / b as f64);
+        (policy_loss, entropy)
+    }
+
+    /// The PR-4 allocating update, kept verbatim as the bit-identity
+    /// oracle: `rust/tests/prop_train.rs` drives it in lockstep with
+    /// [`SacAgent::update_once`] and `benches/perf_hotpaths.rs` uses it as
+    /// the speedup baseline. Not called by any production path.
+    pub fn update_once_reference(&mut self) -> UpdateStats {
         let b = self.cfg.batch_size;
         let (s, a, r, s2, done) = self.sample_batch(b);
 
@@ -267,6 +586,8 @@ impl SacAgent {
         }
     }
 
+    /// Reference minibatch assembly (allocating). Kept for
+    /// [`SacAgent::update_once_reference`].
     fn sample_batch(&mut self, b: usize) -> (Tensor, Tensor, Tensor, Tensor, Tensor) {
         let (sd, ad) = (self.state_dim, self.action_dim);
         let mut s = Tensor::zeros(&[b, sd]);
@@ -277,7 +598,7 @@ impl SacAgent {
         // Borrow dance: sample indices first to avoid holding &self.replay.
         let idx: Vec<usize> = (0..b).map(|_| self.rng.below(self.replay.len())).collect();
         for (row, &i) in idx.iter().enumerate() {
-            let t = &self.replay.sample_at(i);
+            let t = self.replay.sample_at(i);
             s.data_mut()[row * sd..(row + 1) * sd].copy_from_slice(&t.state);
             a.data_mut()[row * ad..(row + 1) * ad].copy_from_slice(&t.action);
             r.data_mut()[row] = t.reward;
@@ -288,7 +609,8 @@ impl SacAgent {
     }
 
     /// Batched policy forward: returns squashed actions [B, A] and
-    /// per-sample log-probs [B, 1] (no gradients retained).
+    /// per-sample log-probs [B, 1] (no gradients retained). Reference
+    /// allocating path.
     fn policy_forward_batch(&mut self, s: &Tensor) -> (Tensor, Tensor) {
         let b = s.rows();
         let a_dim = self.action_dim;
@@ -311,7 +633,7 @@ impl SacAgent {
         (actions, logp)
     }
 
-    /// 0.5*MSE critic update; returns the loss.
+    /// 0.5*MSE critic update; returns the loss. Reference allocating path.
     fn critic_update(&mut self, first: bool, q_in: &Tensor, y: &Tensor) -> f64 {
         let b = q_in.rows();
         let (net, opt) = if first {
@@ -330,12 +652,13 @@ impl SacAgent {
         loss /= b as f64;
         let (_, mut grads) = net.backward(&cache, &dout);
         grads.clip(self.cfg.grad_clip);
-        let gt = grads.tensors();
+        let gt: Vec<&Tensor> = grads.iter().collect();
         opt.step(net.params_mut(), &gt);
         loss
     }
 
     /// Reparameterized policy update. Returns (policy_loss, entropy).
+    /// Reference allocating path.
     fn actor_update(&mut self, s: &Tensor) -> (f64, f64) {
         let b = s.rows();
         let a_dim = self.action_dim;
@@ -414,7 +737,7 @@ impl SacAgent {
         }
         let (_, mut grads) = self.actor.backward(&cache, &dout_actor);
         grads.clip(self.cfg.grad_clip);
-        let gt = grads.tensors();
+        let gt: Vec<&Tensor> = grads.iter().collect();
         self.actor_opt.step(self.actor.params_mut(), &gt);
 
         let entropy = -(logp.iter().map(|&v| v as f64).sum::<f64>() / b as f64);
@@ -637,20 +960,9 @@ impl SacAgent {
     }
 }
 
-/// Concatenate two matrices along columns: [B, n1] ++ [B, n2] -> [B, n1+n2].
-pub fn concat_cols(a: &Tensor, b: &Tensor) -> Tensor {
-    let rows = a.rows();
-    assert_eq!(rows, b.rows(), "concat_cols row mismatch");
-    let (n1, n2) = (a.cols(), b.cols());
-    let mut out = Tensor::zeros(&[rows, n1 + n2]);
-    for i in 0..rows {
-        out.data_mut()[i * (n1 + n2)..i * (n1 + n2) + n1]
-            .copy_from_slice(&a.data()[i * n1..(i + 1) * n1]);
-        out.data_mut()[i * (n1 + n2) + n1..(i + 1) * (n1 + n2)]
-            .copy_from_slice(&b.data()[i * n2..(i + 1) * n2]);
-    }
-    out
-}
+// `concat_cols` moved to the `tensor` module (next to its workspace twin
+// `concat_cols_into`); re-exported at the top of this file so existing
+// `rl::sac::concat_cols` call sites keep working.
 
 impl ReplayBuffer {
     /// Direct index access used by the batched sampler.

@@ -6,6 +6,22 @@
 //! this project needs — row-major storage, 2-D GEMM variants with a
 //! blocked inner loop, and elementwise ops — rather than being a general
 //! ndarray clone.
+//!
+//! # Allocating vs `*_into` paths
+//!
+//! Every GEMM / broadcast op exists in two forms: the original allocating
+//! form (`matmul`, `matmul_tn`, ..., returning a fresh [`Tensor`]) and a
+//! workspace form (`matmul_into`, `matmul_tn_into`, ...) that writes into
+//! a caller-owned tensor. The `*_into` kernels are free to re-tile their
+//! loops for locality, but they apply **the same floating-point operations
+//! in the same order to every output element** as their allocating
+//! counterpart, so for finite inputs the results are bit-identical (the
+//! allocating kernels skip zero multipliers, which only differs from an
+//! unconditional `+= 0.0*x` when `x` is non-finite). The SAC training loop
+//! depends on this: search episode streams and checkpoints must not move
+//! when the zero-allocation path is used (`rust/tests/prop_train.rs`).
+
+#![deny(clippy::redundant_clone)]
 
 use crate::util::rng::Rng;
 use std::fmt;
@@ -254,23 +270,9 @@ impl Tensor {
         for i in 0..m {
             let arow = &self.data[i * k..(i + 1) * k];
             for j in 0..n {
-                let brow = &b.data[j * k..(j + 1) * k];
                 // 4 independent accumulators break the FP dependency
                 // chain so the dot product vectorizes (§Perf).
-                let mut acc = [0.0f32; 4];
-                let (ach, art) = arow.split_at(k - k % 4);
-                let (bch, brt) = brow.split_at(k - k % 4);
-                for (av, bv) in ach.chunks_exact(4).zip(bch.chunks_exact(4)) {
-                    acc[0] += av[0] * bv[0];
-                    acc[1] += av[1] * bv[1];
-                    acc[2] += av[2] * bv[2];
-                    acc[3] += av[3] * bv[3];
-                }
-                let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-                for (av, bv) in art.iter().zip(brt) {
-                    s += av * bv;
-                }
-                c.data[i * n + j] = s;
+                c.data[i * n + j] = dot4(arow, &b.data[j * k..(j + 1) * k]);
             }
         }
         c
@@ -304,13 +306,171 @@ impl Tensor {
     pub fn transpose(&self) -> Tensor {
         let (m, n) = (self.rows(), self.cols());
         let mut out = Tensor::zeros(&[n, m]);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    // ---- workspace (`*_into`) variants: no allocation, bit-identical ----
+
+    /// Overwrite `self` with `src` (shapes must match exactly).
+    pub fn copy_from(&mut self, src: &Tensor) {
+        assert_eq!(self.shape, src.shape, "copy_from shape mismatch");
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// `out = self @ b` into a caller-owned `[m, n]` tensor, fully
+    /// overwritten. Bit-identical to [`Tensor::matmul`] for finite inputs;
+    /// uses a 4-row register block on top of the same k-pairing (see
+    /// [`matmul_into_rows4`]).
+    pub fn matmul_into(&self, b: &Tensor, out: &mut Tensor) {
+        let (m, k) = (self.rows(), self.cols());
+        let (kb, n) = (b.rows(), b.cols());
+        assert_eq!(k, kb, "matmul inner dim {k} vs {kb}");
+        assert_eq!(out.shape(), &[m, n], "matmul_into out shape");
+        out.data.fill(0.0);
+        matmul_into_rows4(&self.data, &b.data, &mut out.data, m, k, n);
+    }
+
+    /// `out = selfᵀ @ b` where self is `[k, m]`, fully overwriting the
+    /// caller-owned `[m, n]` output. Bit-identical to
+    /// [`Tensor::matmul_tn`]: per element the rank-1 updates accumulate in
+    /// the same ascending-`p` order with the same zero-skip; the loop is
+    /// tiled over output columns so the C tile stays L1-resident instead
+    /// of streaming the whole output once per `p` (the allocating kernel's
+    /// memory-traffic bottleneck at SAC's `dw = xᵀ @ dy` shapes).
+    pub fn matmul_tn_into(&self, b: &Tensor, out: &mut Tensor) {
+        let (k, m) = (self.rows(), self.cols());
+        let (kb, n) = (b.rows(), b.cols());
+        assert_eq!(k, kb, "matmul_tn inner dim {k} vs {kb}");
+        assert_eq!(out.shape(), &[m, n], "matmul_tn_into out shape");
+        out.data.fill(0.0);
+        const BJ: usize = 32;
+        let c = &mut out.data;
+        for j0 in (0..n).step_by(BJ) {
+            let jend = (j0 + BJ).min(n);
+            for p in 0..k {
+                let arow = &self.data[p * m..(p + 1) * m];
+                let brow = &b.data[p * n + j0..p * n + jend];
+                for (i, &a) in arow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut c[i * n + j0..i * n + jend];
+                    for (cj, &bj) in crow.iter_mut().zip(brow) {
+                        *cj += a * bj;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `out = self @ bᵀ` where `b` is `[n, k]`, fully overwriting the
+    /// caller-owned `[m, n]` output. Bit-identical to
+    /// [`Tensor::matmul_nt`]: each output element is the same
+    /// 4-accumulator dot product (`dot4`); the loop is tiled over B rows
+    /// so a small block of B stays cache-hot across all of A instead of
+    /// streaming the full B matrix once per A row.
+    pub fn matmul_nt_into(&self, b: &Tensor, out: &mut Tensor) {
+        let (m, k) = (self.rows(), self.cols());
+        let (n, kb) = (b.rows(), b.cols());
+        assert_eq!(k, kb, "matmul_nt inner dim {k} vs {kb}");
+        assert_eq!(out.shape(), &[m, n], "matmul_nt_into out shape");
+        const BJ: usize = 8;
+        for j0 in (0..n).step_by(BJ) {
+            let jend = (j0 + BJ).min(n);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                for j in j0..jend {
+                    let brow = &b.data[j * k..(j + 1) * k];
+                    out.data[i * n + j] = dot4(arow, brow);
+                }
+            }
+        }
+    }
+
+    /// Transpose into a caller-owned `[n, m]` tensor.
+    pub fn transpose_into(&self, out: &mut Tensor) {
+        let (m, n) = (self.rows(), self.cols());
+        assert_eq!(out.shape(), &[n, m], "transpose_into out shape");
         for i in 0..m {
             for j in 0..n {
                 out.data[j * m + i] = self.data[i * n + j];
             }
         }
-        out
     }
+
+    /// In-place broadcast-add of a row vector `[1, n]` to each row of
+    /// `self` — the workspace form of [`Tensor::add_row`] (same
+    /// element-wise additions, no clone).
+    pub fn add_row_into(&mut self, row: &Tensor) {
+        let (m, n) = (self.rows(), self.cols());
+        assert_eq!(row.len(), n, "add_row len mismatch");
+        for i in 0..m {
+            let r = &mut self.data[i * n..(i + 1) * n];
+            for (v, &x) in r.iter_mut().zip(&row.data) {
+                *v += x;
+            }
+        }
+    }
+
+    /// Column-wise sum into a caller-owned `[1, n]` tensor — the workspace
+    /// form of [`Tensor::sum_rows`] (same row-major accumulation order).
+    pub fn sum_rows_into(&self, out: &mut Tensor) {
+        let (m, n) = (self.rows(), self.cols());
+        assert_eq!(out.shape(), &[1, n], "sum_rows_into out shape");
+        out.data.fill(0.0);
+        for i in 0..m {
+            let r = &self.data[i * n..(i + 1) * n];
+            for (o, &x) in out.data.iter_mut().zip(r) {
+                *o += x;
+            }
+        }
+    }
+}
+
+/// Concatenate two matrices along columns: `[B, n1] ++ [B, n2] -> [B, n1+n2]`.
+pub fn concat_cols(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[a.rows(), a.cols() + b.cols()]);
+    concat_cols_into(a, b, &mut out);
+    out
+}
+
+/// [`concat_cols`] into a caller-owned `[B, n1+n2]` tensor (row-wise
+/// `copy_from_slice`, fully overwritten).
+pub fn concat_cols_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let rows = a.rows();
+    assert_eq!(rows, b.rows(), "concat_cols row mismatch");
+    let (n1, n2) = (a.cols(), b.cols());
+    assert_eq!(out.shape(), &[rows, n1 + n2], "concat_cols_into out shape");
+    let n = n1 + n2;
+    for i in 0..rows {
+        out.data[i * n..i * n + n1].copy_from_slice(&a.data[i * n1..(i + 1) * n1]);
+        out.data[i * n + n1..(i + 1) * n].copy_from_slice(&b.data[i * n2..(i + 1) * n2]);
+    }
+}
+
+/// The exact dot-product reduction shared by [`Tensor::matmul_nt`] and
+/// [`Tensor::matmul_nt_into`]: 4 independent accumulators over aligned
+/// chunks (breaking the FP dependency chain so it vectorizes), combined as
+/// `(acc0 + acc1) + (acc2 + acc3)`, then a sequential remainder. Keeping
+/// this in one place is what makes the two callers bit-identical.
+#[inline]
+fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len();
+    let mut acc = [0.0f32; 4];
+    let (ach, art) = a.split_at(k - k % 4);
+    let (bch, brt) = b.split_at(k - k % 4);
+    for (av, bv) in ach.chunks_exact(4).zip(bch.chunks_exact(4)) {
+        acc[0] += av[0] * bv[0];
+        acc[1] += av[1] * bv[1];
+        acc[2] += av[2] * bv[2];
+        acc[3] += av[3] * bv[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (av, bv) in art.iter().zip(brt) {
+        s += av * bv;
+    }
+    s
 }
 
 /// Blocked GEMM kernel: C += A[m,k] @ B[k,n]. Exposed so the perf pass can
@@ -329,6 +489,95 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
             let crow = &mut c[i * n..(i + 1) * n];
             let mut p = k0;
             // 2-way k-unroll: one pass over crow applies two rank-1 rows.
+            while p + 1 < kend {
+                let a0 = arow[p];
+                let a1 = arow[p + 1];
+                if a0 == 0.0 && a1 == 0.0 {
+                    p += 2;
+                    continue;
+                }
+                let b0 = &b[p * n..p * n + n];
+                let b1 = &b[(p + 1) * n..(p + 1) * n + n];
+                for ((cj, &x0), &x1) in crow.iter_mut().zip(b0).zip(b1) {
+                    *cj += a0 * x0 + a1 * x1;
+                }
+                p += 2;
+            }
+            if p < kend {
+                let a0 = arow[p];
+                if a0 != 0.0 {
+                    let b0 = &b[p * n..p * n + n];
+                    for (cj, &x0) in crow.iter_mut().zip(b0) {
+                        *cj += a0 * x0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Blocked GEMM with a 4-row register block: C += A[m,k] @ B[k,n].
+///
+/// Same k-blocking (128), same two-k-steps-fused inner update and same
+/// single-step tail as [`matmul_into`], so every output element sees the
+/// identical sequence of floating-point operations — for finite inputs the
+/// result is bit-identical (the only divergence is the zero-multiplier
+/// skip, which is a no-op unless the skipped operand is Inf/NaN). Four A
+/// rows share each streamed pair of B rows, quartering B traffic and
+/// giving the core four independent FMA chains; that, not the skip, is
+/// where the speedup comes from (~1.5-2x at SAC's 64x166x128 shapes).
+pub fn matmul_into_rows4(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    const BK: usize = 128;
+    let m4 = m - m % 4;
+    for k0 in (0..k).step_by(BK) {
+        let kend = (k0 + BK).min(k);
+        let mut i = 0;
+        while i < m4 {
+            let r0 = &a[i * k..(i + 1) * k];
+            let r1 = &a[(i + 1) * k..(i + 2) * k];
+            let r2 = &a[(i + 2) * k..(i + 3) * k];
+            let r3 = &a[(i + 3) * k..(i + 4) * k];
+            let block = &mut c[i * n..(i + 4) * n];
+            let (c0, block) = block.split_at_mut(n);
+            let (c1, block) = block.split_at_mut(n);
+            let (c2, c3) = block.split_at_mut(n);
+            let mut p = k0;
+            while p + 1 < kend {
+                let (a00, a01) = (r0[p], r0[p + 1]);
+                let (a10, a11) = (r1[p], r1[p + 1]);
+                let (a20, a21) = (r2[p], r2[p + 1]);
+                let (a30, a31) = (r3[p], r3[p + 1]);
+                let b0 = &b[p * n..p * n + n];
+                let b1 = &b[(p + 1) * n..(p + 1) * n + n];
+                for j in 0..n {
+                    let x0 = b0[j];
+                    let x1 = b1[j];
+                    c0[j] += a00 * x0 + a01 * x1;
+                    c1[j] += a10 * x0 + a11 * x1;
+                    c2[j] += a20 * x0 + a21 * x1;
+                    c3[j] += a30 * x0 + a31 * x1;
+                }
+                p += 2;
+            }
+            if p < kend {
+                let b0 = &b[p * n..p * n + n];
+                let (a0, a1, a2, a3) = (r0[p], r1[p], r2[p], r3[p]);
+                for j in 0..n {
+                    let x0 = b0[j];
+                    c0[j] += a0 * x0;
+                    c1[j] += a1 * x0;
+                    c2[j] += a2 * x0;
+                    c3[j] += a3 * x0;
+                }
+            }
+            i += 4;
+        }
+        // Remainder rows: the original single-row kernel (identical
+        // semantics, including the zero-pair skip).
+        for i in m4..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut p = k0;
             while p + 1 < kend {
                 let a0 = arow[p];
                 let a1 = arow[p + 1];
@@ -446,6 +695,92 @@ mod tests {
     fn reshape_wrong_size_panics() {
         let t = Tensor::zeros(&[2, 3]);
         let _ = t.reshape(&[4, 2]);
+    }
+
+    /// True bitwise comparison — the derived `PartialEq` (f32 `==`) would
+    /// miss a `-0.0` vs `+0.0` divergence, which is exactly the class the
+    /// zero-skip-vs-unconditional-add equivalence argument must exclude.
+    fn assert_bits_eq(a: &Tensor, b: &Tensor, what: &str) {
+        assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
+        for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+            assert!(x.to_bits() == y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// Sparsify ~40% of entries (half of them to `-0.0`) to exercise the
+    /// zero-skip paths the allocating kernels take and the signed-zero
+    /// edge of the unconditional-add kernels.
+    fn sparsify(t: &mut Tensor, rng: &mut Rng) {
+        for v in t.data_mut() {
+            if rng.below(5) < 2 {
+                *v = if rng.below(2) == 0 { 0.0 } else { -0.0 };
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_bitwise() {
+        let mut rng = Rng::new(41);
+        // Shapes straddle the 128 k-block, the 4-row block and odd tails.
+        for &(m, k, n) in &[(1, 1, 1), (5, 3, 2), (16, 129, 9), (64, 166, 128), (7, 130, 33)] {
+            let mut a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            sparsify(&mut a, &mut rng);
+
+            let mut out = Tensor::zeros(&[m, n]);
+            a.matmul_into(&b, &mut out);
+            assert_bits_eq(&a.matmul(&b), &out, &format!("matmul_into {m}x{k}x{n}"));
+
+            let at = a.transpose(); // [k, m], so atᵀ @ b is [m, n]
+            let mut out = Tensor::zeros(&[m, n]);
+            at.matmul_tn_into(&b, &mut out);
+            assert_bits_eq(&at.matmul_tn(&b), &out, &format!("matmul_tn_into {m}x{k}x{n}"));
+
+            let bnt = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let mut out = Tensor::zeros(&[m, n]);
+            a.matmul_nt_into(&bnt, &mut out);
+            assert_bits_eq(&a.matmul_nt(&bnt), &out, &format!("matmul_nt_into {m}x{k}x{n}"));
+
+            let mut out = Tensor::zeros(&[k, m]);
+            a.transpose_into(&mut out);
+            assert_bits_eq(&a.transpose(), &out, &format!("transpose_into {m}x{k}"));
+
+            let row = Tensor::randn(&[1, k], 1.0, &mut rng);
+            let mut out = a.clone();
+            out.add_row_into(&row);
+            assert_bits_eq(&a.add_row(&row), &out, &format!("add_row_into {m}x{k}"));
+
+            let mut out = Tensor::zeros(&[1, k]);
+            a.sum_rows_into(&mut out);
+            assert_bits_eq(&a.sum_rows(), &out, &format!("sum_rows_into {m}x{k}"));
+        }
+    }
+
+    #[test]
+    fn concat_cols_into_matches_concat_cols() {
+        let mut rng = Rng::new(42);
+        let a = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[3, 2], 1.0, &mut rng);
+        let mut out = Tensor::zeros(&[3, 6]);
+        concat_cols_into(&a, &b, &mut out);
+        assert_eq!(concat_cols(&a, &b), out);
+    }
+
+    #[test]
+    fn copy_from_overwrites() {
+        let src = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let mut dst = Tensor::zeros(&[2, 2]);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    #[should_panic(expected = "out shape")]
+    fn matmul_into_checks_out_shape() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[3, 4]);
+        let mut out = Tensor::zeros(&[2, 5]);
+        a.matmul_into(&b, &mut out);
     }
 
     #[test]
