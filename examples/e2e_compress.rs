@@ -112,13 +112,13 @@ fn main() -> anyhow::Result<()> {
     println!(
         "energy: {:.3} uJ -> {:.3} uJ  ({:.1}x)",
         outcome.start_energy * 1e6,
-        outcome.best.as_ref().map(|b| b.energy * 1e6).unwrap_or(f64::NAN),
+        outcome.best.as_ref().map_or(f64::NAN, |b| b.energy * 1e6),
         outcome.energy_improvement()
     );
     println!(
         "area:   {:.3} mm2 -> {:.3} mm2 ({:.1}x)",
         outcome.start_area,
-        outcome.best.as_ref().map(|b| b.area).unwrap_or(f64::NAN),
+        outcome.best.as_ref().map_or(f64::NAN, |b| b.area),
         outcome.area_improvement()
     );
     if let Some(b) = &outcome.best {
@@ -135,7 +135,7 @@ fn main() -> anyhow::Result<()> {
             ep.steps,
             ep.total_reward,
             ep.energy_curve.last().unwrap_or(&f64::NAN) * 1e6,
-            ep.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN),
+            ep.best.as_ref().map_or(f64::NAN, |b| b.accuracy),
         );
     }
     println!("wall clock: {:?}", t0.elapsed());

@@ -1,0 +1,887 @@
+//! Repo-specific invariant lints the compiler can't express.
+//!
+//! `cargo run -p edc-lints` walks `rust/src` and enforces five rules that
+//! guard the determinism and lock-discipline invariants catalogued in
+//! `docs/determinism.md`:
+//!
+//! 1. **`map-iteration-in-serialization`** — no `HashMap`/`HashSet` in
+//!    snapshot/report/checkpoint serialization paths. Their iteration
+//!    order is randomized per process, so any use near serialization is
+//!    one refactor away from nondeterministic bytes on disk. Those paths
+//!    must use `BTreeMap`/sorted `Vec`s (`util::json::Json::Obj` already
+//!    does).
+//! 2. **`ambient-entropy`** — no `SystemTime::now`, `thread_rng`,
+//!    `rand::random`, `from_entropy`, `getrandom` or `RandomState::new`
+//!    outside `util/rng.rs`. Every random stream must come from
+//!    `util::rng` seeds so runs are replayable; `Instant::now` (duration
+//!    measurement, never persisted into results) stays allowed.
+//! 3. **`lock-guard-spans-energy`** — no mutex guard alive across a call
+//!    into `energy::` cost computation (`layer_cost`, `map_layer`,
+//!    `evaluate`/`evaluate_batch`). This is the PR-3 rule that keeps
+//!    `SharedCostCache` stripes available while costs are computed:
+//!    check-unlock-compute-relock, first insert wins.
+//! 4. **`alloc-in-hot-path`** — no allocating ops (`vec!`, `Vec::new`,
+//!    `collect`, `to_vec`, `clone`, `format!`, `Box::new`, ...) inside
+//!    the PR-5 zero-allocation kernels: `*_into` functions (and
+//!    `step_pairs`) in `tensor/mod.rs`, `nn/linear.rs`, `nn/mlp.rs`,
+//!    `nn/adam.rs`.
+//! 5. **`unwrap-in-request-path`** — no `.unwrap()`/`.expect(` in
+//!    non-test code of `coordinator/service.rs`, `coordinator/sweep.rs`
+//!    and `cli/`: a malformed request or corrupt file must produce a
+//!    readable error naming the job/file, never a panic.
+//!
+//! The pass is **lexical, not syntactic**: the offline build environment
+//! has no `syn`, so the walker strips comments/strings/char literals and
+//! `#[cfg(test)]` modules with a small line-preserving state machine,
+//! joins physical lines into brace-tracked logical statements, and
+//! pattern-matches those. That makes it conservative-but-fast; where a
+//! rule genuinely needs an exception, waive a single line with a
+//! trailing or preceding comment: `// edc-lints: allow(<rule-name>)`.
+//! Each rule's self-test seeds a violation and asserts the pass catches
+//! it, and `repo_is_clean` runs the real tree as a test.
+
+use std::fmt;
+use std::path::Path;
+
+pub const RULE_MAP_ITER: &str = "map-iteration-in-serialization";
+pub const RULE_ENTROPY: &str = "ambient-entropy";
+pub const RULE_LOCK_SPAN: &str = "lock-guard-spans-energy";
+pub const RULE_HOT_ALLOC: &str = "alloc-in-hot-path";
+pub const RULE_UNWRAP: &str = "unwrap-in-request-path";
+
+/// All rule names, for `--help`-style output and waiver validation.
+pub const ALL_RULES: [&str; 5] = [
+    RULE_MAP_ITER,
+    RULE_ENTROPY,
+    RULE_LOCK_SPAN,
+    RULE_HOT_ALLOC,
+    RULE_UNWRAP,
+];
+
+/// One finding: a rule fired on a line of a file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    /// 1-based line in the original source.
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+// ---------- sanitizer ----------
+
+/// Blank out comments, string literals and char literals, preserving
+/// every line break and column, so the lexical rules can't fire inside
+/// text. Handles `//`, nested `/* */`, `"…"` with escapes, raw strings
+/// `r#"…"#` (any hash count, with optional `b` prefix), byte strings,
+/// and char/byte-char literals (distinguished from lifetimes).
+pub fn sanitize(src: &str) -> String {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out: Vec<char> = chars.clone();
+    let n = chars.len();
+    let blank = |out: &mut Vec<char>, from: usize, to: usize| {
+        for c in out.iter_mut().take(to.min(n)).skip(from) {
+            if *c != '\n' {
+                *c = ' ';
+            }
+        }
+    };
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut j = i;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Raw / byte string prefixes: r", r#", br", b", b' — only when
+        // not the tail of an identifier (`for`, `number`, ...).
+        let prev_ident = i > 0 && is_ident(chars[i - 1]);
+        if !prev_ident && (c == 'r' || c == 'b') {
+            let mut j = i;
+            if chars[j] == 'b' {
+                j += 1;
+            }
+            if j < n && chars[j] == 'r' {
+                j += 1;
+                let mut hashes = 0;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    // Raw string: scan for `"` + hashes `#`s.
+                    let mut k = j + 1;
+                    'raw: while k < n {
+                        if chars[k] == '"' {
+                            let mut h = 0;
+                            while h < hashes && k + 1 + h < n && chars[k + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                k += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        k += 1;
+                    }
+                    blank(&mut out, i, k);
+                    i = k;
+                    continue;
+                }
+                // `r` not followed by a raw string: plain identifier.
+            } else if c == 'b' && j < n && (chars[j] == '"' || chars[j] == '\'') {
+                // Byte string / byte char: fall through with i at the
+                // quote so the ordinary handlers below take it.
+                out[i] = ' ';
+                i += 1;
+                continue;
+            }
+        }
+        // Ordinary string with escapes.
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if chars[j] == '\\' {
+                    j += 2;
+                } else if chars[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: scan (bounded) for the closer.
+                let mut j = i + 2;
+                let limit = (i + 12).min(n);
+                while j < limit && chars[j] != '\'' {
+                    j += 1;
+                }
+                blank(&mut out, i, (j + 1).min(n));
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                blank(&mut out, i, i + 3);
+                i += 3;
+                continue;
+            }
+            // Lifetime: leave as-is.
+        }
+        i += 1;
+    }
+    out.into_iter().collect()
+}
+
+/// Blank out `#[cfg(test)]`-gated items (the `mod tests { … }` blocks,
+/// plus single `#[cfg(test)] use …;` lines), line-preserving. Input must
+/// already be sanitized so brace counting is sound.
+pub fn strip_test_modules(lines: &mut [String]) {
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].trim() != "#[cfg(test)]" {
+            i += 1;
+            continue;
+        }
+        lines[i].clear();
+        // Skip following attributes/blank lines to the gated item.
+        let mut j = i + 1;
+        while j < lines.len() && (lines[j].trim().is_empty() || lines[j].trim_start().starts_with("#[")) {
+            j += 1;
+        }
+        if j >= lines.len() {
+            break;
+        }
+        let item = lines[j].trim_start().to_string();
+        if item.starts_with("mod ")
+            || item.starts_with("pub mod ")
+            || item.starts_with("fn ")
+            || item.starts_with("pub fn ")
+            || item.starts_with("impl")
+        {
+            // Block item: blank through the matching close brace.
+            let mut depth = 0i32;
+            let mut entered = false;
+            while j < lines.len() {
+                let d: i32 = lines[j]
+                    .chars()
+                    .map(|c| match c {
+                        '{' => 1,
+                        '}' => -1,
+                        _ => 0,
+                    })
+                    .sum();
+                depth += d;
+                if !entered && lines[j].contains('{') {
+                    entered = true;
+                }
+                lines[j].clear();
+                j += 1;
+                if entered && depth <= 0 {
+                    break;
+                }
+            }
+        } else if item.ends_with(';') {
+            lines[j].clear();
+        }
+        i = j;
+    }
+}
+
+// ---------- logical statements ----------
+
+/// One brace-tracked logical statement: physical lines joined until a
+/// terminator (`;`, `{`, `}`, or a standalone attribute).
+#[derive(Debug)]
+pub struct Stmt {
+    /// 1-based first physical line.
+    pub line: usize,
+    pub text: String,
+    pub depth_before: i32,
+    pub depth_after: i32,
+}
+
+/// Join sanitized physical lines into [`Stmt`]s with running brace depth.
+pub fn statements(code_lines: &[String]) -> Vec<Stmt> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut first = 0usize;
+    let mut depth = 0i32;
+    let mut flush = |cur: &mut String, first: usize, depth: &mut i32, out: &mut Vec<Stmt>| {
+        if cur.trim().is_empty() {
+            cur.clear();
+            return;
+        }
+        let delta: i32 = cur
+            .chars()
+            .map(|c| match c {
+                '{' => 1,
+                '}' => -1,
+                _ => 0,
+            })
+            .sum();
+        out.push(Stmt {
+            line: first,
+            text: std::mem::take(cur),
+            depth_before: *depth,
+            depth_after: *depth + delta,
+        });
+        *depth += delta;
+    };
+    for (idx, line) in code_lines.iter().enumerate() {
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if cur.is_empty() {
+            first = idx + 1;
+        }
+        cur.push_str(t);
+        cur.push(' ');
+        let last = t.chars().last().unwrap_or(' ');
+        let is_attr = t.starts_with("#[") || t.starts_with("#![");
+        if matches!(last, ';' | '{' | '}') || (is_attr && last == ']') {
+            flush(&mut cur, first, &mut depth, &mut out);
+        }
+    }
+    flush(&mut cur, first, &mut depth, &mut out);
+    out
+}
+
+// ---------- file model ----------
+
+/// How a file is classified for rule dispatch (paths relative to
+/// `rust/src`, `/`-separated).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FileClass {
+    /// Snapshot/report/checkpoint serialization path (rule 1).
+    pub serialization: bool,
+    /// The one module allowed to own entropy (rule 2 exemption).
+    pub rng_home: bool,
+    /// PR-5 zero-allocation kernel module (rule 4).
+    pub hot_path: bool,
+    /// Daemon/sweep/CLI request or IO path (rule 5).
+    pub request_path: bool,
+}
+
+/// Classify a `/`-separated path relative to `rust/src`.
+pub fn classify(rel: &str) -> FileClass {
+    FileClass {
+        serialization: rel == "coordinator/checkpoint.rs"
+            || rel == "coordinator/orchestrator.rs"
+            || rel.starts_with("report/"),
+        rng_home: rel == "util/rng.rs",
+        hot_path: rel == "tensor/mod.rs"
+            || rel == "nn/linear.rs"
+            || rel == "nn/mlp.rs"
+            || rel == "nn/adam.rs",
+        request_path: rel == "coordinator/service.rs"
+            || rel == "coordinator/sweep.rs"
+            || rel.starts_with("cli/"),
+    }
+}
+
+/// A parsed source file ready for linting.
+pub struct SourceFile {
+    pub rel: String,
+    pub class: FileClass,
+    /// Original lines (waiver comments are looked up here).
+    pub original: Vec<String>,
+    /// Sanitized, test-stripped lines, 1:1 with `original`.
+    pub code: Vec<String>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, src: &str) -> SourceFile {
+        let original: Vec<String> = src.lines().map(str::to_string).collect();
+        let mut code: Vec<String> = sanitize(src).lines().map(str::to_string).collect();
+        strip_test_modules(&mut code);
+        SourceFile {
+            rel: rel.to_string(),
+            class: classify(rel),
+            original,
+            code,
+        }
+    }
+
+    /// A violation on `line` (1-based) is waived by an
+    /// `edc-lints: allow(<rule>)` comment on that line or the one above.
+    pub fn waived(&self, line: usize, rule: &str) -> bool {
+        let needle = format!("edc-lints: allow({rule})");
+        let check = |l: usize| {
+            l >= 1 && self.original.get(l - 1).is_some_and(|s| s.contains(&needle))
+        };
+        check(line) || check(line.saturating_sub(1))
+    }
+}
+
+// ---------- rules ----------
+
+fn push_unless_waived(out: &mut Vec<Violation>, file: &SourceFile, v: Violation) {
+    if !file.waived(v.line, v.rule) {
+        out.push(v);
+    }
+}
+
+/// Rule 1: HashMap/HashSet anywhere in a serialization-path file.
+fn rule_map_iteration(file: &SourceFile, out: &mut Vec<Violation>) {
+    if !file.class.serialization {
+        return;
+    }
+    for (idx, l) in file.code.iter().enumerate() {
+        for tok in ["HashMap", "HashSet"] {
+            if l.contains(tok) {
+                push_unless_waived(
+                    out,
+                    file,
+                    Violation {
+                        rule: RULE_MAP_ITER,
+                        file: file.rel.clone(),
+                        line: idx + 1,
+                        message: format!(
+                            "{tok} in a serialization path: iteration order is per-process \
+                             random; use BTreeMap or a sorted Vec so bytes on disk are \
+                             deterministic"
+                        ),
+                    },
+                );
+            }
+        }
+    }
+}
+
+const ENTROPY_TOKENS: [&str; 6] = [
+    "SystemTime::now",
+    "thread_rng",
+    "rand::random",
+    "from_entropy",
+    "getrandom",
+    "RandomState::new",
+];
+
+/// Rule 2: ambient entropy outside `util/rng.rs`.
+fn rule_ambient_entropy(file: &SourceFile, out: &mut Vec<Violation>) {
+    if file.class.rng_home {
+        return;
+    }
+    for (idx, l) in file.code.iter().enumerate() {
+        for tok in ENTROPY_TOKENS {
+            if l.contains(tok) {
+                push_unless_waived(
+                    out,
+                    file,
+                    Violation {
+                        rule: RULE_ENTROPY,
+                        file: file.rel.clone(),
+                        line: idx + 1,
+                        message: format!(
+                            "{tok} outside util::rng: all entropy must flow from explicit \
+                             seeds so runs replay bit-identically (Instant::now for \
+                             durations is fine)"
+                        ),
+                    },
+                );
+            }
+        }
+    }
+}
+
+const LOCK_TOKENS: [&str; 2] = [".lock()", "lock_ignore_poison("];
+const ENERGY_TOKENS: [&str; 5] = [
+    "layer_cost(",
+    "map_layer(",
+    "energy::evaluate",
+    "evaluate_batch(",
+    ".evaluate(",
+];
+
+fn first_pos(text: &str, tokens: &[&str]) -> Option<usize> {
+    tokens.iter().filter_map(|t| text.find(t)).min()
+}
+
+/// Rule 3: a mutex guard alive across an `energy::` cost computation.
+fn rule_lock_guard_spans_energy(file: &SourceFile, out: &mut Vec<Violation>) {
+    struct Guard {
+        name: Option<String>,
+        depth: i32,
+        line: usize,
+    }
+    let mut live: Vec<Guard> = Vec::new();
+    for st in statements(&file.code) {
+        // Deaths first: explicit drop(name).
+        live.retain(|g| match &g.name {
+            Some(name) => !st.text.contains(&format!("drop({name})")),
+            None => true,
+        });
+        // Energy call while any guard is live, or lock-then-energy
+        // within this one statement.
+        let lock_pos = first_pos(&st.text, &LOCK_TOKENS);
+        let energy_pos = first_pos(&st.text, &ENERGY_TOKENS);
+        if let Some(ep) = energy_pos {
+            let spanning = live.first().map(|g| g.line);
+            let inline = lock_pos.is_some_and(|lp| lp < ep);
+            if spanning.is_some() || inline {
+                let msg = match spanning {
+                    Some(gl) => format!(
+                        "energy:: cost computation while the mutex guard taken on line \
+                         {gl} is still alive; unlock first (check-unlock-compute-relock, \
+                         first insert wins)"
+                    ),
+                    None => "mutex guard taken and energy:: cost computation reached in \
+                             one statement; compute outside the lock"
+                        .to_string(),
+                };
+                push_unless_waived(
+                    out,
+                    file,
+                    Violation {
+                        rule: RULE_LOCK_SPAN,
+                        file: file.rel.clone(),
+                        line: st.line,
+                        message: msg,
+                    },
+                );
+            }
+        }
+        // Births: a statement that takes a lock and keeps the guard.
+        if lock_pos.is_some() {
+            let t = st.text.trim_start();
+            let ends_block = st.text.trim_end().ends_with('{');
+            if t.starts_with("if let") || t.starts_with("while let") || t.starts_with("match ") {
+                if ends_block {
+                    live.push(Guard {
+                        name: None,
+                        depth: st.depth_before + 1,
+                        line: st.line,
+                    });
+                }
+            } else if let Some(rest) = t.strip_prefix("let ") {
+                let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+                let name: String = rest
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if !name.is_empty() && !name.starts_with('_') {
+                    live.push(Guard {
+                        name: Some(name),
+                        depth: st.depth_before,
+                        line: st.line,
+                    });
+                } else if !name.is_empty() {
+                    // `let _ = …` / `let _g = …`: guard still lives to
+                    // end of block, just not droppable by name.
+                    live.push(Guard {
+                        name: None,
+                        depth: st.depth_before,
+                        line: st.line,
+                    });
+                }
+            } else if ends_block {
+                // e.g. `for x in m.lock().iter() {`
+                live.push(Guard {
+                    name: None,
+                    depth: st.depth_before + 1,
+                    line: st.line,
+                });
+            }
+        }
+        // Deaths by scope: a guard dies when its block closes.
+        live.retain(|g| st.depth_after >= g.depth);
+    }
+}
+
+const ALLOC_TOKENS: [&str; 13] = [
+    "vec![",
+    "Vec::new",
+    "Vec::with_capacity",
+    ".to_vec(",
+    "Box::new",
+    "String::new",
+    "String::from",
+    "format!(",
+    ".to_string(",
+    ".collect(",
+    ".clone()",
+    "Tensor::zeros",
+    "Tensor::new",
+];
+
+/// Rule 4: allocation inside a `*_into`/`step_pairs` hot-path kernel.
+fn rule_alloc_in_hot_path(file: &SourceFile, out: &mut Vec<Violation>) {
+    if !file.class.hot_path {
+        return;
+    }
+    // (fn name, depth at which the fn's body closes)
+    let mut hot: Option<(String, i32, usize)> = None;
+    for st in statements(&file.code) {
+        if let Some((name, fn_depth, _)) = &hot {
+            if st.depth_after <= *fn_depth {
+                // Check this closing statement too, then leave the fn.
+                if let Some(tok) = ALLOC_TOKENS.iter().find(|t| st.text.contains(**t)) {
+                    push_unless_waived(
+                        out,
+                        file,
+                        Violation {
+                            rule: RULE_HOT_ALLOC,
+                            file: file.rel.clone(),
+                            line: st.line,
+                            message: format!(
+                                "allocating op {tok:?} inside zero-allocation kernel \
+                                 `{name}`; use the caller-provided workspace"
+                            ),
+                        },
+                    );
+                }
+                hot = None;
+                continue;
+            }
+            if let Some(tok) = ALLOC_TOKENS.iter().find(|t| st.text.contains(**t)) {
+                push_unless_waived(
+                    out,
+                    file,
+                    Violation {
+                        rule: RULE_HOT_ALLOC,
+                        file: file.rel.clone(),
+                        line: st.line,
+                        message: format!(
+                            "allocating op {tok:?} inside zero-allocation kernel \
+                             `{name}`; use the caller-provided workspace"
+                        ),
+                    },
+                );
+            }
+            continue;
+        }
+        if let Some(pos) = st.text.find("fn ") {
+            let after = &st.text[pos + 3..];
+            let name: String = after
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            let is_hot = name.ends_with("_into") || name == "step_pairs";
+            if is_hot && st.text.trim_end().ends_with('{') {
+                hot = Some((name, st.depth_before, st.line));
+            }
+        }
+    }
+}
+
+/// Rule 5: `.unwrap()`/`.expect(` in request/IO paths.
+fn rule_unwrap_in_request_path(file: &SourceFile, out: &mut Vec<Violation>) {
+    if !file.class.request_path {
+        return;
+    }
+    for (idx, l) in file.code.iter().enumerate() {
+        for tok in [".unwrap()", ".expect("] {
+            if l.contains(tok) {
+                push_unless_waived(
+                    out,
+                    file,
+                    Violation {
+                        rule: RULE_UNWRAP,
+                        file: file.rel.clone(),
+                        line: idx + 1,
+                        message: format!(
+                            "{tok} in a request/IO path: return a readable error naming \
+                             the job or file (anyhow::Context), never panic on external \
+                             input"
+                        ),
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// Run every rule over one parsed file.
+pub fn lint_file(file: &SourceFile) -> Vec<Violation> {
+    let mut out = Vec::new();
+    rule_map_iteration(file, &mut out);
+    rule_ambient_entropy(file, &mut out);
+    rule_lock_guard_spans_energy(file, &mut out);
+    rule_alloc_in_hot_path(file, &mut out);
+    rule_unwrap_in_request_path(file, &mut out);
+    out.sort_by_key(|v| v.line);
+    out
+}
+
+/// Walk `src_root` (the `rust/src` tree) and lint every `.rs` file.
+/// Returns `(files_checked, violations)`.
+pub fn lint_tree(src_root: &Path) -> std::io::Result<(usize, Vec<Violation>)> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    for rel in &files {
+        let text = std::fs::read_to_string(src_root.join(rel))?;
+        let file = SourceFile::parse(&rel.replace('\\', "/"), &text);
+        violations.extend(lint_file(&file));
+    }
+    Ok((files.len(), violations))
+}
+
+fn collect_rs_files(
+    root: &Path,
+    dir: &Path,
+    out: &mut Vec<String>,
+) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            if let Ok(rel) = path.strip_prefix(root) {
+                out.push(rel.to_string_lossy().replace('\\', "/"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_as(rel: &str, src: &str) -> Vec<Violation> {
+        lint_file(&SourceFile::parse(rel, src))
+    }
+
+    #[test]
+    fn sanitizer_blanks_comments_strings_chars() {
+        let src = r##"let a = "has { braces }"; // and a } comment
+let b = '{'; let c = b'}'; let d = '\n';
+/* multi {
+   line */ let e = r#"raw } string"#;
+let f = &'static str_thing; let life = 'a;"##;
+        let s = sanitize(src);
+        assert_eq!(s.lines().count(), src.lines().count(), "line-preserving");
+        let depth: i32 = s
+            .chars()
+            .map(|c| match c {
+                '{' => 1,
+                '}' => -1,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(depth, 0, "all braces in text were blanked: {s}");
+        assert!(s.contains("let b ="));
+        assert!(!s.contains("comment"));
+        assert!(!s.contains("raw"));
+        assert!(s.contains("'static"), "lifetimes survive");
+    }
+
+    #[test]
+    fn test_modules_are_stripped() {
+        let src = "fn real() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\n";
+        let mut lines: Vec<String> = sanitize(src).lines().map(str::to_string).collect();
+        strip_test_modules(&mut lines);
+        let joined = lines.join("\n");
+        assert!(joined.contains("fn real"));
+        assert!(!joined.contains("fn t()"));
+    }
+
+    #[test]
+    fn map_iteration_rule_fires_only_in_serialization_paths() {
+        let bad = "use std::collections::HashMap;\nfn ser(m: &HashMap<u32, f64>) {}\n";
+        let v = lint_as("coordinator/checkpoint.rs", bad);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|v| v.rule == RULE_MAP_ITER));
+        assert_eq!(v[0].line, 1);
+        // Same text elsewhere is fine.
+        assert!(lint_as("envs/mod.rs", bad).is_empty());
+        // BTreeMap is the sanctioned container.
+        assert!(lint_as("report/tables.rs", "use std::collections::BTreeMap;\n").is_empty());
+    }
+
+    #[test]
+    fn entropy_rule_fires_outside_rng_home() {
+        for tok in super::ENTROPY_TOKENS {
+            let src = format!("fn f() {{ let t = {tok}(); }}\n");
+            let v = lint_as("energy/mod.rs", &src);
+            assert_eq!(v.len(), 1, "{tok} should fire: {v:?}");
+            assert_eq!(v[0].rule, RULE_ENTROPY);
+            assert!(
+                lint_as("util/rng.rs", &src).is_empty(),
+                "{tok} is allowed in util/rng.rs"
+            );
+        }
+        // Instant::now stays allowed everywhere.
+        assert!(lint_as("util/logging.rs", "let t = Instant::now();\n").is_empty());
+        // Mentions in comments/strings don't fire.
+        assert!(lint_as("energy/mod.rs", "// uses SystemTime::now\n").is_empty());
+    }
+
+    #[test]
+    fn lock_span_rule_catches_guard_held_across_energy_call() {
+        let bad = "fn f(&self) {\n    let mut shard = self.shards[0].lock();\n    let c = layer_cost(layer, df, &m, 5, 0.5, cfg);\n    shard.insert(c);\n}\n";
+        let v = lint_as("energy/cache.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, RULE_LOCK_SPAN);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn lock_span_rule_catches_inline_compute_under_lock() {
+        let bad =
+            "fn f(&self) {\n    self.shards[0].lock().insert(k, layer_cost(l, df, &m, 5, 0.5, cfg));\n}\n";
+        let v = lint_as("energy/cache.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, RULE_LOCK_SPAN);
+    }
+
+    #[test]
+    fn lock_span_rule_allows_check_unlock_compute_relock() {
+        let good = "fn f(&self) {\n    {\n        let mut shard = self.shards[0].lock();\n        if let Some(c) = shard.costs.get(&k) {\n            return c.clone();\n        }\n    }\n    let fresh = layer_cost(layer, df, &m, 5, 0.5, cfg);\n    let mut shard = self.shards[0].lock();\n    shard.costs.insert(k, fresh);\n}\n";
+        assert!(lint_as("energy/cache.rs", good).is_empty());
+    }
+
+    #[test]
+    fn lock_span_rule_honors_explicit_drop() {
+        let good = "fn f(&self) {\n    let g = self.m.lock();\n    let hit = g.contains(&k);\n    drop(g);\n    let fresh = layer_cost(layer, df, &m, 5, 0.5, cfg);\n}\n";
+        assert!(lint_as("energy/cache.rs", good).is_empty());
+    }
+
+    #[test]
+    fn hot_path_rule_fires_in_into_kernels_only() {
+        let bad = "pub fn matmul_into(out: &mut [f32]) {\n    let tmp = vec![0.0; 4];\n}\n";
+        let v = lint_as("tensor/mod.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, RULE_HOT_ALLOC);
+        // The same allocation in a non-hot fn of the same file is fine.
+        let good = "pub fn matmul(a: &[f32]) -> Vec<f32> {\n    let tmp = vec![0.0; 4];\n    tmp\n}\n";
+        assert!(lint_as("tensor/mod.rs", good).is_empty());
+        // And `_into` fns outside the hot-path modules are not covered.
+        assert!(lint_as("report/figures.rs", bad).iter().all(|v| v.rule != RULE_HOT_ALLOC));
+    }
+
+    #[test]
+    fn hot_path_rule_covers_step_pairs() {
+        let bad = "pub fn step_pairs(&mut self) {\n    let names: Vec<String> = xs.iter().map(|x| x.to_string()).collect();\n}\n";
+        let v = lint_as("nn/adam.rs", bad);
+        assert!(!v.is_empty());
+        assert!(v.iter().all(|v| v.rule == RULE_HOT_ALLOC));
+    }
+
+    #[test]
+    fn unwrap_rule_fires_in_request_paths_outside_tests() {
+        let bad = "fn handle(&self) {\n    let j = parse(text).unwrap();\n    let x = field.expect(\"missing\");\n}\n#[cfg(test)]\nmod tests {\n    fn t() { parse(\"x\").unwrap(); }\n}\n";
+        let v = lint_as("coordinator/service.rs", bad);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|v| v.rule == RULE_UNWRAP));
+        // unwrap_or / unwrap_or_else are not unwrap.
+        let good = "fn handle(&self) { let x = o.unwrap_or(4); let y = o.unwrap_or_else(f); }\n";
+        assert!(lint_as("coordinator/service.rs", good).is_empty());
+        // Non-request paths may unwrap (invariant panics are fine there).
+        assert!(lint_as("tensor/mod.rs", "fn f() { o.unwrap(); }\n").is_empty());
+    }
+
+    #[test]
+    fn waiver_comment_suppresses_one_line() {
+        let waived = "fn handle(&self) {\n    // edc-lints: allow(unwrap-in-request-path)\n    let j = parse(text).unwrap();\n    let k = parse(text).unwrap();\n}\n";
+        let v = lint_as("coordinator/service.rs", waived);
+        assert_eq!(v.len(), 1, "only the unwaived line fires: {v:?}");
+        assert_eq!(v[0].line, 4);
+    }
+
+    /// The real tree must be clean — this is the same gate as
+    /// `cargo run -p edc-lints`, embedded as a test so `cargo test -p
+    /// edc-lints` alone proves the repo passes.
+    #[test]
+    fn repo_is_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+        let (files, violations) = lint_tree(&src).expect("walk rust/src");
+        assert!(files >= 30, "expected the real tree, found {files} files");
+        assert!(
+            violations.is_empty(),
+            "repo violations:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

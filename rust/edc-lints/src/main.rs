@@ -1,0 +1,37 @@
+//! `cargo run -p edc-lints [SRC_DIR]` — walk the crate's `src/` tree
+//! (or an explicit directory) and enforce the repo invariants described
+//! in the library docs. Exit code 0 when clean, 1 with one line per
+//! violation otherwise — CI's `analysis` job runs this as a hard gate.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let src = std::env::args().nth(1).map_or_else(
+        || PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src"),
+        PathBuf::from,
+    );
+    let (files, violations) = match edc_lints::lint_tree(&src) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("edc-lints: cannot walk {}: {e}", src.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if violations.is_empty() {
+        println!(
+            "edc-lints: OK — {files} files clean under {} rules",
+            edc_lints::ALL_RULES.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    eprintln!(
+        "edc-lints: {} violation(s) in {files} files; waive a deliberate exception with \
+         `// edc-lints: allow(<rule>)` on or above the line",
+        violations.len()
+    );
+    ExitCode::FAILURE
+}

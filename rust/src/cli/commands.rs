@@ -285,7 +285,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         "seed", "dataflow", "episodes", "E improv.", "best acc"
     );
     for (i, o) in res.outcomes.iter().enumerate() {
-        let acc = o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN);
+        let acc = o.best.as_ref().map_or(f64::NAN, |b| b.accuracy);
         println!(
             "{:<6} {:<8} {:>10} {:>11.2}x {:>10.4}",
             i,
@@ -354,7 +354,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "network", "dataflow", "E improv.", "A improv.", "best acc"
     );
     for o in &outcomes {
-        let acc = o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN);
+        let acc = o.best.as_ref().map_or(f64::NAN, |b| b.accuracy);
         println!(
             "{:<16} {:<8} {:>11.2}x {:>11.2}x {:>10.4}",
             o.network,

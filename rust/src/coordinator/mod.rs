@@ -81,17 +81,11 @@ pub struct SearchOutcome {
 impl SearchOutcome {
     /// Energy-efficiency improvement factor (the paper's headline "NX").
     pub fn energy_improvement(&self) -> f64 {
-        self.best
-            .as_ref()
-            .map(|b| self.start_energy / b.energy)
-            .unwrap_or(1.0)
+        self.best.as_ref().map_or(1.0, |b| self.start_energy / b.energy)
     }
 
     pub fn area_improvement(&self) -> f64 {
-        self.best
-            .as_ref()
-            .map(|b| self.start_area / b.area)
-            .unwrap_or(1.0)
+        self.best.as_ref().map_or(1.0, |b| self.start_area / b.area)
     }
 }
 
@@ -142,7 +136,7 @@ impl Coordinator {
                     "episode {ep}: steps={} reward={:.3} best_energy={:.3e}",
                     rec.steps,
                     rec.total_reward,
-                    rec.best.as_ref().map(|b| b.energy).unwrap_or(f64::NAN),
+                    rec.best.as_ref().map_or(f64::NAN, |b| b.energy),
                 );
             }
             episodes.push(rec);
@@ -206,7 +200,7 @@ pub fn fold_best(episodes: &[EpisodeRecord]) -> Option<BestPoint> {
     let mut best: Option<BestPoint> = None;
     for rec in episodes {
         if let Some(b) = &rec.best {
-            if best.as_ref().map(|g| b.energy < g.energy).unwrap_or(true) {
+            if best.as_ref().map_or(true, |g| b.energy < g.energy) {
                 best = Some(b.clone());
             }
         }

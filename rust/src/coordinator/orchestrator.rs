@@ -56,7 +56,7 @@ use crate::util::pool::WorkPool;
 use crate::util::rng::seed_stream;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::cmp::Ordering;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
 /// Schema version written into orchestration snapshot files. v3 adds the
@@ -295,7 +295,7 @@ pub struct Orchestrator {
     /// the next run — or this one after a resume — can pre-populate its
     /// shared cache.
     cache_seed: Vec<CompressionState>,
-    cache_seed_keys: HashSet<Vec<SlotKey>>,
+    cache_seed_keys: BTreeSet<Vec<SlotKey>>,
 }
 
 struct ChunkJob {
@@ -395,7 +395,7 @@ impl Orchestrator {
             snapshot_path: None,
             shared_cache,
             cache_seed: Vec::new(),
-            cache_seed_keys: HashSet::new(),
+            cache_seed_keys: BTreeSet::new(),
         }
     }
 

@@ -68,17 +68,15 @@ use crate::envs::EnvConfig;
 use crate::model::zoo;
 use crate::report::{figures, tables};
 use crate::util::json::{self, Json};
-use crate::util::lock_ignore_poison;
 use crate::util::pool::{panic_message, WorkPool};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Name of the address-discovery file the daemon writes into its
@@ -436,9 +434,9 @@ struct ServiceInner {
 /// [`shutdown`](Service::shutdown)) has drained everything.
 pub struct Service {
     inner: Arc<ServiceInner>,
-    accept: Option<JoinHandle<()>>,
-    runners: Vec<JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    accept: Option<thread::JoinHandle<()>>,
+    runners: Vec<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
 }
 
 impl Service {
@@ -450,9 +448,11 @@ impl Service {
             .with_context(|| format!("creating snapshot dir {}", cfg.dir.display()))?;
         let listener = TcpListener::bind(("127.0.0.1", cfg.port))
             .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
-        let addr = listener.local_addr()?;
+        let addr = listener
+            .local_addr()
+            .context("reading the bound address of the serve listener")?;
         let workers = if cfg.workers == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            std::thread::available_parallelism().map_or(4, |n| n.get())
         } else {
             cfg.workers
         };
@@ -469,7 +469,12 @@ impl Service {
             caches: SharedCacheRegistry::new(),
             cfg,
         });
-        std::fs::write(inner.cfg.dir.join(ADDR_FILE), format!("{addr}\n"))?;
+        std::fs::write(inner.cfg.dir.join(ADDR_FILE), format!("{addr}\n")).with_context(|| {
+            format!(
+                "writing address file {}",
+                inner.cfg.dir.join(ADDR_FILE).display()
+            )
+        })?;
         // Always scan for existing job files — even without --resume-dir
         // the id counter must start past them, so a fresh submit can
         // never collide with (and silently resume) a previous daemon
@@ -478,14 +483,14 @@ impl Service {
         let runners = (0..inner.cfg.max_concurrent_jobs.max(1))
             .map(|_| {
                 let inner = Arc::clone(&inner);
-                std::thread::spawn(move || runner_loop(&inner))
+                thread::spawn(move || runner_loop(&inner))
             })
             .collect();
-        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let accept = {
             let inner = Arc::clone(&inner);
             let conns = Arc::clone(&conns);
-            std::thread::spawn(move || accept_loop(&inner, listener, &conns))
+            thread::spawn(move || accept_loop(&inner, listener, &conns))
         };
         Ok(Service {
             inner,
@@ -519,7 +524,7 @@ impl Service {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let conns = std::mem::take(&mut *lock_ignore_poison(&self.conns));
+        let conns = std::mem::take(&mut *self.conns.lock());
         for h in conns {
             let _ = h.join();
         }
@@ -591,7 +596,7 @@ impl ServiceInner {
             JobSpec::Sweep(_) => format!("job_{id}.sweep.json"),
         };
         let (id, snapshot) = {
-            let mut reg = lock_ignore_poison(&self.registry);
+            let mut reg = self.registry.lock();
             // Checked *inside* the registry critical section: the drain in
             // `begin_shutdown` sets the flag before taking this lock, so a
             // submit either lands in `pending` before the drain reads it
@@ -630,7 +635,7 @@ impl ServiceInner {
     }
 
     fn handle_status(&self, req: &Json) -> Result<Json> {
-        let reg = lock_ignore_poison(&self.registry);
+        let reg = self.registry.lock();
         if req.get("job").is_some() {
             let id = field_u64(req, "job", 0)?;
             let e = reg.jobs.get(&id).ok_or_else(|| anyhow!("no such job {id}"))?;
@@ -673,7 +678,7 @@ impl ServiceInner {
     fn handle_result(&self, req: &Json) -> Result<Json> {
         ensure!(req.get("job").is_some(), "result wants a 'job' field");
         let id = field_u64(req, "job", 0)?;
-        let reg = lock_ignore_poison(&self.registry);
+        let reg = self.registry.lock();
         let e = reg.jobs.get(&id).ok_or_else(|| anyhow!("no such job {id}"))?;
         match e.state {
             JobState::Done => {
@@ -713,7 +718,7 @@ impl ServiceInner {
     fn handle_cancel(&self, req: &Json) -> Result<Json> {
         ensure!(req.get("job").is_some(), "cancel wants a 'job' field");
         let id = field_u64(req, "job", 0)?;
-        let mut guard = lock_ignore_poison(&self.registry);
+        let mut guard = self.registry.lock();
         // Reborrow the guard once so `jobs` and `pending` split cleanly.
         let reg = &mut *guard;
         let e = reg
@@ -769,7 +774,7 @@ impl ServiceInner {
     /// drained to disk, running jobs still finishing their round).
     fn begin_shutdown(&self) -> (usize, usize) {
         if self.shutdown.swap(true, Ordering::SeqCst) {
-            let reg = lock_ignore_poison(&self.registry);
+            let reg = self.registry.lock();
             let running = reg.jobs.values().filter(|e| e.state == JobState::Running).count();
             return (reg.pending.len(), running);
         }
@@ -779,7 +784,7 @@ impl ServiceInner {
         // then do the (potentially slow) persistence outside it — status
         // and cancel stay responsive during the drain.
         let (to_persist, running) = {
-            let reg = lock_ignore_poison(&self.registry);
+            let reg = self.registry.lock();
             let running = reg.jobs.values().filter(|e| e.state == JobState::Running).count();
             let specs: Vec<(u64, JobSpec, PathBuf)> = reg
                 .pending
@@ -802,7 +807,7 @@ impl ServiceInner {
             }
         }
         if !failed.is_empty() {
-            let mut reg = lock_ignore_poison(&self.registry);
+            let mut reg = self.registry.lock();
             for (id, msg) in failed {
                 if let Some(e) = reg.jobs.get_mut(&id) {
                     e.state = JobState::Failed;
@@ -829,7 +834,8 @@ impl ServiceInner {
         for entry in std::fs::read_dir(&self.cfg.dir)
             .with_context(|| format!("scanning {}", self.cfg.dir.display()))?
         {
-            let entry = entry?;
+            let entry =
+                entry.with_context(|| format!("reading an entry of {}", self.cfg.dir.display()))?;
             let name = entry.file_name().to_string_lossy().into_owned();
             let Some(rest) = name.strip_prefix("job_") else { continue };
             if let Some(id) = rest.split('.').next().and_then(|d| d.parse::<u64>().ok()) {
@@ -842,7 +848,7 @@ impl ServiceInner {
             }
         }
         found.sort_by_key(|f| f.0);
-        let mut reg = lock_ignore_poison(&self.registry);
+        let mut reg = self.registry.lock();
         reg.next_id = reg.next_id.max(max_id + 1);
         if !enqueue {
             return Ok(());
@@ -879,7 +885,7 @@ impl ServiceInner {
 
     fn run_job(&self, id: u64) {
         let (spec, cancel, snapshot) = {
-            let mut reg = lock_ignore_poison(&self.registry);
+            let mut reg = self.registry.lock();
             let Some(e) = reg.jobs.get_mut(&id) else { return };
             if e.state != JobState::Queued {
                 return;
@@ -891,7 +897,7 @@ impl ServiceInner {
             JobSpec::Search(s) => self.run_search_job(id, s, &cancel, &snapshot),
             JobSpec::Sweep(s) => self.run_sweep_job(id, s, &cancel, &snapshot),
         }));
-        let mut reg = lock_ignore_poison(&self.registry);
+        let mut reg = self.registry.lock();
         let Some(e) = reg.jobs.get_mut(&id) else { return };
         match verdict {
             Ok(Ok(Verdict::Done(payload))) => {
@@ -990,7 +996,7 @@ impl ServiceInner {
         let outs = sweep::run_surrogate_sweep_on(&sspec, &self.pool, Some(&self.caches))
             .map_err(|e| anyhow!("{e}"))?;
         {
-            let mut reg = lock_ignore_poison(&self.registry);
+            let mut reg = self.registry.lock();
             if let Some(e) = reg.jobs.get_mut(&id) {
                 e.progress.episodes_done = e.progress.episodes_total;
             }
@@ -1015,7 +1021,7 @@ impl ServiceInner {
             Some(c) => (c.hits(), c.misses()),
             None => (0, 0),
         };
-        let mut reg = lock_ignore_poison(&self.registry);
+        let mut reg = self.registry.lock();
         if let Some(e) = reg.jobs.get_mut(&id) {
             e.progress.rounds = max_done.div_ceil(chunk);
             e.progress.episodes_done = done;
@@ -1061,7 +1067,8 @@ fn shelve_cancelled_snapshot(e: &mut JobEntry) {
 }
 
 fn read_job_spec(path: &Path, is_sweep: bool) -> Result<JobSpec> {
-    let text = std::fs::read_to_string(path)?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading job spec {}", path.display()))?;
     let j = json::parse(&text)
         .map_err(|e| anyhow!("not valid JSON (truncated or corrupt file?): {e}"))?;
     if is_sweep {
@@ -1113,7 +1120,7 @@ fn render_search_result(res: &OrchestrationResult, snap: &Path) -> JobResultPayl
         "seed", "dataflow", "episodes", "E improv.", "best acc"
     );
     for (i, o) in res.outcomes.iter().enumerate() {
-        let acc = o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN);
+        let acc = o.best.as_ref().map_or(f64::NAN, |b| b.accuracy);
         let _ = writeln!(
             rendered,
             "{:<6} {:<8} {:>10} {:>11.2}x {:>10.4}",
@@ -1142,7 +1149,7 @@ fn render_search_result(res: &OrchestrationResult, snap: &Path) -> JobResultPayl
                 .set("area_improvement", Json::Num(o.area_improvement()))
                 .set(
                     "best_accuracy",
-                    Json::Num(o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN)),
+                    Json::Num(o.best.as_ref().map_or(f64::NAN, |b| b.accuracy)),
                 );
             j
         })
@@ -1169,7 +1176,7 @@ fn render_sweep_result(outs: &[SearchOutcome]) -> JobResultPayload {
     );
     let mut rows = Vec::with_capacity(outs.len());
     for o in outs {
-        let acc = o.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN);
+        let acc = o.best.as_ref().map_or(f64::NAN, |b| b.accuracy);
         let _ = writeln!(
             rendered,
             "{:<16} {:<8} {:>11.2}x {:>11.2}x {:>10.4}",
@@ -1197,7 +1204,7 @@ fn render_sweep_result(outs: &[SearchOutcome]) -> JobResultPayload {
 fn runner_loop(inner: &Arc<ServiceInner>) {
     loop {
         let id = {
-            let mut reg = lock_ignore_poison(&inner.registry);
+            let mut reg = inner.registry.lock();
             loop {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -1205,7 +1212,7 @@ fn runner_loop(inner: &Arc<ServiceInner>) {
                 if let Some(id) = reg.pending.pop_front() {
                     break id;
                 }
-                reg = inner.scheduler.wait(reg).unwrap_or_else(|e| e.into_inner());
+                reg = inner.scheduler.wait(reg);
             }
         };
         inner.run_job(id);
@@ -1215,7 +1222,7 @@ fn runner_loop(inner: &Arc<ServiceInner>) {
 fn accept_loop(
     inner: &Arc<ServiceInner>,
     listener: TcpListener,
-    conns: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    conns: &Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
 ) {
     for stream in listener.incoming() {
         if inner.shutdown.load(Ordering::SeqCst) {
@@ -1223,8 +1230,8 @@ fn accept_loop(
         }
         let Ok(stream) = stream else { continue };
         let inner = Arc::clone(inner);
-        let h = std::thread::spawn(move || serve_conn(&inner, stream));
-        let mut conns = lock_ignore_poison(conns);
+        let h = thread::spawn(move || serve_conn(&inner, stream));
+        let mut conns = conns.lock();
         // Reap finished connection handlers so a long-lived daemon's
         // handle list stays proportional to *live* connections, not to
         // every connection ever accepted.

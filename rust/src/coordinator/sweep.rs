@@ -159,9 +159,7 @@ impl std::error::Error for SweepError {}
 
 /// Worker count for `n` jobs: bounded by the machine's parallelism.
 pub fn worker_count(jobs: usize) -> usize {
-    let hw = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4);
+    let hw = std::thread::available_parallelism().map_or(4, |n| n.get());
     hw.min(jobs).max(1)
 }
 
@@ -436,7 +434,7 @@ mod tests {
     fn worker_count_is_bounded() {
         assert_eq!(worker_count(0), 1);
         assert_eq!(worker_count(1), 1);
-        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let hw = std::thread::available_parallelism().map_or(4, |n| n.get());
         assert!(worker_count(1000) <= hw);
     }
 }

@@ -57,14 +57,13 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::{Arc, Mutex};
 
 use super::constants::EnergyConfig;
 use super::{accumulate_area, layer_cost, total_area_of, CostReport, LayerCost};
 use crate::compress::CompressionState;
 use crate::dataflow::{spatial, Dataflow};
 use crate::model::Network;
-use crate::util::lock_ignore_poison;
+use crate::util::sync::{Arc, Mutex};
 
 /// Number of buckets of the pruning-ratio grid (see module docs).
 pub const P_BUCKETS: u32 = 128;
@@ -104,7 +103,7 @@ pub fn snap_p(p: f64) -> f64 {
 
 /// The bucketed per-slot compression key (see module docs for why each
 /// half is a bucket rather than the raw continuous value).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct SlotKey {
     /// Rounded quantization depth, bits.
     pub bits: u32,
@@ -353,18 +352,12 @@ impl SharedCostCache {
     /// race, which both sides resolve to the same value).
     pub fn mapping(&self, net: &Network, slot: usize, df: Dataflow) -> spatial::Mapping {
         let si = Self::shard_index(&(slot as u32, df));
-        if let Some(m) = lock_ignore_poison(&self.inner.shards[si])
-            .mappings
-            .get(&(slot as u32, df))
-        {
+        if let Some(m) = self.inner.shards[si].lock().mappings.get(&(slot as u32, df)) {
             return *m;
         }
         let layer = &net.layers[self.inner.compute[slot]];
         let fresh = spatial::map_layer(layer, df, self.inner.pe_cap);
-        *lock_ignore_poison(&self.inner.shards[si])
-            .mappings
-            .entry((slot as u32, df))
-            .or_insert(fresh)
+        *self.inner.shards[si].lock().mappings.entry((slot as u32, df)).or_insert(fresh)
     }
 
     /// The memoized cost of slot `slot` under `df` at the bucketed
@@ -394,7 +387,7 @@ impl SharedCostCache {
         let full_key = (slot as u32, df, key);
         let si = Self::shard_index(&full_key);
         {
-            let mut shard = lock_ignore_poison(&self.inner.shards[si]);
+            let mut shard = self.inner.shards[si].lock();
             if let Some(c) = shard.costs.get(&full_key) {
                 shard.hits += 1;
                 return Arc::clone(c);
@@ -412,9 +405,18 @@ impl SharedCostCache {
             p_from_bucket(key.p_bucket),
             cfg,
         ));
-        let mut shard = lock_ignore_poison(&self.inner.shards[si]);
+        let mut shard = self.inner.shards[si].lock();
         shard.misses += 1;
         Arc::clone(shard.costs.entry(full_key).or_insert(fresh))
+    }
+
+    /// Deliberately poison the shard that serves `(slot, df, key)`.
+    /// Test-only hook for the poison-recovery coverage
+    /// (`tests/failure_injection.rs`, loom models).
+    #[doc(hidden)]
+    pub fn poison_shard_for_test(&self, slot: usize, df: Dataflow, key: SlotKey) {
+        let si = Self::shard_index(&(slot as u32, df, key));
+        self.inner.shards[si].poison_for_test();
     }
 
     /// Pre-populate every `(slot, dataflow)` cost of `state` so a search
@@ -447,18 +449,18 @@ impl SharedCostCache {
     /// Fleet-wide hit count (sums the stripes; a point-in-time snapshot
     /// under concurrency).
     pub fn hits(&self) -> u64 {
-        self.inner.shards.iter().map(|s| lock_ignore_poison(s).hits).sum()
+        self.inner.shards.iter().map(|s| s.lock().hits).sum()
     }
 
     /// Fleet-wide miss count (each computed entry; racing double-computes
     /// of the same key each count).
     pub fn misses(&self) -> u64 {
-        self.inner.shards.iter().map(|s| lock_ignore_poison(s).misses).sum()
+        self.inner.shards.iter().map(|s| s.lock().misses).sum()
     }
 
     /// Number of distinct cached layer costs across all stripes.
     pub fn len(&self) -> usize {
-        self.inner.shards.iter().map(|s| lock_ignore_poison(s).costs.len()).sum()
+        self.inner.shards.iter().map(|s| s.lock().costs.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -525,7 +527,8 @@ impl SharedCacheRegistry {
     /// network receives a handle on the same storage.
     pub fn for_network(&self, net: &Network, cfg: &EnergyConfig) -> SharedCostCache {
         let key = (network_fingerprint(net), config_fingerprint(cfg));
-        lock_ignore_poison(&self.inner)
+        self.inner
+            .lock()
             .entry(key)
             .or_insert_with(|| SharedCostCache::new(net, cfg))
             .clone()
@@ -533,7 +536,7 @@ impl SharedCacheRegistry {
 
     /// Number of distinct `(network, config)` caches registered.
     pub fn len(&self) -> usize {
-        lock_ignore_poison(&self.inner).len()
+        self.inner.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -543,7 +546,9 @@ impl SharedCacheRegistry {
     /// Per-cache statistics, sorted by network name for stable output
     /// (the `edc serve` status report).
     pub fn stats(&self) -> Vec<CacheStats> {
-        let mut out: Vec<CacheStats> = lock_ignore_poison(&self.inner)
+        let mut out: Vec<CacheStats> = self
+            .inner
+            .lock()
             .values()
             .map(|c| CacheStats {
                 network: c.network_name().to_string(),

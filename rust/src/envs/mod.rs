@@ -329,7 +329,7 @@ impl Env for CompressionEnv {
 
         // Track the best admissible point of the episode.
         let admissible = acc >= self.accuracy_floor();
-        if admissible && self.best.as_ref().map(|b| energy < b.energy).unwrap_or(true) {
+        if admissible && self.best.as_ref().map_or(true, |b| energy < b.energy) {
             self.best = Some(BestPoint {
                 state: self.state.clone(),
                 energy,

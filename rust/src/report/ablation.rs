@@ -41,7 +41,7 @@ fn run_one(lambda: f64, gamma: f64, episodes: usize, seed: u64) -> (f64, f64) {
     let out = Coordinator::new(env, cfg).run();
     (
         out.energy_improvement(),
-        out.best.as_ref().map(|b| b.accuracy).unwrap_or(f64::NAN),
+        out.best.as_ref().map_or(f64::NAN, |b| b.accuracy),
     )
 }
 

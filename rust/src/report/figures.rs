@@ -133,8 +133,7 @@ pub fn fig5(episodes: usize, seed: u64) -> (Vec<Table>, Vec<String>) {
             let (be, ba) = out
                 .best
                 .as_ref()
-                .map(|b| (b.energy, b.accuracy))
-                .unwrap_or((out.start_energy, f64::NAN));
+                .map_or((out.start_energy, f64::NAN), |b| (b.energy, b.accuracy));
             t.row(vec![
                 out.dataflow.clone(),
                 format!("{:.3}", out.start_energy * 1e6),
@@ -151,9 +150,9 @@ pub fn fig5(episodes: usize, seed: u64) -> (Vec<Table>, Vec<String>) {
                     .enumerate()
                 {
                     rows.push(vec![
-                        Dataflow::parse(&out.dataflow)
-                            .map(|d| Dataflow::paper_four().iter().position(|x| *x == d).unwrap_or(99))
-                            .unwrap_or(99) as f64,
+                        Dataflow::parse(&out.dataflow).map_or(99, |d| {
+                            Dataflow::paper_four().iter().position(|x| *x == d).unwrap_or(99)
+                        }) as f64,
                         ep.episode as f64,
                         si as f64,
                         e * 1e6,

@@ -11,6 +11,7 @@ pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Format a float with engineering-style precision used across reports.
 pub fn fmt_sig(v: f64, digits: usize) -> String {
@@ -20,16 +21,6 @@ pub fn fmt_sig(v: f64, digits: usize) -> String {
     let mag = v.abs().log10().floor() as i32;
     let dec = (digits as i32 - 1 - mag).max(0) as usize;
     format!("{:.*}", dec.min(6), v)
-}
-
-/// Lock a mutex, recovering the guard if a previous holder panicked.
-///
-/// Only sound where the protected data's invariants hold at every panic
-/// point — pure memo caches, write-once result slots, pop-only queues.
-/// For those, poisoning is a taint flag with no information: propagating
-/// it would escalate one contained worker panic into a process abort.
-pub fn lock_ignore_poison<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Clamp helper for f64 (std's `clamp` panics on NaN bounds; ours is total).
@@ -61,14 +52,4 @@ mod tests {
         assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
     }
 
-    #[test]
-    fn lock_ignore_poison_recovers_the_data() {
-        let m = std::sync::Mutex::new(7);
-        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let _guard = m.lock().unwrap();
-            panic!("poison the mutex");
-        }));
-        assert!(m.is_poisoned());
-        assert_eq!(*lock_ignore_poison(&m), 7);
-    }
 }

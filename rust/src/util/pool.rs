@@ -15,9 +15,14 @@
 //!   results;
 //! - a job that panics yields `Err(panic message)` in its slot while the
 //!   other jobs keep running (workers survive task panics);
-//! - mutex/condvar poisoning is recovered (`lock_ignore_poison`): the
-//!   queue is pop-only and each result slot is written once, so the
-//!   protected invariants hold at every panic point.
+//! - mutex/condvar poisoning is recovered (built into
+//!   [`util::sync`](crate::util::sync)'s wrappers): the queue is pop-only
+//!   and each result slot is written once, so the protected invariants
+//!   hold at every panic point.
+//!
+//! All synchronization goes through [`crate::util::sync`], so under
+//! `--cfg loom` the pool's enqueue/drain/shutdown protocol is explored by
+//! `rust/tests/loom_models.rs`.
 //!
 //! One rule: **never call `run_batch` from inside a pool task.** The
 //! caller blocks until its whole batch drains, so a task that submits
@@ -25,12 +30,10 @@
 //! callers are always dedicated driver threads (the CLI main thread, or
 //! an `edc serve` job runner).
 
-use crate::util::lock_ignore_poison;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
@@ -46,12 +49,12 @@ struct PoolShared {
 /// Render a panic payload as a readable message (shared with the sweep's
 /// failure reports).
 pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "worker panicked (non-string payload)".to_string()
+    match payload.downcast::<&str>() {
+        Ok(s) => (*s).to_string(),
+        Err(payload) => match payload.downcast::<String>() {
+            Ok(s) => *s,
+            Err(_) => "worker panicked (non-string payload)".to_string(),
+        },
     }
 }
 
@@ -62,7 +65,7 @@ pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 /// still completes), then exit and are joined.
 pub struct WorkPool {
     shared: Arc<PoolShared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl WorkPool {
@@ -76,7 +79,7 @@ impl WorkPool {
         let workers = (0..size.max(1))
             .map(|_| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&shared))
+                thread::spawn(move || worker_loop(&shared))
             })
             .collect();
         WorkPool { shared, workers }
@@ -84,7 +87,7 @@ impl WorkPool {
 
     /// A pool sized to the machine (`available_parallelism`, min 1).
     pub fn machine_sized() -> WorkPool {
-        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let hw = std::thread::available_parallelism().map_or(4, |n| n.get());
         WorkPool::new(hw)
     }
 
@@ -97,8 +100,16 @@ impl WorkPool {
     /// worker survives); use [`run_batch`](WorkPool::run_batch) to
     /// observe results or failures.
     pub fn execute(&self, task: Task) {
-        lock_ignore_poison(&self.shared.queue).push_back(task);
+        self.shared.queue.lock().push_back(task);
         self.shared.available.notify_one();
+    }
+
+    /// Deliberately poison the task-queue mutex. Test-only hook for the
+    /// poison-recovery coverage (`tests/failure_injection.rs`, loom
+    /// models).
+    #[doc(hidden)]
+    pub fn poison_queue_for_test(&self) {
+        self.shared.queue.poison_for_test();
     }
 
     /// Run `jobs` through the pool and block until all of them finish,
@@ -128,9 +139,9 @@ impl WorkPool {
             let remaining = Arc::clone(&remaining);
             self.execute(Box::new(move || {
                 let outcome = catch_unwind(AssertUnwindSafe(|| f(job))).map_err(panic_message);
-                *lock_ignore_poison(&slots[idx]) = Some(outcome);
+                *slots[idx].lock() = Some(outcome);
                 let (count, done) = &*remaining;
-                let mut left = lock_ignore_poison(count);
+                let mut left = count.lock();
                 *left -= 1;
                 if *left == 0 {
                     done.notify_all();
@@ -138,15 +149,15 @@ impl WorkPool {
             }));
         }
         let (count, done) = &*remaining;
-        let mut left = lock_ignore_poison(count);
+        let mut left = count.lock();
         while *left > 0 {
-            left = done.wait(left).unwrap_or_else(|e| e.into_inner());
+            left = done.wait(left);
         }
         drop(left);
         slots
             .iter()
             .map(|slot| {
-                lock_ignore_poison(slot).take().unwrap_or_else(|| {
+                slot.lock().take().unwrap_or_else(|| {
                     Err("worker pool lost this job's result (worker died before writing it)"
                         .to_string())
                 })
@@ -168,7 +179,7 @@ impl Drop for WorkPool {
 fn worker_loop(shared: &PoolShared) {
     loop {
         let task = {
-            let mut q = lock_ignore_poison(&shared.queue);
+            let mut q = shared.queue.lock();
             loop {
                 if let Some(t) = q.pop_front() {
                     break Some(t);
@@ -176,7 +187,7 @@ fn worker_loop(shared: &PoolShared) {
                 if shared.stop.load(Ordering::SeqCst) {
                     break None;
                 }
-                q = shared.available.wait(q).unwrap_or_else(|e| e.into_inner());
+                q = shared.available.wait(q);
             }
         };
         let Some(task) = task else { break };

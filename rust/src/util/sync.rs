@@ -1,0 +1,179 @@
+//! Synchronization primitives behind one shim: `std::sync` normally,
+//! `loom` under `--cfg loom`.
+//!
+//! Every concurrent structure in this crate — `util::pool::WorkPool`,
+//! `energy::cache::SharedCostCache`/`SharedCacheRegistry`, and the
+//! `coordinator::service` job registry — builds on these types instead of
+//! `std::sync` directly. That buys two things:
+//!
+//! 1. **Model checking.** Compiling with `RUSTFLAGS="--cfg loom"` swaps
+//!    the backend for loom's instrumented primitives, so
+//!    `rust/tests/loom_models.rs` can explore thread interleavings of the
+//!    real queue/shard/registry protocols rather than a transliteration.
+//! 2. **Poison recovery callers can't forget.** [`Mutex::lock`] and
+//!    [`Condvar::wait`] recover the guard from a poisoned lock instead of
+//!    returning `Result` (previously a free function,
+//!    `util::lock_ignore_poison`, that every call site had to remember).
+//!    This is only sound where the protected data's invariants hold at
+//!    every panic point — pure memo caches, write-once result slots,
+//!    pop-only queues, state-machine registries whose transitions are
+//!    single assignments. Every `Mutex` in this crate is one of those by
+//!    construction; a structure needing rollback-on-panic semantics
+//!    should use `std::sync::Mutex` directly and handle `PoisonError`.
+//!
+//! The wrapper is intentionally thin: no timeouts, no `RwLock`, no
+//! `try_lock` — the crate's lock discipline (never hold a guard across
+//! an `energy::` cost computation; see `edc-lints`) keeps critical
+//! sections short enough that blocking `lock()` is always right.
+
+#[cfg(loom)]
+use loom::sync as backend;
+#[cfg(not(loom))]
+use std::sync as backend;
+
+pub use self::backend::{Arc, MutexGuard};
+
+/// Atomics from the active backend (`std::sync::atomic` or `loom`'s).
+pub mod atomic {
+    #[cfg(loom)]
+    pub use loom::sync::atomic::*;
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::*;
+}
+
+/// Thread spawning from the active backend, so loom models see spawns as
+/// schedule points. Re-exports enough of `std::thread` that callers can
+/// use `sync::thread::` uniformly.
+#[cfg(loom)]
+pub use loom::thread;
+#[cfg(not(loom))]
+pub use std::thread;
+
+/// A mutex whose `lock()` recovers from poisoning.
+///
+/// See the module docs for when that is sound (every use in this crate)
+/// and when it is not.
+pub struct Mutex<T> {
+    inner: backend::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Mutex<T> {
+        Mutex { inner: backend::Mutex::new(value) }
+    }
+
+    /// Lock, recovering the guard if a previous holder panicked.
+    ///
+    /// Poisoning is a taint flag with no information for the invariants
+    /// protected here; propagating it would escalate one contained
+    /// worker panic into a process abort.
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Whether a holder has panicked. Exposed for tests and diagnostics;
+    /// `lock()` does not care.
+    pub fn is_poisoned(&self) -> bool {
+        self.inner.is_poisoned()
+    }
+
+    /// Consume the mutex, recovering the value even if poisoned.
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Deliberately poison this mutex by panicking while holding it.
+    /// Test-only hook for the poison-recovery coverage in
+    /// `tests/failure_injection.rs` and the loom models.
+    #[doc(hidden)]
+    pub fn poison_for_test(&self) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = self.inner.lock();
+            panic!("deliberately poisoning mutex (test hook)");
+        }));
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mutex {{ poisoned: {} }}", self.is_poisoned())
+    }
+}
+
+/// A condition variable whose `wait()` recovers from poisoning, paired
+/// with [`Mutex`] above.
+pub struct Condvar {
+    inner: backend::Condvar,
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar { inner: backend::Condvar::new() }
+    }
+
+    /// Block until notified, re-acquiring the guard (recovered if the
+    /// notifier side panicked). Spurious wakeups are possible, exactly
+    /// as with `std::sync::Condvar` — always wait in a predicate loop.
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.inner.wait(guard).unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_recovers_the_data_after_poisoning() {
+        let m = Mutex::new(7);
+        m.poison_for_test();
+        assert!(m.is_poisoned());
+        assert_eq!(*m.lock(), 7);
+        assert_eq!(m.into_inner(), 7);
+    }
+
+    #[test]
+    fn condvar_wait_roundtrips_with_wrapper_mutex() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let h = thread::spawn(move || {
+            let (flag, cv) = &*p2;
+            *flag.lock() = true;
+            cv.notify_one();
+        });
+        let (flag, cv) = &*pair;
+        let mut ready = flag.lock();
+        while !*ready {
+            ready = cv.wait(ready);
+        }
+        drop(ready);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn default_impls_build() {
+        let m: Mutex<Vec<u32>> = Mutex::default();
+        assert!(m.lock().is_empty());
+        let _cv = Condvar::default();
+    }
+}

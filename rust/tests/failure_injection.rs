@@ -102,6 +102,56 @@ fn zoo_lookup_unknown_is_none() {
 }
 
 #[test]
+fn workpool_recovers_from_poisoned_queue_mutex() {
+    use edcompress::util::pool::WorkPool;
+    let pool = WorkPool::new(2);
+    assert_eq!(pool.run_batch(vec![1u32, 2], |j| j * 10), vec![Ok(10), Ok(20)]);
+    // Deliberately poison the task-queue mutex between batches; the
+    // queue is pop-only so util::sync's recovering lock() must keep the
+    // pool fully functional, with correct results.
+    pool.poison_queue_for_test();
+    assert_eq!(
+        pool.run_batch(vec![3u32, 4, 5], |j| j + 1),
+        vec![Ok(4), Ok(5), Ok(6)]
+    );
+}
+
+#[test]
+fn shared_cache_recovers_from_poisoned_shard_mid_computation() {
+    use edcompress::dataflow::Dataflow;
+    use edcompress::energy::cache::{CostCache, SharedCostCache, SlotKey};
+    use edcompress::energy::EnergyConfig;
+    use edcompress::model::zoo;
+    let net = zoo::lenet5();
+    let cfg = EnergyConfig::default();
+    let cache = SharedCostCache::new(&net, &cfg);
+    let key = SlotKey { bits: 5, p_bucket: 64 };
+    let first = cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key);
+    // Poison the shard that owns this key mid-computation — i.e. between
+    // the check and the re-read, exactly where a panicking worker would
+    // leave it — then read back through the poisoned lock.
+    cache.poison_shard_for_test(0, Dataflow::XY, key);
+    let second = cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key);
+    assert!(
+        std::sync::Arc::ptr_eq(&first, &second),
+        "recovered shard must serve the memoized entry, not recompute"
+    );
+    // A *new* key through its (also poisoned) shard mutex must compute
+    // a cost bit-identical to an unpoisoned reference cache.
+    let key2 = SlotKey { bits: 7, p_bucket: 96 };
+    cache.poison_shard_for_test(0, Dataflow::XY, key2);
+    let via_poisoned = cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key2);
+    let mut reference = CostCache::new(&net, &cfg);
+    let fresh = reference.layer_cost(&net, &cfg, 0, Dataflow::XY, key2);
+    assert_eq!(
+        via_poisoned.pe_energy.to_bits(),
+        fresh.pe_energy.to_bits(),
+        "poison recovery must not perturb computed costs"
+    );
+    assert_eq!(via_poisoned.sram_energy.to_bits(), fresh.sram_energy.to_bits());
+}
+
+#[test]
 fn env_rejects_wrong_action_length() {
     use edcompress::dataflow::Dataflow;
     use edcompress::energy::EnergyConfig;

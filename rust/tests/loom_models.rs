@@ -1,0 +1,270 @@
+//! Loom models of the crate's three concurrency protocols.
+//!
+//! Build and run with:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_models
+//! ```
+//!
+//! Under `--cfg loom` the `util::sync` shim swaps its backend for loom's
+//! instrumented primitives, so these tests exercise the *real*
+//! `WorkPool` queue/drain/shutdown protocol and the *real*
+//! `SharedCostCache` check-unlock-compute-relock protocol under explored
+//! thread interleavings — not transliterations. The third model distills
+//! the `coordinator::service` registry's cancel-during-run protocol
+//! (state machine + scheduler condvar + per-job cancel flag) onto the
+//! same primitives; running the full TCP daemon per explored schedule
+//! would drown the model in socket nondeterminism, so the model
+//! replicates `handle_cancel`/`run_search_job`'s transitions
+//! line-for-line instead (see the comments inside).
+//!
+//! The vendored loom (see `rust/vendor/loom/src/lib.rs`) is a bounded
+//! randomized-schedule explorer with loom's API, not an exhaustive DPOR
+//! checker; `EDC_LOOM_ITERS` scales how many schedules each model runs.
+#![cfg(loom)]
+
+use edcompress::dataflow::Dataflow;
+use edcompress::energy::cache::{SharedCostCache, SlotKey};
+use edcompress::energy::EnergyConfig;
+use edcompress::model::zoo;
+use edcompress::util::pool::WorkPool;
+use edcompress::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use edcompress::util::sync::{thread, Arc, Condvar, Mutex};
+
+// ---------- WorkPool: enqueue vs drain ----------
+
+#[test]
+fn workpool_drop_drains_every_queued_task_exactly_once() {
+    loom::model(|| {
+        let hits = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkPool::new(2);
+            for _ in 0..3 {
+                let hits = Arc::clone(&hits);
+                pool.execute(Box::new(move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            // Drop races the workers' drain against shutdown: the stop
+            // flag must never eat a task that was already queued.
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    });
+}
+
+#[test]
+fn workpool_concurrent_batches_keep_order_and_results() {
+    loom::model(|| {
+        let pool = Arc::new(WorkPool::new(2));
+        let other = {
+            let pool = Arc::clone(&pool);
+            thread::spawn(move || pool.run_batch(vec![1u64, 2], |j| j * 10))
+        };
+        let mine = pool.run_batch(vec![7u64], |j| j + 1);
+        assert_eq!(mine, vec![Ok(8)]);
+        assert_eq!(other.join().unwrap(), vec![Ok(10), Ok(20)]);
+    });
+}
+
+#[test]
+fn workpool_contains_panics_and_recovers_poisoned_queue() {
+    loom::model(|| {
+        let pool = WorkPool::new(1);
+        let out = pool.run_batch(vec![0u32, 1], |j| {
+            if j == 0 {
+                panic!("die");
+            }
+            j
+        });
+        assert!(out[0].is_err());
+        assert_eq!(out[1], Ok(1));
+        // Worker panics poison nothing callers see; even a deliberately
+        // poisoned queue mutex must not lose the next batch.
+        pool.poison_queue_for_test();
+        assert_eq!(pool.run_batch(vec![5u32], |j| j), vec![Ok(5)]);
+    });
+}
+
+// ---------- SharedCostCache: concurrent get-or-compute ----------
+
+fn cost_bits(c: &edcompress::energy::LayerCost) -> [u64; 4] {
+    [
+        c.pe_energy.to_bits(),
+        c.sram_energy.to_bits(),
+        c.reg_energy.to_bits(),
+        (c.noc_input + c.noc_weight + c.noc_psum).to_bits(),
+    ]
+}
+
+#[test]
+fn shared_cache_concurrent_get_or_compute_is_bit_identical() {
+    let net = zoo::lenet5();
+    let cfg = EnergyConfig::default();
+    loom::model(move || {
+        let cache = SharedCostCache::new(&net, &cfg);
+        let key = SlotKey { bits: 5, p_bucket: 64 };
+        // Two threads race get-or-compute on ONE shard key: both may
+        // compute (misses can double-count), but the first insert wins
+        // and both must observe bit-identical costs.
+        let racer = {
+            let cache = cache.clone();
+            let net = net.clone();
+            let cfg = cfg.clone();
+            thread::spawn(move || cost_bits(&cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key)))
+        };
+        let mine = cost_bits(&cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key));
+        let theirs = racer.join().unwrap();
+        assert_eq!(mine, theirs, "racing computes must agree bit-for-bit");
+        assert_eq!(cache.len(), 1, "first insert wins; no duplicate entries");
+        // A later call is a pure hit on the same entry.
+        let again = cost_bits(&cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key));
+        assert_eq!(mine, again);
+    });
+}
+
+#[test]
+fn shared_cache_poisoned_shard_recovers_mid_computation() {
+    let net = zoo::lenet5();
+    let cfg = EnergyConfig::default();
+    loom::model(move || {
+        let cache = SharedCostCache::new(&net, &cfg);
+        let key = SlotKey { bits: 6, p_bucket: 32 };
+        let before = cost_bits(&cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key));
+        // Poison the shard that owns this key while another thread is
+        // mid-get-or-compute; both the racer and the re-read must
+        // recover and still agree bitwise.
+        let racer = {
+            let cache = cache.clone();
+            let net = net.clone();
+            let cfg = cfg.clone();
+            thread::spawn(move || cost_bits(&cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key)))
+        };
+        cache.poison_shard_for_test(0, Dataflow::XY, key);
+        let theirs = racer.join().unwrap();
+        let after = cost_bits(&cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key));
+        assert_eq!(before, theirs);
+        assert_eq!(before, after);
+    });
+}
+
+// ---------- service registry: cancel-during-run ----------
+
+/// The service's job-lifecycle protocol, distilled onto `util::sync`.
+///
+/// Mirrors `coordinator::service`:
+/// - `state` is `JobState` under the registry mutex;
+/// - `cancel` is the per-job `Arc<AtomicBool>` the cancel handler sets
+///   when the job is already running;
+/// - the runner checks the flag at each round boundary, snapshots, and
+///   transitions to `Cancelled` — exactly `run_search_job`'s loop;
+/// - a cancel of a still-queued job transitions it directly (and the
+///   runner must then never run it) — exactly `handle_cancel`'s
+///   `JobState::Queued` arm.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum St {
+    Queued,
+    Running,
+    Done,
+    Cancelled,
+}
+
+struct Board {
+    state: Mutex<St>,
+    scheduler: Condvar,
+    cancel: AtomicBool,
+    snapshots: AtomicUsize,
+    rounds_run: AtomicUsize,
+}
+
+impl Board {
+    fn new() -> Board {
+        Board {
+            state: Mutex::new(St::Queued),
+            scheduler: Condvar::new(),
+            cancel: AtomicBool::new(false),
+            snapshots: AtomicUsize::new(0),
+            rounds_run: AtomicUsize::new(0),
+        }
+    }
+}
+
+fn runner(board: &Board, rounds: usize) {
+    // Claim: Queued -> Running, exactly once; a job cancelled while
+    // still queued must never start (handle_cancel's Queued arm already
+    // transitioned it).
+    {
+        let mut st = board.state.lock();
+        if *st != St::Queued {
+            return;
+        }
+        *st = St::Running;
+    }
+    for _ in 0..rounds {
+        // Round boundary: the cancel check of run_search_job. On
+        // observing the flag the runner snapshots once and exits.
+        if board.cancel.load(Ordering::SeqCst) {
+            board.snapshots.fetch_add(1, Ordering::SeqCst);
+            *board.state.lock() = St::Cancelled;
+            return;
+        }
+        board.rounds_run.fetch_add(1, Ordering::SeqCst);
+    }
+    *board.state.lock() = St::Done;
+}
+
+fn cancel_handler(board: &Board) {
+    let mut st = board.state.lock();
+    match *st {
+        St::Queued => {
+            // Cancel before the runner claimed it: terminal immediately.
+            *st = St::Cancelled;
+        }
+        St::Running => {
+            // Flag it; the runner finishes its round and snapshots.
+            board.cancel.store(true, Ordering::SeqCst);
+        }
+        // Cancelling a finished job is a no-op.
+        St::Done | St::Cancelled => {}
+    }
+    drop(st);
+    board.scheduler.notify_all();
+}
+
+#[test]
+fn service_cancel_during_run_reaches_exactly_one_terminal_state() {
+    loom::model(|| {
+        let board = Arc::new(Board::new());
+        const ROUNDS: usize = 3;
+        let r = {
+            let board = Arc::clone(&board);
+            thread::spawn(move || runner(&board, ROUNDS))
+        };
+        let c = {
+            let board = Arc::clone(&board);
+            thread::spawn(move || cancel_handler(&board))
+        };
+        r.join().unwrap();
+        c.join().unwrap();
+        let st = *board.state.lock();
+        let snaps = board.snapshots.load(Ordering::SeqCst);
+        let rounds = board.rounds_run.load(Ordering::SeqCst);
+        // Exactly one terminal state, whatever the interleaving.
+        assert!(st == St::Done || st == St::Cancelled, "non-terminal {st:?}");
+        match st {
+            // Cancel won before the claim (no work, no snapshot) or the
+            // runner observed the flag at a round boundary (exactly one
+            // snapshot, partial work).
+            St::Cancelled => {
+                if snaps == 0 {
+                    assert_eq!(rounds, 0, "cancelled-before-claim jobs must not run rounds");
+                } else {
+                    assert_eq!(snaps, 1, "cancel observed mid-run snapshots exactly once");
+                    assert!(rounds < ROUNDS, "observed cancel implies an unfinished run");
+                }
+            }
+            // The runner finished every round before the flag landed.
+            St::Done => assert_eq!(rounds, ROUNDS),
+            _ => unreachable!(),
+        }
+    });
+}

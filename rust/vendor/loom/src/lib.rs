@@ -1,0 +1,196 @@
+//! Minimal, API-compatible subset of the `loom` model-checking crate.
+//!
+//! The build environment has no crates-io access, so this vendored crate
+//! provides exactly the surface `edcompress` compiles against under
+//! `--cfg loom`: [`model`], `thread::spawn`/`yield_now`, and
+//! `sync::{Mutex, Condvar, Arc, atomic}`.
+//!
+//! **Honesty note — this is not a DPOR model checker.** Upstream loom
+//! exhaustively enumerates thread interleavings; this stand-in is a
+//! *bounded randomized-schedule explorer*: [`model`] reruns the closure
+//! for a fixed number of deterministically-seeded iterations, and every
+//! lock/wait/notify/spawn passes through a schedule-perturbation point
+//! ([`sched::interleave`]) that injects yields and micro-sleeps driven by
+//! a shared xorshift state. That widens the set of interleavings the OS
+//! scheduler produces far beyond a plain stress test while keeping runs
+//! reproducible in aggregate, but it cannot prove absence of races.
+//!
+//! The API is kept signature-compatible with upstream loom for the
+//! operations used here, so swapping in the real crate is a one-line
+//! `Cargo.toml` change once a registry is reachable — the models in
+//! `rust/tests/loom_models.rs` are written against loom's documented
+//! semantics, not this file's.
+//!
+//! Iteration count defaults to 64 and can be overridden with the
+//! `EDC_LOOM_ITERS` environment variable (upstream loom has an analogous
+//! `LOOM_MAX_BRANCHES`-family of tuning knobs).
+
+/// Deterministically-seeded schedule perturbation.
+pub mod sched {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static STATE: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
+    /// Number of schedule-exploration iterations [`crate::model`] runs.
+    pub fn iterations() -> usize {
+        std::env::var("EDC_LOOM_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64)
+    }
+
+    pub(crate) fn reseed(seed: u64) {
+        STATE.store(seed | 1, Ordering::SeqCst);
+    }
+
+    fn next() -> u64 {
+        // xorshift64 over one shared atomic. Cross-thread races on the
+        // RNG state itself only add schedule diversity — determinism of
+        // the *model under test* is what the assertions check, not
+        // determinism of the exploration order.
+        let mut x = STATE.load(Ordering::Relaxed);
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        STATE.store(x, Ordering::Relaxed);
+        x
+    }
+
+    /// Perturbation point: called before and after every instrumented
+    /// synchronization operation.
+    pub fn interleave() {
+        let r = next();
+        if r % 4 == 0 {
+            std::thread::yield_now();
+        }
+        if r % 64 == 0 {
+            std::thread::sleep(std::time::Duration::from_micros(r % 97));
+        }
+    }
+}
+
+/// Run `f` under bounded randomized-schedule exploration.
+///
+/// Upstream loom enumerates interleavings exhaustively; here `f` is rerun
+/// [`sched::iterations`] times, each with a distinct deterministic seed
+/// feeding the perturbation points inside `loom::sync`/`loom::thread`.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    for i in 0..sched::iterations() as u64 {
+        sched::reseed(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i.wrapping_add(1)));
+        f();
+    }
+}
+
+/// Instrumented `std::thread` subset.
+pub mod thread {
+    pub use std::thread::{
+        available_parallelism, current, panicking, park, sleep, yield_now, JoinHandle, Result,
+        Thread,
+    };
+
+    /// `std::thread::spawn` with perturbation points around the handoff.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        crate::sched::interleave();
+        std::thread::spawn(move || {
+            crate::sched::interleave();
+            f()
+        })
+    }
+}
+
+/// Instrumented `std::sync` subset.
+pub mod sync {
+    pub use std::sync::{Arc, LockResult, MutexGuard, PoisonError, TryLockResult};
+
+    pub mod atomic {
+        pub use std::sync::atomic::*;
+    }
+
+    /// `std::sync::Mutex` with schedule perturbation on every acquire.
+    ///
+    /// Returns std's own `LockResult`/`MutexGuard` so poisoning semantics
+    /// (and recovery via `PoisonError::into_inner`) are exactly std's.
+    pub struct Mutex<T>(std::sync::Mutex<T>);
+
+    impl<T> Mutex<T> {
+        pub fn new(value: T) -> Mutex<T> {
+            Mutex(std::sync::Mutex::new(value))
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            crate::sched::interleave();
+            let guard = self.0.lock();
+            // Perturb while holding the guard too: stretched critical
+            // sections expose waiters that peeked at stale state.
+            crate::sched::interleave();
+            guard
+        }
+
+        pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+            crate::sched::interleave();
+            self.0.try_lock()
+        }
+
+        pub fn is_poisoned(&self) -> bool {
+            self.0.is_poisoned()
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.0.into_inner()
+        }
+
+        pub fn get_mut(&mut self) -> LockResult<&mut T> {
+            self.0.get_mut()
+        }
+    }
+
+    /// `std::sync::Condvar` with perturbation on wait/notify edges.
+    #[derive(Default)]
+    pub struct Condvar(std::sync::Condvar);
+
+    impl Condvar {
+        pub fn new() -> Condvar {
+            Condvar(std::sync::Condvar::new())
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            crate::sched::interleave();
+            self.0.wait(guard)
+        }
+
+        pub fn notify_one(&self) {
+            crate::sched::interleave();
+            self.0.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            crate::sched::interleave();
+            self.0.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn model_reruns_and_mutex_roundtrips() {
+        std::env::set_var("EDC_LOOM_ITERS", "8");
+        let runs = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let r = std::sync::Arc::clone(&runs);
+        crate::model(move || {
+            let m = crate::sync::Mutex::new(1);
+            *m.lock().unwrap() += 1;
+            assert_eq!(m.into_inner().unwrap(), 2);
+            r.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(runs.load(std::sync::atomic::Ordering::SeqCst), 8);
+        std::env::remove_var("EDC_LOOM_ITERS");
+    }
+}
