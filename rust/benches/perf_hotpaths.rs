@@ -399,6 +399,86 @@ fn bench_serve_shared_vs_sequential() {
     );
 }
 
+/// The async actor/learner throughput claim (CI gate): 8 LeNet-5 rollout
+/// jobs multiplexed on a 4-slot pool, with SAC updates offloaded to
+/// dedicated learner threads, must beat the synchronous engine — which
+/// interleaves rollout and update on the same 4 slots — on episodes/sec.
+///
+/// The achievable speedup is (R+U)/max(R, U/L-ish) where R is rollout
+/// wall, U is update wall and L the learner count: it comes entirely
+/// from the extra learner threads overlapping update work with rollouts,
+/// so it is hardware-bound. With >= 8 hardware threads the 1.5x gate is
+/// asserted; below that both engines saturate the machine with identical
+/// total work, the ratio hovers near 1.0 by construction, and only a
+/// no-pathological-overhead floor is enforced.
+fn bench_async_vs_sync_throughput() {
+    use edcompress::coordinator::actor_learner::AsyncConfig;
+    use edcompress::coordinator::orchestrator::{Orchestrator, OrchestratorSpec};
+    use edcompress::coordinator::SearchConfig;
+    use edcompress::util::pool::WorkPool;
+
+    fn spec() -> OrchestratorSpec {
+        let mut s = OrchestratorSpec::new(zoo::lenet5(), 8, 71);
+        s.dataflows = vec![Dataflow::XY, Dataflow::FXFY];
+        s.env.max_steps = 12;
+        s.chunk_episodes = 4;
+        s.search = SearchConfig {
+            episodes: 8,
+            sac: SacConfig {
+                hidden: vec![32, 32],
+                // Past warmup quickly, then two batch-32 updates per env
+                // step: update work dominates, which is the regime the
+                // learner offload is for.
+                warmup_steps: 8,
+                batch_size: 32,
+                updates_per_step: 2,
+                ..SacConfig::default()
+            },
+            verbose: false,
+        };
+        s
+    }
+
+    let episodes_total = (8 * 8) as f64;
+    let pool = WorkPool::new(4);
+
+    let mut sync_orch = Orchestrator::new(spec());
+    let t0 = std::time::Instant::now();
+    let sync_res = sync_orch.run_on(&pool).expect("sync run failed");
+    let t_sync = t0.elapsed();
+    assert!(sync_res.failures.is_empty(), "sync failures: {:?}", sync_res.failures);
+
+    // Relaxed mode: 8 rollout jobs on the same 4 slots, 8 learners.
+    let cfg = AsyncConfig::new(8, 8);
+    assert!(!cfg.lockstep, "throughput gate must run the relaxed engine");
+    let mut async_orch = Orchestrator::new(spec());
+    let t0 = std::time::Instant::now();
+    let async_res = async_orch.run_async_on(&pool, &cfg).expect("async run failed");
+    let t_async = t0.elapsed();
+    assert!(async_res.failures.is_empty(), "async failures: {:?}", async_res.failures);
+
+    let eps_sync = episodes_total / t_sync.as_secs_f64().max(1e-9);
+    let eps_async = episodes_total / t_async.as_secs_f64().max(1e-9);
+    let speedup = eps_async / eps_sync.max(1e-9);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "  async {eps_async:.1} eps/s vs sync {eps_sync:.1} eps/s -> {speedup:.2}x \
+         (8 actors on 4 pool slots + 8 learners, {hw} hardware threads)"
+    );
+    if hw >= 8 {
+        assert!(
+            speedup >= 1.5,
+            "async episodes/sec {speedup:.2}x below the 1.5x gate on {hw} hardware threads"
+        );
+    } else {
+        println!("  (under 8 hardware threads: 1.5x scaling gate skipped, overhead floor only)");
+        assert!(
+            speedup >= 0.75,
+            "async engine added pathological overhead: {speedup:.2}x on {hw} hardware threads"
+        );
+    }
+}
+
 fn bench_incremental_vs_full(net: &Network, df: Dataflow, cfg: &EnergyConfig, min_speedup: f64) {
     let steps = 32;
     let traj = episode_trajectory(net, steps);
@@ -486,6 +566,8 @@ fn main() {
         bench_fleet_shared_vs_private(&zoo::vgg16_cifar(), Dataflow::XY, &cfg, 4, 16);
         banner("edc serve shared cache (smoke)");
         bench_serve_shared_vs_sequential();
+        banner("async actor/learner throughput (smoke)");
+        bench_async_vs_sync_throughput();
         println!("bench smoke OK");
         return;
     }
@@ -514,6 +596,11 @@ fn main() {
     // one registry cache vs sequential standalone runs (asserted).
     banner("edc serve shared cache");
     bench_serve_shared_vs_sequential();
+
+    // 3c. Async actor/learner engine vs the synchronous engine on
+    // episodes/sec (asserted, hardware-gated).
+    banner("async actor/learner throughput");
+    bench_async_vs_sync_throughput();
 
     // 4. All-15-dataflow ranking: batched+cached vs individual.
     banner("dataflow ranking");

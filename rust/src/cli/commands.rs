@@ -215,6 +215,20 @@ fn cmd_search(args: &Args) -> Result<()> {
     if chunk == 0 {
         bail!("--chunk must be at least 1");
     }
+
+    // Async actor/learner execution is opt-in and orthogonal to the
+    // run's identity: the spec fingerprint excludes it, so a snapshot
+    // written by either mode resumes under the other
+    // (tests/orchestrator_resume.rs pins the cross-mode round trips).
+    let async_actors = args.usize_or("async-actors", 0)?;
+    let learners = args.usize_or("learners", 1)?;
+    let lockstep = args.usize_or("lockstep", 0)? != 0;
+    if async_actors == 0 && (args.get("learners").is_some() || args.get("lockstep").is_some()) {
+        bail!("--learners/--lockstep only apply with --async-actors N");
+    }
+    if async_actors > 0 && learners == 0 {
+        bail!("--learners must be at least 1");
+    }
     let net = zoo::by_name(&name).ok_or_else(|| anyhow!("unknown net '{name}'"))?;
     let mut spec = OrchestratorSpec::new(net, seeds, base_seed);
     spec.dataflows = dataflows;
@@ -278,7 +292,17 @@ fn cmd_search(args: &Args) -> Result<()> {
         sweep::worker_count(seeds),
         if resume.is_some() { " (resumed)" } else { "" },
     );
-    let res = orch.run()?;
+    let res = if async_actors > 0 {
+        let mut acfg = crate::coordinator::actor_learner::AsyncConfig::new(async_actors, learners);
+        acfg.lockstep = lockstep;
+        println!(
+            "async mode: {async_actors} rollout actors, {learners} learner threads{}",
+            if lockstep { " (lockstep: bit-identical to sync)" } else { " (relaxed)" },
+        );
+        orch.run_async(&acfg)?
+    } else {
+        orch.run()?
+    };
 
     println!(
         "{:<6} {:<8} {:>10} {:>12} {:>10}",
@@ -458,10 +482,14 @@ fn cmd_submit(args: &Args) -> Result<()> {
             req.set(key, Json::Str(v.to_string()));
         }
     }
-    for key in ["seeds", "episodes", "chunk", "steps"] {
+    for key in ["seeds", "episodes", "chunk", "steps", "learners", "lockstep"] {
         if args.get(key).is_some() {
             req.set(key, Json::Num(args.usize_or(key, 0)? as f64));
         }
+    }
+    // CLI flag is kebab-case; the wire field matches the spec field name.
+    if args.get("async-actors").is_some() {
+        req.set("async_actors", Json::Num(args.usize_or("async-actors", 0)? as f64));
     }
     if args.get("seed").is_some() {
         // Seeds ride as strings so the full u64 range survives (the same

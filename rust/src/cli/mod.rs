@@ -4,6 +4,7 @@
 //! edc compress --net lenet5 --dataflow X:Y [--oracle surrogate|pjrt] ...
 //! edc search  --net lenet5 --seeds 4 [--resume run.json] [--snapshot run.json]
 //!             [--warm-start prev_run.json]
+//!             [--async-actors N --learners M [--lockstep 1]]
 //! edc sweep   --nets lenet5,vgg16_cifar [--dataflows paper|all|X:Y,..]
 //! edc serve   [--dir reports/serve] [--port 0] [--jobs 2] [--workers 0]
 //!             [--resume-dir reports/serve]       # search-service daemon
@@ -53,7 +54,8 @@ pub fn usage() -> &'static str {
                   cache, with a Pareto archive and resumable snapshots\n\
                   (--net, --seeds, --episodes, --steps, --seed, --dataflows,\n\
                   --chunk, --snapshot run.json, --resume run.json,\n\
-                  --warm-start prev_run.json)\n\
+                  --warm-start prev_run.json; async actor/learner mode:\n\
+                  --async-actors N --learners M [--lockstep 1])\n\
        sweep      search many (network x dataflow) pairs on a bounded\n\
                   worker pool (--nets a,b,c --dataflows paper|all|X:Y,..,\n\
                   --episodes, --steps, --seed)\n\

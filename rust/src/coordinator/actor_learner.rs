@@ -1,0 +1,549 @@
+//! Async actor/learner execution engine for orchestrator rounds.
+//!
+//! The synchronous orchestrator pins each seed to one pool slot running
+//! a rollout+update loop, so throughput caps at cores ≈ seeds and the
+//! learner math idles while the env prices energy. This module splits
+//! that loop the way border's `ActorManager`/`AsyncTrainer` does for DQN:
+//! many cheap rollout **actors** (pool tasks) feed a bounded replay
+//! channel drained by a few dedicated SAC **learner** threads, which
+//! broadcast versioned policy weights back to the actors. Everything is
+//! built on [`util::channel`] + [`util::sync`], so the protocol is
+//! model-checked under loom (`tests/loom_models.rs`).
+//!
+//! The engine is an alternative *executor* for
+//! `Orchestrator::run_round_with`: it consumes the same [`ChunkJob`]s
+//! and produces the same [`ChunkOut`]s, so the merge order, Pareto
+//! archive, v3 snapshot schema, `--resume` and serve integration are
+//! byte-for-byte the synchronous code paths — async jobs drain to the
+//! same snapshots by construction.
+//!
+//! Two modes (`AsyncConfig::lockstep`):
+//!
+//! - **Lockstep** — the bit-identity oracle bridge. The actor runs the
+//!   exact synchronous episode loop but ships the whole agent through
+//!   the channel for each `maybe_update()` call and blocks until a
+//!   learner hands it back. The per-seed mutation sequence is identical
+//!   to the sync path, so every stream (agent RNG, oracle, replay) is
+//!   bit-identical for *any* actor/learner count — pinned by
+//!   `tests/async_search.rs`.
+//! - **Relaxed** — the throughput mode. Actors roll out against a frozen
+//!   [`PolicySnapshot`] with decorrelated per-episode RNG streams while
+//!   learners apply the collected transitions concurrently, so env
+//!   stepping (energy pricing) overlaps gradient updates. Update order
+//!   becomes scheduling-dependent; archive validity and snapshot
+//!   resumability are preserved (docs/determinism.md §10).
+//!
+//! Deadlock freedom in relaxed mode rests on two facts: each actor sends
+//! its episodes in order, and the channel is FIFO — so the earliest
+//! unapplied episode of every seed has always been popped (or is about
+//! to be) by a learner that can make progress, and learners fully
+//! process one message before receiving the next.
+//!
+//! [`util::channel`]: crate::util::channel
+//! [`util::sync`]: crate::util::sync
+//! [`PolicySnapshot`]: crate::rl::sac::PolicySnapshot
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use super::orchestrator::{chunk_env, ChunkJob, ChunkOut};
+use super::{Coordinator, EpisodeRecord};
+use crate::envs::CompressionEnv;
+use crate::rl::replay::Transition;
+use crate::rl::sac::{PolicySnapshot, SacAgent};
+use crate::rl::Env;
+use crate::util::channel::{self, Sender};
+use crate::util::pool::{panic_message, WorkPool};
+use crate::util::rng::{seed_stream, Rng};
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
+
+/// Decorrelates the relaxed actors' per-episode rollout streams from the
+/// learner-side agent RNG (which keeps the seed's original stream).
+const ROLLOUT_STREAM_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Knobs of the async engine (`edc search --async-actors N --learners M
+/// [--lockstep 1]`).
+#[derive(Clone, Debug)]
+pub struct AsyncConfig {
+    /// Concurrent rollout lanes. `Orchestrator::run_async` sizes its
+    /// pool to this; on a caller-owned pool it is the pool that bounds
+    /// actor concurrency (actors beyond pool slots queue).
+    pub actors: usize,
+    /// Dedicated learner threads, spawned per round *outside* the pool
+    /// (a learner blocking on in-order delivery must never occupy a
+    /// pool slot, or actors could starve).
+    pub learners: usize,
+    /// Bit-identity mode: replay the synchronous mutation sequence
+    /// exactly (see module docs). Off = relaxed throughput mode.
+    pub lockstep: bool,
+    /// Bound on in-flight actor→learner messages — the backpressure
+    /// that keeps slow learners from accumulating an unbounded backlog.
+    pub channel_cap: usize,
+    /// Test hook: the actor working this seed index panics before its
+    /// first episode of the round (`tests/failure_injection.rs`).
+    #[doc(hidden)]
+    pub panic_actor_for_test: Option<usize>,
+}
+
+impl AsyncConfig {
+    pub fn new(actors: usize, learners: usize) -> AsyncConfig {
+        let actors = actors.max(1);
+        let learners = learners.max(1);
+        AsyncConfig {
+            actors,
+            learners,
+            lockstep: false,
+            channel_cap: 2 * (actors + learners),
+            panic_actor_for_test: None,
+        }
+    }
+}
+
+/// Execute one round's chunk jobs through the actor/learner pipeline.
+/// Same contract as the synchronous executors passed to
+/// `Orchestrator::run_round_with`: result `i` belongs to job `i`.
+pub(crate) fn run_round_jobs(
+    jobs: Vec<ChunkJob>,
+    pool: &WorkPool,
+    cfg: &AsyncConfig,
+) -> Vec<Result<ChunkOut, String>> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    if cfg.lockstep {
+        run_round_lockstep(jobs, pool, cfg)
+    } else {
+        run_round_relaxed(jobs, pool, cfg)
+    }
+}
+
+// ---------- Lockstep mode ----------
+
+struct LearnMsg {
+    job_idx: usize,
+    agent: SacAgent,
+}
+
+/// Per-job return slot for the agent's round trip through a learner.
+struct Board {
+    slot: Mutex<Option<Result<SacAgent, String>>>,
+    cv: Condvar,
+}
+
+impl Board {
+    fn new() -> Board {
+        Board { slot: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn put(&self, v: Result<SacAgent, String>) {
+        *self.slot.lock() = Some(v);
+        self.cv.notify_all();
+    }
+
+    fn take(&self) -> Result<SacAgent, String> {
+        let mut guard = self.slot.lock();
+        loop {
+            if let Some(v) = guard.take() {
+                return v;
+            }
+            guard = self.cv.wait(guard);
+        }
+    }
+}
+
+fn run_round_lockstep(
+    jobs: Vec<ChunkJob>,
+    pool: &WorkPool,
+    cfg: &AsyncConfig,
+) -> Vec<Result<ChunkOut, String>> {
+    let boards: Arc<Vec<Board>> = Arc::new((0..jobs.len()).map(|_| Board::new()).collect());
+    let (tx, rx) = channel::bounded::<LearnMsg>(cfg.channel_cap);
+
+    let mut learners = Vec::with_capacity(cfg.learners.max(1));
+    for _ in 0..cfg.learners.max(1) {
+        let rx = rx.clone();
+        let boards = Arc::clone(&boards);
+        learners.push(thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                let LearnMsg { job_idx, agent } = msg;
+                let res = catch_unwind(AssertUnwindSafe(move || {
+                    let mut agent = agent;
+                    agent.maybe_update();
+                    agent
+                }));
+                boards[job_idx].put(res.map_err(|p| {
+                    format!("learner died in maybe_update: {}", panic_message(p))
+                }));
+            }
+        }));
+    }
+    drop(rx);
+
+    let panic_seed = cfg.panic_actor_for_test;
+    let indexed: Vec<(usize, ChunkJob)> = jobs.into_iter().enumerate().collect();
+    let actor_boards = Arc::clone(&boards);
+    let results = pool.run_batch(indexed, move |(job_idx, job)| {
+        run_lockstep_actor(job_idx, job, &tx, &actor_boards, panic_seed)
+    });
+    // `run_batch` dropped the actor closure — and with it the last
+    // Sender — so the channel is closed; learners drain and exit.
+    for h in learners {
+        let _ = h.join();
+    }
+    results
+}
+
+fn run_lockstep_actor(
+    job_idx: usize,
+    job: ChunkJob,
+    tx: &Sender<LearnMsg>,
+    boards: &[Board],
+    panic_seed: Option<usize>,
+) -> ChunkOut {
+    let ChunkJob {
+        slot,
+        net,
+        df,
+        env,
+        energy,
+        search,
+        agent,
+        oracle_seed,
+        oracle_token,
+        start_episode,
+        count,
+        shared,
+    } = job;
+    if panic_seed == Some(slot) {
+        panic!("async actor {job_idx} (seed {slot}): injected failure before episode {start_episode}");
+    }
+    let env = chunk_env(net, df, env, energy, oracle_seed, &shared);
+    let mut coord = match agent {
+        Some(agent) => Coordinator::with_agent(env, agent, search),
+        None => Coordinator::new(env, search),
+    };
+    if oracle_token != 0 {
+        coord.env.restore_oracle_state(oracle_token);
+    }
+    let Coordinator { mut env, agent, .. } = coord;
+    let mut agent = Some(agent);
+    let mut records = Vec::with_capacity(count);
+    for ep in start_episode..start_episode + count {
+        records.push(run_lockstep_episode(job_idx, slot, ep, &mut env, &mut agent, tx, boards));
+    }
+    let oracle_token = env.oracle_state_token();
+    ChunkOut {
+        agent: agent.take().expect("agent returned after last episode"),
+        records,
+        oracle_token,
+    }
+}
+
+/// One episode, mutation-for-mutation the synchronous
+/// `Coordinator::run_episode` — except the `agent.maybe_update()` call
+/// happens on a learner thread, with the whole agent shipped there and
+/// back. Moving the agent is a plain move (no FP operations), so the
+/// streams stay bit-identical to the sync oracle.
+fn run_lockstep_episode(
+    job_idx: usize,
+    slot: usize,
+    episode: usize,
+    env: &mut CompressionEnv,
+    agent_cell: &mut Option<SacAgent>,
+    tx: &Sender<LearnMsg>,
+    boards: &[Board],
+) -> EpisodeRecord {
+    let mut agent = agent_cell.take().expect("agent present at episode start");
+    let mut state = env.reset();
+    let mut rec = EpisodeRecord {
+        episode,
+        steps: 0,
+        total_reward: 0.0,
+        energy_curve: Vec::new(),
+        accuracy_curve: Vec::new(),
+        best: None,
+    };
+    loop {
+        let action = agent.act(&state);
+        let (next, reward, done) = env.step(&action);
+        agent.observe(&state, &action, reward, &next, done);
+        if tx.send(LearnMsg { job_idx, agent }).is_err() {
+            panic!("async actor {job_idx} (seed {slot}): all learners gone");
+        }
+        agent = match boards[job_idx].take() {
+            Ok(a) => a,
+            Err(msg) => panic!("async actor {job_idx} (seed {slot}): {msg}"),
+        };
+        state = next;
+        rec.steps += 1;
+        rec.total_reward += reward;
+        rec.energy_curve.push(env.last_energy());
+        if let Some(b) = env.best() {
+            rec.accuracy_curve.push(b.accuracy);
+        } else {
+            rec.accuracy_curve.push(f64::NAN);
+        }
+        if done {
+            break;
+        }
+    }
+    rec.best = env.best().cloned();
+    *agent_cell = Some(agent);
+    rec
+}
+
+// ---------- Relaxed mode ----------
+
+struct EpisodeMsg {
+    job_idx: usize,
+    seed: usize,
+    episode: usize,
+    transitions: Vec<Transition>,
+}
+
+/// Learner-side home of one job's agent between episode applications.
+struct LearnerSlot {
+    agent: Option<SacAgent>,
+    /// Next global episode index to apply — learners holding a later
+    /// episode wait on the paired condvar until it is their turn.
+    next_episode: usize,
+    failed: Option<String>,
+}
+
+/// Versioned policy weights broadcast from learners back to actors.
+struct PolicyCell {
+    version: u64,
+    snap: PolicySnapshot,
+}
+
+struct Bank {
+    slots: Vec<Mutex<LearnerSlot>>,
+    cvs: Vec<Condvar>,
+    policies: Vec<Mutex<Option<PolicyCell>>>,
+}
+
+impl Bank {
+    fn new(n: usize) -> Bank {
+        Bank {
+            slots: (0..n)
+                .map(|_| Mutex::new(LearnerSlot { agent: None, next_episode: 0, failed: None }))
+                .collect(),
+            cvs: (0..n).map(|_| Condvar::new()).collect(),
+            policies: (0..n).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Claim the job's agent once `episode` is the next to apply.
+    /// Returns `None` when the slot has failed (the message is skipped
+    /// but its turn is still consumed, so later holders don't block).
+    fn claim(&self, job_idx: usize, episode: usize) -> Option<SacAgent> {
+        let mut guard = self.slots[job_idx].lock();
+        loop {
+            if guard.failed.is_some() {
+                if guard.next_episode <= episode {
+                    guard.next_episode = episode + 1;
+                }
+                drop(guard);
+                self.cvs[job_idx].notify_all();
+                return None;
+            }
+            if guard.agent.is_some() && guard.next_episode == episode {
+                return guard.agent.take();
+            }
+            guard = self.cvs[job_idx].wait(guard);
+        }
+    }
+}
+
+struct RelaxedActorOut {
+    records: Vec<EpisodeRecord>,
+    oracle_token: u64,
+}
+
+fn run_round_relaxed(
+    jobs: Vec<ChunkJob>,
+    pool: &WorkPool,
+    cfg: &AsyncConfig,
+) -> Vec<Result<ChunkOut, String>> {
+    let bank = Arc::new(Bank::new(jobs.len()));
+    let (tx, rx) = channel::bounded::<EpisodeMsg>(cfg.channel_cap);
+
+    let mut learners = Vec::with_capacity(cfg.learners.max(1));
+    for _ in 0..cfg.learners.max(1) {
+        let rx = rx.clone();
+        let bank = Arc::clone(&bank);
+        learners.push(thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                let EpisodeMsg { job_idx, seed, episode, transitions } = msg;
+                let Some(agent) = bank.claim(job_idx, episode) else {
+                    continue;
+                };
+                let res = catch_unwind(AssertUnwindSafe(move || {
+                    let mut agent = agent;
+                    for t in transitions {
+                        // `observe` never advances the env-step counter
+                        // (that is `act`'s job in the sync loop), so
+                        // credit the actor's step explicitly before the
+                        // update gate looks at it.
+                        agent.advance_env_steps(1);
+                        agent.replay.push(t);
+                        agent.maybe_update();
+                    }
+                    agent
+                }));
+                let mut guard = bank.slots[job_idx].lock();
+                match res {
+                    Ok(agent) => {
+                        let snap = agent.policy_snapshot();
+                        guard.agent = Some(agent);
+                        guard.next_episode = episode + 1;
+                        drop(guard);
+                        let mut cell = bank.policies[job_idx].lock();
+                        let version = cell.as_ref().map_or(0, |c| c.version) + 1;
+                        *cell = Some(PolicyCell { version, snap });
+                        drop(cell);
+                    }
+                    Err(p) => {
+                        guard.failed = Some(format!(
+                            "learner died applying episode {episode} of seed {seed}: {}",
+                            panic_message(p)
+                        ));
+                        guard.next_episode = episode + 1;
+                        drop(guard);
+                    }
+                }
+                bank.cvs[job_idx].notify_all();
+            }
+        }));
+    }
+    drop(rx);
+
+    let panic_seed = cfg.panic_actor_for_test;
+    let indexed: Vec<(usize, ChunkJob)> = jobs.into_iter().enumerate().collect();
+    let actor_bank = Arc::clone(&bank);
+    let actor_results = pool.run_batch(indexed, move |(job_idx, job)| {
+        run_relaxed_actor(job_idx, job, &tx, &actor_bank, panic_seed)
+    });
+    // Actor closure (and the last Sender) dropped by run_batch: the
+    // channel closes, learners drain every accepted episode exactly
+    // once, then exit.
+    for h in learners {
+        let _ = h.join();
+    }
+
+    actor_results
+        .into_iter()
+        .enumerate()
+        .map(|(job_idx, res)| {
+            let out = res?;
+            let mut guard = bank.slots[job_idx].lock();
+            if let Some(msg) = guard.failed.take() {
+                return Err(msg);
+            }
+            match guard.agent.take() {
+                Some(agent) => Ok(ChunkOut {
+                    agent,
+                    records: out.records,
+                    oracle_token: out.oracle_token,
+                }),
+                None => Err(format!("async learners never returned the agent for job {job_idx}")),
+            }
+        })
+        .collect()
+}
+
+fn run_relaxed_actor(
+    job_idx: usize,
+    job: ChunkJob,
+    tx: &Sender<EpisodeMsg>,
+    bank: &Bank,
+    panic_seed: Option<usize>,
+) -> RelaxedActorOut {
+    let ChunkJob {
+        slot,
+        net,
+        df,
+        env,
+        energy,
+        search,
+        agent,
+        oracle_seed,
+        oracle_token,
+        start_episode,
+        count,
+        shared,
+    } = job;
+    if panic_seed == Some(slot) {
+        panic!("async actor {job_idx} (seed {slot}): injected failure before episode {start_episode}");
+    }
+    let sac_seed = search.sac.seed;
+    let env = chunk_env(net, df, env, energy, oracle_seed, &shared);
+    let mut coord = match agent {
+        Some(agent) => Coordinator::with_agent(env, agent, search),
+        None => Coordinator::new(env, search),
+    };
+    if oracle_token != 0 {
+        coord.env.restore_oracle_state(oracle_token);
+    }
+    let Coordinator { mut env, agent, .. } = coord;
+
+    // Hand the agent to the learner bank and publish the initial policy
+    // before any episode message can reference it.
+    let mut policy = agent.policy_snapshot();
+    let mut policy_version = 0u64;
+    {
+        let mut guard = bank.slots[job_idx].lock();
+        guard.agent = Some(agent);
+        guard.next_episode = start_episode;
+        drop(guard);
+        *bank.policies[job_idx].lock() = Some(PolicyCell { version: 0, snap: policy.clone() });
+        bank.cvs[job_idx].notify_all();
+    }
+
+    let mut records = Vec::with_capacity(count);
+    for ep in start_episode..start_episode + count {
+        // Pick up the freshest learner broadcast, if any.
+        {
+            let cell = bank.policies[job_idx].lock();
+            if let Some(c) = cell.as_ref() {
+                if c.version > policy_version {
+                    policy_version = c.version;
+                    policy = c.snap.clone();
+                }
+            }
+        }
+        let mut rng = Rng::new(seed_stream(sac_seed ^ ROLLOUT_STREAM_SALT, ep as u64));
+        let mut state = env.reset();
+        let mut rec = EpisodeRecord {
+            episode: ep,
+            steps: 0,
+            total_reward: 0.0,
+            energy_curve: Vec::new(),
+            accuracy_curve: Vec::new(),
+            best: None,
+        };
+        let mut transitions = Vec::new();
+        loop {
+            let action = policy.act(&state, &mut rng);
+            let (next, reward, done) = env.step(&action);
+            transitions.push(Transition::from_f64(&state, &action, reward, &next, done));
+            state = next;
+            rec.steps += 1;
+            rec.total_reward += reward;
+            rec.energy_curve.push(env.last_energy());
+            if let Some(b) = env.best() {
+                rec.accuracy_curve.push(b.accuracy);
+            } else {
+                rec.accuracy_curve.push(f64::NAN);
+            }
+            if done {
+                break;
+            }
+        }
+        rec.best = env.best().cloned();
+        records.push(rec);
+        if tx.send(EpisodeMsg { job_idx, seed: slot, episode: ep, transitions }).is_err() {
+            panic!("async actor {job_idx} (seed {slot}): all learners gone");
+        }
+    }
+    RelaxedActorOut { records, oracle_token: env.oracle_state_token() }
+}

@@ -13,6 +13,13 @@
 //!   concurrently, merges their episode streams into a NaN-safe Pareto
 //!   archive over (energy, accuracy, area), and periodically snapshots
 //!   the whole fleet so a killed run resumes bit-identically.
+//! - [`actor_learner`] is the opt-in async execution engine for
+//!   orchestrator rounds: cheap rollout actors feed a bounded replay
+//!   channel drained by dedicated SAC learner threads, with learner-side
+//!   weight versions broadcast back to the actors (`edc search
+//!   --async-actors N --learners M`). Lockstep mode is bit-identical to
+//!   the synchronous path; relaxed mode trades update order for
+//!   throughput (docs/determinism.md §10).
 //! - [`service`] is the `edc serve` daemon: a long-running process that
 //!   accepts search/sweep job submissions over a local newline-delimited
 //!   JSON socket, multiplexes concurrent orchestrations over one
@@ -22,6 +29,7 @@
 //! - [`checkpoint`] is the JSON persistence layer for single-search
 //!   outcomes and orchestration snapshots (format: docs/checkpoints.md).
 
+pub mod actor_learner;
 pub mod checkpoint;
 pub mod orchestrator;
 pub mod service;

@@ -41,6 +41,7 @@
 //! serialize/deserialize cycle (f32/f64 survive the JSON round-trip
 //! exactly; see `rl::sac`'s checkpoint serialization notes).
 
+use super::actor_learner::{self, AsyncConfig};
 use super::checkpoint::{episode_from_json, episode_to_json, state_from_json, state_to_json};
 use super::sweep::run_pool;
 use super::{fold_best, Coordinator, EpisodeRecord, SearchConfig, SearchOutcome};
@@ -298,32 +299,56 @@ pub struct Orchestrator {
     cache_seed_keys: BTreeSet<Vec<SlotKey>>,
 }
 
-struct ChunkJob {
-    slot: usize,
+/// One unit of pool work: advance seed `slot` by `count` episodes.
+/// `pub(crate)` so `coordinator::actor_learner` can execute the same
+/// jobs through its actor→learner pipeline.
+pub(crate) struct ChunkJob {
+    pub(crate) slot: usize,
+    pub(crate) net: Network,
+    pub(crate) df: Dataflow,
+    pub(crate) env: EnvConfig,
+    pub(crate) energy: EnergyConfig,
+    pub(crate) search: SearchConfig,
+    pub(crate) agent: Option<SacAgent>,
+    pub(crate) oracle_seed: u64,
+    pub(crate) oracle_token: u64,
+    pub(crate) start_episode: usize,
+    pub(crate) count: usize,
+    pub(crate) shared: Option<SharedCostCache>,
+}
+
+pub(crate) struct ChunkOut {
+    pub(crate) agent: SacAgent,
+    pub(crate) records: Vec<EpisodeRecord>,
+    pub(crate) oracle_token: u64,
+}
+
+/// Build a chunk's environment exactly as the synchronous path does —
+/// fresh surrogate oracle from the seed, shared or private cache. The
+/// single construction point shared by [`run_chunk`] and the async
+/// actors, so the two modes cannot drift on env setup.
+pub(crate) fn chunk_env(
     net: Network,
     df: Dataflow,
     env: EnvConfig,
     energy: EnergyConfig,
-    search: SearchConfig,
-    agent: Option<SacAgent>,
     oracle_seed: u64,
-    oracle_token: u64,
-    start_episode: usize,
-    count: usize,
-    shared: Option<SharedCostCache>,
-}
-
-struct ChunkOut {
-    agent: SacAgent,
-    records: Vec<EpisodeRecord>,
-    oracle_token: u64,
+    shared: &Option<SharedCostCache>,
+) -> CompressionEnv {
+    let oracle = SurrogateOracle::new(&net, oracle_seed);
+    match shared {
+        Some(cache) => {
+            CompressionEnv::with_shared_cache(net, df, Box::new(oracle), env, energy, cache)
+        }
+        None => CompressionEnv::new(net, df, Box::new(oracle), env, energy),
+    }
 }
 
 /// Advance one seed by `count` episodes. Rebuilds the environment from
 /// scratch and realigns the oracle stream, so the result is independent
 /// of which worker runs it and of previous chunk boundaries (the shared
 /// cache only memoizes pure functions, so it is scheduling-neutral too).
-fn run_chunk(job: ChunkJob) -> ChunkOut {
+pub(crate) fn run_chunk(job: ChunkJob) -> ChunkOut {
     let ChunkJob {
         net,
         df,
@@ -338,13 +363,7 @@ fn run_chunk(job: ChunkJob) -> ChunkOut {
         shared,
         slot: _,
     } = job;
-    let oracle = SurrogateOracle::new(&net, oracle_seed);
-    let env = match &shared {
-        Some(cache) => {
-            CompressionEnv::with_shared_cache(net, df, Box::new(oracle), env, energy, cache)
-        }
-        None => CompressionEnv::new(net, df, Box::new(oracle), env, energy),
-    };
+    let env = chunk_env(net, df, env, energy, oracle_seed, &shared);
     let mut coord = match agent {
         Some(agent) => Coordinator::with_agent(env, agent, search),
         None => Coordinator::new(env, search),
@@ -542,6 +561,40 @@ impl Orchestrator {
     pub fn run_on(&mut self, pool: &WorkPool) -> Result<OrchestrationResult> {
         while !self.run_round_on(pool)? {}
         Ok(self.result())
+    }
+
+    /// One round through the actor/learner pipeline
+    /// (`coordinator::actor_learner`): rollout actors on `pool` feed a
+    /// bounded replay channel drained by dedicated learner threads, then
+    /// every job drains back into the *same* merge/archive/snapshot code
+    /// as the synchronous path — the boundary (v3 snapshots, `--resume`,
+    /// serve integration) is untouched by construction. In lockstep
+    /// mode the round is bit-identical to [`run_round_on`]; in relaxed
+    /// mode update order is scheduling-dependent (see
+    /// docs/determinism.md §10).
+    ///
+    /// [`run_round_on`]: Orchestrator::run_round_on
+    pub fn run_round_async_on(&mut self, pool: &WorkPool, cfg: &AsyncConfig) -> Result<bool> {
+        self.run_round_with(|jobs| actor_learner::run_round_jobs(jobs, pool, cfg))
+    }
+
+    /// Run async rounds to completion on a caller-owned pool (see
+    /// [`run_round_async_on`](Orchestrator::run_round_async_on)).
+    pub fn run_async_on(
+        &mut self,
+        pool: &WorkPool,
+        cfg: &AsyncConfig,
+    ) -> Result<OrchestrationResult> {
+        while !self.run_round_async_on(pool, cfg)? {}
+        Ok(self.result())
+    }
+
+    /// Run async rounds to completion on a pool sized to
+    /// `cfg.actors` rollout lanes (the `edc search --async-actors N`
+    /// entry point; learner threads are extra, spawned per round).
+    pub fn run_async(&mut self, cfg: &AsyncConfig) -> Result<OrchestrationResult> {
+        let pool = WorkPool::new(cfg.actors);
+        self.run_async_on(&pool, cfg)
     }
 
     /// Replace this orchestration's fleet cache with a caller-owned one

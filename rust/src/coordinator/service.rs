@@ -59,6 +59,7 @@
 //! std::fs::remove_dir_all(&dir).ok();
 //! ```
 
+use super::actor_learner::AsyncConfig;
 use super::orchestrator::{self, OrchestrationResult, Orchestrator, OrchestratorSpec};
 use super::sweep::{self, SweepSpec};
 use super::SearchOutcome;
@@ -136,6 +137,13 @@ pub struct SearchJobSpec {
     pub chunk: usize,
     pub max_steps: usize,
     pub dataflows: Vec<Dataflow>,
+    /// Rollout actors of the async actor/learner engine; 0 (default)
+    /// runs the synchronous path. Execution-only: not part of the spec
+    /// fingerprint, so a snapshot drained by either mode resumes under
+    /// the other (a rescanned `--resume-dir` job finishes synchronously).
+    pub async_actors: usize,
+    pub learners: usize,
+    pub lockstep: bool,
 }
 
 impl SearchJobSpec {
@@ -260,6 +268,8 @@ impl JobSpec {
             "search" => {
                 let net = req.str_or("net", "lenet5");
                 ensure!(zoo::by_name(&net).is_some(), "unknown net '{net}'");
+                let async_actors = usize::try_from(field_u64(req, "async_actors", 0)?)
+                    .map_err(|_| anyhow!("field 'async_actors' is out of range"))?;
                 let spec = SearchJobSpec {
                     net,
                     seeds: field_min1(req, "seeds", 4)?,
@@ -268,6 +278,9 @@ impl JobSpec {
                     chunk: field_min1(req, "chunk", 2)?,
                     max_steps: field_min1(req, "steps", EnvConfig::default().max_steps)?,
                     dataflows: parse_dataflows_field(req)?,
+                    async_actors,
+                    learners: field_min1(req, "learners", 1)?,
+                    lockstep: field_u64(req, "lockstep", 0)? != 0,
                 };
                 Ok(JobSpec::Search(spec))
             }
@@ -944,6 +957,14 @@ impl ServiceInner {
         let cache = self.caches.for_network(&orch.spec.net, &orch.spec.energy);
         orch.set_shared_cache(cache)?;
         self.update_search_progress(id, &orch);
+        // Async execution is per-round, so the cancel/shutdown
+        // drain-to-snapshot protocol is untouched: every round — sync or
+        // async — ends with the same merge and the same v3 snapshot.
+        let acfg = (spec.async_actors > 0).then(|| {
+            let mut c = AsyncConfig::new(spec.async_actors, spec.learners);
+            c.lockstep = spec.lockstep;
+            c
+        });
         loop {
             if cancel.load(Ordering::SeqCst) {
                 orch.save_snapshot(snap)?;
@@ -953,7 +974,10 @@ impl ServiceInner {
                 orch.save_snapshot(snap)?;
                 return Ok(Verdict::Suspended);
             }
-            let done = orch.run_round_on(&self.pool)?;
+            let done = match &acfg {
+                Some(c) => orch.run_round_async_on(&self.pool, c)?,
+                None => orch.run_round_on(&self.pool)?,
+            };
             self.update_search_progress(id, &orch);
             if done {
                 break;
@@ -1084,6 +1108,11 @@ fn read_job_spec(path: &Path, is_sweep: bool) -> Result<JobSpec> {
             chunk: h.chunk_episodes,
             max_steps: h.max_steps,
             dataflows: h.dataflows,
+            // Snapshot headers carry no execution knobs; a rescanned job
+            // finishes on the synchronous path (bit-valid either way).
+            async_actors: 0,
+            learners: 1,
+            lockstep: false,
         }))
     }
 }

@@ -3,7 +3,11 @@
 use crate::util::rng::Rng;
 
 /// One environment transition.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares every component bitwise-as-f32-equality; the
+/// async-search tests use it to assert actor-collected replay streams
+/// match the sync oracle's transition-for-transition.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Transition {
     pub state: Vec<f32>,
     pub action: Vec<f32>,

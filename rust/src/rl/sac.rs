@@ -265,6 +265,31 @@ impl SacAgent {
         self.sample(state, true)
     }
 
+    /// Freeze the current behaviour policy for a detached rollout actor:
+    /// the actor network weights plus the warmup bookkeeping that
+    /// [`SacAgent::act`] consults. The relaxed async mode broadcasts
+    /// these to actors as versioned weight updates; the agent's own RNG
+    /// stays with the learner (actors draw from per-episode streams).
+    pub fn policy_snapshot(&self) -> PolicySnapshot {
+        PolicySnapshot {
+            actor: self.actor.clone(),
+            env_steps: self.env_steps,
+            warmup_steps: self.cfg.warmup_steps,
+            warmup_action_hi: self.cfg.warmup_action_hi,
+            state_dim: self.state_dim,
+            action_dim: self.action_dim,
+        }
+    }
+
+    /// Credit `n` environment steps taken on the agent's behalf by a
+    /// detached rollout actor. [`SacAgent::observe`] never touches the
+    /// step counter (that is `act`'s job), so a learner consuming
+    /// actor-collected transitions must advance it explicitly or the
+    /// warmup/update gating in [`SacAgent::maybe_update`] would stall.
+    pub fn advance_env_steps(&mut self, n: usize) {
+        self.env_steps += n;
+    }
+
     fn sample(&mut self, state: &[f64], deterministic: bool) -> Vec<f64> {
         let x = Tensor::from_vec(
             &[1, self.state_dim],
@@ -957,6 +982,50 @@ impl SacAgent {
         }
         agent.replay = ReplayBuffer::from_parts(agent.cfg.replay_capacity, data, head);
         Some(agent)
+    }
+}
+
+/// A detached copy of the behaviour policy, handed to rollout actors by
+/// the relaxed async search mode (`coordinator::actor_learner`). Carries
+/// exactly what action selection reads — the actor network and the
+/// warmup bookkeeping — and nothing a gradient update needs, so cloning
+/// one per weight broadcast is cheap next to a full agent.
+#[derive(Clone)]
+pub struct PolicySnapshot {
+    actor: Mlp,
+    env_steps: usize,
+    warmup_steps: usize,
+    warmup_action_hi: f64,
+    state_dim: usize,
+    action_dim: usize,
+}
+
+impl PolicySnapshot {
+    /// Select an action, mirroring [`SacAgent::act`] — random during
+    /// warmup, then a squashed-Gaussian sample from the frozen actor —
+    /// with the random draws taken from the caller's `rng` (actors use
+    /// decorrelated per-episode streams, not the learner's).
+    pub fn act(&mut self, state: &[f64], rng: &mut Rng) -> Vec<f64> {
+        assert_eq!(state.len(), self.state_dim, "state dim mismatch");
+        self.env_steps += 1;
+        if self.env_steps <= self.warmup_steps {
+            let hi = self.warmup_action_hi;
+            return (0..self.action_dim).map(|_| rng.range(-1.0, hi)).collect();
+        }
+        let x = Tensor::from_vec(
+            &[1, self.state_dim],
+            state.iter().map(|&v| v as f32).collect(),
+        );
+        let out = self.actor.forward(&x);
+        let a = self.action_dim;
+        let mut action = Vec::with_capacity(a);
+        for d in 0..a {
+            let mean = out.data()[d];
+            let log_std = out.data()[a + d].clamp(LOG_STD_MIN, LOG_STD_MAX);
+            let eps = rng.normal() as f32;
+            action.push(((mean + log_std.exp() * eps).tanh()) as f64);
+        }
+        action
     }
 }
 

@@ -1,0 +1,288 @@
+//! Bounded multi-producer/multi-consumer channel on the [`util::sync`]
+//! shim, so the actor→learner protocol in `coordinator::actor_learner`
+//! is model-checkable under loom (`tests/loom_models.rs` explores the
+//! send/recv/close lifecycle on these exact types).
+//!
+//! Semantics, chosen for the async search pipeline:
+//!
+//! - **Bounded + blocking.** `send` blocks while the queue is at
+//!   capacity — backpressure from slow learners propagates to actors
+//!   instead of growing an unbounded replay backlog.
+//! - **FIFO.** Receivers observe messages in send order. Combined with
+//!   the actors' in-order per-seed sends, this is what lets learners
+//!   wait on "episode k of seed s" without deadlock.
+//! - **Close = last sender gone.** `recv` drains whatever was accepted,
+//!   then reports [`RecvError`] exactly once per receiver; a message
+//!   accepted by `send` is never dropped by shutdown. `send` fails with
+//!   the value handed back once every receiver is gone.
+//!
+//! One mutex guards the queue and both endpoint counts; one condvar
+//! (always `notify_all`) covers both the not-full and not-empty
+//! conditions. Two condvars would wake fewer threads, but a single one
+//! keeps the protocol inside what the vendored loom explorer models
+//! faithfully, and channel critical sections are a push/pop — contention
+//! is not the bottleneck next to an SAC update.
+//!
+//! [`util::sync`]: super::sync
+
+use std::collections::VecDeque;
+
+use super::sync::{Arc, Condvar, Mutex};
+
+/// The value could not be delivered: every [`Receiver`] has been
+/// dropped. The undelivered message is handed back.
+#[derive(Debug)]
+pub struct SendError<T>(pub T);
+
+impl<T> std::fmt::Display for SendError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "channel send failed: all receivers dropped")
+    }
+}
+
+/// The channel is closed (every [`Sender`] dropped) and fully drained.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "channel recv failed: closed and drained")
+    }
+}
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    receivers: usize,
+}
+
+struct Shared<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+/// Sending half of a [`bounded`] channel. Clone freely — one per actor.
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half of a [`bounded`] channel. Clone freely — one per
+/// learner; each accepted message is observed by exactly one receiver.
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a bounded FIFO channel with room for `cap` in-flight messages
+/// (`cap` is clamped to at least 1, like `WorkPool::new`).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner {
+            queue: VecDeque::new(),
+            cap: cap.max(1),
+            senders: 1,
+            receivers: 1,
+        }),
+        cv: Condvar::new(),
+    });
+    (Sender { shared: Arc::clone(&shared) }, Receiver { shared })
+}
+
+impl<T> Sender<T> {
+    /// Deliver `value`, blocking while the channel is full. Fails only
+    /// when every receiver is gone, handing the value back; a returned
+    /// `Ok` means some receiver will observe the message (or it is
+    /// drained at close — accepted messages are never dropped).
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut inner = self.shared.inner.lock();
+        loop {
+            if inner.receivers == 0 {
+                return Err(SendError(value));
+            }
+            if inner.queue.len() < inner.cap {
+                inner.queue.push_back(value);
+                drop(inner);
+                self.shared.cv.notify_all();
+                return Ok(());
+            }
+            inner = self.shared.cv.wait(inner);
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Take the oldest message, blocking while the channel is empty.
+    /// Fails once the channel is closed (all senders dropped) *and*
+    /// drained, so shutdown loses nothing that `send` accepted.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut inner = self.shared.inner.lock();
+        loop {
+            if let Some(v) = inner.queue.pop_front() {
+                drop(inner);
+                self.shared.cv.notify_all();
+                return Ok(v);
+            }
+            if inner.senders == 0 {
+                return Err(RecvError);
+            }
+            inner = self.shared.cv.wait(inner);
+        }
+    }
+
+    /// Messages currently queued (diagnostic; racy by nature).
+    pub fn len(&self) -> usize {
+        self.shared.inner.lock().queue.len()
+    }
+
+    /// Whether the queue is currently empty (diagnostic; racy by nature).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Sender<T> {
+        self.shared.inner.lock().senders += 1;
+        Sender { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Receiver<T> {
+        self.shared.inner.lock().receivers += 1;
+        Receiver { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut inner = self.shared.inner.lock();
+        inner.senders -= 1;
+        let closed = inner.senders == 0;
+        drop(inner);
+        if closed {
+            // Wake receivers parked on an empty queue so they observe
+            // the close instead of sleeping forever.
+            self.shared.cv.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut inner = self.shared.inner.lock();
+        inner.receivers -= 1;
+        let orphaned = inner.receivers == 0;
+        drop(inner);
+        if orphaned {
+            // Wake senders parked on a full queue so they fail fast.
+            self.shared.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sync::thread;
+
+    #[test]
+    fn fifo_order_within_capacity() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<i32> = std::iter::from_fn(|| rx.recv().ok()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_blocks_on_full_until_a_recv_frees_a_slot() {
+        let (tx, rx) = bounded(1);
+        tx.send(1u32).unwrap();
+        let h = thread::spawn(move || {
+            // Blocks until the main thread pops the first message.
+            tx.send(2u32).unwrap();
+        });
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        h.join().unwrap();
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn close_drains_accepted_messages_then_errors() {
+        let (tx, rx) = bounded(4);
+        tx.send("a").unwrap();
+        tx.send("b").unwrap();
+        drop(tx);
+        assert_eq!(rx.recv().unwrap(), "a");
+        assert_eq!(rx.recv().unwrap(), "b");
+        assert_eq!(rx.recv(), Err(RecvError));
+        // The close is sticky: every subsequent recv fails too.
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_fails_with_value_once_all_receivers_are_gone() {
+        let (tx, rx) = bounded(2);
+        drop(rx);
+        let err = tx.send(41u64).unwrap_err();
+        assert_eq!(err.0, 41);
+    }
+
+    #[test]
+    fn sender_parked_on_full_queue_errors_when_receiver_drops() {
+        let (tx, rx) = bounded(1);
+        tx.send(0u8).unwrap();
+        let h = thread::spawn(move || tx.send(1u8));
+        // Give the sender a moment to park on the full queue, then
+        // drop the only receiver; the parked send must fail, not hang.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(rx);
+        let err = h.join().unwrap().unwrap_err();
+        assert_eq!(err.0, 1);
+    }
+
+    #[test]
+    fn mpmc_delivers_every_message_exactly_once() {
+        const SENDERS: usize = 4;
+        const RECEIVERS: usize = 3;
+        const PER_SENDER: usize = 100;
+        let (tx, rx) = bounded(8);
+        let mut producers = Vec::new();
+        for s in 0..SENDERS {
+            let tx = tx.clone();
+            producers.push(thread::spawn(move || {
+                for i in 0..PER_SENDER {
+                    tx.send(s * PER_SENDER + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut consumers = Vec::new();
+        for _ in 0..RECEIVERS {
+            let rx = rx.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<usize> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..SENDERS * PER_SENDER).collect();
+        assert_eq!(all, expect, "every message observed by exactly one receiver");
+    }
+}

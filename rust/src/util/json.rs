@@ -87,8 +87,20 @@ impl Json {
     }
 
     pub fn to_f64s(&self) -> Option<Vec<f64>> {
-        self.as_arr()
-            .map(|a| a.iter().filter_map(|j| j.as_f64()).collect())
+        let a = self.as_arr()?;
+        let mut out = Vec::with_capacity(a.len());
+        for j in a {
+            match j {
+                Json::Num(v) => out.push(*v),
+                // The writer emits non-finite numbers as `null`; restore
+                // them as NaN so float arrays round-trip length-preserving
+                // (accuracy curves carry NaN before the first admissible
+                // point — dropping entries here silently shortened them).
+                Json::Null => out.push(f64::NAN),
+                _ => return None,
+            }
+        }
+        Some(out)
     }
 }
 
@@ -421,6 +433,23 @@ mod tests {
     fn f64s_helpers() {
         let j = Json::from_f64s(&[1.0, 2.0, 3.0]);
         assert_eq!(j.to_f64s().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn f64s_round_trip_preserves_nan_positions() {
+        let orig = [f64::NAN, 1.5, f64::NAN, 2.0];
+        let text = Json::from_f64s(&orig).to_string();
+        assert_eq!(text, "[null,1.5,null,2]");
+        let back = parse(&text).unwrap().to_f64s().unwrap();
+        assert_eq!(back.len(), orig.len());
+        assert!(back[0].is_nan() && back[2].is_nan());
+        assert_eq!((back[1], back[3]), (1.5, 2.0));
+    }
+
+    #[test]
+    fn f64s_rejects_non_numeric_entries() {
+        assert!(parse(r#"[1,"x"]"#).unwrap().to_f64s().is_none());
+        assert!(parse("[true]").unwrap().to_f64s().is_none());
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Async actor/learner search vs the synchronous oracle.
+//!
+//! The async engine (`coordinator::actor_learner`) plugs into the same
+//! round/merge/snapshot machinery as the synchronous path, so two
+//! properties must hold:
+//!
+//! 1. **Lockstep mode is the sync run, bit for bit.** With `lockstep`
+//!    on, each actor ships its whole agent to a learner at every
+//!    `maybe_update()` point and blocks until it comes back, so the
+//!    per-seed mutation sequence — agent RNG draws, oracle stream,
+//!    replay contents — is identical to the synchronous loop for ANY
+//!    actor/learner split. We assert bit-identical results AND
+//!    byte-identical snapshots at 1×1 and at N×M.
+//!
+//! 2. **Relaxed mode keeps archive validity.** Update order is allowed
+//!    to differ, but the final archive must still contain only finite,
+//!    mutually non-dominated points whose (energy, area) re-evaluate
+//!    exactly through a fresh `IncrementalEvaluator` from the stored
+//!    (Q, P) state.
+
+use edcompress::coordinator::actor_learner::AsyncConfig;
+use edcompress::coordinator::orchestrator::{
+    OrchestrationResult, Orchestrator, OrchestratorSpec, ParetoPoint,
+};
+use edcompress::coordinator::SearchConfig;
+use edcompress::dataflow::Dataflow;
+use edcompress::energy::cache::IncrementalEvaluator;
+use edcompress::model::zoo;
+use edcompress::rl::sac::SacConfig;
+
+fn spec(seeds: usize) -> OrchestratorSpec {
+    let mut spec = OrchestratorSpec::new(zoo::lenet5(), seeds, 29);
+    spec.dataflows = vec![Dataflow::XY, Dataflow::FXFY];
+    spec.env.max_steps = 6;
+    spec.chunk_episodes = 2;
+    spec.search = SearchConfig {
+        episodes: 6,
+        sac: SacConfig {
+            hidden: vec![24, 24],
+            warmup_steps: 12,
+            batch_size: 12,
+            updates_per_step: 1,
+            ..SacConfig::default()
+        },
+        verbose: false,
+    };
+    spec
+}
+
+fn assert_results_bit_identical(a: &OrchestrationResult, b: &OrchestrationResult) {
+    assert_eq!(a.archive.len(), b.archive.len(), "frontier sizes differ");
+    for (x, y) in a.archive.points().iter().zip(b.archive.points()) {
+        assert_eq!(x.energy.to_bits(), y.energy.to_bits(), "frontier energy differs");
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "frontier accuracy differs");
+        assert_eq!(x.area.to_bits(), y.area.to_bits(), "frontier area differs");
+        assert_eq!(x.seed_index, y.seed_index);
+        assert_eq!(x.episode, y.episode);
+        assert_eq!(x.step, y.step);
+        assert_eq!(x.state, y.state, "frontier (Q, P) state differs");
+    }
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (oa, ob) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(oa.dataflow, ob.dataflow);
+        assert_eq!(oa.episodes.len(), ob.episodes.len());
+        for (ea, eb) in oa.episodes.iter().zip(&ob.episodes) {
+            assert_eq!(ea.steps, eb.steps, "episode {} lengths differ", ea.episode);
+            assert_eq!(
+                ea.total_reward.to_bits(),
+                eb.total_reward.to_bits(),
+                "episode {} rewards differ",
+                ea.episode
+            );
+            for (x, y) in ea.energy_curve.iter().zip(&eb.energy_curve) {
+                assert_eq!(x.to_bits(), y.to_bits(), "episode {} energy curve differs", ea.episode);
+            }
+            for (x, y) in ea.accuracy_curve.iter().zip(&eb.accuracy_curve) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "episode {} accuracy curve differs",
+                    ea.episode
+                );
+            }
+        }
+    }
+}
+
+/// Run the sync oracle and a lockstep async run side by side, returning
+/// (result, final snapshot text) for each.
+fn sync_vs_lockstep(
+    seeds: usize,
+    actors: usize,
+    learners: usize,
+) -> ((OrchestrationResult, String), (OrchestrationResult, String)) {
+    let mut sync = Orchestrator::new(spec(seeds));
+    let sync_res = sync.run().expect("sync run failed");
+    let sync_snap = sync.snapshot_to_json().to_string();
+
+    let mut cfg = AsyncConfig::new(actors, learners);
+    cfg.lockstep = true;
+    let mut asy = Orchestrator::new(spec(seeds));
+    let asy_res = asy.run_async(&cfg).expect("async lockstep run failed");
+    let asy_snap = asy.snapshot_to_json().to_string();
+
+    ((sync_res, sync_snap), (asy_res, asy_snap))
+}
+
+/// The bit-identity oracle at minimal concurrency: one actor feeding
+/// one learner over the bounded channel replays the sync RNG and
+/// oracle streams exactly.
+#[test]
+fn lockstep_single_actor_single_learner_matches_sync_bit_for_bit() {
+    let ((sync_res, sync_snap), (asy_res, asy_snap)) = sync_vs_lockstep(2, 1, 1);
+    assert_results_bit_identical(&sync_res, &asy_res);
+    assert_eq!(sync_snap, asy_snap, "final snapshots must be byte-identical");
+}
+
+/// Lockstep determinism must not depend on the actor/learner split:
+/// with more actors than learners (and more seeds than either), the
+/// per-seed streams are still bit-identical to the sync run.
+#[test]
+fn lockstep_is_bit_identical_for_any_actor_learner_split() {
+    let ((sync_res, sync_snap), (asy_res, asy_snap)) = sync_vs_lockstep(3, 3, 2);
+    assert_results_bit_identical(&sync_res, &asy_res);
+    assert_eq!(sync_snap, asy_snap, "final snapshots must be byte-identical");
+}
+
+fn dominates(p: &ParetoPoint, q: &ParetoPoint) -> bool {
+    p.energy <= q.energy
+        && p.area <= q.area
+        && p.accuracy >= q.accuracy
+        && (p.energy < q.energy || p.area < q.area || p.accuracy > q.accuracy)
+}
+
+/// Relaxed mode gives up update-order determinism but NOT archive
+/// validity: every surviving point is finite, no point dominates
+/// another, and the stored objectives are real — re-evaluating each
+/// point's (Q, P) state through a fresh `IncrementalEvaluator` under
+/// the run's own energy config reproduces (energy, area) bit for bit.
+#[test]
+fn relaxed_archive_is_pareto_valid_finite_and_reevaluates_exactly() {
+    let s = spec(3);
+    let net = s.net.clone();
+    let energy_cfg = s.energy.clone();
+
+    let cfg = AsyncConfig::new(3, 2);
+    assert!(!cfg.lockstep, "relaxed mode must be the AsyncConfig default");
+    let mut orch = Orchestrator::new(s);
+    let res = orch.run_async(&cfg).expect("relaxed async run failed");
+
+    assert!(res.failures.is_empty(), "relaxed run reported failures: {:?}", res.failures);
+    let points = res.archive.points();
+    assert!(!points.is_empty(), "relaxed run produced an empty archive");
+
+    for p in points {
+        assert!(
+            p.energy.is_finite() && p.area.is_finite() && p.accuracy.is_finite(),
+            "non-finite point leaked into the archive: {} {} {}",
+            p.energy,
+            p.area,
+            p.accuracy
+        );
+    }
+    for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i != j {
+                assert!(
+                    !dominates(p, q),
+                    "archive point {i} dominates point {j}: not a valid frontier"
+                );
+            }
+        }
+    }
+
+    for p in points {
+        let df = Dataflow::parse(&p.dataflow)
+            .unwrap_or_else(|| panic!("unparseable dataflow label {:?}", p.dataflow));
+        let mut ev = IncrementalEvaluator::new(&net, df, &energy_cfg);
+        let (e, a) = ev.evaluate(&net, &p.state, &energy_cfg);
+        assert_eq!(
+            e.to_bits(),
+            p.energy.to_bits(),
+            "stored energy does not re-evaluate exactly for seed {} episode {}",
+            p.seed_index,
+            p.episode
+        );
+        assert_eq!(
+            a.to_bits(),
+            p.area.to_bits(),
+            "stored area does not re-evaluate exactly for seed {} episode {}",
+            p.seed_index,
+            p.episode
+        );
+    }
+}

@@ -152,6 +152,74 @@ fn shared_cache_recovers_from_poisoned_shard_mid_computation() {
 }
 
 #[test]
+fn panicking_async_actor_fails_only_its_job_and_leaves_a_resumable_snapshot() {
+    use edcompress::coordinator::actor_learner::AsyncConfig;
+    use edcompress::coordinator::orchestrator::{Orchestrator, OrchestratorSpec};
+    use edcompress::coordinator::SearchConfig;
+    use edcompress::dataflow::Dataflow;
+    use edcompress::model::zoo;
+    use edcompress::rl::sac::SacConfig;
+    use edcompress::util::pool::WorkPool;
+
+    let spec = || {
+        let mut spec = OrchestratorSpec::new(zoo::lenet5(), 3, 43);
+        spec.dataflows = vec![Dataflow::XY, Dataflow::FXFY];
+        spec.env.max_steps = 6;
+        spec.chunk_episodes = 2;
+        spec.search = SearchConfig {
+            episodes: 6,
+            sac: SacConfig {
+                hidden: vec![24, 24],
+                warmup_steps: 12,
+                batch_size: 12,
+                updates_per_step: 1,
+                ..SacConfig::default()
+            },
+            verbose: false,
+        };
+        spec
+    };
+    let dir = std::env::temp_dir().join("edc_fail_async");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("async_killed.json");
+
+    // One async round with an injected panic in seed 1's rollout actor.
+    {
+        let mut orch = Orchestrator::new(spec());
+        orch.snapshot_path = Some(path.clone());
+        let pool = WorkPool::new(3);
+        let mut cfg = AsyncConfig::new(3, 2);
+        cfg.panic_actor_for_test = Some(1);
+        let done = orch.run_round_async_on(&pool, &cfg).expect("async round errored");
+        assert!(!done, "budget too small: finished before the kill point");
+        // The panic surfaces as THAT job's error, naming the actor.
+        let msg = orch.slots[1].failed.clone().expect("injected panic not recorded on seed 1");
+        assert!(msg.contains("async actor"), "error does not name the actor: {msg}");
+        assert!(msg.contains("(seed 1)"), "error does not name the seed: {msg}");
+        assert!(msg.contains("injected failure"), "panic payload lost: {msg}");
+        // ...and is contained: the other actors and the learners drained
+        // their episodes into the round's snapshot as usual.
+        assert!(orch.slots[0].failed.is_none() && orch.slots[2].failed.is_none());
+        assert_eq!(orch.slots[0].episodes_done, 2);
+        assert_eq!(orch.slots[2].episodes_done, 2);
+    } // dropped: in-memory agents are lost, only the snapshot remains
+
+    // The snapshot the failed round drained to resumes — in plain sync
+    // mode — and the healthy seeds finish their budget.
+    let mut resumed =
+        Orchestrator::resume(&path, spec()).expect("async-round snapshot did not resume");
+    let res = resumed.run().expect("resumed run failed");
+    assert_eq!(res.failures.len(), 1, "exactly one seed failed: {:?}", res.failures);
+    assert_eq!(res.failures[0].0, 1, "the failure must belong to the injected seed");
+    assert!(res.failures[0].1.contains("async actor 1"), "resumed failure lost the actor id");
+    assert_eq!(res.outcomes[0].episodes.len(), 6);
+    assert!(res.outcomes[1].episodes.is_empty(), "failed seed must not fabricate episodes");
+    assert_eq!(res.outcomes[2].episodes.len(), 6);
+    assert!(!res.archive.is_empty(), "healthy seeds should still populate the archive");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn env_rejects_wrong_action_length() {
     use edcompress::dataflow::Dataflow;
     use edcompress::energy::EnergyConfig;

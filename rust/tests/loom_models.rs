@@ -27,6 +27,7 @@ use edcompress::dataflow::Dataflow;
 use edcompress::energy::cache::{SharedCostCache, SlotKey};
 use edcompress::energy::EnergyConfig;
 use edcompress::model::zoo;
+use edcompress::util::channel;
 use edcompress::util::pool::WorkPool;
 use edcompress::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use edcompress::util::sync::{thread, Arc, Condvar, Mutex};
@@ -144,6 +145,81 @@ fn shared_cache_poisoned_shard_recovers_mid_computation() {
         let after = cost_bits(&cache.layer_cost(&net, &cfg, 0, Dataflow::XY, key));
         assert_eq!(before, theirs);
         assert_eq!(before, after);
+    });
+}
+
+// ---------- util::channel: the actor -> learner replay stream ----------
+
+/// The async search engine's transition stream, on the real channel.
+///
+/// Mirrors `coordinator::actor_learner`'s shutdown protocol: actors
+/// send episodes over a bounded `util::channel` and drop their senders
+/// when the round's rollouts end; learners `recv` until the channel
+/// reports closed-and-drained, then race to perform the single
+/// drain-to-snapshot step of round assembly. Three invariants,
+/// whatever the interleaving:
+///
+/// 1. every *accepted* send (one that returned `Ok`) is delivered —
+///    shutdown-while-sending loses nothing that was accepted;
+/// 2. no message is observed by two learners (MPMC exactly-once);
+/// 3. the post-drain snapshot step happens exactly once.
+#[test]
+fn channel_shutdown_loses_no_accepted_message_and_drains_exactly_once() {
+    loom::model(|| {
+        // cap 1 forces senders to park on a full queue, so shutdown
+        // really does race in-flight sends.
+        let (tx, rx) = channel::bounded::<u32>(1);
+        let received = Arc::new(Mutex::new(Vec::new()));
+        let snapshots = Arc::new(AtomicUsize::new(0));
+
+        let learners: Vec<_> = (0..2)
+            .map(|_| {
+                let rx = rx.clone();
+                let received = Arc::clone(&received);
+                let snapshots = Arc::clone(&snapshots);
+                thread::spawn(move || {
+                    while let Ok(v) = rx.recv() {
+                        received.lock().push(v);
+                    }
+                    // Closed and drained: race to claim the one
+                    // drain-to-snapshot slot, as round assembly does;
+                    // the CAS loser must not snapshot again.
+                    let _ = snapshots.compare_exchange(0, 1, Ordering::SeqCst, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        drop(rx);
+
+        let actors: Vec<_> = (0..2u32)
+            .map(|a| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    let mut accepted = Vec::new();
+                    for m in 0..2u32 {
+                        let v = a * 10 + m;
+                        if tx.send(v).is_ok() {
+                            accepted.push(v);
+                        }
+                    }
+                    accepted
+                    // Sender drops here: this actor's shutdown.
+                })
+            })
+            .collect();
+        drop(tx);
+
+        let mut accepted: Vec<u32> = actors.into_iter().flat_map(|a| a.join().unwrap()).collect();
+        for l in learners {
+            l.join().unwrap();
+        }
+
+        let mut got = received.lock().clone();
+        accepted.sort_unstable();
+        got.sort_unstable();
+        // Learners hold receivers until closed-and-drained, so every
+        // accepted message arrives exactly once (no loss, no dupes).
+        assert_eq!(got, accepted, "accepted sends and delivered messages diverge");
+        assert_eq!(snapshots.load(Ordering::SeqCst), 1, "drain-to-snapshot must happen once");
     });
 }
 

@@ -3,6 +3,7 @@
 //! archive (and per-seed episode streams) bit-identical to an
 //! uninterrupted run with the same configuration.
 
+use edcompress::coordinator::actor_learner::AsyncConfig;
 use edcompress::coordinator::orchestrator::{
     OrchestrationResult, Orchestrator, OrchestratorSpec, WarmStart,
 };
@@ -62,8 +63,31 @@ fn assert_results_bit_identical(a: &OrchestrationResult, b: &OrchestrationResult
                 "episode {} rewards differ",
                 ea.episode
             );
+            // Lengths first: zip would silently truncate the comparison,
+            // and curve-shortening is a real failure mode (NaN entries
+            // are stored as JSON null and must be restored, not dropped).
+            assert_eq!(
+                ea.energy_curve.len(),
+                eb.energy_curve.len(),
+                "episode {} energy curve lengths differ",
+                ea.episode
+            );
+            assert_eq!(
+                ea.accuracy_curve.len(),
+                eb.accuracy_curve.len(),
+                "episode {} accuracy curve lengths differ",
+                ea.episode
+            );
             for (x, y) in ea.energy_curve.iter().zip(&eb.energy_curve) {
                 assert_eq!(x.to_bits(), y.to_bits(), "episode {} energy curve differs", ea.episode);
+            }
+            for (x, y) in ea.accuracy_curve.iter().zip(&eb.accuracy_curve) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "episode {} accuracy curve differs",
+                    ea.episode
+                );
             }
         }
     }
@@ -174,4 +198,121 @@ fn kill_point_does_not_change_results() {
     assert_results_bit_identical(&a, &b);
     std::fs::remove_file(&path_a).ok();
     std::fs::remove_file(&path_b).ok();
+}
+
+/// Async knobs are execution-only — deliberately excluded from the spec
+/// fingerprint, like `shared_cache`. So a snapshot written by an async
+/// lockstep run must resume in plain sync mode (and vice versa) and
+/// still converge, bit for bit, to the uninterrupted sync reference.
+#[test]
+fn async_snapshot_resumes_in_sync_mode_bit_identically() {
+    let mut reference = Orchestrator::new(spec());
+    let expect = reference.run().expect("sync reference failed");
+
+    // One async (lockstep) round, snapshot written, orchestrator killed.
+    let path = temp_snapshot("async_to_sync.json");
+    {
+        let mut orch = Orchestrator::new(spec());
+        orch.snapshot_path = Some(path.clone());
+        let mut cfg = AsyncConfig::new(2, 1);
+        cfg.lockstep = true;
+        let done = orch.run_round_async_on(&edcompress::util::pool::WorkPool::new(2), &cfg);
+        assert!(!done.expect("async round failed"), "finished before kill point");
+    }
+
+    // Finish in sync mode from the async-written snapshot.
+    let mut resumed = Orchestrator::resume(&path, spec()).expect("cross-mode resume failed");
+    let got = resumed.run().expect("sync completion of async snapshot failed");
+    assert_results_bit_identical(&expect, &got);
+    std::fs::remove_file(&path).ok();
+}
+
+/// The mirror image: a sync-written snapshot finishes under the async
+/// lockstep engine with the same bit-identical result.
+#[test]
+fn sync_snapshot_resumes_in_async_mode_bit_identically() {
+    let mut reference = Orchestrator::new(spec());
+    let expect = reference.run().expect("sync reference failed");
+
+    let path = temp_snapshot("sync_to_async.json");
+    {
+        let mut orch = Orchestrator::new(spec());
+        orch.snapshot_path = Some(path.clone());
+        let done = orch.run_round().expect("sync round failed");
+        assert!(!done, "finished before kill point");
+    }
+
+    let mut resumed = Orchestrator::resume(&path, spec()).expect("cross-mode resume failed");
+    let mut cfg = AsyncConfig::new(2, 2);
+    cfg.lockstep = true;
+    let got = resumed.run_async(&cfg).expect("async completion of sync snapshot failed");
+    assert_results_bit_identical(&expect, &got);
+    std::fs::remove_file(&path).ok();
+}
+
+/// A *relaxed* async run's snapshot is also a valid resume source: the
+/// update order diverged from sync, but the stored state is a real
+/// orchestration state, so a sync resume completes every seed's budget
+/// without failures.
+#[test]
+fn relaxed_async_snapshot_resumes_and_completes_in_sync_mode() {
+    let path = temp_snapshot("relaxed_to_sync.json");
+    {
+        let mut orch = Orchestrator::new(spec());
+        orch.snapshot_path = Some(path.clone());
+        let cfg = AsyncConfig::new(2, 2); // relaxed: lockstep off
+        let done = orch.run_round_async_on(&edcompress::util::pool::WorkPool::new(2), &cfg);
+        assert!(!done.expect("relaxed round failed"), "finished before kill point");
+    }
+    let mut resumed = Orchestrator::resume(&path, spec()).expect("relaxed snapshot rejected");
+    let got = resumed.run().expect("sync completion of relaxed snapshot failed");
+    assert!(got.failures.is_empty(), "failures after relaxed resume: {:?}", got.failures);
+    for o in &got.outcomes {
+        assert_eq!(o.episodes.len(), 6, "a seed did not finish its budget");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Regression: accuracy curves hold NaN for every step before the first
+/// admissible point, and snapshots store non-finite floats as JSON
+/// `null`. Restoring a snapshot must round-trip those entries
+/// length-preserving and bit-preserving — an earlier reader silently
+/// dropped the nulls, shortening every curve that ever carried a NaN.
+#[test]
+fn nan_accuracy_curve_entries_survive_a_snapshot_round_trip() {
+    let mut s = spec();
+    // Nothing can clear an impossible accuracy floor, so every curve
+    // entry is the NaN placeholder.
+    s.env.threshold_frac = 1.5;
+    let path = temp_snapshot("nan_curves.json");
+    let mut orch = Orchestrator::new(s.clone());
+    orch.snapshot_path = Some(path.clone());
+    let done = orch.run_round().expect("round failed");
+    assert!(!done, "finished before kill point");
+
+    let curves = |o: &Orchestrator| -> Vec<Vec<u64>> {
+        o.slots
+            .iter()
+            .map(|sl| {
+                sl.records
+                    .iter()
+                    .flat_map(|r| r.accuracy_curve.iter().map(|v| v.to_bits()))
+                    .collect()
+            })
+            .collect()
+    };
+    let expect = curves(&orch);
+    assert!(
+        expect.iter().flatten().any(|b| f64::from_bits(*b).is_nan()),
+        "test premise broken: curves contain no NaN entries"
+    );
+    drop(orch);
+
+    let resumed = Orchestrator::resume(&path, s).expect("resume failed");
+    assert_eq!(
+        curves(&resumed),
+        expect,
+        "NaN curve entries must survive the snapshot round-trip bit-for-bit"
+    );
+    std::fs::remove_file(&path).ok();
 }
