@@ -21,9 +21,15 @@
 //! **zero** steady-state heap allocations — counted by the thread-local
 //! counting allocator below — and producing bit-identical update stats.
 //!
+//! The snapshot section *asserts* the PR-8 container claim: resuming a
+//! 16-seed fleet snapshot from the v4 binary container beats the v3
+//! JSON container on resume wall-clock and on peak live heap bytes
+//! (tracked by the same counting allocator), with a smaller file.
+//!
 //! Run with `--test` (e.g. `cargo bench --bench perf_hotpaths -- --test`)
 //! for the CI smoke mode: only the asserted gates run (train kernels,
-//! fleet cache, serve cache), in well under a minute.
+//! fleet cache, serve cache, async throughput, snapshot resume), in well
+//! under a minute.
 #[path = "common.rs"]
 mod common;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -43,21 +49,39 @@ use edcompress::util::rng::Rng;
 // ---------------------------------------------------------------------
 // Thread-local counting allocator: every `alloc`/`realloc` on the calling
 // thread bumps a per-thread counter, so the zero-allocation gate is immune
-// to allocator traffic from the daemon/fleet benches' worker threads. The
-// thread-local slot is const-initialized (no lazy allocation), so reading
-// it inside the allocator cannot recurse; `try_with` tolerates TLS
-// teardown.
+// to allocator traffic from the daemon/fleet benches' worker threads. It
+// also tracks net live bytes and their high-water mark per thread, which
+// is what the snapshot-resume gate compares across container formats
+// (cross-thread frees can push `live` below a thread's own baseline, so
+// both cells are signed). The thread-local slots are const-initialized
+// (no lazy allocation), so reading them inside the allocator cannot
+// recurse; `try_with` tolerates TLS teardown.
 // ---------------------------------------------------------------------
 
 thread_local! {
     static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static TL_LIVE: Cell<i64> = const { Cell::new(0) };
+    static TL_PEAK: Cell<i64> = const { Cell::new(0) };
 }
 
 struct CountingAlloc;
 
+fn note_alloc_bytes(delta: i64) {
+    let _ = TL_LIVE.try_with(|l| {
+        let live = l.get() + delta;
+        l.set(live);
+        let _ = TL_PEAK.try_with(|p| {
+            if live > p.get() {
+                p.set(live);
+            }
+        });
+    });
+}
+
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        note_alloc_bytes(layout.size() as i64);
         System.alloc(layout)
     }
 
@@ -66,15 +90,18 @@ unsafe impl GlobalAlloc for CountingAlloc {
     // slow the allocating reference down and flatter the speedup gate.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        note_alloc_bytes(layout.size() as i64);
         System.alloc_zeroed(layout)
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        note_alloc_bytes(-(layout.size() as i64));
         System.dealloc(ptr, layout)
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        note_alloc_bytes(new_size as i64 - layout.size() as i64);
         System.realloc(ptr, layout, new_size)
     }
 }
@@ -85,6 +112,17 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 /// Allocations performed by this thread so far.
 fn thread_allocs() -> u64 {
     TL_ALLOCS.with(|c| c.get())
+}
+
+/// Run `f` and return its result plus the high-water mark of net-new
+/// live heap bytes this thread reached while it ran (the peak working
+/// set of a single-threaded operation, as the allocator sees it).
+fn with_peak_tracking<T>(f: impl FnOnce() -> T) -> (T, u64) {
+    let base = TL_LIVE.with(|l| l.get());
+    TL_PEAK.with(|p| p.set(base));
+    let out = f();
+    let peak = TL_PEAK.with(|p| p.get());
+    (out, (peak - base).max(0) as u64)
 }
 
 /// Build one replay-filled SAC agent at the LeNet-5 env dimensions —
@@ -399,6 +437,88 @@ fn bench_serve_shared_vs_sequential() {
     );
 }
 
+/// The snapshot-container claim (CI gate): resuming a 16-seed fleet
+/// snapshot from the v4 binary container must beat the v3 JSON container
+/// on both resume wall-clock and peak live heap bytes, and the file
+/// itself must be smaller. v3 pays for itself three times over — UTF-8
+/// text, a `Json::Num` node per tensor element, then the f32 tensors —
+/// while v4 parses only the small header tree and reads the aligned
+/// sections as typed leaves. Resume runs single-threaded on this thread,
+/// so the thread-local peak tracker sees its whole working set.
+fn bench_snapshot_resume_formats(iters: usize) {
+    use edcompress::coordinator::orchestrator::{Orchestrator, OrchestratorSpec};
+    use edcompress::coordinator::SearchConfig;
+    use edcompress::snapshot::Format;
+
+    fn spec() -> OrchestratorSpec {
+        let mut s = OrchestratorSpec::new(zoo::lenet5(), 16, 29);
+        s.dataflows = vec![Dataflow::XY, Dataflow::FXFY];
+        s.env.max_steps = 6;
+        s.chunk_episodes = 1;
+        s.search = SearchConfig {
+            episodes: 2,
+            sac: SacConfig {
+                hidden: vec![32, 32],
+                warmup_steps: 8,
+                batch_size: 8,
+                ..SacConfig::default()
+            },
+            verbose: false,
+        };
+        s
+    }
+
+    // One completed round so every slot carries real agent tensors,
+    // optimizer moments and replay transitions — the payload a fleet
+    // snapshot exists for.
+    let mut orch = Orchestrator::new(spec());
+    let done = orch.run_round().expect("fixture round failed");
+    assert!(!done, "fixture must snapshot mid-run, not a finished search");
+
+    let dir = std::env::temp_dir().join(format!("edc_bench_snapshot_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    let p_v3 = dir.join("fleet.json");
+    let p_v4 = dir.join("fleet.edc4");
+    orch.save_snapshot_as(&p_v3, Format::Json).expect("v3 save");
+    orch.save_snapshot_as(&p_v4, Format::Binary).expect("v4 save");
+    let bytes_v3 = std::fs::metadata(&p_v3).expect("v3 meta").len();
+    let bytes_v4 = std::fs::metadata(&p_v4).expect("v4 meta").len();
+
+    let (_, peak_v3) = with_peak_tracking(|| {
+        Orchestrator::resume(&p_v3, spec()).expect("v3 resume")
+    });
+    let (_, peak_v4) = with_peak_tracking(|| {
+        Orchestrator::resume(&p_v4, spec()).expect("v4 resume")
+    });
+
+    let mut t_v3 = BenchTimer::new("fleet resume v3 JSON (16 seeds)");
+    t_v3.run(iters, || Orchestrator::resume(&p_v3, spec()).expect("v3 resume"));
+    t_v3.report();
+    let mut t_v4 = BenchTimer::new("fleet resume v4 binary (16 seeds)");
+    t_v4.run(iters, || Orchestrator::resume(&p_v4, spec()).expect("v4 resume"));
+    t_v4.report();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let speedup = t_v3.mean_ns() / t_v4.mean_ns().max(1.0);
+    println!(
+        "  -> v4 resume {speedup:.2}x faster; peak heap {peak_v4} B vs {peak_v3} B \
+         ({:.2}x smaller); file {bytes_v4} B vs {bytes_v3} B on disk",
+        peak_v3 as f64 / peak_v4.max(1) as f64
+    );
+    assert!(
+        speedup >= 1.5,
+        "v4 resume only {speedup:.2}x faster than v3 (gate: 1.5x)"
+    );
+    assert!(
+        peak_v4 < peak_v3,
+        "v4 resume peak heap {peak_v4} B not below v3's {peak_v3} B"
+    );
+    assert!(
+        bytes_v4 < bytes_v3,
+        "v4 snapshot {bytes_v4} B not smaller than v3's {bytes_v3} B"
+    );
+}
+
 /// The async actor/learner throughput claim (CI gate): 8 LeNet-5 rollout
 /// jobs multiplexed on a 4-slot pool, with SAC updates offloaded to
 /// dedicated learner threads, must beat the synchronous engine — which
@@ -568,6 +688,8 @@ fn main() {
         bench_serve_shared_vs_sequential();
         banner("async actor/learner throughput (smoke)");
         bench_async_vs_sync_throughput();
+        banner("snapshot resume formats (smoke)");
+        bench_snapshot_resume_formats(5);
         println!("bench smoke OK");
         return;
     }
@@ -601,6 +723,11 @@ fn main() {
     // episodes/sec (asserted, hardware-gated).
     banner("async actor/learner throughput");
     bench_async_vs_sync_throughput();
+
+    // 3d. Snapshot container formats: v4 binary resume vs v3 JSON on
+    // wall-clock, peak heap bytes and file size (asserted).
+    banner("snapshot resume formats");
+    bench_snapshot_resume_formats(20);
 
     // 4. All-15-dataflow ranking: batched+cached vs individual.
     banner("dataflow ranking");

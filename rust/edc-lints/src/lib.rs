@@ -5,11 +5,12 @@
 //! `docs/determinism.md`:
 //!
 //! 1. **`map-iteration-in-serialization`** — no `HashMap`/`HashSet` in
-//!    snapshot/report/checkpoint serialization paths. Their iteration
-//!    order is randomized per process, so any use near serialization is
-//!    one refactor away from nondeterministic bytes on disk. Those paths
-//!    must use `BTreeMap`/sorted `Vec`s (`util::json::Json::Obj` already
-//!    does).
+//!    snapshot/report/checkpoint serialization paths (including the
+//!    `snapshot::` codec layer and `util::blob`, which own the bytes
+//!    that reach disk). Their iteration order is randomized per
+//!    process, so any use near serialization is one refactor away from
+//!    nondeterministic bytes on disk. Those paths must use
+//!    `BTreeMap`/sorted `Vec`s (`util::json::Json::Obj` already does).
 //! 2. **`ambient-entropy`** — no `SystemTime::now`, `thread_rng`,
 //!    `rand::random`, `from_entropy`, `getrandom` or `RandomState::new`
 //!    outside `util/rng.rs`. Every random stream must come from
@@ -26,9 +27,10 @@
 //!    `step_pairs`) in `tensor/mod.rs`, `nn/linear.rs`, `nn/mlp.rs`,
 //!    `nn/adam.rs`.
 //! 5. **`unwrap-in-request-path`** — no `.unwrap()`/`.expect(` in
-//!    non-test code of `coordinator/service.rs`, `coordinator/sweep.rs`
-//!    and `cli/`: a malformed request or corrupt file must produce a
-//!    readable error naming the job/file, never a panic.
+//!    non-test code of `coordinator/service.rs`, `coordinator/sweep.rs`,
+//!    `cli/`, the `snapshot::` codec layer and `util/blob.rs`: a
+//!    malformed request or corrupt/truncated snapshot must produce a
+//!    readable error naming the job/file/field/offset, never a panic.
 //!
 //! The pass is **lexical, not syntactic**: the offline build environment
 //! has no `syn`, so the walker strips comments/strings/char literals and
@@ -348,9 +350,14 @@ pub struct FileClass {
 
 /// Classify a `/`-separated path relative to `rust/src`.
 pub fn classify(rel: &str) -> FileClass {
+    // The snapshot codec layer and the raw blob reader/writer both
+    // produce/consume on-disk bytes, so they are serialization paths
+    // (rule 1) *and* corrupt-input request paths (rule 5).
+    let snapshot_layer = rel.starts_with("snapshot/") || rel == "util/blob.rs";
     FileClass {
         serialization: rel == "coordinator/checkpoint.rs"
             || rel == "coordinator/orchestrator.rs"
+            || snapshot_layer
             || rel.starts_with("report/"),
         rng_home: rel == "util/rng.rs",
         hot_path: rel == "tensor/mod.rs"
@@ -359,6 +366,7 @@ pub fn classify(rel: &str) -> FileClass {
             || rel == "nn/adam.rs",
         request_path: rel == "coordinator/service.rs"
             || rel == "coordinator/sweep.rs"
+            || snapshot_layer
             || rel.starts_with("cli/"),
     }
 }
@@ -774,6 +782,15 @@ let f = &'static str_thing; let life = 'a;"##;
         assert!(lint_as("envs/mod.rs", bad).is_empty());
         // BTreeMap is the sanctioned container.
         assert!(lint_as("report/tables.rs", "use std::collections::BTreeMap;\n").is_empty());
+        // The snapshot codec layer and the blob reader own on-disk
+        // bytes, so they are serialization paths too.
+        for rel in ["snapshot/mod.rs", "util/blob.rs"] {
+            let v = lint_as(rel, bad);
+            assert!(
+                v.iter().any(|v| v.rule == RULE_MAP_ITER),
+                "{rel} must be a serialization path: {v:?}"
+            );
+        }
     }
 
     #[test]
@@ -856,6 +873,13 @@ let f = &'static str_thing; let life = 'a;"##;
         assert!(lint_as("coordinator/service.rs", good).is_empty());
         // Non-request paths may unwrap (invariant panics are fine there).
         assert!(lint_as("tensor/mod.rs", "fn f() { o.unwrap(); }\n").is_empty());
+        // Corrupt snapshots flow through snapshot::/util::blob decode —
+        // those must error readably, never panic.
+        for rel in ["snapshot/mod.rs", "util/blob.rs"] {
+            let v = lint_as(rel, "fn decode(b: &[u8]) { parse(b).unwrap(); }\n");
+            assert_eq!(v.len(), 1, "{rel} must be a request path: {v:?}");
+            assert_eq!(v[0].rule, RULE_UNWRAP);
+        }
     }
 
     #[test]

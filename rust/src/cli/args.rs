@@ -1,11 +1,18 @@
 //! Tiny flag parser: `--key value` pairs after a positional command.
+//! The `snapshot` command additionally takes leading positional
+//! operands (`edc snapshot info <file>`, `edc snapshot convert <in>
+//! <out>`) before its flags; every other command stays flags-only.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
+/// Commands whose leading non-flag tokens are positional operands.
+const POSITIONAL_COMMANDS: &[&str] = &["snapshot"];
+
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: String,
+    pub positionals: Vec<String>,
     pub flags: BTreeMap<String, String>,
 }
 
@@ -18,8 +25,15 @@ impl Args {
         if command.starts_with('-') {
             bail!("expected a command first, got flag '{command}'");
         }
+        let mut positionals = Vec::new();
         let mut flags = BTreeMap::new();
         let mut i = 1;
+        if POSITIONAL_COMMANDS.contains(&command.as_str()) {
+            while i < argv.len() && !argv[i].starts_with("--") {
+                positionals.push(argv[i].clone());
+                i += 1;
+            }
+        }
         while i < argv.len() {
             let key = argv[i]
                 .strip_prefix("--")
@@ -33,7 +47,11 @@ impl Args {
             flags.insert(key.to_string(), val.clone());
             i += 2;
         }
-        Ok(Args { command, flags })
+        Ok(Args {
+            command,
+            positionals,
+            flags,
+        })
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -96,5 +114,18 @@ mod tests {
     fn typed_accessor_errors() {
         let a = Args::parse(&s(&["cost", "--q", "abc"])).unwrap();
         assert!(a.f64_or("q", 8.0).is_err());
+    }
+
+    #[test]
+    fn snapshot_command_takes_positionals_before_flags() {
+        let a = Args::parse(&s(&["snapshot", "convert", "a.json", "b.edc4", "--to", "binary"]))
+            .unwrap();
+        assert_eq!(a.command, "snapshot");
+        assert_eq!(a.positionals, vec!["convert", "a.json", "b.edc4"]);
+        assert_eq!(a.get("to"), Some("binary"));
+        // Other commands still refuse bare positionals.
+        assert!(Args::parse(&s(&["table", "id", "4"])).is_err());
+        // Flags still demand values after the positionals.
+        assert!(Args::parse(&s(&["snapshot", "info", "a.json", "--to"])).is_err());
     }
 }

@@ -9,6 +9,7 @@ use crate::energy;
 use crate::envs::{CompressionEnv, SurrogateOracle};
 use crate::model::zoo;
 use crate::report::{figures, tables};
+use crate::snapshot;
 use crate::train::{PjrtOracle, TrainConfig};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
@@ -20,6 +21,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "search" => cmd_search(args),
         "sweep" => cmd_sweep(args),
         "serve" => cmd_serve(args),
+        "snapshot" => cmd_snapshot(args),
         "submit" => cmd_submit(args),
         "status" => cmd_status(args),
         "result" => cmd_result(args),
@@ -184,13 +186,18 @@ fn cmd_search(args: &Args) -> Result<()> {
     let mut max_steps = args.usize_or("steps", crate::envs::EnvConfig::default().max_steps)?;
     let mut dataflows = parse_dataflows(&args.str_or("dataflows", "paper"))?;
 
+    // Explicit container format for the snapshots this run writes
+    // (reads always auto-detect); absent, a resumed run inherits the
+    // source file's format and a fresh run writes JSON.
+    let format_flag = match args.get("snapshot-format") {
+        Some(s) => Some(snapshot::Format::parse(s)?),
+        None => None,
+    };
+
     let snapshot_json = match &resume {
         Some(path) => {
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading snapshot {path}"))?;
-            let j = crate::util::json::parse(&text).map_err(|e| {
-                anyhow!("snapshot {path} is not valid JSON (truncated or corrupt file?): {e}")
-            })?;
+            // Auto-detects JSON v3 vs binary v4 by content.
+            let (j, detected) = snapshot::load(Path::new(path))?;
             let h = orchestrator::read_header(&j).ok_or_else(|| {
                 anyhow!(
                     "{path} is not an orchestration snapshot (expected kind \
@@ -204,7 +211,7 @@ fn cmd_search(args: &Args) -> Result<()> {
             chunk = h.chunk_episodes;
             max_steps = h.max_steps;
             dataflows = h.dataflows;
-            Some(j)
+            Some((j, detected))
         }
         None => None,
     };
@@ -271,12 +278,17 @@ fn cmd_search(args: &Args) -> Result<()> {
     };
 
     let mut orch = match (&snapshot_json, &warm) {
-        (Some(j), _) => Orchestrator::from_snapshot(j, spec)
+        (Some((j, _)), _) => Orchestrator::from_snapshot(j, spec)
             .with_context(|| format!("resuming {}", resume.as_deref().unwrap_or("snapshot")))?,
         (None, Some(w)) => Orchestrator::with_warm_start(spec, w)?,
         (None, None) => Orchestrator::new(spec),
     };
     orch.snapshot_path = Some(snapshot_path);
+    orch.snapshot_format = match (format_flag, &snapshot_json) {
+        (Some(f), _) => f,
+        (None, Some((_, detected))) => *detected,
+        (None, None) => snapshot::Format::Json,
+    };
 
     if let (Some(w), Some(p)) = (&warm, &warm_path) {
         println!(
@@ -432,6 +444,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_concurrent_jobs: jobs,
         workers: args.usize_or("workers", 0)?,
         resume: resume_dir.is_some(),
+        format: snapshot::Format::parse(&args.str_or("snapshot-format", "json"))?,
     };
     let svc = Service::start(cfg)?;
     println!(
@@ -445,6 +458,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
         svc.addr()
     );
     svc.wait()
+}
+
+/// `edc snapshot info <file>` / `edc snapshot convert <in> <out>
+/// [--to json|binary]`: introspect and losslessly convert snapshot
+/// containers. Formats are detected by content, never by extension, and
+/// conversion preserves the logical tree bit-for-bit in both directions
+/// (invariant 11 in docs/determinism.md): converting v3 -> v4 -> v3
+/// reproduces the original file byte-identically.
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    const USAGE: &str =
+        "usage: edc snapshot info <file> | edc snapshot convert <in> <out> [--to json|binary]";
+    match args.positionals.first().map(String::as_str) {
+        Some("info") => {
+            let [_, file] = args.positionals.as_slice() else {
+                bail!("snapshot info wants exactly one file\n{USAGE}");
+            };
+            let d = snapshot::describe(Path::new(file))?;
+            println!("{file}:");
+            let Json::Obj(m) = &d else {
+                bail!("describe returned a non-object (please report this)");
+            };
+            for (k, v) in m {
+                if k == "sections" {
+                    if let Json::Obj(s) = v {
+                        for (dtype, stats) in s {
+                            println!(
+                                "  sections.{dtype}: {} sections, {} elements, {} bytes",
+                                stats.num_or("sections", 0.0) as u64,
+                                stats.num_or("elements", 0.0) as u64,
+                                stats.num_or("bytes", 0.0) as u64,
+                            );
+                        }
+                    }
+                } else {
+                    println!("  {k}: {v}");
+                }
+            }
+            Ok(())
+        }
+        Some("convert") => {
+            let [_, src, dst] = args.positionals.as_slice() else {
+                bail!("snapshot convert wants an input and an output file\n{USAGE}");
+            };
+            if same_snapshot_file(Path::new(src), Path::new(dst)) {
+                bail!("refusing to convert {src} onto itself; pick a different output path");
+            }
+            let (tree, from) = snapshot::load(Path::new(src))?;
+            let to = match args.get("to") {
+                Some(s) => snapshot::Format::parse(s)?,
+                // No --to: flip to the other container.
+                None => match from {
+                    snapshot::Format::Json => snapshot::Format::Binary,
+                    snapshot::Format::Binary => snapshot::Format::Json,
+                },
+            };
+            snapshot::save(Path::new(dst), &tree, to)?;
+            println!("converted {src} ({}) -> {dst} ({})", from.label(), to.label());
+            Ok(())
+        }
+        _ => bail!("{USAGE}"),
+    }
 }
 
 /// Resolve the daemon address for a client subcommand: `--addr` wins,
@@ -865,6 +939,81 @@ mod tests {
         // Disagreeing --dir/--resume-dir is refused before binding.
         assert!(dispatch(&argv(&["serve", "--dir", "a", "--resume-dir", "b"])).is_err());
         assert!(dispatch(&argv(&["serve", "--jobs", "0"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_convert_round_trip_is_byte_identical() {
+        let dir = std::env::temp_dir().join("edc_cli_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let v3 = dir.join("run.json");
+        let v3_s = v3.to_str().unwrap();
+        dispatch(&argv(&[
+            "search", "--net", "lenet5", "--seeds", "2", "--episodes", "1", "--steps", "4",
+            "--chunk", "1", "--dataflows", "X:Y", "--snapshot", v3_s,
+        ]))
+        .unwrap();
+        let original = std::fs::read(&v3).unwrap();
+
+        // v3 -> v4 (default --to flips the detected format) -> v3 again.
+        let v4 = dir.join("run.edc4");
+        let v4_s = v4.to_str().unwrap();
+        let back = dir.join("run_back.json");
+        let back_s = back.to_str().unwrap();
+        dispatch(&argv(&["snapshot", "convert", v3_s, v4_s])).unwrap();
+        assert_eq!(
+            std::fs::read(&v4).unwrap()[..4],
+            *b"EDC4",
+            "convert did not produce a v4 container"
+        );
+        dispatch(&argv(&["snapshot", "convert", v4_s, back_s, "--to", "json"])).unwrap();
+        assert_eq!(
+            std::fs::read(&back).unwrap(),
+            original,
+            "v3 -> v4 -> v3 round trip is not byte-identical"
+        );
+
+        // info renders both containers.
+        dispatch(&argv(&["snapshot", "info", v3_s])).unwrap();
+        dispatch(&argv(&["snapshot", "info", v4_s])).unwrap();
+
+        // Operand and file errors are readable, not panics.
+        assert!(dispatch(&argv(&["snapshot"])).is_err());
+        assert!(dispatch(&argv(&["snapshot", "frobnicate", v3_s])).is_err());
+        assert!(dispatch(&argv(&["snapshot", "info"])).is_err());
+        assert!(dispatch(&argv(&["snapshot", "convert", v3_s])).is_err());
+        assert!(dispatch(&argv(&["snapshot", "convert", v3_s, v3_s])).is_err());
+        assert!(dispatch(&argv(&["snapshot", "convert", v3_s, v4_s, "--to", "msgpack"])).is_err());
+        assert!(dispatch(&argv(&["snapshot", "info", "no/such/file.edc4"])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn search_writes_and_resumes_binary_snapshots() {
+        let dir = std::env::temp_dir().join("edc_cli_binary_search_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let snap = dir.join("run.edc4");
+        let snap_s = snap.to_str().unwrap();
+        dispatch(&argv(&[
+            "search", "--net", "lenet5", "--seeds", "2", "--episodes", "1", "--steps", "4",
+            "--chunk", "1", "--dataflows", "X:Y", "--snapshot", snap_s, "--snapshot-format",
+            "binary",
+        ]))
+        .unwrap();
+        let bytes = std::fs::read(&snap).unwrap();
+        assert_eq!(bytes[..4], *b"EDC4", "--snapshot-format binary wrote JSON");
+        // Resume auto-detects the container; the rewritten snapshot
+        // stays binary (the run inherits the source format).
+        dispatch(&argv(&["search", "--resume", snap_s])).unwrap();
+        assert_eq!(std::fs::read(&snap).unwrap()[..4], *b"EDC4");
+        // Warm-starting from a binary snapshot works too.
+        dispatch(&argv(&[
+            "search", "--warm-start", snap_s, "--seeds", "1", "--episodes", "1", "--steps", "4",
+            "--chunk", "1", "--dataflows", "X:Y", "--snapshot",
+            dir.join("warm.json").to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(dispatch(&argv(&["search", "--snapshot-format", "msgpack"])).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -3,11 +3,13 @@
 //! ```text
 //! edc compress --net lenet5 --dataflow X:Y [--oracle surrogate|pjrt] ...
 //! edc search  --net lenet5 --seeds 4 [--resume run.json] [--snapshot run.json]
-//!             [--warm-start prev_run.json]
+//!             [--warm-start prev_run.json] [--snapshot-format json|binary]
 //!             [--async-actors N --learners M [--lockstep 1]]
 //! edc sweep   --nets lenet5,vgg16_cifar [--dataflows paper|all|X:Y,..]
 //! edc serve   [--dir reports/serve] [--port 0] [--jobs 2] [--workers 0]
-//!             [--resume-dir reports/serve]       # search-service daemon
+//!             [--resume-dir reports/serve] [--snapshot-format json|binary]
+//! edc snapshot info <file>                       # header/stats of a snapshot
+//! edc snapshot convert <in> <out> [--to json|binary]  # lossless v3 <-> v4
 //! edc submit  [--addr host:port] --net lenet5 [--kind search|sweep] ...
 //! edc status  [--addr host:port] [--job N]
 //! edc result  [--addr host:port] --job N
@@ -54,7 +56,8 @@ pub fn usage() -> &'static str {
                   cache, with a Pareto archive and resumable snapshots\n\
                   (--net, --seeds, --episodes, --steps, --seed, --dataflows,\n\
                   --chunk, --snapshot run.json, --resume run.json,\n\
-                  --warm-start prev_run.json; async actor/learner mode:\n\
+                  --warm-start prev_run.json, --snapshot-format json|binary;\n\
+                  async actor/learner mode:\n\
                   --async-actors N --learners M [--lockstep 1])\n\
        sweep      search many (network x dataflow) pairs on a bounded\n\
                   worker pool (--nets a,b,c --dataflows paper|all|X:Y,..,\n\
@@ -62,7 +65,11 @@ pub fn usage() -> &'static str {
        serve      persistent search-service daemon: jobs multiplex over\n\
                   one worker pool and share fleet cost caches; graceful\n\
                   shutdown drains to resumable snapshots (--dir, --port,\n\
-                  --jobs, --workers, --resume-dir; protocol: docs/serve.md)\n\
+                  --jobs, --workers, --resume-dir, --snapshot-format;\n\
+                  protocol: docs/serve.md)\n\
+       snapshot   introspect/convert snapshot containers: `snapshot info\n\
+                  <file>`, `snapshot convert <in> <out> [--to json|binary]`\n\
+                  (v3 JSON <-> v4 binary, bit-lossless, auto-detected)\n\
        submit     queue a job on a running daemon (--addr or --dir,\n\
                   --kind search|sweep, then the search/sweep flags)\n\
        status     daemon or per-job progress (--addr/--dir, [--job N])\n\

@@ -52,7 +52,8 @@ use crate::energy::EnergyConfig;
 use crate::envs::{CompressionEnv, EnvConfig, SurrogateOracle};
 use crate::model::Network;
 use crate::rl::sac::SacAgent;
-use crate::util::json::{self, Json};
+use crate::snapshot::{self, Format};
+use crate::util::json::Json;
 use crate::util::pool::WorkPool;
 use crate::util::rng::seed_stream;
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -288,6 +289,11 @@ pub struct Orchestrator {
     /// When set, [`run_round`](Orchestrator::run_round) snapshots here
     /// after merging each round (atomic tmp-file + rename).
     pub snapshot_path: Option<PathBuf>,
+    /// Container format periodic snapshots are written in (logical schema
+    /// is v3 either way; see `snapshot::Format`). Defaults to JSON;
+    /// [`resume`](Orchestrator::resume) inherits the source file's
+    /// detected format so a run keeps writing what it was reading.
+    pub snapshot_format: Format,
     /// Fleet-wide layer-cost cache every seed's evaluator borrows
     /// (`None` when `spec.shared_cache` is off: private per-seed caches).
     pub shared_cache: Option<SharedCostCache>,
@@ -412,6 +418,7 @@ impl Orchestrator {
             slots,
             archive: ParetoArchive::new(),
             snapshot_path: None,
+            snapshot_format: Format::Json,
             shared_cache,
             cache_seed: Vec::new(),
             cache_seed_keys: BTreeSet::new(),
@@ -691,30 +698,31 @@ impl Orchestrator {
         j
     }
 
-    /// Persist atomically (tmp file + rename): a kill during the write
-    /// leaves the previous snapshot intact.
+    /// Persist atomically (tmp file + rename, via [`snapshot::save`]): a
+    /// kill during the write leaves the previous snapshot intact. Writes
+    /// whatever container format `self.snapshot_format` selects.
     pub fn save_snapshot(&self, path: &Path) -> Result<()> {
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
-            }
-        }
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, self.snapshot_to_json().to_string())?;
-        std::fs::rename(&tmp, path)?;
-        Ok(())
+        self.save_snapshot_as(path, self.snapshot_format)
     }
 
-    /// Resume a killed orchestration from a snapshot file. `spec` must be
-    /// the configuration of the original run (validated against the
-    /// stored fingerprint); the dynamic state — episode records, agents,
-    /// oracle tokens, archive — comes from the file. The resumed run
-    /// produces results bit-identical to an uninterrupted one.
+    /// [`save_snapshot`](Orchestrator::save_snapshot) in an explicit
+    /// container format, regardless of `self.snapshot_format` (used by
+    /// the format-conversion CLI tests and the resume benchmarks).
+    pub fn save_snapshot_as(&self, path: &Path, format: Format) -> Result<()> {
+        snapshot::save(path, &self.snapshot_to_json(), format)
+    }
+
+    /// Resume a killed orchestration from a snapshot file (JSON v3 or
+    /// binary v4, auto-detected). `spec` must be the configuration of the
+    /// original run (validated against the stored fingerprint); the
+    /// dynamic state — episode records, agents, oracle tokens, archive —
+    /// comes from the file. The resumed run produces results bit-identical
+    /// to an uninterrupted one, whichever container it was stored in.
     pub fn resume(path: &Path, spec: OrchestratorSpec) -> Result<Orchestrator> {
-        let text = std::fs::read_to_string(path)?;
-        let j = json::parse(&text).map_err(|e| anyhow!("parsing snapshot {path:?}: {e}"))?;
+        let (j, format) = snapshot::load(path)?;
         let mut orch = Orchestrator::from_snapshot(&j, spec)?;
         orch.snapshot_path = Some(path.to_path_buf());
+        orch.snapshot_format = format;
         Ok(orch)
     }
 
@@ -868,17 +876,11 @@ pub struct WarmStart {
 }
 
 impl WarmStart {
-    /// Read a warm-start payload from a snapshot file, with readable
-    /// errors for missing, truncated or schema-mismatched files.
+    /// Read a warm-start payload from a snapshot file (JSON v3 or binary
+    /// v4, auto-detected), with readable errors for missing, truncated or
+    /// schema-mismatched files.
     pub fn load(path: &Path) -> Result<WarmStart> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading warm-start snapshot {}", path.display()))?;
-        let j = json::parse(&text).map_err(|e| {
-            anyhow!(
-                "warm-start snapshot {} is not valid JSON (truncated or corrupt file?): {e}",
-                path.display()
-            )
-        })?;
+        let (j, _format) = snapshot::load(path)?;
         WarmStart::from_json(&j).with_context(|| format!("warm-start snapshot {}", path.display()))
     }
 
@@ -1147,6 +1149,7 @@ mod tests {
     use super::*;
     use crate::model::zoo;
     use crate::rl::sac::SacConfig;
+    use crate::util::json;
 
     fn pt(energy: f64, accuracy: f64, area: f64) -> ParetoPoint {
         ParetoPoint {

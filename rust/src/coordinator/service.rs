@@ -68,6 +68,7 @@ use crate::energy::cache::SharedCacheRegistry;
 use crate::envs::EnvConfig;
 use crate::model::zoo;
 use crate::report::{figures, tables};
+use crate::snapshot::{self, Format};
 use crate::util::json::{self, Json};
 use crate::util::pool::{panic_message, WorkPool};
 use crate::util::sync::atomic::{AtomicBool, Ordering};
@@ -107,6 +108,11 @@ pub struct ServeConfig {
     /// Rescan `dir` at startup and re-enqueue every job snapshot found
     /// (the `--resume-dir` path).
     pub resume: bool,
+    /// Container format for *new* search-job snapshots
+    /// (`--snapshot-format`). Jobs resumed from an existing snapshot keep
+    /// writing the format they were found in, whatever this says — reads
+    /// always auto-detect.
+    pub format: Format,
 }
 
 impl Default for ServeConfig {
@@ -117,6 +123,7 @@ impl Default for ServeConfig {
             max_concurrent_jobs: 2,
             workers: 0,
             resume: false,
+            format: Format::Json,
         }
     }
 }
@@ -811,7 +818,7 @@ impl ServiceInner {
         let mut queued = 0usize;
         let mut failed: Vec<(u64, String)> = Vec::new();
         for (id, spec, snapshot) in to_persist {
-            match persist_queued_job(&spec, &snapshot) {
+            match persist_queued_job(&spec, &snapshot, self.cfg.format) {
                 Ok(()) => queued += 1,
                 Err(err) => {
                     log::warn!("draining queued job {id}: {err:#}");
@@ -946,11 +953,14 @@ impl ServiceInner {
     ) -> Result<Verdict> {
         let ospec = spec.to_orchestrator_spec()?;
         let mut orch = if snap.exists() {
+            // `resume` auto-detects the on-disk container and keeps
+            // writing it — a drained v4 job stays v4 across restarts.
             Orchestrator::resume(snap, ospec)
                 .with_context(|| format!("resuming job {id} from {}", snap.display()))?
         } else {
             let mut o = Orchestrator::new(ospec);
             o.snapshot_path = Some(snap.to_path_buf());
+            o.snapshot_format = self.cfg.format;
             o
         };
         // Join the daemon-wide fleet cache for this network's structure.
@@ -959,7 +969,8 @@ impl ServiceInner {
         self.update_search_progress(id, &orch);
         // Async execution is per-round, so the cancel/shutdown
         // drain-to-snapshot protocol is untouched: every round — sync or
-        // async — ends with the same merge and the same v3 snapshot.
+        // async — ends with the same merge and the same snapshot write
+        // (in whichever container format the job is pinned to).
         let acfg = (spec.async_actors > 0).then(|| {
             let mut c = AsyncConfig::new(spec.async_actors, spec.learners);
             c.lockstep = spec.lockstep;
@@ -1058,13 +1069,14 @@ impl ServiceInner {
 }
 
 /// Write the resumable on-disk form of a still-queued job at shutdown:
-/// search jobs get a fresh round-0 v3 snapshot (unless one already
-/// exists from an earlier suspension), sweep jobs their spec file.
-fn persist_queued_job(spec: &JobSpec, snapshot: &Path) -> Result<()> {
+/// search jobs get a fresh round-0 snapshot in the daemon's configured
+/// container format (unless one already exists from an earlier
+/// suspension, which keeps its own format), sweep jobs their spec file.
+fn persist_queued_job(spec: &JobSpec, snapshot: &Path, format: Format) -> Result<()> {
     match spec {
         JobSpec::Search(s) => {
             if !snapshot.exists() {
-                Orchestrator::new(s.to_orchestrator_spec()?).save_snapshot(snapshot)?;
+                Orchestrator::new(s.to_orchestrator_spec()?).save_snapshot_as(snapshot, format)?;
             }
             Ok(())
         }
@@ -1091,10 +1103,9 @@ fn shelve_cancelled_snapshot(e: &mut JobEntry) {
 }
 
 fn read_job_spec(path: &Path, is_sweep: bool) -> Result<JobSpec> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading job spec {}", path.display()))?;
-    let j = json::parse(&text)
-        .map_err(|e| anyhow!("not valid JSON (truncated or corrupt file?): {e}"))?;
+    // Auto-detects JSON v3 vs binary v4 search snapshots; sweep spec
+    // files are plain JSON either way.
+    let (j, _format) = snapshot::load(path)?;
     if is_sweep {
         Ok(JobSpec::Sweep(SweepJobSpec::from_json(&j)?))
     } else {

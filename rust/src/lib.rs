@@ -31,6 +31,7 @@ pub mod nn;
 pub mod report;
 pub mod rl;
 pub mod runtime;
+pub mod snapshot;
 pub mod tensor;
 pub mod train;
 pub mod util;

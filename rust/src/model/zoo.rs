@@ -6,6 +6,11 @@
 //! `artifacts/` are width-scaled variants of the same topologies.
 
 use super::{LayerSpec, Network};
+use crate::snapshot;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
 
 /// LeNet-5 (Caffe variant: 20/50 conv channels, 500 FC — the shape the
 /// Deep Compression baseline of Table 4 uses), MNIST 28x28 input.
@@ -151,6 +156,209 @@ pub fn paper_networks() -> Vec<Network> {
     vec![vgg16_cifar(), mobilenet_cifar(), lenet5()]
 }
 
+// ---------------------------------------------------------------------------
+// Imported weight sets
+// ---------------------------------------------------------------------------
+
+/// Logical schema version of weight-set files. Independent of the
+/// container: the same tree ships as v3 JSON or inside a v4 binary blob
+/// (the `layers.<i>.{weights,bias}` arrays land in the f32 sections).
+pub const WEIGHTS_VERSION: f64 = 1.0;
+
+/// One compute layer's imported parameters, flattened in the layer's
+/// natural `CO x CI x FX x FY` order (row-major), plus one bias per
+/// output channel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ImportedLayer {
+    pub name: String,
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// A trained weight set for one zoo topology, read from a snapshot
+/// container (v3 JSON or v4 binary — auto-detected by magic). The
+/// analytic cost model never executes weights; these feed the runnable
+/// artifacts and magnitude-aware compression heuristics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ImportedWeights {
+    pub network: String,
+    pub layers: Vec<ImportedLayer>,
+}
+
+impl ImportedWeights {
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("kind".to_string(), Json::Str("weights".to_string()));
+        root.insert("version".to_string(), Json::Num(WEIGHTS_VERSION));
+        root.insert("network".to_string(), Json::Str(self.network.clone()));
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(l.name.clone()));
+                m.insert(
+                    "weights".to_string(),
+                    Json::Arr(l.weights.iter().map(|&v| Json::Num(f64::from(v))).collect()),
+                );
+                m.insert(
+                    "bias".to_string(),
+                    Json::Arr(l.bias.iter().map(|&v| Json::Num(f64::from(v))).collect()),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("layers".to_string(), Json::Arr(layers));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ImportedWeights> {
+        let kind = j.str_or("kind", "");
+        if kind != "weights" {
+            bail!("not a weight-set file (kind is {kind:?}, expected \"weights\")");
+        }
+        let version = j.num_or("version", 0.0);
+        if version > WEIGHTS_VERSION {
+            bail!(
+                "weight-set schema version {version} is newer than this \
+                 reader (speaks up to {WEIGHTS_VERSION})"
+            );
+        }
+        let network = j
+            .get("network")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("weight-set file is missing the `network` field"))?
+            .to_string();
+        let layers_j = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("weight-set file is missing the `layers` array"))?;
+        let mut layers = Vec::with_capacity(layers_j.len());
+        for (i, lj) in layers_j.iter().enumerate() {
+            let name = lj
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("layers[{i}] is missing `name`"))?
+                .to_string();
+            let weights = lj
+                .get("weights")
+                .and_then(Json::as_f32s)
+                .ok_or_else(|| anyhow!("layer `{name}`: `weights` is not an f32 array"))?;
+            let bias = lj
+                .get("bias")
+                .and_then(Json::as_f32s)
+                .ok_or_else(|| anyhow!("layer `{name}`: `bias` is not an f32 array"))?;
+            layers.push(ImportedLayer { name, weights, bias });
+        }
+        Ok(ImportedWeights { network, layers })
+    }
+
+    /// Write through the shared snapshot layer (atomic tmp+rename; the
+    /// binary form stores both arrays per layer as aligned f32 sections).
+    pub fn save(&self, path: &Path, format: snapshot::Format) -> Result<()> {
+        snapshot::save(path, &self.to_json(), format)
+    }
+
+    pub fn load(path: &Path) -> Result<ImportedWeights> {
+        let (j, _format) = snapshot::load(path)?;
+        ImportedWeights::from_json(&j).map_err(|e| anyhow!("weight set {}: {e}", path.display()))
+    }
+
+    /// Check every array length against the topology: one entry per
+    /// compute layer, in network order, `params()` weights and `CO`
+    /// bias terms each.
+    pub fn validate_against(&self, net: &Network) -> Result<()> {
+        if self.network != net.name {
+            bail!(
+                "weight set is for network `{}`, not `{}`",
+                self.network,
+                net.name
+            );
+        }
+        let compute: Vec<&LayerSpec> = net.layers.iter().filter(|l| l.is_compute()).collect();
+        if self.layers.len() != compute.len() {
+            bail!(
+                "weight set has {} layers but `{}` has {} compute layers",
+                self.layers.len(),
+                net.name,
+                compute.len()
+            );
+        }
+        for (imp, spec) in self.layers.iter().zip(&compute) {
+            if imp.name != spec.name {
+                bail!(
+                    "layer order mismatch: weight set has `{}` where `{}` expects `{}`",
+                    imp.name,
+                    net.name,
+                    spec.name
+                );
+            }
+            let want = spec.params() as usize;
+            if imp.weights.len() != want {
+                bail!(
+                    "layer `{}`: {} weights but CO*CI*FX*FY = {}*{}*{}*{} = {want}",
+                    imp.name,
+                    imp.weights.len(),
+                    spec.co,
+                    spec.ci,
+                    spec.fx,
+                    spec.fy
+                );
+            }
+            if imp.bias.len() != spec.co {
+                bail!(
+                    "layer `{}`: {} bias terms but CO = {}",
+                    imp.name,
+                    imp.bias.len(),
+                    spec.co
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Load a weight set and validate its shapes against `net` in one step.
+pub fn load_weights_for(path: &Path, net: &Network) -> Result<ImportedWeights> {
+    let w = ImportedWeights::load(path)?;
+    w.validate_against(net)
+        .map_err(|e| anyhow!("weight set {}: {e}", path.display()))?;
+    Ok(w)
+}
+
+/// Deterministic synthetic weight set matching `net`'s shapes — the
+/// fixture generator for tests and benchmarks (no trained-model
+/// dependency offline). A splitmix-style hash of (seed, layer, index)
+/// gives reproducible values in [-1, 1].
+pub fn synthetic_weights(net: &Network, seed: u64) -> ImportedWeights {
+    fn mix(mut z: u64) -> u64 {
+        z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+    let mut layers = Vec::new();
+    for (li, l) in net.layers.iter().filter(|l| l.is_compute()).enumerate() {
+        let fill = |n: usize, salt: u64| -> Vec<f32> {
+            (0..n)
+                .map(|k| {
+                    let h = mix(seed ^ mix(((li as u64) << 32) | salt) ^ (k as u64));
+                    ((h % 2001) as f32) / 1000.0 - 1.0
+                })
+                .collect()
+        };
+        layers.push(ImportedLayer {
+            name: l.name.clone(),
+            weights: fill(l.params() as usize, 1),
+            bias: fill(l.co, 2),
+        });
+    }
+    ImportedWeights {
+        network: net.name.clone(),
+        layers,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +392,111 @@ mod tests {
         let net = lenet5();
         let last = net.layers.last().unwrap();
         assert_eq!(last.co, 10);
+    }
+
+    /// Small topology so the serialization round-trip test stays fast;
+    /// includes a pool layer to prove those are skipped.
+    fn tiny_net() -> Network {
+        Network {
+            name: "tiny".into(),
+            layers: vec![
+                LayerSpec::conv("c1", 2, 1, 4, 4, 3, 3),
+                LayerSpec::pool("p1", 2, 2, 2),
+                LayerSpec::dense("d1", 3, 8),
+            ],
+            base_accuracy: 0.9,
+        }
+    }
+
+    #[test]
+    fn synthetic_weights_match_topology_shapes() {
+        let net = lenet5();
+        let w = synthetic_weights(&net, 7);
+        w.validate_against(&net).unwrap();
+        assert_eq!(w.layers.len(), net.num_compute_layers());
+        for (imp, &li) in w.layers.iter().zip(&net.compute_layers()) {
+            let spec = &net.layers[li];
+            assert_eq!(imp.name, spec.name);
+            assert_eq!(imp.weights.len() as u64, spec.params());
+            assert_eq!(imp.bias.len(), spec.co);
+            assert!(imp.weights.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+        }
+        // Deterministic in the seed, different across seeds.
+        assert_eq!(w, synthetic_weights(&net, 7));
+        assert_ne!(w.layers[0].weights, synthetic_weights(&net, 8).layers[0].weights);
+    }
+
+    #[test]
+    fn weight_import_round_trips_both_container_formats() {
+        let net = tiny_net();
+        let w = synthetic_weights(&net, 3);
+        let dir = std::env::temp_dir().join("edc_zoo_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p_json = dir.join(format!("{}_w.json", std::process::id()));
+        let p_bin = dir.join(format!("{}_w.edc4", std::process::id()));
+        w.save(&p_json, snapshot::Format::Json).unwrap();
+        w.save(&p_bin, snapshot::Format::Binary).unwrap();
+
+        assert_eq!(std::fs::read(&p_bin).unwrap()[..4], *b"EDC4");
+        assert_eq!(load_weights_for(&p_json, &net).unwrap(), w);
+        assert_eq!(load_weights_for(&p_bin, &net).unwrap(), w);
+
+        // The v4 container really hoisted the arrays: two f32 sections
+        // per compute layer (weights + bias), nothing left behind.
+        let d = snapshot::describe(&p_bin).unwrap();
+        assert_eq!(d.str_or("kind", ""), "weights");
+        let f32s = d.get("sections").unwrap().get("f32").unwrap();
+        assert_eq!(f32s.num_or("sections", 0.0), 4.0);
+        assert_eq!(f32s.num_or("elements", 0.0), (18 + 2 + 24 + 3) as f64);
+
+        // Converting binary back to JSON reproduces the v3 bytes.
+        let (tree, fmt) = snapshot::load(&p_bin).unwrap();
+        assert_eq!(fmt, snapshot::Format::Binary);
+        let p_back = dir.join(format!("{}_w_back.json", std::process::id()));
+        snapshot::save(&p_back, &tree, snapshot::Format::Json).unwrap();
+        assert_eq!(
+            std::fs::read(&p_back).unwrap(),
+            std::fs::read(&p_json).unwrap(),
+            "v4 -> v3 convert must be bit-lossless"
+        );
+        for p in [&p_json, &p_bin, &p_back] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn weight_import_rejects_shape_mismatches() {
+        let net = tiny_net();
+
+        let mut w = synthetic_weights(&net, 1);
+        w.layers[0].weights.pop();
+        let e = w.validate_against(&net).unwrap_err().to_string();
+        assert!(e.contains("`c1`") && e.contains("17") && e.contains("18"), "{e}");
+
+        let mut w = synthetic_weights(&net, 1);
+        w.layers[1].bias.push(0.0);
+        let e = w.validate_against(&net).unwrap_err().to_string();
+        assert!(e.contains("`d1`") && e.contains("CO"), "{e}");
+
+        let mut w = synthetic_weights(&net, 1);
+        w.network = "other".into();
+        let e = w.validate_against(&net).unwrap_err().to_string();
+        assert!(e.contains("`other`") && e.contains("`tiny`"), "{e}");
+
+        let mut w = synthetic_weights(&net, 1);
+        w.layers.remove(0);
+        let e = w.validate_against(&net).unwrap_err().to_string();
+        assert!(e.contains("compute layers"), "{e}");
+
+        let mut w = synthetic_weights(&net, 1);
+        w.layers.swap(0, 1);
+        let e = w.validate_against(&net).unwrap_err().to_string();
+        assert!(e.contains("order mismatch"), "{e}");
+
+        // A non-weight snapshot fails with the kind in the message.
+        let mut j = Json::obj();
+        j.set("kind", Json::Str("orchestration".into()));
+        let e = ImportedWeights::from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("orchestration"), "{e}");
     }
 }

@@ -809,14 +809,11 @@ fn f32s_to_json(v: &[f32]) -> Json {
 }
 
 /// Strict decode: any non-number (e.g. a `null` from a NaN) fails the
-/// restore rather than silently shifting the array.
+/// restore rather than silently shifting the array. Accepts both the
+/// plain JSON array form and the typed `f32` sections a binary (v4)
+/// snapshot container decodes into.
 fn f32s_from_json(j: &Json) -> Option<Vec<f32>> {
-    let raw = j.as_arr()?;
-    let mut out = Vec::with_capacity(raw.len());
-    for v in raw {
-        out.push(v.as_f64()? as f32);
-    }
-    Some(out)
+    j.as_f32s()
 }
 
 fn mlp_to_json(m: &Mlp) -> Json {

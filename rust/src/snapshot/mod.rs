@@ -1,0 +1,797 @@
+//! The snapshot codec layer: every byte the system persists and
+//! restores — orchestrator fleet snapshots, `coordinator::checkpoint`
+//! outcomes, daemon `job_<id>` files, warm-start payloads, zoo weight
+//! sets — goes through [`save`] / [`load`] here, in one of two on-disk
+//! formats behind the [`SnapshotCodec`] trait:
+//!
+//! - **v3 JSON** ([`JsonCodec`]): the historical format, the
+//!   deterministic `util::json` text emission. Still the default write
+//!   format and readable/writable forever (`--snapshot-format json`).
+//! - **v4 binary** ([`BinaryCodec`]): a safetensors-style container —
+//!   magic `EDC4`, a little-endian `u64` header length, a JSON header,
+//!   zero padding to an 8-byte boundary, then one contiguous
+//!   little-endian blob of 8-byte-aligned f32/f64/u32 sections read
+//!   zero-copy through [`util::blob::BlobReader`](crate::util::blob).
+//!
+//! Both formats carry the *same logical tree* (the `util::json::Json`
+//! value the existing `to_json` writers produce); the binary encoder
+//! merely recognizes the numeric bulk — net/optimizer tensors, replay
+//! vectors, episode curves, (Q, P) states — by tree path and hoists it
+//! into blob sections, leaving `{"$f": index}` references in the header
+//! copy of the tree. Because the hoisted values are canonicalized to
+//! exactly what a JSON text round-trip would produce, and typed leaves
+//! (`Json::F32s`/`F64s`/`U32s`) display byte-identically to the
+//! `Arr(Num)` they replace, conversion between the two formats is
+//! bit-lossless in both directions and resuming from either format
+//! yields bit-identical runs (invariant 11 in `docs/determinism.md`,
+//! pinned by `tests/orchestrator_resume.rs` and the convert round-trip
+//! CLI test). Files are detected by content (the magic), never by
+//! extension, and a decode failure names the file, the field, and the
+//! byte offset — see `tests/snapshot_formats.rs` for the corruption
+//! matrix.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::blob::{BlobReader, BlobWriter};
+use crate::util::json::{self, Json};
+
+/// First bytes of every v4 binary snapshot.
+pub const MAGIC: [u8; 4] = *b"EDC4";
+
+/// Binary *container* version. Deliberately separate from the logical
+/// schema version inside the tree (`orchestrator::ORCHESTRATION_VERSION`
+/// is still 3, outcome checkpoints still 1): the container says how the
+/// bytes are laid out, the tree version says what they mean, and
+/// converting between containers never touches the tree.
+pub const CONTAINER_VERSION: u64 = 4;
+
+/// Key used for blob-section references inside the header tree. No
+/// legitimate logical tree uses a `$`-prefixed object key.
+const REF_KEY: &str = "$f";
+
+/// On-disk snapshot format.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Format {
+    /// v3: deterministic JSON text (the PR 2–7 format).
+    #[default]
+    Json,
+    /// v4: JSON header + contiguous little-endian binary blob.
+    Binary,
+}
+
+impl Format {
+    /// Parse a `--snapshot-format` value.
+    pub fn parse(s: &str) -> anyhow::Result<Format> {
+        match s {
+            "json" | "v3" => Ok(Format::Json),
+            "binary" | "v4" => Ok(Format::Binary),
+            other => bail!("unknown snapshot format `{other}` (expected `json` or `binary`)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Format::Json => "json",
+            Format::Binary => "binary",
+        }
+    }
+}
+
+/// Detect the format of snapshot bytes by content: v4 files start with
+/// the magic, anything else is treated as v3 JSON text.
+pub fn detect(bytes: &[u8]) -> Format {
+    if bytes.starts_with(&MAGIC) {
+        Format::Binary
+    } else {
+        Format::Json
+    }
+}
+
+/// One codec = one on-disk representation of a logical snapshot tree.
+pub trait SnapshotCodec {
+    fn format(&self) -> Format;
+    /// Serialize a logical tree to file bytes.
+    fn encode(&self, tree: &Json) -> anyhow::Result<Vec<u8>>;
+    /// Parse file bytes back into the logical tree. `origin` is the
+    /// file path (or a synthetic label) used in error messages.
+    fn decode(&self, bytes: &[u8], origin: &str) -> anyhow::Result<Json>;
+}
+
+/// Codec instance for a format.
+pub fn codec_for(format: Format) -> &'static dyn SnapshotCodec {
+    match format {
+        Format::Json => &JsonCodec,
+        Format::Binary => &BinaryCodec,
+    }
+}
+
+/// Atomically write `tree` to `path` in `format` (temp file + rename,
+/// creating parent directories), so a crash mid-save never leaves a
+/// half-written snapshot where a resumable one stood.
+pub fn save(path: &Path, tree: &Json, format: Format) -> anyhow::Result<()> {
+    let bytes = codec_for(format).encode(tree)?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating snapshot directory {}", parent.display()))?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing snapshot {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("moving snapshot into place at {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a snapshot, auto-detecting its format by content. v4 files are
+/// mmap'd (with a read fallback) and their sections decoded through the
+/// bounds-checked blob reader; v3 files are parsed as JSON text. Errors
+/// always name the file.
+pub fn load(path: &Path) -> anyhow::Result<(Json, Format)> {
+    let reader = BlobReader::open(path)?;
+    match detect(reader.bytes()) {
+        Format::Binary => Ok((decode_binary(&reader)?, Format::Binary)),
+        Format::Json => {
+            let text = std::str::from_utf8(reader.bytes()).map_err(|_| {
+                anyhow!("snapshot {} is not valid UTF-8 (corrupt file?)", path.display())
+            })?;
+            let tree = json::parse(text).map_err(|e| {
+                anyhow!(
+                    "snapshot {} is not valid JSON (truncated or corrupt file?): {e}",
+                    path.display()
+                )
+            })?;
+            Ok((tree, Format::Json))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// v3: JSON text
+// ---------------------------------------------------------------------
+
+/// The historical deterministic-JSON representation.
+pub struct JsonCodec;
+
+impl SnapshotCodec for JsonCodec {
+    fn format(&self) -> Format {
+        Format::Json
+    }
+
+    fn encode(&self, tree: &Json) -> anyhow::Result<Vec<u8>> {
+        Ok(tree.to_string().into_bytes())
+    }
+
+    fn decode(&self, bytes: &[u8], origin: &str) -> anyhow::Result<Json> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| anyhow!("snapshot {origin} is not valid UTF-8 (corrupt file?)"))?;
+        json::parse(text).map_err(|e| {
+            anyhow!("snapshot {origin} is not valid JSON (truncated or corrupt file?): {e}")
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// v4: binary container
+// ---------------------------------------------------------------------
+
+/// The v4 binary representation. Layout (all integers little-endian):
+///
+/// ```text
+/// [0..4)    magic "EDC4"
+/// [4..12)   header_len: u64
+/// [12..12+header_len)  header JSON:
+///           {"container":4,
+///            "fields":[{"dtype":...,"len":N,"name":...,"offset":B,"shape":[N]},...],
+///            "tree":<logical tree, numeric bulk replaced by {"$f":i}>}
+/// ...zero padding to the next multiple of 8 from the file start...
+/// [data_start..)  blob: 8-byte-aligned f32/f64/u32 sections
+/// ```
+///
+/// Field offsets are relative to `data_start` (so the header does not
+/// depend on its own length); `len` counts elements, `shape` is the
+/// flat element count today and reserved for multi-dimensional use.
+pub struct BinaryCodec;
+
+impl SnapshotCodec for BinaryCodec {
+    fn format(&self) -> Format {
+        Format::Binary
+    }
+
+    fn encode(&self, tree: &Json) -> anyhow::Result<Vec<u8>> {
+        encode_binary(tree)
+    }
+
+    fn decode(&self, bytes: &[u8], origin: &str) -> anyhow::Result<Json> {
+        decode_binary(&BlobReader::from_vec(bytes.to_vec(), origin))
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Dtype {
+    F32,
+    F64,
+    U32,
+}
+
+impl Dtype {
+    fn label(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+            Dtype::U32 => "u32",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "f64" => Some(Dtype::F64),
+            "u32" => Some(Dtype::U32),
+            _ => None,
+        }
+    }
+
+    fn elem_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::U32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+}
+
+/// Which blob dtype a numeric array at this tree path is stored as.
+/// Matching is by path *shape*, not by exhaustive schema: these are the
+/// bulk payloads of the SAC agent (net/optimizer tensors, replay
+/// vectors), episode curves, (Q, P) compression states, and zoo weight
+/// sets. An unmatched array simply stays in the header tree as JSON —
+/// a missed pattern degrades compactness, never correctness.
+fn leaf_dtype(path: &[String]) -> Option<Dtype> {
+    let p: Vec<&str> = path.iter().map(String::as_str).collect();
+    match p.as_slice() {
+        // MLP and Adam-moment tensor payloads + their shape vectors
+        // (`...{actor,q1,...}.tensors.N.{data,shape}`,
+        //  `...{actor_opt,...}.{m,v}.N.{data,shape}`).
+        [.., "tensors" | "m" | "v", _, "data"] => Some(Dtype::F32),
+        [.., "tensors" | "m" | "v", _, "shape"] => Some(Dtype::U32),
+        // Replay transitions: state / action / next-state vectors.
+        [.., "replay", _, "s" | "a" | "n"] => Some(Dtype::F32),
+        // Episode curves (orchestration slot records and checkpoint
+        // outcome episodes).
+        [.., "energy_curve" | "accuracy_curve"] => Some(Dtype::F64),
+        // (Q, P) compression states: Pareto archive points, cache
+        // seeds, per-episode bests.
+        [.., "q" | "p"] => Some(Dtype::F64),
+        // Zoo weight-set files.
+        ["layers", _, "weights" | "bias"] => Some(Dtype::F32),
+        _ => None,
+    }
+}
+
+/// Canonicalize one f64 exactly as a JSON text round-trip would: the
+/// integral fast path prints via i64 (mapping -0.0 to +0.0), non-finite
+/// prints `null` and parses back as the canonical NaN. Storing the
+/// canonicalized value in the blob is what makes a direct v4 save agree
+/// bit-for-bit with save-v3-then-convert.
+fn canonical_f64(v: f64) -> f64 {
+    if !v.is_finite() {
+        f64::NAN
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        (v as i64) as f64
+    } else {
+        v
+    }
+}
+
+/// Try to view an `Arr` at a matched path as a typed section payload;
+/// `None` (keep it as JSON) if any element does not survive the dtype
+/// round-trip losslessly.
+fn qualify(dtype: Dtype, elems: &[Json]) -> Option<Json> {
+    match dtype {
+        Dtype::F64 => {
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                match e {
+                    Json::Num(v) => out.push(canonical_f64(*v)),
+                    Json::Null => out.push(f64::NAN),
+                    _ => return None,
+                }
+            }
+            Some(Json::F64s(out))
+        }
+        Dtype::F32 => {
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                let v = canonical_f64(e.as_f64()?);
+                let narrowed = v as f32;
+                if !v.is_finite() || f64::from(narrowed).to_bits() != v.to_bits() {
+                    return None;
+                }
+                out.push(narrowed);
+            }
+            Some(Json::F32s(out))
+        }
+        Dtype::U32 => {
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                let v = canonical_f64(e.as_f64()?);
+                if v < 0.0 || v != v.trunc() || v > f64::from(u32::MAX) {
+                    return None;
+                }
+                out.push(v as u32);
+            }
+            Some(Json::U32s(out))
+        }
+    }
+}
+
+struct FieldEntry {
+    name: String,
+    dtype: Dtype,
+    offset: usize,
+    len: usize,
+}
+
+/// Append one typed leaf to the blob, record its field-table entry,
+/// and return the `{"$f": index}` reference that replaces it.
+fn hoist(typed: &Json, path: &[String], blob: &mut BlobWriter, fields: &mut Vec<FieldEntry>) -> Json {
+    let (dtype, offset, len) = match typed {
+        Json::F32s(v) => (Dtype::F32, blob.push_f32s(v), v.len()),
+        Json::F64s(v) => (Dtype::F64, blob.push_f64s(v), v.len()),
+        Json::U32s(v) => (Dtype::U32, blob.push_u32s(v), v.len()),
+        _ => unreachable!("hoist called on non-typed leaf"),
+    };
+    let idx = fields.len();
+    fields.push(FieldEntry { name: path.join("."), dtype, offset, len });
+    let mut r = Json::obj();
+    r.set(REF_KEY, Json::Num(idx as f64));
+    r
+}
+
+/// Walk the tree, hoisting typed payloads into the blob and replacing
+/// them with `{"$f": index}` references. Pre-typed leaves (from a prior
+/// binary decode) are hoisted wherever they sit; `Arr`s are retyped
+/// only at matched paths and only when lossless.
+fn extract(
+    j: &Json,
+    path: &mut Vec<String>,
+    blob: &mut BlobWriter,
+    fields: &mut Vec<FieldEntry>,
+) -> Json {
+    match j {
+        Json::F32s(_) | Json::F64s(_) | Json::U32s(_) => hoist(j, path, blob, fields),
+        Json::Arr(elems) => {
+            if let Some(typed) = leaf_dtype(path).and_then(|d| qualify(d, elems)) {
+                hoist(&typed, path, blob, fields)
+            } else {
+                let mut out = Vec::with_capacity(elems.len());
+                for (i, e) in elems.iter().enumerate() {
+                    path.push(i.to_string());
+                    out.push(extract(e, path, blob, fields));
+                    path.pop();
+                }
+                Json::Arr(out)
+            }
+        }
+        Json::Obj(m) => {
+            let mut out = BTreeMap::new();
+            for (k, v) in m {
+                path.push(k.clone());
+                out.insert(k.clone(), extract(v, path, blob, fields));
+                path.pop();
+            }
+            Json::Obj(out)
+        }
+        other => other.clone(),
+    }
+}
+
+fn encode_binary(tree: &Json) -> anyhow::Result<Vec<u8>> {
+    let mut blob = BlobWriter::new();
+    let mut fields = Vec::new();
+    let header_tree = extract(tree, &mut Vec::new(), &mut blob, &mut fields);
+
+    let mut field_table = Vec::with_capacity(fields.len());
+    for f in &fields {
+        let mut e = Json::obj();
+        e.set("dtype", Json::Str(f.dtype.label().to_string()))
+            .set("len", Json::Num(f.len as f64))
+            .set("name", Json::Str(f.name.clone()))
+            .set("offset", Json::Num(f.offset as f64))
+            .set("shape", Json::U32s(vec![u32::try_from(f.len).unwrap_or(u32::MAX)]));
+        field_table.push(e);
+    }
+    let mut header = Json::obj();
+    header
+        .set("container", Json::Num(CONTAINER_VERSION as f64))
+        .set("fields", Json::Arr(field_table))
+        .set("tree", header_tree);
+    let header_bytes = header.to_string().into_bytes();
+
+    let data_start = (MAGIC.len() + 8 + header_bytes.len()).div_ceil(8) * 8;
+    let blob_bytes = blob.into_bytes();
+    let mut out = Vec::with_capacity(data_start + blob_bytes.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(header_bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(&header_bytes);
+    out.resize(data_start, 0);
+    out.extend_from_slice(&blob_bytes);
+    Ok(out)
+}
+
+/// Parse the fixed prefix + header JSON of a v4 file. Returns the
+/// header tree, the parsed field table, and `data_start`.
+fn read_binary_header(reader: &BlobReader) -> anyhow::Result<(Json, Vec<FieldEntry>, usize)> {
+    let bytes = reader.bytes();
+    let origin = reader.origin();
+    if bytes.len() < MAGIC.len() + 8 {
+        bail!(
+            "{origin}: v4 snapshot truncated: {} bytes is too short for the magic and header \
+             length",
+            bytes.len()
+        );
+    }
+    let mut len8 = [0u8; 8];
+    len8.copy_from_slice(&bytes[MAGIC.len()..MAGIC.len() + 8]);
+    let header_len = usize::try_from(u64::from_le_bytes(len8))
+        .map_err(|_| anyhow!("{origin}: v4 header length does not fit in memory"))?;
+    let header_end = (MAGIC.len() + 8)
+        .checked_add(header_len)
+        .ok_or_else(|| anyhow!("{origin}: v4 header length overflows"))?;
+    if header_end > bytes.len() {
+        bail!(
+            "{origin}: v4 header claims {header_len} bytes but the file ends at byte {} \
+             (truncated or corrupt header length)",
+            bytes.len()
+        );
+    }
+    let header_text = std::str::from_utf8(&bytes[MAGIC.len() + 8..header_end])
+        .map_err(|_| anyhow!("{origin}: v4 header is not valid UTF-8"))?;
+    let header = json::parse(header_text)
+        .map_err(|e| anyhow!("{origin}: v4 header is not valid JSON: {e}"))?;
+    let container = header.num_or("container", -1.0);
+    if container != CONTAINER_VERSION as f64 {
+        bail!("{origin}: unsupported v4 container version {container} (expected {CONTAINER_VERSION})");
+    }
+    let raw_fields = header
+        .get("fields")
+        .and_then(|f| f.as_arr())
+        .ok_or_else(|| anyhow!("{origin}: v4 header has no field table"))?;
+    let mut fields = Vec::with_capacity(raw_fields.len());
+    for (i, rf) in raw_fields.iter().enumerate() {
+        let name = rf
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("{origin}: v4 header field {i} has no name"))?
+            .to_string();
+        let dlabel = rf.str_or("dtype", "");
+        let dtype = Dtype::parse(&dlabel).ok_or_else(|| {
+            anyhow!(
+                "{origin}: field `{name}`: unknown dtype `{dlabel}` (a newer writer? this \
+                 reader speaks f32/f64/u32)"
+            )
+        })?;
+        let offset = rf.num_or("offset", -1.0);
+        let len = rf.num_or("len", -1.0);
+        if offset < 0.0 || offset != offset.trunc() || len < 0.0 || len != len.trunc() {
+            bail!("{origin}: field `{name}`: malformed offset/len in the v4 header");
+        }
+        fields.push(FieldEntry { name, dtype, offset: offset as usize, len: len as usize });
+    }
+    let tree = header
+        .get("tree")
+        .ok_or_else(|| anyhow!("{origin}: v4 header has no logical tree"))?
+        .clone();
+    let data_start = header_end.div_ceil(8) * 8;
+    Ok((tree, fields, data_start))
+}
+
+/// Replace `{"$f": i}` references with typed leaves read (bounds- and
+/// alignment-checked) from the blob.
+fn restore(
+    j: &Json,
+    reader: &BlobReader,
+    fields: &[FieldEntry],
+    data_start: usize,
+) -> anyhow::Result<Json> {
+    match j {
+        Json::Obj(m) => {
+            if m.len() == 1 {
+                if let Some(idx) = m.get(REF_KEY).and_then(Json::as_f64) {
+                    let f = (idx >= 0.0 && idx == idx.trunc())
+                        .then(|| fields.get(idx as usize))
+                        .flatten()
+                        .ok_or_else(|| {
+                            anyhow!(
+                                "{}: v4 tree references field {idx} but the header table has \
+                                 {} entries",
+                                reader.origin(),
+                                fields.len()
+                            )
+                        })?;
+                    let off = data_start.checked_add(f.offset).ok_or_else(|| {
+                        anyhow!(
+                            "{}: field `{}`: {} section at byte offset {}: offset overflows",
+                            reader.origin(),
+                            f.name,
+                            f.dtype.label(),
+                            f.offset
+                        )
+                    })?;
+                    return Ok(match f.dtype {
+                        Dtype::F32 => Json::F32s(reader.f32s(&f.name, off, f.len)?.to_vec()),
+                        Dtype::F64 => Json::F64s(reader.f64s(&f.name, off, f.len)?.to_vec()),
+                        Dtype::U32 => Json::U32s(reader.u32s(&f.name, off, f.len)?.to_vec()),
+                    });
+                }
+            }
+            let mut out = BTreeMap::new();
+            for (k, v) in m {
+                out.insert(k.clone(), restore(v, reader, fields, data_start)?);
+            }
+            Ok(Json::Obj(out))
+        }
+        Json::Arr(elems) => {
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                out.push(restore(e, reader, fields, data_start)?);
+            }
+            Ok(Json::Arr(out))
+        }
+        other => Ok(other.clone()),
+    }
+}
+
+fn decode_binary(reader: &BlobReader) -> anyhow::Result<Json> {
+    let (tree, fields, data_start) = read_binary_header(reader)?;
+    restore(&tree, reader, &fields, data_start)
+}
+
+// ---------------------------------------------------------------------
+// Introspection (the `edc snapshot info` payload)
+// ---------------------------------------------------------------------
+
+/// Describe a snapshot file: format, sizes, logical identity (kind /
+/// version / network / fingerprint) and, for v4, the header's field
+/// table statistics. Returns a JSON object the CLI renders.
+pub fn describe(path: &Path) -> anyhow::Result<Json> {
+    let reader = BlobReader::open(path)?;
+    let file_bytes = reader.bytes().len();
+    let mut out = Json::obj();
+    out.set("file_bytes", Json::Num(file_bytes as f64));
+    match detect(reader.bytes()) {
+        Format::Binary => {
+            let (raw_tree, fields, data_start) = read_binary_header(&reader)?;
+            let tree = restore(&raw_tree, &reader, &fields, data_start)?;
+            out.set("format", Json::Str("binary".into()))
+                .set("container", Json::Num(CONTAINER_VERSION as f64))
+                .set("header_bytes", Json::Num((data_start) as f64))
+                .set("payload_bytes", Json::Num((file_bytes.saturating_sub(data_start)) as f64))
+                .set("fields", Json::Num(fields.len() as f64));
+            let mut by_dtype = Json::obj();
+            for d in [Dtype::F32, Dtype::F64, Dtype::U32] {
+                let (mut n, mut elems) = (0u64, 0u64);
+                for f in fields.iter().filter(|f| f.dtype == d) {
+                    n += 1;
+                    elems += f.len as u64;
+                }
+                let mut e = Json::obj();
+                e.set("sections", Json::Num(n as f64))
+                    .set("elements", Json::Num(elems as f64))
+                    .set("bytes", Json::Num((elems as usize * d.elem_bytes()) as f64));
+                by_dtype.set(d.label(), e);
+            }
+            out.set("sections", by_dtype);
+            describe_tree(&tree, &mut out);
+        }
+        Format::Json => {
+            let tree = JsonCodec.decode(reader.bytes(), reader.origin())?;
+            out.set("format", Json::Str("json".into()));
+            if let Json::Obj(m) = &tree {
+                out.set(
+                    "fields",
+                    Json::Num(m.len() as f64),
+                );
+            }
+            describe_tree(&tree, &mut out);
+        }
+    }
+    Ok(out)
+}
+
+/// Lift the logical identity fields every snapshot kind carries.
+fn describe_tree(tree: &Json, out: &mut Json) {
+    out.set("kind", Json::Str(tree.str_or("kind", "?")));
+    out.set("version", Json::Num(tree.num_or("version", f64::NAN)));
+    let network = tree
+        .get("network")
+        .map(|n| match n {
+            Json::Str(s) => s.clone(),
+            obj => obj.str_or("name", "?"),
+        })
+        .unwrap_or_else(|| "?".to_string());
+    out.set("network", Json::Str(network));
+    out.set("fingerprint", Json::Str(tree.str_or("fingerprint", "-")));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature tree exercising every pattern class: agent tensors
+    /// (+shapes), replay vectors, curves with NaN, (Q, P) states, and
+    /// an unmatched array that must stay JSON.
+    fn sample_tree() -> Json {
+        let text = r#"{
+            "kind":"orchestration","version":3,"fingerprint":"12345",
+            "archive":[{"q":[8,4.5],"p":[1,0.25],"energy":3.5}],
+            "cache_seed":[{"q":[2,3],"p":[0.5,0.5]}],
+            "slots":[{"agent":{
+                "actor":{"tensors":[{"shape":[2,3],"data":[0.5,-1.25,0,3,4,5.5]}]},
+                "actor_opt":{"m":[{"shape":[2],"data":[0.125,0.25]}],"t":"7"},
+                "replay":[{"s":[1,2],"a":[0.5],"r":-0.25,"n":[3,4],"d":false}],
+                "rng":{"s":["1","2","3","4"]}},
+                "records":[{"energy_curve":[1.5,null,2],"accuracy_curve":[null,0.75]}]}],
+            "seeds_list":[9,10,11]
+        }"#;
+        json::parse(&text.replace(char::is_whitespace, "")).unwrap()
+    }
+
+    #[test]
+    fn binary_round_trip_is_bit_lossless_against_json() {
+        let tree = sample_tree();
+        let v3 = JsonCodec.encode(&tree).unwrap();
+        let v4 = BinaryCodec.encode(&tree).unwrap();
+        assert_eq!(detect(&v4), Format::Binary);
+        assert_eq!(detect(&v3), Format::Json);
+
+        // v4 -> tree -> v3 text must equal the direct v3 text.
+        let decoded = BinaryCodec.decode(&v4, "mem").unwrap();
+        assert_eq!(JsonCodec.encode(&decoded).unwrap(), v3, "v4 decode lost bytes");
+
+        // And re-encoding the decoded tree must reproduce the container
+        // byte-for-byte (canonical v4 is a pure function of the tree).
+        assert_eq!(BinaryCodec.encode(&decoded).unwrap(), v4, "v4 is not canonical");
+
+        // Convert path: v3 text -> tree -> v4 equals direct v4.
+        let reparsed = JsonCodec.decode(&v3, "mem").unwrap();
+        assert_eq!(BinaryCodec.encode(&reparsed).unwrap(), v4, "convert differs from direct save");
+    }
+
+    #[test]
+    fn typed_sections_really_leave_the_header_tree() {
+        let v4 = BinaryCodec.encode(&sample_tree()).unwrap();
+        let r = BlobReader::from_vec(v4, "mem");
+        let (raw_tree, fields, _) = read_binary_header(&r).unwrap();
+        let names: Vec<&str> = fields.iter().map(|f| f.name.as_str()).collect();
+        for expect in [
+            "archive.0.q",
+            "archive.0.p",
+            "cache_seed.0.q",
+            "slots.0.agent.actor.tensors.0.data",
+            "slots.0.agent.actor.tensors.0.shape",
+            "slots.0.agent.actor_opt.m.0.data",
+            "slots.0.agent.replay.0.s",
+            "slots.0.agent.replay.0.n",
+            "slots.0.records.0.energy_curve",
+            "slots.0.records.0.accuracy_curve",
+        ] {
+            assert!(names.contains(&expect), "missing section {expect}: {names:?}");
+        }
+        // The unmatched array stays inline; the rng state strings too.
+        let text = raw_tree.to_string();
+        assert!(text.contains("\"seeds_list\":[9,10,11]"), "{text}");
+        assert!(text.contains("\"rng\":{\"s\":[\"1\",\"2\",\"3\",\"4\"]}"), "{text}");
+        assert!(!text.contains("5.5"), "tensor data leaked into the header tree: {text}");
+    }
+
+    #[test]
+    fn nan_curves_survive_binary_round_trip_with_canonical_bits() {
+        let tree = sample_tree();
+        let decoded = BinaryCodec
+            .decode(&BinaryCodec.encode(&tree).unwrap(), "mem")
+            .unwrap();
+        let curve = decoded.get("slots").unwrap().as_arr().unwrap()[0]
+            .get("records")
+            .unwrap()
+            .as_arr()
+            .unwrap()[0]
+            .get("energy_curve")
+            .unwrap()
+            .to_f64s()
+            .unwrap();
+        assert_eq!(curve.len(), 3);
+        assert_eq!(curve[0], 1.5);
+        assert_eq!(curve[1].to_bits(), f64::NAN.to_bits(), "null must restore as canonical NaN");
+        assert_eq!(curve[2], 2.0);
+    }
+
+    #[test]
+    fn save_load_round_trips_both_formats_with_autodetect() {
+        let dir = std::env::temp_dir().join("edc_snapshot_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let tree = sample_tree();
+        for (format, name) in [(Format::Json, "t.json"), (Format::Binary, "t.bin")] {
+            let path = dir.join(format!("{}_{name}", std::process::id()));
+            save(&path, &tree, format).unwrap();
+            let (back, detected) = load(&path).unwrap();
+            assert_eq!(detected, format);
+            assert_eq!(
+                JsonCodec.encode(&back).unwrap(),
+                JsonCodec.encode(&tree).unwrap(),
+                "round trip through {} lost data",
+                format.label()
+            );
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn describe_reports_both_formats() {
+        let dir = std::env::temp_dir().join("edc_snapshot_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let tree = sample_tree();
+        let p_json = dir.join(format!("{}_d.json", std::process::id()));
+        let p_bin = dir.join(format!("{}_d.bin", std::process::id()));
+        save(&p_json, &tree, Format::Json).unwrap();
+        save(&p_bin, &tree, Format::Binary).unwrap();
+
+        let dj = describe(&p_json).unwrap();
+        assert_eq!(dj.str_or("format", ""), "json");
+        assert_eq!(dj.str_or("kind", ""), "orchestration");
+        assert_eq!(dj.str_or("fingerprint", ""), "12345");
+
+        let db = describe(&p_bin).unwrap();
+        assert_eq!(db.str_or("format", ""), "binary");
+        assert_eq!(db.num_or("container", 0.0), 4.0);
+        assert_eq!(db.num_or("version", 0.0), 3.0);
+        assert!(db.num_or("fields", 0.0) >= 10.0);
+        let f32s = db.get("sections").unwrap().get("f32").unwrap();
+        assert!(f32s.num_or("elements", 0.0) >= 6.0);
+        std::fs::remove_file(&p_json).ok();
+        std::fs::remove_file(&p_bin).ok();
+    }
+
+    #[test]
+    fn container_version_is_independent_of_tree_version() {
+        // A logical tree at version 3 stays version 3 through the v4
+        // container: the binary layer must never touch schema versions.
+        let decoded = BinaryCodec
+            .decode(&BinaryCodec.encode(&sample_tree()).unwrap(), "mem")
+            .unwrap();
+        assert_eq!(decoded.num_or("version", 0.0), 3.0);
+    }
+
+    #[test]
+    fn format_parse_and_labels() {
+        assert_eq!(Format::parse("json").unwrap(), Format::Json);
+        assert_eq!(Format::parse("v3").unwrap(), Format::Json);
+        assert_eq!(Format::parse("binary").unwrap(), Format::Binary);
+        assert_eq!(Format::parse("v4").unwrap(), Format::Binary);
+        assert!(Format::parse("msgpack").is_err());
+        assert_eq!(Format::default(), Format::Json);
+    }
+
+    #[test]
+    fn minus_zero_canonicalizes_like_a_json_round_trip() {
+        // v3 prints -0.0 as "0" (integral i64 fast path), so a parse
+        // gives +0.0; the blob must store the same canonical value or a
+        // v4 resume would diverge bitwise from a v3 resume.
+        let mut tree = Json::obj();
+        tree.set("best", {
+            let mut b = Json::obj();
+            b.set("q", Json::from_f64s(&[-0.0, 2.0]));
+            b
+        });
+        let decoded = BinaryCodec
+            .decode(&BinaryCodec.encode(&tree).unwrap(), "mem")
+            .unwrap();
+        let q = decoded.get("best").unwrap().get("q").unwrap().to_f64s().unwrap();
+        assert_eq!(q[0].to_bits(), 0.0f64.to_bits(), "-0.0 must canonicalize to +0.0");
+    }
+}

@@ -1,0 +1,377 @@
+//! Bounds-checked binary blob storage for v4 snapshots.
+//!
+//! A v4 snapshot is a JSON header followed by one contiguous
+//! little-endian payload of 8-byte-aligned numeric sections (see
+//! `snapshot::BinaryCodec` for the container layout and
+//! `docs/checkpoints.md` for the on-disk spec). This module owns the
+//! two halves of that payload's lifecycle:
+//!
+//! - [`BlobWriter`] appends f32/f64/u32 sections, padding each to an
+//!   8-byte boundary, and returns the byte offset where the section
+//!   landed — the offsets the header's field table records.
+//! - [`BlobReader`] opens a file via `mmap` when available (unix; the
+//!   mapping is read-only and private) with a read-to-aligned-`Vec`
+//!   fallback, and hands out zero-copy `&[f32]`/`&[f64]`/`&[u32]`
+//!   section views. Every view is bounds- and alignment-checked against
+//!   the real file size first, and a failed check produces a readable
+//!   error naming the file, the field, and the byte offset — a corrupt
+//!   or truncated snapshot must never panic (or worse, read out of
+//!   bounds).
+//!
+//! The zero-copy views reinterpret raw bytes, so they are only correct
+//! on little-endian hosts; the format itself is defined as
+//! little-endian and the build refuses big-endian targets below rather
+//! than silently byte-swapping.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+#[cfg(target_endian = "big")]
+compile_error!(
+    "v4 snapshot blobs are little-endian and read zero-copy; \
+     big-endian hosts would need a byte-swapping decode path"
+);
+
+/// Append-only builder for the numeric payload of a v4 snapshot.
+/// Sections start 8-byte aligned (the alignment of the widest dtype),
+/// with zero padding between them, so any section can be viewed in
+/// place once the blob itself is loaded at an 8-aligned base address.
+#[derive(Default)]
+pub struct BlobWriter {
+    buf: Vec<u8>,
+}
+
+impl BlobWriter {
+    pub fn new() -> BlobWriter {
+        BlobWriter::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    fn pad8(&mut self) {
+        while self.buf.len() % 8 != 0 {
+            self.buf.push(0);
+        }
+    }
+
+    /// Append an f32 section; returns its byte offset within the blob.
+    pub fn push_f32s(&mut self, vals: &[f32]) -> usize {
+        self.pad8();
+        let off = self.buf.len();
+        for v in vals {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        off
+    }
+
+    /// Append an f64 section; returns its byte offset within the blob.
+    pub fn push_f64s(&mut self, vals: &[f64]) -> usize {
+        self.pad8();
+        let off = self.buf.len();
+        for v in vals {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        off
+    }
+
+    /// Append a u32 section; returns its byte offset within the blob.
+    pub fn push_u32s(&mut self, vals: &[u32]) -> usize {
+        self.pad8();
+        let off = self.buf.len();
+        for v in vals {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        off
+    }
+
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        self.pad8();
+        self.buf
+    }
+}
+
+/// Byte storage whose base address is always 8-byte aligned (backed by
+/// a `Vec<u64>`), so dtype-aligned section offsets yield dtype-aligned
+/// element pointers.
+struct AlignedBytes {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBytes {
+    fn from_slice(b: &[u8]) -> AlignedBytes {
+        let mut words = vec![0u64; b.len().div_ceil(8)];
+        // Safety: the word buffer spans at least `b.len()` bytes.
+        unsafe {
+            std::ptr::copy_nonoverlapping(b.as_ptr(), words.as_mut_ptr().cast::<u8>(), b.len());
+        }
+        AlignedBytes { words, len: b.len() }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        // Safety: `len <= words.len() * 8` by construction.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>(), self.len) }
+    }
+}
+
+#[cfg(unix)]
+mod mm {
+    use std::ffi::c_void;
+
+    // libc is always linked via std on unix; declaring the two symbols
+    // directly avoids growing a dependency for one syscall pair.
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// Map `len` bytes of `fd` read-only; `None` on failure (callers
+    /// fall back to reading the file).
+    pub fn map(fd: i32, len: usize) -> Option<*const u8> {
+        // Safety: a read-only private mapping of an open fd; failure is
+        // reported as MAP_FAILED, checked below.
+        let p = unsafe { mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, fd, 0) };
+        if p as usize == usize::MAX || p.is_null() {
+            None
+        } else {
+            Some(p.cast_const().cast::<u8>())
+        }
+    }
+
+    pub fn unmap(ptr: *const u8, len: usize) {
+        // Safety: `ptr`/`len` came from a successful `map` call.
+        unsafe {
+            let _ = munmap(ptr.cast_mut().cast::<c_void>(), len);
+        }
+    }
+}
+
+enum Backing {
+    Owned(AlignedBytes),
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+}
+
+/// Read side of the blob: the raw bytes of one snapshot file plus the
+/// origin path for error messages. Section accessors give zero-copy
+/// typed views after bounds and alignment checks.
+pub struct BlobReader {
+    backing: Backing,
+    origin: String,
+}
+
+// Safety: the mapped region is read-only and private; `BlobReader`
+// hands out only shared references to it.
+unsafe impl Send for BlobReader {}
+unsafe impl Sync for BlobReader {}
+
+impl Drop for BlobReader {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            mm::unmap(ptr, len);
+        }
+    }
+}
+
+impl BlobReader {
+    /// Open `path`, mmap'd when the platform allows, otherwise read
+    /// into aligned owned storage.
+    pub fn open(path: &Path) -> anyhow::Result<BlobReader> {
+        let origin = path.display().to_string();
+        let file =
+            std::fs::File::open(path).with_context(|| format!("reading snapshot {origin}"))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("reading snapshot {origin}"))?
+            .len();
+        let len = usize::try_from(len)
+            .map_err(|_| anyhow::anyhow!("{origin}: file too large to map"))?;
+        #[cfg(unix)]
+        if len > 0 {
+            use std::os::unix::io::AsRawFd;
+            if let Some(ptr) = mm::map(file.as_raw_fd(), len) {
+                return Ok(BlobReader { backing: Backing::Mapped { ptr, len }, origin });
+            }
+        }
+        let bytes = std::fs::read(path).with_context(|| format!("reading snapshot {origin}"))?;
+        Ok(BlobReader::from_vec(bytes, &origin))
+    }
+
+    /// Wrap in-memory bytes (copied into aligned storage), e.g. for
+    /// decoding a snapshot that was never written to disk.
+    pub fn from_vec(bytes: Vec<u8>, origin: &str) -> BlobReader {
+        BlobReader {
+            backing: Backing::Owned(AlignedBytes::from_slice(&bytes)),
+            origin: origin.to_string(),
+        }
+    }
+
+    /// The file path (or synthetic origin label) used in error messages.
+    pub fn origin(&self) -> &str {
+        &self.origin
+    }
+
+    /// The whole file, as bytes at an 8-aligned base address.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            Backing::Owned(a) => a.bytes(),
+            // Safety: the mapping stays valid until `Drop`.
+            #[cfg(unix)]
+            Backing::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+        }
+    }
+
+    fn section<T>(&self, field: &str, off: usize, count: usize, dtype: &str) -> anyhow::Result<&[T]> {
+        let bytes = self.bytes();
+        let size = std::mem::size_of::<T>();
+        let byte_len = count
+            .checked_mul(size)
+            .with_context(|| self.section_err(field, off, dtype, "section length overflows"))?;
+        let end = off
+            .checked_add(byte_len)
+            .with_context(|| self.section_err(field, off, dtype, "section end overflows"))?;
+        if end > bytes.len() {
+            bail!(self.section_err(
+                field,
+                off,
+                dtype,
+                &format!(
+                    "section of {byte_len} bytes runs past the end of the {}-byte file",
+                    bytes.len()
+                ),
+            ));
+        }
+        if off % size != 0 {
+            bail!(self.section_err(field, off, dtype, &format!("offset is not {size}-byte aligned")));
+        }
+        // Safety: bounds and alignment checked above; the base address
+        // is 8-aligned (mmap is page-aligned, Owned is Vec<u64>-backed),
+        // so `base + off` is `size_of::<T>()`-aligned. T is one of the
+        // plain-old-data section dtypes (f32/f64/u32) for which any bit
+        // pattern is a valid value.
+        unsafe { Ok(std::slice::from_raw_parts(bytes.as_ptr().add(off).cast::<T>(), count)) }
+    }
+
+    fn section_err(&self, field: &str, off: usize, dtype: &str, what: &str) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{}: field `{field}`: {dtype} section at byte offset {off}: {what}",
+            self.origin
+        );
+        s
+    }
+
+    /// Zero-copy f32 section view (`count` elements at byte `off`).
+    pub fn f32s(&self, field: &str, off: usize, count: usize) -> anyhow::Result<&[f32]> {
+        self.section::<f32>(field, off, count, "f32")
+    }
+
+    /// Zero-copy f64 section view (`count` elements at byte `off`).
+    pub fn f64s(&self, field: &str, off: usize, count: usize) -> anyhow::Result<&[f64]> {
+        self.section::<f64>(field, off, count, "f64")
+    }
+
+    /// Zero-copy u32 section view (`count` elements at byte `off`).
+    pub fn u32s(&self, field: &str, off: usize, count: usize) -> anyhow::Result<&[u32]> {
+        self.section::<u32>(field, off, count, "u32")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_round_trips_all_dtypes_through_reader() {
+        let mut w = BlobWriter::new();
+        let o32 = w.push_f32s(&[1.0, -2.5, f32::NAN]);
+        let o64 = w.push_f64s(&[0.1, f64::NAN, -3.0]);
+        let ou = w.push_u32s(&[7, 0, u32::MAX]);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len() % 8, 0);
+        assert_eq!(o32 % 8, 0);
+        assert_eq!(o64 % 8, 0);
+        assert_eq!(ou % 8, 0);
+
+        let r = BlobReader::from_vec(bytes, "mem");
+        let f = r.f32s("a", o32, 3).unwrap();
+        assert_eq!(f[0].to_bits(), 1.0f32.to_bits());
+        assert_eq!(f[2].to_bits(), f32::NAN.to_bits());
+        let d = r.f64s("b", o64, 3).unwrap();
+        assert_eq!(d[1].to_bits(), f64::NAN.to_bits());
+        assert_eq!(d[2], -3.0);
+        assert_eq!(r.u32s("c", ou, 3).unwrap(), &[7, 0, u32::MAX]);
+    }
+
+    #[test]
+    fn out_of_bounds_and_misaligned_sections_error_readably() {
+        let mut w = BlobWriter::new();
+        w.push_f64s(&[1.0, 2.0]);
+        let r = BlobReader::from_vec(w.into_bytes(), "snap.edc4");
+
+        let e = r.f64s("slots.0.curve", 8, 4).unwrap_err().to_string();
+        assert!(e.contains("snap.edc4"), "{e}");
+        assert!(e.contains("slots.0.curve"), "{e}");
+        assert!(e.contains("offset 8"), "{e}");
+        assert!(e.contains("runs past the end"), "{e}");
+
+        let e = r.f64s("x", 4, 1).unwrap_err().to_string();
+        assert!(e.contains("not 8-byte aligned"), "{e}");
+
+        let e = r.f32s("y", usize::MAX - 2, 1).unwrap_err().to_string();
+        assert!(e.contains("overflows"), "{e}");
+
+        // In-bounds aligned view still works alongside the failures.
+        assert_eq!(r.f64s("ok", 0, 2).unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn open_uses_real_files_and_empty_files_are_fine() {
+        let dir = std::env::temp_dir().join("edc_blob_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("blob_{}.bin", std::process::id()));
+
+        let mut w = BlobWriter::new();
+        let off = w.push_u32s(&[3, 1, 4, 1, 5]);
+        std::fs::write(&path, w.into_bytes()).unwrap();
+        let r = BlobReader::open(&path).unwrap();
+        assert_eq!(r.u32s("digits", off, 5).unwrap(), &[3, 1, 4, 1, 5]);
+        assert!(r.origin().contains("blob_"), "{}", r.origin());
+        drop(r);
+
+        std::fs::write(&path, b"").unwrap();
+        let r = BlobReader::open(&path).unwrap();
+        assert!(r.bytes().is_empty());
+        let e = r.f32s("w", 0, 1).unwrap_err().to_string();
+        assert!(e.contains("0-byte file"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_error_names_the_path() {
+        let e = BlobReader::open(Path::new("/nonexistent/edc_nope.bin"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("edc_nope.bin"), "{e}");
+    }
+}

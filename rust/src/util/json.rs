@@ -10,6 +10,15 @@ use std::fmt;
 
 /// A JSON value. Object keys are ordered (BTreeMap) so serialization is
 /// deterministic — important for reproducible checkpoints.
+///
+/// The `F32s`/`F64s`/`U32s` variants are *typed leaves*: numeric arrays
+/// held in native storage instead of `Arr(Num)`. The binary snapshot
+/// codec (`snapshot::BinaryCodec`) produces them when reading v4 blob
+/// sections, and their `Display` output is byte-identical to the
+/// equivalent `Arr(Num)` emission (each element widened to f64 and
+/// formatted by the same rule, non-finite as `null`), so a tree that
+/// carries typed leaves serializes to exactly the JSON the all-`Arr`
+/// tree would. The text parser never produces them.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     Null,
@@ -18,6 +27,9 @@ pub enum Json {
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+    F32s(Vec<f32>),
+    F64s(Vec<f64>),
+    U32s(Vec<u32>),
 }
 
 impl Json {
@@ -87,6 +99,12 @@ impl Json {
     }
 
     pub fn to_f64s(&self) -> Option<Vec<f64>> {
+        match self {
+            Json::F64s(v) => return Some(v.clone()),
+            Json::F32s(v) => return Some(v.iter().map(|&x| f64::from(x)).collect()),
+            Json::U32s(v) => return Some(v.iter().map(|&x| f64::from(x)).collect()),
+            _ => {}
+        }
         let a = self.as_arr()?;
         let mut out = Vec::with_capacity(a.len());
         for j in a {
@@ -102,6 +120,57 @@ impl Json {
         }
         Some(out)
     }
+
+    /// Read an f32 array from either a typed `F32s` leaf (v4 binary
+    /// snapshots) or an `Arr` of finite `Num`s (v3 JSON). Strict on
+    /// `Null`/non-numeric entries, mirroring `rl::sac::f32s_from_json`:
+    /// f32 payloads (weights, replay vectors) never carry non-finite
+    /// placeholders, so a `null` there is corruption, not a NaN.
+    pub fn as_f32s(&self) -> Option<Vec<f32>> {
+        match self {
+            Json::F32s(v) => Some(v.clone()),
+            Json::Arr(a) => {
+                let mut out = Vec::with_capacity(a.len());
+                for j in a {
+                    out.push(j.as_f64()? as f32);
+                }
+                Some(out)
+            }
+            _ => None,
+        }
+    }
+
+    /// Read a u32 array from either a typed `U32s` leaf or an `Arr` of
+    /// non-negative integral `Num`s (tensor shapes).
+    pub fn as_u32s(&self) -> Option<Vec<u32>> {
+        match self {
+            Json::U32s(v) => Some(v.clone()),
+            Json::Arr(a) => {
+                let mut out = Vec::with_capacity(a.len());
+                for j in a {
+                    let v = j.as_f64()?;
+                    if v < 0.0 || v != v.trunc() || v > f64::from(u32::MAX) {
+                        return None;
+                    }
+                    out.push(v as u32);
+                }
+                Some(out)
+            }
+            _ => None,
+        }
+    }
+
+    /// Element count if this value is an array of any representation
+    /// (`Arr` or a typed leaf).
+    pub fn arr_len(&self) -> Option<usize> {
+        match self {
+            Json::Arr(v) => Some(v.len()),
+            Json::F32s(v) => Some(v.len()),
+            Json::F64s(v) => Some(v.len()),
+            Json::U32s(v) => Some(v.len()),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for Json {
@@ -110,22 +179,40 @@ impl fmt::Display for Json {
     }
 }
 
+/// The one number-formatting rule, shared by `Num` and the typed-leaf
+/// arrays so their bytes can never diverge: integral values below 1e15
+/// print via i64 (no trailing `.0`), other finite values use Rust's
+/// shortest round-trip formatting, non-finite prints `null` (JSON has
+/// no Inf/NaN; most encoders do the same).
+fn write_f64(v: f64, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    if v.is_finite() {
+        if v == v.trunc() && v.abs() < 1e15 {
+            write!(f, "{}", v as i64)
+        } else {
+            write!(f, "{v}")
+        }
+    } else {
+        write!(f, "null")
+    }
+}
+
+/// Emit a typed numeric array exactly as the equivalent `Arr(Num)`.
+fn write_f64_array<I: Iterator<Item = f64>>(it: I, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    write!(f, "[")?;
+    for (i, v) in it.enumerate() {
+        if i > 0 {
+            write!(f, ",")?;
+        }
+        write_f64(v, f)?;
+    }
+    write!(f, "]")
+}
+
 fn write_json(j: &Json, f: &mut fmt::Formatter<'_>) -> fmt::Result {
     match j {
         Json::Null => write!(f, "null"),
         Json::Bool(b) => write!(f, "{b}"),
-        Json::Num(v) => {
-            if v.is_finite() {
-                if *v == v.trunc() && v.abs() < 1e15 {
-                    write!(f, "{}", *v as i64)
-                } else {
-                    write!(f, "{v}")
-                }
-            } else {
-                // JSON has no Inf/NaN; emit null like most encoders.
-                write!(f, "null")
-            }
-        }
+        Json::Num(v) => write_f64(*v, f),
         Json::Str(s) => write_escaped(s, f),
         Json::Arr(v) => {
             write!(f, "[")?;
@@ -149,6 +236,9 @@ fn write_json(j: &Json, f: &mut fmt::Formatter<'_>) -> fmt::Result {
             }
             write!(f, "}}")
         }
+        Json::F32s(v) => write_f64_array(v.iter().map(|&x| f64::from(x)), f),
+        Json::F64s(v) => write_f64_array(v.iter().copied(), f),
+        Json::U32s(v) => write_f64_array(v.iter().map(|&x| f64::from(x)), f),
     }
 }
 
@@ -457,5 +547,50 @@ mod tests {
         let mut o = Json::obj();
         o.set("zeta", Json::Num(1.0)).set("alpha", Json::Num(2.0));
         assert_eq!(o.to_string(), r#"{"alpha":2,"zeta":1}"#);
+    }
+
+    /// The v4 bit-identity cornerstone: a typed leaf must serialize to
+    /// exactly the bytes the equivalent `Arr(Num)` serializes to, for
+    /// every formatting branch (integral, fractional, sub-f32 precision,
+    /// non-finite).
+    #[test]
+    fn typed_leaves_display_byte_identical_to_arr() {
+        let f64s = vec![0.0, -1.0, 1.5, 1e-300, 0.1 + 0.2, f64::NAN, f64::INFINITY, 3e15];
+        let arr = Json::from_f64s(&f64s);
+        assert_eq!(Json::F64s(f64s.clone()).to_string(), arr.to_string());
+
+        let f32s: Vec<f32> = vec![0.0, -2.0, 0.1, 1e-30, f32::NAN, 7.25];
+        let widened = Json::Arr(f32s.iter().map(|&x| Json::Num(f64::from(x))).collect());
+        assert_eq!(Json::F32s(f32s).to_string(), widened.to_string());
+
+        let u32s = vec![0u32, 1, 500, u32::MAX];
+        let nums = Json::Arr(u32s.iter().map(|&x| Json::Num(f64::from(x))).collect());
+        assert_eq!(Json::U32s(u32s).to_string(), nums.to_string());
+    }
+
+    #[test]
+    fn typed_accessors_accept_both_representations() {
+        let arr = parse("[1,2.5,3]").unwrap();
+        assert_eq!(arr.as_f32s().unwrap(), vec![1.0, 2.5, 3.0]);
+        assert_eq!(Json::F32s(vec![1.0, 2.5, 3.0]).as_f32s().unwrap(), vec![1.0, 2.5, 3.0]);
+        // Strict: null entries are corruption for f32 payloads.
+        assert!(parse("[1,null]").unwrap().as_f32s().is_none());
+
+        let shape = parse("[64,166]").unwrap();
+        assert_eq!(shape.as_u32s().unwrap(), vec![64, 166]);
+        assert_eq!(Json::U32s(vec![64, 166]).as_u32s().unwrap(), vec![64, 166]);
+        assert!(parse("[-1]").unwrap().as_u32s().is_none());
+        assert!(parse("[1.5]").unwrap().as_u32s().is_none());
+
+        // to_f64s reads all three typed leaves; F64s preserves NaN.
+        let back = Json::F64s(vec![f64::NAN, 2.0]).to_f64s().unwrap();
+        assert!(back[0].is_nan());
+        assert_eq!(back[1], 2.0);
+        assert_eq!(Json::U32s(vec![3]).to_f64s().unwrap(), vec![3.0]);
+        assert_eq!(Json::F32s(vec![0.5]).to_f64s().unwrap(), vec![0.5]);
+
+        assert_eq!(Json::F64s(vec![1.0; 4]).arr_len(), Some(4));
+        assert_eq!(parse("[1,2]").unwrap().arr_len(), Some(2));
+        assert_eq!(Json::Num(1.0).arr_len(), None);
     }
 }

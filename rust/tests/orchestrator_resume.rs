@@ -11,6 +11,7 @@ use edcompress::coordinator::SearchConfig;
 use edcompress::dataflow::Dataflow;
 use edcompress::model::zoo;
 use edcompress::rl::sac::SacConfig;
+use edcompress::snapshot::{self, Format};
 use std::path::PathBuf;
 
 fn spec() -> OrchestratorSpec {
@@ -313,6 +314,126 @@ fn nan_accuracy_curve_entries_survive_a_snapshot_round_trip() {
         curves(&resumed),
         expect,
         "NaN curve entries must survive the snapshot round-trip bit-for-bit"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Cross-format matrix, leg 1: the same kill point snapshotted as v3
+/// JSON *and* v4 binary must resume to bit-identical final results, and
+/// converting the v3 file to v4 must reproduce the directly-written v4
+/// file byte for byte (the binary form is canonical, not an
+/// approximation of the JSON one).
+#[test]
+fn binary_snapshot_resumes_bit_identically_to_json() {
+    let mut reference = Orchestrator::new(spec());
+    let expect = reference.run().expect("uninterrupted reference failed");
+
+    // One killed run, snapshotted in both formats at the same instant.
+    let p3 = temp_snapshot("cross_fmt.json");
+    let p4 = temp_snapshot("cross_fmt.edc4");
+    {
+        let mut killed = Orchestrator::new(spec());
+        let done = killed.run_round().expect("first round failed");
+        assert!(!done, "budget too small: run finished before the kill point");
+        killed.save_snapshot_as(&p3, Format::Json).expect("v3 save failed");
+        killed.save_snapshot_as(&p4, Format::Binary).expect("v4 save failed");
+    }
+    let v4_on_disk = std::fs::read(&p4).expect("read v4 snapshot");
+    assert_eq!(v4_on_disk[..4], *b"EDC4", "binary snapshot is missing its magic");
+
+    // Converting the JSON snapshot reproduces the binary one exactly.
+    let (tree, from) = snapshot::load(&p3).expect("v3 load failed");
+    assert_eq!(from, Format::Json);
+    let pc = temp_snapshot("cross_fmt_converted.edc4");
+    snapshot::save(&pc, &tree, Format::Binary).expect("convert save failed");
+    assert_eq!(
+        std::fs::read(&pc).expect("read converted snapshot"),
+        v4_on_disk,
+        "v3→v4 conversion must be byte-identical to a direct v4 save"
+    );
+
+    // Both resume paths auto-detect their format and finish identically.
+    let mut from_v3 = Orchestrator::resume(&p3, spec()).expect("v3 resume failed");
+    assert_eq!(from_v3.snapshot_format, Format::Json);
+    let mut from_v4 = Orchestrator::resume(&p4, spec()).expect("v4 resume failed");
+    assert_eq!(from_v4.snapshot_format, Format::Binary);
+    for slot in &from_v4.slots {
+        assert_eq!(slot.episodes_done, 2, "v4 resume lost mid-run progress");
+    }
+    let got3 = from_v3.run().expect("v3-resumed run failed");
+    let got4 = from_v4.run().expect("v4-resumed run failed");
+    assert_results_bit_identical(&expect, &got3);
+    assert_results_bit_identical(&expect, &got4);
+    for p in [&p3, &p4, &pc] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// Cross-format matrix, leg 2: `--warm-start` from a v4 snapshot seeds
+/// the same run as warm-starting from the equivalent v3 snapshot —
+/// `WarmStart::load` auto-detects the container just like resume does.
+#[test]
+fn warm_start_from_binary_matches_warm_start_from_json() {
+    let p3 = temp_snapshot("warm_cross.json");
+    let p4 = temp_snapshot("warm_cross.edc4");
+    let mut src = Orchestrator::new(spec());
+    src.run().expect("source run failed");
+    src.save_snapshot_as(&p3, Format::Json).expect("v3 save failed");
+    src.save_snapshot_as(&p4, Format::Binary).expect("v4 save failed");
+    drop(src);
+
+    let run_warm = |path: &PathBuf| -> OrchestrationResult {
+        let warm = WarmStart::load(path).expect("warm-start load failed");
+        let mut s = spec();
+        s.base_seed = 99;
+        let mut orch = Orchestrator::with_warm_start(s, &warm).expect("warm start failed");
+        orch.run().expect("warm-started run failed")
+    };
+    let from_v3 = run_warm(&p3);
+    let from_v4 = run_warm(&p4);
+    assert_results_bit_identical(&from_v3, &from_v4);
+    std::fs::remove_file(&p3).ok();
+    std::fs::remove_file(&p4).ok();
+}
+
+/// Cross-format matrix, leg 3: the PR 7 NaN-curve invariant holds for
+/// the binary container too — v4 stores non-finite floats as NaN
+/// payloads in the f64 blob (v3 stores JSON `null`), and both must
+/// restore length- and bit-preserving.
+#[test]
+fn nan_accuracy_curve_entries_survive_a_binary_round_trip() {
+    let mut s = spec();
+    s.env.threshold_frac = 1.5;
+    let path = temp_snapshot("nan_curves.edc4");
+    let mut orch = Orchestrator::new(s.clone());
+    let done = orch.run_round().expect("round failed");
+    assert!(!done, "finished before kill point");
+    orch.save_snapshot_as(&path, Format::Binary).expect("v4 save failed");
+
+    let curves = |o: &Orchestrator| -> Vec<Vec<u64>> {
+        o.slots
+            .iter()
+            .map(|sl| {
+                sl.records
+                    .iter()
+                    .flat_map(|r| r.accuracy_curve.iter().map(|v| v.to_bits()))
+                    .collect()
+            })
+            .collect()
+    };
+    let expect = curves(&orch);
+    assert!(
+        expect.iter().flatten().any(|b| f64::from_bits(*b).is_nan()),
+        "test premise broken: curves contain no NaN entries"
+    );
+    drop(orch);
+
+    let resumed = Orchestrator::resume(&path, s).expect("v4 resume failed");
+    assert_eq!(resumed.snapshot_format, Format::Binary);
+    assert_eq!(
+        curves(&resumed),
+        expect,
+        "NaN curve entries must survive the binary round-trip bit-for-bit"
     );
     std::fs::remove_file(&path).ok();
 }

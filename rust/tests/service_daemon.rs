@@ -10,6 +10,7 @@ use edcompress::coordinator::orchestrator::{Orchestrator, OrchestratorSpec};
 use edcompress::coordinator::service::{Client, ServeConfig, Service};
 use edcompress::dataflow::Dataflow;
 use edcompress::model::zoo;
+use edcompress::snapshot::{self, Format};
 use edcompress::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -27,10 +28,9 @@ fn test_dir(name: &str) -> PathBuf {
 fn serve(dir: &PathBuf, slots: usize, resume: bool) -> Service {
     Service::start(ServeConfig {
         dir: dir.clone(),
-        port: 0,
         max_concurrent_jobs: slots,
-        workers: 0,
         resume,
+        ..ServeConfig::default()
     })
     .expect("daemon failed to start")
 }
@@ -247,6 +247,72 @@ fn graceful_shutdown_drains_and_resume_dir_finishes_bit_identically() {
     let daemon = std::fs::read(&snap).unwrap();
     let standalone = standalone_snapshot_bytes(standalone_spec(3, 1, 6, 5, "X:Y"), "resume");
     assert_eq!(daemon, standalone, "resumed job diverged from an uninterrupted run");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The v4 leg of the drain/resume guarantee: a daemon configured with
+/// `--snapshot-format binary` drains in-flight jobs to v4 containers, a
+/// plain restart (default JSON config) auto-detects them, keeps writing
+/// v4, and finishes bit-identically to an uninterrupted run.
+#[test]
+fn binary_daemon_drains_to_v4_and_resume_dir_finishes_bit_identically() {
+    let dir = test_dir("resume_v4");
+    let svc = Service::start(ServeConfig {
+        dir: dir.clone(),
+        max_concurrent_jobs: 1,
+        format: Format::Binary,
+        ..ServeConfig::default()
+    })
+    .expect("daemon failed to start");
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+    let id = c.submit(&search_job("5", 1.0, 6.0, 5.0, "X:Y")).unwrap();
+
+    // Let at least one round land, then drain.
+    let deadline = Instant::now() + LONG;
+    loop {
+        let s = c.status(Some(id)).unwrap();
+        if s.num_or("episodes_done", 0.0) >= 1.0 || s.str_or("state", "") == "done" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never made progress");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+
+    // The drained snapshot is a v4 container (the `job_<id>.json` name
+    // is the registry key; the format lives in the file's magic).
+    let snap = dir.join(format!("job_{id}.json"));
+    let drained = std::fs::read(&snap).expect("drain must leave a resumable snapshot");
+    assert_eq!(drained[..4], *b"EDC4", "drained snapshot is not a v4 container");
+
+    // Restart with default (JSON) config: the resumed job auto-detects
+    // v4 and must keep writing it — cfg.format only governs new jobs.
+    let svc2 = serve(&dir, 1, true);
+    let mut c2 = Client::connect(&svc2.addr().to_string()).unwrap();
+    let s = c2.wait_done(id, LONG).unwrap();
+    assert_eq!(s.str_or("state", ""), "done");
+    assert_eq!(s.num_or("episodes_done", 0.0), 6.0);
+    c2.shutdown().unwrap();
+    svc2.wait().unwrap();
+
+    let finished = std::fs::read(&snap).unwrap();
+    assert_eq!(finished[..4], *b"EDC4", "resumed job switched container formats");
+
+    // Converting the finished v4 job to JSON reproduces, byte for byte,
+    // the snapshot an uninterrupted standalone JSON run writes.
+    let (tree, fmt) = snapshot::load(&snap).unwrap();
+    assert_eq!(fmt, Format::Binary);
+    let cmp = std::env::temp_dir()
+        .join(format!("edc_service_cmp_resume_v4_{}.json", std::process::id()));
+    snapshot::save(&cmp, &tree, Format::Json).unwrap();
+    let daemon_as_json = std::fs::read(&cmp).unwrap();
+    std::fs::remove_file(&cmp).ok();
+    let standalone = standalone_snapshot_bytes(standalone_spec(5, 1, 6, 5, "X:Y"), "resume_v4");
+    assert_eq!(
+        daemon_as_json, standalone,
+        "v4 daemon job diverged from an uninterrupted JSON-format run"
+    );
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,217 @@
+//! Byte-level corruption matrix for the v4 binary snapshot container
+//! (ISSUE 8 satellite): every way a v4 file can lie — header length,
+//! section offsets, alignment, dtypes, blob truncation — must fail with
+//! a readable error naming the file, the field, and the byte offset,
+//! never panic or read out of bounds. v3 JSON corruption keeps its
+//! file-naming errors too.
+
+use edcompress::snapshot::{self, Format};
+use edcompress::util::json::{self, Json};
+use std::path::PathBuf;
+
+/// A small tree that exercises every section dtype: f64 curves, f32
+/// replay vectors (u32 shape sections are covered by the unit tests in
+/// `snapshot::`). Written with whitespace stripped so it parses to the
+/// canonical form the writer emits.
+fn tree() -> Json {
+    let text = r#"{
+        "curves":{"accuracy_curve":[0.5,0.75],"energy_curve":[1.5,null,2]},
+        "kind":"test","version":1,
+        "replay":[{"a":[0.5],"n":[3,4],"s":[1,2]}]
+    }"#;
+    json::parse(&text.replace(char::is_whitespace, "")).expect("fixture parses")
+}
+
+fn temp_file(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("edc_snapshot_formats_test");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+/// Write a pristine v4 snapshot and return its bytes.
+fn v4_bytes(name: &str) -> (PathBuf, Vec<u8>) {
+    let path = temp_file(name);
+    snapshot::save(&path, &tree(), Format::Binary).expect("v4 save");
+    let bytes = std::fs::read(&path).expect("read back");
+    assert_eq!(bytes[..4], *b"EDC4");
+    (path, bytes)
+}
+
+/// Re-pack a v4 container after editing its header text (the blob is
+/// carried over unchanged, padding recomputed).
+fn rewrite_header(bytes: &[u8], edit: impl FnOnce(String) -> String) -> Vec<u8> {
+    let header_len =
+        u64::from_le_bytes(bytes[4..12].try_into().expect("u64 prefix")) as usize;
+    let header =
+        String::from_utf8(bytes[12..12 + header_len].to_vec()).expect("header is UTF-8");
+    let data_start = (12 + header_len).div_ceil(8) * 8;
+    let blob = &bytes[data_start..];
+
+    let header = edit(header);
+    let hb = header.as_bytes();
+    let new_start = (12 + hb.len()).div_ceil(8) * 8;
+    let mut out = Vec::with_capacity(new_start + blob.len());
+    out.extend_from_slice(&bytes[..4]);
+    out.extend_from_slice(&(hb.len() as u64).to_le_bytes());
+    out.extend_from_slice(hb);
+    out.resize(new_start, 0);
+    out.extend_from_slice(blob);
+    out
+}
+
+/// Write mutated bytes and return the load error text, asserting the
+/// file name made it into the message.
+fn load_error(path: &PathBuf, bytes: &[u8]) -> String {
+    std::fs::write(path, bytes).expect("write mutation");
+    let e = snapshot::load(path).expect_err("corrupt file must not load");
+    let msg = e.to_string();
+    let file_name = path.file_name().expect("file name").to_string_lossy().to_string();
+    assert!(msg.contains(&file_name), "error must name the file: {msg}");
+    msg
+}
+
+#[test]
+fn pristine_v4_round_trips_and_matches_v3() {
+    let (p4, _) = v4_bytes("pristine.edc4");
+    let p3 = temp_file("pristine.json");
+    snapshot::save(&p3, &tree(), Format::Json).expect("v3 save");
+
+    let (t4, f4) = snapshot::load(&p4).expect("v4 load");
+    let (t3, f3) = snapshot::load(&p3).expect("v3 load");
+    assert_eq!(f4, Format::Binary);
+    assert_eq!(f3, Format::Json);
+    // Typed leaves display byte-identically to the plain-Arr tree.
+    assert_eq!(t4.to_string(), t3.to_string());
+    std::fs::remove_file(&p4).ok();
+    std::fs::remove_file(&p3).ok();
+}
+
+#[test]
+fn file_shorter_than_magic_and_length_prefix() {
+    let (path, bytes) = v4_bytes("tiny.edc4");
+    let msg = load_error(&path, &bytes[..9]);
+    assert!(msg.contains("truncated"), "{msg}");
+    assert!(msg.contains("9 bytes"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn header_length_lying_past_eof() {
+    let (path, mut bytes) = v4_bytes("bigheader.edc4");
+    let lie = (bytes.len() as u64) * 2;
+    bytes[4..12].copy_from_slice(&lie.to_le_bytes());
+    let msg = load_error(&path, &bytes);
+    assert!(msg.contains(&format!("claims {lie} bytes")), "{msg}");
+    assert!(msg.contains(&format!("ends at byte {}", bytes.len())), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn header_length_cutting_the_json_short() {
+    let (path, mut bytes) = v4_bytes("cutheader.edc4");
+    let header_len = u64::from_le_bytes(bytes[4..12].try_into().expect("u64")) - 5;
+    bytes[4..12].copy_from_slice(&header_len.to_le_bytes());
+    let msg = load_error(&path, &bytes);
+    assert!(msg.contains("header is not valid JSON"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn field_offset_past_eof_names_field_and_offset() {
+    let (path, bytes) = v4_bytes("offeof.edc4");
+    // `curves.energy_curve` is the second f64 section, at blob offset 16.
+    let bytes = rewrite_header(&bytes, |h| {
+        assert!(h.contains("\"offset\":16"), "fixture layout changed: {h}");
+        h.replacen("\"offset\":16", "\"offset\":1048576", 1)
+    });
+    let msg = load_error(&path, &bytes);
+    assert!(msg.contains("`curves.energy_curve`"), "{msg}");
+    assert!(msg.contains("runs past the end"), "{msg}");
+    assert!(msg.contains("byte offset"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn misaligned_section_offset() {
+    let (path, bytes) = v4_bytes("misalign.edc4");
+    // Shift the f64 section to a 4-mod-8 byte offset: still in bounds,
+    // but an f64 view there would be misaligned.
+    let bytes = rewrite_header(&bytes, |h| h.replacen("\"offset\":16", "\"offset\":20", 1));
+    let msg = load_error(&path, &bytes);
+    assert!(msg.contains("`curves.energy_curve`"), "{msg}");
+    assert!(msg.contains("not 8-byte aligned"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn negative_offset_is_malformed() {
+    let (path, bytes) = v4_bytes("negoff.edc4");
+    let bytes = rewrite_header(&bytes, |h| h.replacen("\"offset\":16", "\"offset\":-3", 1));
+    let msg = load_error(&path, &bytes);
+    assert!(msg.contains("malformed offset/len"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn unknown_dtype_is_a_forward_compat_error() {
+    let (path, bytes) = v4_bytes("dtype.edc4");
+    let bytes = rewrite_header(&bytes, |h| {
+        assert!(h.contains("\"dtype\":\"f32\""), "fixture layout changed: {h}");
+        h.replacen("\"dtype\":\"f32\"", "\"dtype\":\"f16\"", 1)
+    });
+    let msg = load_error(&path, &bytes);
+    assert!(msg.contains("unknown dtype `f16`"), "{msg}");
+    assert!(msg.contains("f32/f64/u32"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn dangling_tree_reference() {
+    let (path, bytes) = v4_bytes("dangle.edc4");
+    let bytes = rewrite_header(&bytes, |h| {
+        assert!(h.contains("{\"$f\":0}"), "fixture layout changed: {h}");
+        h.replacen("{\"$f\":0}", "{\"$f\":99}", 1)
+    });
+    let msg = load_error(&path, &bytes);
+    assert!(msg.contains("references field 99"), "{msg}");
+    assert!(msg.contains("5 entries"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_blob_fails_on_the_first_unreadable_section() {
+    let (path, bytes) = v4_bytes("shortblob.edc4");
+    let header_len = u64::from_le_bytes(bytes[4..12].try_into().expect("u64")) as usize;
+    let data_start = (12 + header_len).div_ceil(8) * 8;
+    // Keep the header intact but only 10 of the blob's bytes: the first
+    // f64 section (accuracy_curve, 16 bytes) no longer fits.
+    let msg = load_error(&path, &bytes[..data_start + 10]);
+    assert!(msg.contains("`curves.accuracy_curve`"), "{msg}");
+    assert!(msg.contains("runs past the end"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn unsupported_container_version() {
+    let (path, bytes) = v4_bytes("container.edc4");
+    let bytes = rewrite_header(&bytes, |h| h.replacen("\"container\":4", "\"container\":5", 1));
+    let msg = load_error(&path, &bytes);
+    assert!(msg.contains("unsupported v4 container version 5"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn v3_truncation_and_non_utf8_still_error_readably() {
+    let path = temp_file("trunc.json");
+    snapshot::save(&path, &tree(), Format::Json).expect("v3 save");
+    let bytes = std::fs::read(&path).expect("read");
+
+    let msg = load_error(&path, &bytes[..bytes.len() / 2]);
+    assert!(msg.contains("not valid JSON"), "{msg}");
+    assert!(msg.contains("truncated or corrupt"), "{msg}");
+
+    // Garbage that is neither v4 (no magic) nor UTF-8 text.
+    let msg = load_error(&path, &[0xff, 0xfe, 0x00, 0x81, 0x82]);
+    assert!(msg.contains("not valid UTF-8"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
