@@ -1,7 +1,7 @@
 //! `edc serve` client walkthrough: spin up an in-process daemon, submit
-//! a tiny search job over the newline-delimited JSON TCP protocol, poll
-//! it to completion and print the Pareto result — the full session of
-//! `docs/serve.md` in one runnable file.
+//! a tiny search job, stream its progress with `watch`, and print the
+//! Pareto result — the full session of `docs/serve.md` in one runnable
+//! file, on both wire codecs.
 //!
 //! ```bash
 //! cargo run --release --example serve_client
@@ -12,6 +12,7 @@
 //! `Client::connect("127.0.0.1:<port>")` (the daemon prints its address
 //! and writes it to `<dir>/serve.addr`).
 
+use edcompress::coordinator::service::wire::WireKind;
 use edcompress::coordinator::service::{Client, ServeConfig, Service};
 use edcompress::util::json::Json;
 use std::time::Duration;
@@ -20,48 +21,58 @@ fn main() -> anyhow::Result<()> {
     let dir = std::env::temp_dir().join(format!("edc_serve_example_{}", std::process::id()));
 
     // 1. The daemon: one persistent worker pool, job snapshots in `dir`,
-    // an ephemeral port (0) printed below.
+    // an ephemeral port (0) printed below. Admission control (queue
+    // depth, per-connection in-flight cap) comes from the defaults —
+    // a saturated daemon answers `{"ok":false,"code":"busy",...}`
+    // instead of queueing unboundedly.
     let svc = Service::start(ServeConfig { dir: dir.clone(), ..ServeConfig::default() })?;
     println!("daemon listening on {} (snapshots in {})", svc.addr(), dir.display());
 
-    // 2. A client connection. `edc submit|status|result|cancel|shutdown`
-    // are thin wrappers over exactly these calls.
-    let mut client = Client::connect(&svc.addr().to_string())?;
+    // 2. A client connection. `edc submit|status|watch|result|cancel|
+    // shutdown` are thin wrappers over exactly these calls. The codec is
+    // negotiated from the first frame: `connect` speaks newline-JSON,
+    // `connect_with(addr, WireKind::Binary)` the length-prefixed binary
+    // framing (`--wire binary`) — same values, smaller float-heavy
+    // frames. Fall back to JSON if built without `wire-binary`.
+    let mut client = Client::connect_with(&svc.addr().to_string(), WireKind::Binary)
+        .or_else(|_| Client::connect(&svc.addr().to_string()))?;
+    println!("speaking the `{}` wire codec", client.wire());
 
-    // 3. Submit: the same knobs as `edc search`, as JSON fields.
+    // 3. Submit: the same knobs as `edc search`, as JSON fields, plus a
+    // scheduling priority (`low|normal|high`; a high-priority submit
+    // against a busy daemon preempts the lowest-priority running job to
+    // its snapshot — invisible to results, see docs/determinism.md §12).
     let mut job = Json::obj();
     job.set("net", Json::Str("lenet5".into()))
         .set("seeds", Json::Num(2.0))
         .set("episodes", Json::Num(2.0))
         .set("chunk", Json::Num(1.0))
         .set("steps", Json::Num(6.0))
-        .set("dataflows", Json::Str("X:Y,FX:FY".into()));
+        .set("dataflows", Json::Str("X:Y,FX:FY".into()))
+        .set("priority", Json::Str("high".into()));
     let id = client.submit(&job)?;
     println!("submitted job {id}");
 
-    // 4. Poll until done (prints one progress line per state change).
-    let mut last = String::new();
-    let status = loop {
-        let s = client.status(Some(id))?;
-        let line = format!(
-            "job {id}: {} — {}/{} episodes, round {}, frontier {}, cache hit-rate {:.3}",
-            s.str_or("state", "?"),
-            s.num_or("episodes_done", 0.0) as usize,
-            s.num_or("episodes_total", 0.0) as usize,
-            s.num_or("round", 0.0) as usize,
-            s.num_or("frontier", 0.0) as usize,
-            s.num_or("cache_hit_rate", 0.0),
-        );
-        if line != last {
-            println!("{line}");
-            last = line;
+    // 4. Stream progress: `watch` pushes frames as the job advances
+    // (keepalive at least every 500ms), ending with one terminal frame —
+    // no poll loop needed. `edc watch --job N` is this call.
+    let frames = client.watch(id, Duration::from_secs(600))?;
+    for f in &frames {
+        if f.str_or("stream", "") == "progress" {
+            println!(
+                "job {id}: {} — {}/{} episodes, round {}, frontier {}, cache hit-rate {:.3}",
+                f.str_or("state", "?"),
+                f.num_or("episodes_done", 0.0) as usize,
+                f.num_or("episodes_total", 0.0) as usize,
+                f.num_or("round", 0.0) as usize,
+                f.num_or("frontier", 0.0) as usize,
+                f.num_or("cache_hit_rate", 0.0),
+            );
         }
-        match s.str_or("state", "").as_str() {
-            "done" | "failed" | "cancelled" => break s,
-            _ => std::thread::sleep(Duration::from_millis(100)),
-        }
-    };
-    assert_eq!(status.str_or("state", ""), "done");
+    }
+    let end = frames.last().expect("watch always ends with a terminal frame");
+    assert_eq!(end.str_or("stream", ""), "end");
+    assert_eq!(end.str_or("state", ""), "done");
 
     // 5. The result: per-seed summary, Pareto table, fleet curve.
     let result = client.result(id)?;

@@ -26,10 +26,16 @@
 //! JSON container on resume wall-clock and on peak live heap bytes
 //! (tracked by the same counting allocator), with a smaller file.
 //!
+//! The wire section *asserts* the PR-9 serve claims: a float-heavy
+//! submit frame is strictly smaller on the binary wire codec than on
+//! newline-JSON while decoding value-identical, and a saturated daemon
+//! queue rejects a 50-submit burst with typed `busy` errors in O(1)
+//! wall time per rejection without stalling the running job.
+//!
 //! Run with `--test` (e.g. `cargo bench --bench perf_hotpaths -- --test`)
 //! for the CI smoke mode: only the asserted gates run (train kernels,
-//! fleet cache, serve cache, async throughput, snapshot resume), in well
-//! under a minute.
+//! fleet cache, serve cache, async throughput, snapshot resume, wire
+//! codecs + backpressure), in well under a minute.
 #[path = "common.rs"]
 mod common;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -437,6 +443,154 @@ fn bench_serve_shared_vs_sequential() {
     );
 }
 
+/// The PR-9 wire claims (CI gate), in two halves.
+///
+/// **Codec payload bytes:** a submit/result-style message whose bulk is
+/// a ~1024-point `Json::F64s` curve must be strictly smaller on the
+/// binary wire (EDCW + u32 length + v4-container payload, 8 bytes per
+/// float) than on the newline-JSON wire (~18 decimal chars per float) —
+/// and both frames must decode back value-identical, pinned via the
+/// canonical `Display` rendering.
+///
+/// **Saturated-queue rejection:** with the daemon's one runner busy and
+/// its queue full, a burst of overflow submits must each come back as a
+/// typed `code:"busy"` rejection, the whole burst in O(1)-per-reject
+/// wall time, without stalling the running job — admission control has
+/// to be cheapest exactly when the daemon is busiest.
+fn bench_wire_codecs_and_backpressure() {
+    use edcompress::coordinator::service::wire::{self, WireKind};
+    use edcompress::coordinator::service::{Client, ServeConfig, Service};
+    use edcompress::util::json::Json;
+
+    // -------- codec payload bytes --------
+    let mut rng = Rng::new(7);
+    let curve: Vec<f64> = (0..1024).map(|_| rng.range(-4.0, 4.0)).collect();
+    let mut msg = Json::obj();
+    msg.set("cmd", Json::Str("submit".into()))
+        .set("net", Json::Str("vgg16_cifar".into()))
+        .set("kind", Json::Str("search".into()))
+        .set("priority", Json::Str("high".into()))
+        .set("warm_curve", Json::from_f64s(&curve));
+
+    let json_codec = wire::codec_for(WireKind::Json).expect("json codec");
+    let json_frame = json_codec.encode(&msg).expect("json encode");
+    let mut decoded = {
+        let mut cur = std::io::Cursor::new(json_frame.clone());
+        let mut carry = Vec::new();
+        json_codec.read_frame(&mut cur, &mut carry).expect("json decode").expect("json frame")
+    };
+    assert_eq!(decoded.to_string(), msg.to_string(), "json wire round-trip drifted");
+
+    match wire::codec_for(WireKind::Binary) {
+        Ok(bin_codec) => {
+            let bin_frame = bin_codec.encode(&msg).expect("binary encode");
+            decoded = {
+                let mut cur = std::io::Cursor::new(bin_frame.clone());
+                let mut carry = Vec::new();
+                bin_codec
+                    .read_frame(&mut cur, &mut carry)
+                    .expect("binary decode")
+                    .expect("binary frame")
+            };
+            assert_eq!(
+                decoded.to_string(),
+                msg.to_string(),
+                "binary wire round-trip drifted from the json value"
+            );
+            println!(
+                "  wire codecs: 1024-float submit frame {} bytes binary vs {} bytes json \
+                 ({:.2}x smaller)",
+                bin_frame.len(),
+                json_frame.len(),
+                json_frame.len() as f64 / bin_frame.len().max(1) as f64
+            );
+            assert!(
+                bin_frame.len() < json_frame.len(),
+                "binary frame ({} bytes) not below json ({} bytes) on a float-heavy payload",
+                bin_frame.len(),
+                json_frame.len()
+            );
+        }
+        Err(_) => println!("  wire codecs: built without `wire-binary`; byte gate skipped"),
+    }
+
+    // -------- saturated-queue rejection --------
+    let dir = std::env::temp_dir().join(format!("edc_bench_wire_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let svc = Service::start(ServeConfig {
+        dir: dir.clone(),
+        max_concurrent_jobs: 1,
+        max_queue_depth: 1,
+        max_inflight_per_conn: 64,
+        ..ServeConfig::default()
+    })
+    .expect("daemon failed to start");
+    let mut client = Client::connect(&svc.addr().to_string()).expect("connect");
+    let submit_body = |seed: &str, episodes: f64| {
+        let mut j = Json::obj();
+        j.set("net", Json::Str("lenet5".into()))
+            .set("seeds", Json::Num(1.0))
+            .set("episodes", Json::Num(episodes))
+            .set("chunk", Json::Num(1.0))
+            .set("steps", Json::Num(6.0))
+            .set("seed", Json::Str(seed.into()))
+            .set("dataflows", Json::Str("X:Y".into()));
+        j
+    };
+    // Fill the one runner slot, wait until the job leaves the queue,
+    // then fill the queue itself.
+    let running = client.submit(&submit_body("97", 6.0)).expect("submit running");
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(600);
+    loop {
+        let s = client.status(Some(running)).expect("status");
+        if s.str_or("state", "") == "running" {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "first job never started");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let queued = client.submit(&submit_body("98", 1.0)).expect("submit queued");
+
+    const REJECTS: usize = 50;
+    let mut overflow = submit_body("99", 1.0);
+    overflow.set("cmd", Json::Str("submit".into()));
+    let t0 = std::time::Instant::now();
+    for i in 0..REJECTS {
+        let resp = client.request(&overflow).expect("overflow request");
+        assert_eq!(
+            resp.str_or("code", ""),
+            "busy",
+            "overflow submit #{i} was not a typed busy rejection: {resp}"
+        );
+        assert!(resp.num_or("retry_after_ms", 0.0) > 0.0, "no retry hint: {resp}");
+    }
+    let t_reject = t0.elapsed();
+    println!(
+        "  backpressure: {REJECTS} saturated submits rejected in {t_reject:?} \
+         ({:.0}us each), running job undisturbed",
+        t_reject.as_secs_f64() * 1e6 / REJECTS as f64
+    );
+    // O(1) per rejection: the bound is generous (CI boxes are noisy)
+    // but categorically below what any queue-scan or job-stall costs.
+    assert!(
+        t_reject < std::time::Duration::from_millis(2500),
+        "{REJECTS} rejections took {t_reject:?}; admission control must be O(1) when saturated"
+    );
+    let long = std::time::Duration::from_secs(600);
+    assert_eq!(
+        client.wait_done(running, long).expect("running job").str_or("state", ""),
+        "done",
+        "the rejected burst stalled the running job"
+    );
+    assert_eq!(
+        client.wait_done(queued, long).expect("queued job").str_or("state", ""),
+        "done"
+    );
+    client.shutdown().expect("shutdown");
+    svc.wait().expect("daemon drain");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The snapshot-container claim (CI gate): resuming a 16-seed fleet
 /// snapshot from the v4 binary container must beat the v3 JSON container
 /// on both resume wall-clock and peak live heap bytes, and the file
@@ -690,6 +844,8 @@ fn main() {
         bench_async_vs_sync_throughput();
         banner("snapshot resume formats (smoke)");
         bench_snapshot_resume_formats(5);
+        banner("wire codecs + backpressure (smoke)");
+        bench_wire_codecs_and_backpressure();
         println!("bench smoke OK");
         return;
     }
@@ -728,6 +884,11 @@ fn main() {
     // wall-clock, peak heap bytes and file size (asserted).
     banner("snapshot resume formats");
     bench_snapshot_resume_formats(20);
+
+    // 3e. Wire codec payload bytes and saturated-queue admission
+    // control on the serve daemon (asserted).
+    banner("wire codecs + backpressure");
+    bench_wire_codecs_and_backpressure();
 
     // 4. All-15-dataflow ranking: batched+cached vs individual.
     banner("dataflow ranking");

@@ -1,6 +1,6 @@
 //! Repo-specific invariant lints the compiler can't express.
 //!
-//! `cargo run -p edc-lints` walks `rust/src` and enforces five rules that
+//! `cargo run -p edc-lints` walks `rust/src` and enforces six rules that
 //! guard the determinism and lock-discipline invariants catalogued in
 //! `docs/determinism.md`:
 //!
@@ -27,10 +27,18 @@
 //!    `step_pairs`) in `tensor/mod.rs`, `nn/linear.rs`, `nn/mlp.rs`,
 //!    `nn/adam.rs`.
 //! 5. **`unwrap-in-request-path`** — no `.unwrap()`/`.expect(` in
-//!    non-test code of `coordinator/service.rs`, `coordinator/sweep.rs`,
-//!    `cli/`, the `snapshot::` codec layer and `util/blob.rs`: a
-//!    malformed request or corrupt/truncated snapshot must produce a
+//!    non-test code of `coordinator/service*` (the daemon module tree,
+//!    wire codecs included), `coordinator/sweep.rs`, `cli/`, the
+//!    `snapshot::` codec layer and `util/blob.rs`: a malformed request,
+//!    hostile wire frame or corrupt/truncated snapshot must produce a
 //!    readable error naming the job/file/field/offset, never a panic.
+//! 6. **`unbounded-queue-in-service`** — no `VecDeque::new`,
+//!    `BinaryHeap::new`, `LinkedList::new` or unbounded channels inside
+//!    `coordinator/service*`. The daemon's admission control promises
+//!    typed `Busy` rejections at a fixed queue depth; an unbounded
+//!    container there is one refactor away from memory-ballooning
+//!    backlog. Pre-size with `with_capacity` (the bound is enforced at
+//!    admission) or use `util::channel::bounded`.
 //!
 //! The pass is **lexical, not syntactic**: the offline build environment
 //! has no `syn`, so the walker strips comments/strings/char literals and
@@ -50,14 +58,16 @@ pub const RULE_ENTROPY: &str = "ambient-entropy";
 pub const RULE_LOCK_SPAN: &str = "lock-guard-spans-energy";
 pub const RULE_HOT_ALLOC: &str = "alloc-in-hot-path";
 pub const RULE_UNWRAP: &str = "unwrap-in-request-path";
+pub const RULE_UNBOUNDED: &str = "unbounded-queue-in-service";
 
 /// All rule names, for `--help`-style output and waiver validation.
-pub const ALL_RULES: [&str; 5] = [
+pub const ALL_RULES: [&str; 6] = [
     RULE_MAP_ITER,
     RULE_ENTROPY,
     RULE_LOCK_SPAN,
     RULE_HOT_ALLOC,
     RULE_UNWRAP,
+    RULE_UNBOUNDED,
 ];
 
 /// One finding: a rule fired on a line of a file.
@@ -346,6 +356,8 @@ pub struct FileClass {
     pub hot_path: bool,
     /// Daemon/sweep/CLI request or IO path (rule 5).
     pub request_path: bool,
+    /// The `edc serve` daemon module tree (rule 6).
+    pub service: bool,
 }
 
 /// Classify a `/`-separated path relative to `rust/src`.
@@ -354,6 +366,10 @@ pub fn classify(rel: &str) -> FileClass {
     // produce/consume on-disk bytes, so they are serialization paths
     // (rule 1) *and* corrupt-input request paths (rule 5).
     let snapshot_layer = rel.starts_with("snapshot/") || rel == "util/blob.rs";
+    // Prefix, not equality: `coordinator/service.rs` (pre-PR-9 layout)
+    // and the `coordinator/service/` module tree (mod.rs, wire.rs, and
+    // whatever grows next) are all the daemon.
+    let service = rel.starts_with("coordinator/service");
     FileClass {
         serialization: rel == "coordinator/checkpoint.rs"
             || rel == "coordinator/orchestrator.rs"
@@ -364,10 +380,11 @@ pub fn classify(rel: &str) -> FileClass {
             || rel == "nn/linear.rs"
             || rel == "nn/mlp.rs"
             || rel == "nn/adam.rs",
-        request_path: rel == "coordinator/service.rs"
+        request_path: service
             || rel == "coordinator/sweep.rs"
             || snapshot_layer
             || rel.starts_with("cli/"),
+        service,
     }
 }
 
@@ -683,6 +700,41 @@ fn rule_unwrap_in_request_path(file: &SourceFile, out: &mut Vec<Violation>) {
     }
 }
 
+const UNBOUNDED_TOKENS: [&str; 5] = [
+    "VecDeque::new",
+    "BinaryHeap::new",
+    "LinkedList::new",
+    "channel::unbounded",
+    "unbounded_channel",
+];
+
+/// Rule 6: an unbounded queue container inside the daemon module tree.
+fn rule_unbounded_queue_in_service(file: &SourceFile, out: &mut Vec<Violation>) {
+    if !file.class.service {
+        return;
+    }
+    for (idx, l) in file.code.iter().enumerate() {
+        for tok in UNBOUNDED_TOKENS {
+            if l.contains(tok) {
+                push_unless_waived(
+                    out,
+                    file,
+                    Violation {
+                        rule: RULE_UNBOUNDED,
+                        file: file.rel.clone(),
+                        line: idx + 1,
+                        message: format!(
+                            "{tok} in the serve daemon: admission control promises typed \
+                             Busy rejections at a fixed queue depth, so queues here must \
+                             be pre-sized (with_capacity) or util::channel::bounded"
+                        ),
+                    },
+                );
+            }
+        }
+    }
+}
+
 /// Run every rule over one parsed file.
 pub fn lint_file(file: &SourceFile) -> Vec<Violation> {
     let mut out = Vec::new();
@@ -691,6 +743,7 @@ pub fn lint_file(file: &SourceFile) -> Vec<Violation> {
     rule_lock_guard_spans_energy(file, &mut out);
     rule_alloc_in_hot_path(file, &mut out);
     rule_unwrap_in_request_path(file, &mut out);
+    rule_unbounded_queue_in_service(file, &mut out);
     out.sort_by_key(|v| v.line);
     out
 }
@@ -880,6 +933,37 @@ let f = &'static str_thing; let life = 'a;"##;
             assert_eq!(v.len(), 1, "{rel} must be a request path: {v:?}");
             assert_eq!(v[0].rule, RULE_UNWRAP);
         }
+        // The service classification is a prefix: the whole daemon
+        // module tree is a request path, wire codecs included.
+        for rel in ["coordinator/service/mod.rs", "coordinator/service/wire.rs"] {
+            let v = lint_as(rel, "fn read(&self) { frame.decode().unwrap(); }\n");
+            assert_eq!(v.len(), 1, "{rel} must be a request path: {v:?}");
+            assert_eq!(v[0].rule, RULE_UNWRAP);
+        }
+    }
+
+    #[test]
+    fn unbounded_queue_rule_fires_only_in_the_service_tree() {
+        for tok in super::UNBOUNDED_TOKENS {
+            let src = format!("fn f() {{ let q = {tok}(); }}\n");
+            let v = lint_as("coordinator/service/mod.rs", &src);
+            assert_eq!(v.len(), 1, "{tok} should fire: {v:?}");
+            assert_eq!(v[0].rule, RULE_UNBOUNDED);
+        }
+        // Pre-sized queues are the sanctioned form...
+        assert!(lint_as(
+            "coordinator/service/mod.rs",
+            "fn f() { let q: VecDeque<u64> = VecDeque::with_capacity(64); }\n"
+        )
+        .is_empty());
+        // ...and the same containers outside the daemon are fine (the
+        // orchestrator's internal queues are bounded by construction).
+        assert!(lint_as("coordinator/orchestrator.rs", "fn f() { let q = VecDeque::new(); }\n")
+            .iter()
+            .all(|v| v.rule != RULE_UNBOUNDED));
+        // Comments and strings never fire (lexical pass sanitizes them).
+        assert!(lint_as("coordinator/service/wire.rs", "// VecDeque::new would be bad\n")
+            .is_empty());
     }
 
     #[test]

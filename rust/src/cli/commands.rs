@@ -24,6 +24,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "snapshot" => cmd_snapshot(args),
         "submit" => cmd_submit(args),
         "status" => cmd_status(args),
+        "watch" => cmd_watch(args),
         "result" => cmd_result(args),
         "cancel" => cmd_cancel(args),
         "shutdown" => cmd_shutdown(args),
@@ -438,6 +439,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if jobs == 0 {
         bail!("--jobs must be at least 1");
     }
+    let queue_depth = args.usize_or("queue-depth", 64)?;
+    let inflight = args.usize_or("inflight", 8)?;
+    if queue_depth == 0 || inflight == 0 {
+        bail!("--queue-depth and --inflight must be at least 1");
+    }
     let cfg = ServeConfig {
         dir: PathBuf::from(&dir),
         port: port as u16,
@@ -445,6 +451,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.usize_or("workers", 0)?,
         resume: resume_dir.is_some(),
         format: snapshot::Format::parse(&args.str_or("snapshot-format", "json"))?,
+        max_queue_depth: queue_depth,
+        max_inflight_per_conn: inflight,
     };
     let svc = Service::start(cfg)?;
     println!(
@@ -540,8 +548,11 @@ fn serve_addr(args: &Args) -> Result<String> {
     Ok(text.trim().to_string())
 }
 
+/// Build a client for the daemon, honouring `--wire json|binary` (the
+/// daemon auto-negotiates per connection, so the flag is client-only).
 fn serve_client(args: &Args) -> Result<service::Client> {
-    service::Client::connect(&serve_addr(args)?)
+    let wire = service::wire::WireKind::parse(&args.str_or("wire", "json"))?;
+    service::Client::connect_with(&serve_addr(args)?, wire)
 }
 
 /// `edc submit`: queue a search (default) or sweep job on a running
@@ -570,6 +581,9 @@ fn cmd_submit(args: &Args) -> Result<()> {
         // convention as checkpoint files).
         req.set("seed", Json::Str(args.u64_or("seed", 0)?.to_string()));
     }
+    if let Some(p) = args.get("priority") {
+        req.set("priority", Json::Str(p.to_string()));
+    }
     let mut client = serve_client(args)?;
     let job = client.submit(&req)?;
     println!("job {job} queued ({kind}); poll with: edc status --job {job}");
@@ -590,6 +604,14 @@ fn print_job_line(j: &Json) {
         j.num_or("frontier", 0.0) as usize,
         j.num_or("cache_hit_rate", 0.0),
     );
+    let priority = j.str_or("priority", "normal");
+    if priority != "normal" {
+        line.push_str(&format!(", priority {priority}"));
+    }
+    let preemptions = j.num_or("preemptions", 0.0) as usize;
+    if preemptions > 0 {
+        line.push_str(&format!(", preempted {preemptions}x"));
+    }
     if let Some(err) = j.get("error").and_then(|e| e.as_str()) {
         line.push_str(" — error: ");
         line.push_str(err);
@@ -629,6 +651,26 @@ fn cmd_status(args: &Args) -> Result<()> {
                 c.str_or("network", "?"),
                 c.num_or("entries", 0.0) as usize,
             );
+        }
+    }
+    Ok(())
+}
+
+/// `edc watch --job N`: stream the daemon's progress frames for one job
+/// until it reaches a terminal state (or the daemon drains), printing
+/// one line per frame — liveness without polling.
+fn cmd_watch(args: &Args) -> Result<()> {
+    if args.get("job").is_none() {
+        bail!("watch wants --job N");
+    }
+    let job = args.u64_or("job", 0)?;
+    let timeout = std::time::Duration::from_secs(args.u64_or("timeout-secs", 600)?);
+    let mut client = serve_client(args)?;
+    for frame in client.watch(job, timeout)? {
+        if frame.str_or("stream", "") == "end" {
+            println!("job {job} finished: {}", frame.str_or("state", "?"));
+        } else {
+            print_job_line(&frame);
         }
     }
     Ok(())

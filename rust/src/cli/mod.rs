@@ -8,10 +8,13 @@
 //! edc sweep   --nets lenet5,vgg16_cifar [--dataflows paper|all|X:Y,..]
 //! edc serve   [--dir reports/serve] [--port 0] [--jobs 2] [--workers 0]
 //!             [--resume-dir reports/serve] [--snapshot-format json|binary]
+//!             [--queue-depth 64] [--inflight 8]
 //! edc snapshot info <file>                       # header/stats of a snapshot
 //! edc snapshot convert <in> <out> [--to json|binary]  # lossless v3 <-> v4
-//! edc submit  [--addr host:port] --net lenet5 [--kind search|sweep] ...
-//! edc status  [--addr host:port] [--job N]
+//! edc submit  [--addr host:port] --net lenet5 [--kind search|sweep]
+//!             [--priority low|normal|high] [--wire json|binary] ...
+//! edc status  [--addr host:port] [--job N] [--wire json|binary]
+//! edc watch   [--addr host:port] --job N         # stream progress frames
 //! edc result  [--addr host:port] --job N
 //! edc cancel  [--addr host:port] --job N
 //! edc shutdown [--addr host:port]
@@ -65,14 +68,17 @@ pub fn usage() -> &'static str {
        serve      persistent search-service daemon: jobs multiplex over\n\
                   one worker pool and share fleet cost caches; graceful\n\
                   shutdown drains to resumable snapshots (--dir, --port,\n\
-                  --jobs, --workers, --resume-dir, --snapshot-format;\n\
-                  protocol: docs/serve.md)\n\
+                  --jobs, --workers, --resume-dir, --snapshot-format,\n\
+                  --queue-depth, --inflight; protocol: docs/serve.md)\n\
        snapshot   introspect/convert snapshot containers: `snapshot info\n\
                   <file>`, `snapshot convert <in> <out> [--to json|binary]`\n\
                   (v3 JSON <-> v4 binary, bit-lossless, auto-detected)\n\
        submit     queue a job on a running daemon (--addr or --dir,\n\
-                  --kind search|sweep, then the search/sweep flags)\n\
+                  --kind search|sweep, --priority low|normal|high,\n\
+                  --wire json|binary, then the search/sweep flags)\n\
        status     daemon or per-job progress (--addr/--dir, [--job N])\n\
+       watch      stream a job's progress frames until it finishes\n\
+                  (--job N, --timeout-secs 600)\n\
        result     Pareto table + summary of a finished job (--job N)\n\
        cancel     cancel a queued/running job (--job N; running jobs\n\
                   keep a resumable snapshot)\n\

@@ -8,8 +8,11 @@
 //! orchestrator into that service:
 //!
 //! - [`Service`] is a long-running daemon on a local TCP socket speaking
-//!   a **newline-delimited JSON** protocol (one request object per line,
-//!   one response object per line; reference: `docs/serve.md`).
+//!   **pluggable wire codecs** ([`wire`]): the default newline-delimited
+//!   JSON protocol (one request object per line, one response object per
+//!   line) plus a length-prefixed compact binary framing behind the
+//!   `wire-binary` feature, auto-negotiated per connection from the
+//!   first frame's magic (reference: `docs/serve.md`).
 //! - It holds **one persistent bounded [`WorkPool`]** for the whole
 //!   process; every chunk of every orchestration and every sweep job
 //!   flows through that single machine-bounded queue, so N concurrent
@@ -23,6 +26,18 @@
 //!   shutdown drains queued and running jobs into resumable snapshots so
 //!   `edc serve --resume-dir` picks the whole fleet back up
 //!   **bit-identically**.
+//! - Search jobs carry a **priority** (low/normal/high); the registry's
+//!   queue is a priority queue, and a high-priority submit against a
+//!   fully-busy daemon **preempts** the lowest-priority running search
+//!   job — preemption *is* the graceful drain (snapshot at the next
+//!   round boundary, re-enqueue at the old round), so a preempted job's
+//!   eventual result is bit-identical to an uninterrupted run
+//!   (invariant 12 of `docs/determinism.md`).
+//! - **Admission control**: queue depth and per-connection in-flight
+//!   jobs are bounded; past either bound, `submit` returns a typed
+//!   `Busy` rejection carrying `code` and `retry_after_ms` instead of
+//!   queueing unboundedly, and the `watch` command streams round
+//!   progress frames so clients see liveness instead of timing out.
 //!
 //! Because the worker pool only changes *where* a pure chunk function
 //! executes, and the fleet cache only memoizes a pure function, a job
@@ -37,11 +52,15 @@
 //!               │           │  │
 //!               │  cancel   │  └─ seed worker errors ──► failed
 //!               ▼           ▼
-//!           cancelled   cancelled (after a final round snapshot)
+//!     cancelled-queued  cancelled (after a final round snapshot)
+//!     (never started,
+//!      no snapshot)
 //!
-//! shutdown: queued and running jobs return to `queued`, each with a
-//! resumable snapshot on disk; `edc serve --resume-dir DIR` re-enqueues
-//! them.
+//! preemption: a running job returns to `queued` at its last completed
+//! round (snapshot on disk), re-enqueued at the front of its priority
+//! band; shutdown: queued and running jobs return to `queued`, each
+//! with a resumable snapshot on disk; `edc serve --resume-dir DIR`
+//! re-enqueues them.
 //! ```
 //!
 //! # Example
@@ -69,7 +88,7 @@ use crate::envs::EnvConfig;
 use crate::model::zoo;
 use crate::report::{figures, tables};
 use crate::snapshot::{self, Format};
-use crate::util::json::{self, Json};
+use crate::util::json::Json;
 use crate::util::pool::{panic_message, WorkPool};
 use crate::util::sync::atomic::{AtomicBool, Ordering};
 use crate::util::sync::{thread, Arc, Condvar, Mutex};
@@ -80,6 +99,10 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+pub mod wire;
+
+use wire::{WireCodec, WireError, WireKind};
 
 /// Name of the address-discovery file the daemon writes into its
 /// snapshot directory (`<dir>/serve.addr`), so client subcommands find a
@@ -113,6 +136,14 @@ pub struct ServeConfig {
     /// writing the format they were found in, whatever this says — reads
     /// always auto-detect.
     pub format: Format,
+    /// Admission control: jobs allowed in the queue (`--queue-depth`).
+    /// A submit past this bound is refused with a typed `Busy`
+    /// (`code:"busy"`) response instead of growing the queue unboundedly.
+    pub max_queue_depth: usize,
+    /// Admission control: non-terminal jobs one connection may have
+    /// submitted at once (`--inflight`). Past it, submit returns
+    /// `code:"inflight"`.
+    pub max_inflight_per_conn: usize,
 }
 
 impl Default for ServeConfig {
@@ -124,11 +155,55 @@ impl Default for ServeConfig {
             workers: 0,
             resume: false,
             format: Format::Json,
+            max_queue_depth: 64,
+            max_inflight_per_conn: 8,
         }
     }
 }
 
 // ---------- job specs ----------
+
+/// Scheduling priority of a submitted job (`--priority low|normal|high`).
+///
+/// Execution-only, like the async knobs: priority decides *when* a job
+/// runs, never *what* it computes, so it is not part of the spec
+/// fingerprint and not persisted in snapshots — a job re-enqueued by
+/// `--resume-dir` comes back at `Normal`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => bail!("unknown priority '{other}' (low|normal|high)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Queue-band index, highest first (used by [`PendingQueue`]).
+    fn band(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
 
 /// A search job: the same scalars `edc search` takes, resolved against
 /// the same defaults. Everything else (SAC hyper-parameters, energy
@@ -151,6 +226,8 @@ pub struct SearchJobSpec {
     pub async_actors: usize,
     pub learners: usize,
     pub lockstep: bool,
+    /// Scheduling priority (execution-only; see [`Priority`]).
+    pub priority: Priority,
 }
 
 impl SearchJobSpec {
@@ -288,6 +365,7 @@ impl JobSpec {
                     async_actors,
                     learners: field_min1(req, "learners", 1)?,
                     lockstep: field_u64(req, "lockstep", 0)? != 0,
+                    priority: Priority::parse(&req.str_or("priority", "normal"))?,
                 };
                 Ok(JobSpec::Search(spec))
             }
@@ -335,6 +413,15 @@ impl JobSpec {
             JobSpec::Sweep(s) => s.nets.len() * s.dataflows.len() * s.episodes,
         }
     }
+
+    /// Sweeps have no round boundary to preempt at, so they always run
+    /// at normal priority; only search jobs carry the knob.
+    fn priority(&self) -> Priority {
+        match self {
+            JobSpec::Search(s) => s.priority,
+            JobSpec::Sweep(_) => Priority::Normal,
+        }
+    }
 }
 
 fn parse_dataflows_field(req: &Json) -> Result<Vec<Dataflow>> {
@@ -373,7 +460,14 @@ pub enum JobState {
     Running,
     Done,
     Failed,
+    /// Cancelled after it had started running (or been suspended): a
+    /// final round snapshot exists, shelved as `.cancelled`.
     Cancelled,
+    /// Cancelled while still queued, before any round ran: there is no
+    /// snapshot and never was one — distinct from [`JobState::Cancelled`]
+    /// so `result`/`status` can say so instead of pointing at a file
+    /// that does not exist.
+    CancelledQueued,
 }
 
 impl JobState {
@@ -384,7 +478,17 @@ impl JobState {
             JobState::Done => "done",
             JobState::Failed => "failed",
             JobState::Cancelled => "cancelled",
+            JobState::CancelledQueued => "cancelled-queued",
         }
+    }
+
+    /// Terminal states count against nothing: not the queue, not a
+    /// connection's in-flight budget.
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            JobState::Done | JobState::Failed | JobState::Cancelled | JobState::CancelledQueued
+        )
     }
 }
 
@@ -413,7 +517,13 @@ struct JobEntry {
     id: u64,
     spec: JobSpec,
     state: JobState,
+    priority: Priority,
     cancel: Arc<AtomicBool>,
+    /// Set by a higher-priority submit; the runner drains to snapshot at
+    /// the next round boundary and the job returns to the queue.
+    preempt: Arc<AtomicBool>,
+    /// Times this job has been preempted (status visibility).
+    preemptions: usize,
     progress: Progress,
     error: Option<String>,
     result: Option<JobResultPayload>,
@@ -422,17 +532,64 @@ struct JobEntry {
     snapshot: PathBuf,
 }
 
-struct Registry {
-    next_id: u64,
-    jobs: BTreeMap<u64, JobEntry>,
-    pending: VecDeque<u64>,
+/// The pending-job queue: one bounded ring per priority band, popped
+/// highest-band-first, FIFO within a band. Preempted jobs go back at the
+/// *front* of their band so they resume before later equal-priority
+/// submits. Depth is bounded by admission control in `handle_submit`
+/// (`max_queue_depth`), never by this type growing silently.
+struct PendingQueue {
+    bands: [VecDeque<u64>; 3],
+}
+
+impl PendingQueue {
+    fn new(depth: usize) -> PendingQueue {
+        PendingQueue {
+            bands: std::array::from_fn(|_| VecDeque::with_capacity(depth.min(1024))),
+        }
+    }
+
+    fn push_back(&mut self, pri: Priority, id: u64) {
+        self.bands[pri.band()].push_back(id);
+    }
+
+    fn push_front(&mut self, pri: Priority, id: u64) {
+        self.bands[pri.band()].push_front(id);
+    }
+
+    fn pop_highest(&mut self) -> Option<u64> {
+        self.bands.iter_mut().find_map(VecDeque::pop_front)
+    }
+
+    fn remove(&mut self, id: u64) {
+        for band in &mut self.bands {
+            band.retain(|&p| p != id);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.bands.iter().map(VecDeque::len).sum()
+    }
+
+    /// Every queued id, highest priority first (drain + status order).
+    fn ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.bands.iter().flatten().copied()
+    }
 }
 
 enum Verdict {
     Done(JobResultPayload),
     /// Shutdown drain: back to `queued`, resumable snapshot on disk.
     Suspended,
+    /// Preempted by a higher-priority job: back to `queued` at the old
+    /// round, resumable snapshot on disk — same drain, different waker.
+    Preempted,
     Cancelled,
+}
+
+struct Registry {
+    next_id: u64,
+    jobs: BTreeMap<u64, JobEntry>,
+    pending: PendingQueue,
 }
 
 // ---------- the daemon ----------
@@ -481,7 +638,7 @@ impl Service {
             registry: Mutex::new(Registry {
                 next_id: 1,
                 jobs: BTreeMap::new(),
-                pending: VecDeque::new(),
+                pending: PendingQueue::new(cfg.max_queue_depth),
             }),
             scheduler: Condvar::new(),
             shutdown: AtomicBool::new(false),
@@ -570,6 +727,24 @@ fn err_json(msg: &str) -> Json {
     j
 }
 
+/// Typed backpressure rejection: `ok:false` plus a machine-readable
+/// `code` (`"busy"` = queue full, `"inflight"` = per-connection cap) and
+/// a flat `retry_after_ms` hint. Producing it is O(1) — admission
+/// control must stay cheap precisely when the daemon is saturated.
+fn busy_json(msg: &str, code: &str, retry_after_ms: u64) -> Json {
+    let mut j = err_json(msg);
+    j.set("code", Json::Str(code.to_string()))
+        .set("retry_after_ms", Json::Num(retry_after_ms as f64));
+    j
+}
+
+/// Per-connection request context: which jobs this connection submitted,
+/// for the in-flight admission cap.
+#[derive(Default)]
+struct ConnState {
+    submitted: Vec<u64>,
+}
+
 /// Fail with the daemon's error message if a response says `ok: false`.
 pub fn ensure_ok(resp: &Json) -> Result<()> {
     if resp.get("ok").and_then(|b| b.as_bool()) == Some(true) {
@@ -580,18 +755,18 @@ pub fn ensure_ok(resp: &Json) -> Result<()> {
 }
 
 impl ServiceInner {
-    fn handle(&self, req: &Json) -> Json {
-        match self.handle_inner(req) {
+    fn handle(&self, req: &Json, conn: &mut ConnState) -> Json {
+        match self.handle_inner(req, conn) {
             Ok(j) => j,
             Err(e) => err_json(&format!("{e:#}")),
         }
     }
 
-    fn handle_inner(&self, req: &Json) -> Result<Json> {
+    fn handle_inner(&self, req: &Json, conn: &mut ConnState) -> Result<Json> {
         let cmd = req.str_or("cmd", "");
         ensure!(
             !cmd.is_empty(),
-            "request missing 'cmd' (submit|status|result|cancel|ping|shutdown)"
+            "request missing 'cmd' (submit|status|result|cancel|watch|ping|shutdown)"
         );
         match cmd.as_str() {
             "ping" => {
@@ -600,23 +775,35 @@ impl ServiceInner {
                     .set("version", Json::Str(env!("CARGO_PKG_VERSION").into()));
                 Ok(j)
             }
-            "submit" => self.handle_submit(req),
+            "submit" => self.handle_submit(req, conn),
             "status" => self.handle_status(req),
             "result" => self.handle_result(req),
             "cancel" => self.handle_cancel(req),
             "shutdown" => Ok(self.handle_shutdown()),
-            other => bail!("unknown cmd '{other}' (submit|status|result|cancel|ping|shutdown)"),
+            other => {
+                bail!("unknown cmd '{other}' (submit|status|result|cancel|watch|ping|shutdown)")
+            }
         }
     }
 
-    fn handle_submit(&self, req: &Json) -> Result<Json> {
+    /// How many of this connection's submitted jobs are still live.
+    fn inflight_of(&self, reg: &Registry, conn: &ConnState) -> usize {
+        conn.submitted
+            .iter()
+            .filter(|id| reg.jobs.get(id).is_some_and(|e| !e.state.is_terminal()))
+            .count()
+    }
+
+    fn handle_submit(&self, req: &Json, conn: &mut ConnState) -> Result<Json> {
         let spec = JobSpec::from_request(req)?;
+        let priority = spec.priority();
         let snapshot_name = |id: u64| match &spec {
             JobSpec::Search(_) => format!("job_{id}.json"),
             JobSpec::Sweep(_) => format!("job_{id}.sweep.json"),
         };
         let (id, snapshot) = {
-            let mut reg = self.registry.lock();
+            let mut guard = self.registry.lock();
+            let reg = &mut *guard;
             // Checked *inside* the registry critical section: the drain in
             // `begin_shutdown` sets the flag before taking this lock, so a
             // submit either lands in `pending` before the drain reads it
@@ -626,13 +813,42 @@ impl ServiceInner {
                 !self.shutdown.load(Ordering::SeqCst),
                 "daemon is shutting down and not accepting jobs"
             );
+            // Admission control, cheapest check first; both rejections
+            // are O(1) in the number of queued jobs, so a saturated
+            // daemon refuses work as fast as clients can offer it.
+            let inflight = self.inflight_of(reg, conn);
+            if inflight >= self.cfg.max_inflight_per_conn.max(1) {
+                return Ok(busy_json(
+                    &format!(
+                        "this connection already has {inflight} jobs in flight (cap {}); \
+                         wait for one to finish or poll `status`",
+                        self.cfg.max_inflight_per_conn.max(1)
+                    ),
+                    "inflight",
+                    200,
+                ));
+            }
+            if reg.pending.len() >= self.cfg.max_queue_depth.max(1) {
+                return Ok(busy_json(
+                    &format!(
+                        "job queue is full ({} queued, cap {}); retry shortly",
+                        reg.pending.len(),
+                        self.cfg.max_queue_depth.max(1)
+                    ),
+                    "busy",
+                    250,
+                ));
+            }
             let id = reg.next_id;
             reg.next_id += 1;
             let snapshot = self.cfg.dir.join(snapshot_name(id));
             let entry = JobEntry {
                 id,
                 state: JobState::Queued,
+                priority,
                 cancel: Arc::new(AtomicBool::new(false)),
+                preempt: Arc::new(AtomicBool::new(false)),
+                preemptions: 0,
                 progress: Progress {
                     episodes_total: spec.total_episodes(),
                     ..Progress::default()
@@ -643,13 +859,38 @@ impl ServiceInner {
                 spec,
             };
             reg.jobs.insert(id, entry);
-            reg.pending.push_back(id);
+            reg.pending.push_back(priority, id);
+            // Preemption: if every runner slot is busy and some running
+            // search job is strictly lower-priority, ask the
+            // lowest-priority (then youngest) victim to drain to its
+            // snapshot at the next round boundary. The freed slot then
+            // pops this submit — the highest-priority queued job.
+            let running = reg.jobs.values().filter(|e| e.state == JobState::Running).count();
+            if running >= self.cfg.max_concurrent_jobs.max(1) {
+                let victim = reg
+                    .jobs
+                    .values_mut()
+                    .filter(|e| {
+                        e.state == JobState::Running
+                            && matches!(e.spec, JobSpec::Search(_))
+                            && e.priority < priority
+                            && !e.preempt.load(Ordering::SeqCst)
+                            && !e.cancel.load(Ordering::SeqCst)
+                    })
+                    .min_by_key(|e| (e.priority, u64::MAX - e.id));
+                if let Some(v) = victim {
+                    v.preempt.store(true, Ordering::SeqCst);
+                    log::info!("job {id} ({}) preempts running job {}", priority.label(), v.id);
+                }
+            }
+            conn.submitted.push(id);
             (id, snapshot)
         };
         self.scheduler.notify_all();
         let mut j = ok_json();
         j.set("job", Json::Num(id as f64))
             .set("state", Json::Str("queued".into()))
+            .set("priority", Json::Str(priority.label().into()))
             .set("snapshot", Json::Str(snapshot.display().to_string()));
         Ok(j)
     }
@@ -724,7 +965,10 @@ impl ServiceInner {
                         e.snapshot.display()
                     );
                 }
-                bail!("job {id} was cancelled before it started");
+                bail!("job {id} was cancelled");
+            }
+            JobState::CancelledQueued => {
+                bail!("job {id} was cancelled while queued, before it started (no snapshot was written)")
             }
             s => bail!(
                 "job {id} is not finished yet ({}; {}/{} episodes)",
@@ -747,17 +991,29 @@ impl ServiceInner {
             .ok_or_else(|| anyhow!("no such job {id}"))?;
         let state = match e.state {
             JobState::Queued => {
-                e.state = JobState::Cancelled;
-                if matches!(e.spec, JobSpec::Sweep(_)) {
+                let label = if matches!(e.spec, JobSpec::Sweep(_)) {
+                    // A queued sweep never started; drop any persisted
+                    // spec so --resume-dir cannot re-run it.
                     std::fs::remove_file(&e.snapshot).ok();
-                } else {
-                    // A re-enqueued suspended job may already have a
-                    // snapshot on disk; shelve it so --resume-dir does
-                    // not resurrect the cancelled job.
+                    e.state = JobState::CancelledQueued;
+                    "cancelled-queued"
+                } else if e.snapshot.exists() {
+                    // A suspended or preempted job re-enqueued with a
+                    // snapshot on disk *has* run; shelve the snapshot so
+                    // --resume-dir does not resurrect the cancelled job
+                    // but a manual --resume/--warm-start still can.
+                    e.state = JobState::Cancelled;
                     shelve_cancelled_snapshot(e);
-                }
-                reg.pending.retain(|&p| p != id);
-                "cancelled"
+                    "cancelled"
+                } else {
+                    // Never started: nothing was ever written for this
+                    // job, and `result` will say exactly that instead of
+                    // pointing at a snapshot path that does not exist.
+                    e.state = JobState::CancelledQueued;
+                    "cancelled-queued"
+                };
+                reg.pending.remove(id);
+                label
             }
             JobState::Running => {
                 // A running sweep has no round boundary to stop at — its
@@ -808,9 +1064,9 @@ impl ServiceInner {
             let running = reg.jobs.values().filter(|e| e.state == JobState::Running).count();
             let specs: Vec<(u64, JobSpec, PathBuf)> = reg
                 .pending
-                .iter()
+                .ids()
                 .filter_map(|id| {
-                    reg.jobs.get(id).map(|e| (e.id, e.spec.clone(), e.snapshot.clone()))
+                    reg.jobs.get(&id).map(|e| (e.id, e.spec.clone(), e.snapshot.clone()))
                 })
                 .collect();
             (specs, running)
@@ -877,14 +1133,53 @@ impl ServiceInner {
             let spec = match read_job_spec(&path, is_sweep) {
                 Ok(s) => s,
                 Err(e) => {
-                    log::warn!("skipping {}: {e:#}", path.display());
+                    // An unreadable snapshot (truncated by a kill, or
+                    // foreign bytes) is a *failed job*, not an invisible
+                    // one: register it terminal with the file named, so
+                    // `status`/`result` explain what happened instead of
+                    // the id silently vanishing from the daemon.
+                    let msg = format!("unreadable snapshot {}: {e:#}", path.display());
+                    log::warn!("resume scan: {msg}");
+                    reg.jobs.insert(
+                        id,
+                        JobEntry {
+                            id,
+                            state: JobState::Failed,
+                            priority: Priority::Normal,
+                            cancel: Arc::new(AtomicBool::new(false)),
+                            preempt: Arc::new(AtomicBool::new(false)),
+                            preemptions: 0,
+                            progress: Progress::default(),
+                            error: Some(msg),
+                            result: None,
+                            snapshot: path,
+                            spec: JobSpec::Search(SearchJobSpec {
+                                net: "unknown".to_string(),
+                                seeds: 0,
+                                base_seed: 0,
+                                episodes: 0,
+                                chunk: 1,
+                                max_steps: 0,
+                                dataflows: Vec::new(),
+                                async_actors: 0,
+                                learners: 1,
+                                lockstep: false,
+                                priority: Priority::Normal,
+                            }),
+                        },
+                    );
                     continue;
                 }
             };
             let entry = JobEntry {
                 id,
                 state: JobState::Queued,
+                // Priority is execution-only and not persisted; every
+                // rescanned job re-enqueues at the default band.
+                priority: spec.priority(),
                 cancel: Arc::new(AtomicBool::new(false)),
+                preempt: Arc::new(AtomicBool::new(false)),
+                preemptions: 0,
                 progress: Progress {
                     episodes_total: spec.total_episodes(),
                     ..Progress::default()
@@ -894,8 +1189,9 @@ impl ServiceInner {
                 snapshot: path,
                 spec,
             };
+            let priority = entry.priority;
             reg.jobs.insert(id, entry);
-            reg.pending.push_back(id);
+            reg.pending.push_back(priority, id);
         }
         log::info!("resume scan: {} jobs re-enqueued", reg.pending.len());
         Ok(())
@@ -904,43 +1200,69 @@ impl ServiceInner {
     // ---------- job execution ----------
 
     fn run_job(&self, id: u64) {
-        let (spec, cancel, snapshot) = {
+        let (spec, cancel, preempt, snapshot) = {
             let mut reg = self.registry.lock();
             let Some(e) = reg.jobs.get_mut(&id) else { return };
             if e.state != JobState::Queued {
                 return;
             }
             e.state = JobState::Running;
-            (e.spec.clone(), Arc::clone(&e.cancel), e.snapshot.clone())
+            // A previous preemption request is spent once the job is
+            // back on a runner; it must not instantly re-drain.
+            e.preempt.store(false, Ordering::SeqCst);
+            (
+                e.spec.clone(),
+                Arc::clone(&e.cancel),
+                Arc::clone(&e.preempt),
+                e.snapshot.clone(),
+            )
         };
         let verdict = catch_unwind(AssertUnwindSafe(|| match &spec {
-            JobSpec::Search(s) => self.run_search_job(id, s, &cancel, &snapshot),
+            JobSpec::Search(s) => self.run_search_job(id, s, &cancel, &preempt, &snapshot),
             JobSpec::Sweep(s) => self.run_sweep_job(id, s, &cancel, &snapshot),
         }));
-        let mut reg = self.registry.lock();
-        let Some(e) = reg.jobs.get_mut(&id) else { return };
-        match verdict {
-            Ok(Ok(Verdict::Done(payload))) => {
-                e.state = JobState::Done;
-                e.result = Some(payload);
+        let mut notify = false;
+        {
+            let mut guard = self.registry.lock();
+            let reg = &mut *guard;
+            let Some(e) = reg.jobs.get_mut(&id) else { return };
+            match verdict {
+                Ok(Ok(Verdict::Done(payload))) => {
+                    e.state = JobState::Done;
+                    e.result = Some(payload);
+                }
+                Ok(Ok(Verdict::Suspended)) => {
+                    // Drained at shutdown: queued again, snapshot on disk,
+                    // ready for --resume-dir.
+                    e.state = JobState::Queued;
+                }
+                Ok(Ok(Verdict::Preempted)) => {
+                    // Drained for a higher-priority job: queued again at
+                    // the front of its band, snapshot on disk. The round
+                    // it resumes from is exactly the round it drained at,
+                    // so the eventual result is bit-identical to an
+                    // uninterrupted run (invariant 12).
+                    e.state = JobState::Queued;
+                    e.preemptions += 1;
+                    reg.pending.push_front(e.priority, id);
+                    notify = true;
+                }
+                Ok(Ok(Verdict::Cancelled)) => {
+                    e.state = JobState::Cancelled;
+                    shelve_cancelled_snapshot(e);
+                }
+                Ok(Err(err)) => {
+                    e.state = JobState::Failed;
+                    e.error = Some(format!("{err:#}"));
+                }
+                Err(payload) => {
+                    e.state = JobState::Failed;
+                    e.error = Some(panic_message(payload));
+                }
             }
-            Ok(Ok(Verdict::Suspended)) => {
-                // Drained at shutdown: queued again, snapshot on disk,
-                // ready for --resume-dir.
-                e.state = JobState::Queued;
-            }
-            Ok(Ok(Verdict::Cancelled)) => {
-                e.state = JobState::Cancelled;
-                shelve_cancelled_snapshot(e);
-            }
-            Ok(Err(err)) => {
-                e.state = JobState::Failed;
-                e.error = Some(format!("{err:#}"));
-            }
-            Err(payload) => {
-                e.state = JobState::Failed;
-                e.error = Some(panic_message(payload));
-            }
+        }
+        if notify {
+            self.scheduler.notify_all();
         }
     }
 
@@ -949,6 +1271,7 @@ impl ServiceInner {
         id: u64,
         spec: &SearchJobSpec,
         cancel: &Arc<AtomicBool>,
+        preempt: &Arc<AtomicBool>,
         snap: &Path,
     ) -> Result<Verdict> {
         let ospec = spec.to_orchestrator_spec()?;
@@ -984,6 +1307,14 @@ impl ServiceInner {
             if self.shutdown.load(Ordering::SeqCst) {
                 orch.save_snapshot(snap)?;
                 return Ok(Verdict::Suspended);
+            }
+            if preempt.load(Ordering::SeqCst) {
+                // Preemption is exactly the shutdown drain, addressed at
+                // one job: snapshot at this round boundary, hand the
+                // runner slot back, re-enqueue. Nothing about the
+                // computation changes — only who runs when.
+                orch.save_snapshot(snap)?;
+                return Ok(Verdict::Preempted);
             }
             let done = match &acfg {
                 Some(c) => orch.run_round_async_on(&self.pool, c)?,
@@ -1120,10 +1451,12 @@ fn read_job_spec(path: &Path, is_sweep: bool) -> Result<JobSpec> {
             max_steps: h.max_steps,
             dataflows: h.dataflows,
             // Snapshot headers carry no execution knobs; a rescanned job
-            // finishes on the synchronous path (bit-valid either way).
+            // finishes on the synchronous path (bit-valid either way)
+            // and re-enqueues at the default priority band.
             async_actors: 0,
             learners: 1,
             lockstep: false,
+            priority: Priority::Normal,
         }))
     }
 }
@@ -1135,6 +1468,8 @@ fn merge_status(j: &mut Json, e: &JobEntry) {
         .set("kind", Json::Str(e.spec.kind_label().into()))
         .set("target", Json::Str(e.spec.target()))
         .set("state", Json::Str(e.state.label().into()))
+        .set("priority", Json::Str(e.priority.label().into()))
+        .set("preemptions", Json::Num(e.preemptions as f64))
         .set("episodes_done", Json::Num(p.episodes_done as f64))
         .set("episodes_total", Json::Num(p.episodes_total as f64))
         .set("round", Json::Num(p.rounds as f64))
@@ -1249,7 +1584,7 @@ fn runner_loop(inner: &Arc<ServiceInner>) {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(id) = reg.pending.pop_front() {
+                if let Some(id) = reg.pending.pop_highest() {
                     break id;
                 }
                 reg = inner.scheduler.wait(reg);
@@ -1280,6 +1615,14 @@ fn accept_loop(
     }
 }
 
+/// Encode and send one frame in the connection's codec.
+fn write_frame(codec: &dyn WireCodec, w: &mut TcpStream, msg: &Json) -> Result<()> {
+    let frame = codec.encode(msg)?;
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(())
+}
+
 fn serve_conn(inner: &Arc<ServiceInner>, stream: TcpStream) {
     // A read timeout lets the handler notice daemon shutdown even while
     // a client holds an idle connection open.
@@ -1287,26 +1630,45 @@ fn serve_conn(inner: &Arc<ServiceInner>, stream: TcpStream) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
-    let mut line = String::new();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => break,
-            Ok(_) => {
-                let trimmed = line.trim().to_string();
-                line.clear();
-                if trimmed.is_empty() {
-                    continue;
+    // Negotiate the codec from the first bytes without consuming them:
+    // the binary framing opens every frame with the EDCW magic, JSON
+    // requests open with '{'. The codec is then fixed for the life of
+    // the connection.
+    let kind = loop {
+        match reader.fill_buf() {
+            Ok([]) => return, // closed before the first byte
+            Ok(first) => break wire::detect(first),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
                 }
-                // A malformed line gets a readable error response and
-                // the connection survives for the next request.
-                let resp = match json::parse(&trimmed) {
-                    Ok(req) => inner.handle(&req),
-                    Err(e) => err_json(&format!(
-                        "request is not valid JSON ({e}); the protocol is one JSON object \
-                         per line — see docs/serve.md"
-                    )),
+            }
+            Err(_) => return,
+        }
+    };
+    let codec = match wire::codec_for(kind) {
+        Ok(c) => c,
+        Err(e) => {
+            // A binary hello against a build without the feature:
+            // answer in the always-compiled JSON framing, then close.
+            let _ = write_frame(&wire::JsonWire, &mut writer, &err_json(&format!("{e:#}")));
+            return;
+        }
+    };
+    let mut conn = ConnState::default();
+    // Partial-frame bytes carried across read timeouts — a slow-loris
+    // writer trickling one frame over many 500ms windows still gets it
+    // reassembled, never dropped.
+    let mut carry: Vec<u8> = Vec::new();
+    loop {
+        match codec.read_frame(&mut reader, &mut carry) {
+            Ok(Some(req)) => {
+                let wrote = if req.str_or("cmd", "") == "watch" {
+                    stream_watch(inner, codec, &mut writer, &req)
+                } else {
+                    write_frame(codec, &mut writer, &inner.handle(&req, &mut conn))
                 };
-                if writeln!(writer, "{resp}").is_err() {
+                if wrote.is_err() {
                     break;
                 }
                 // Close after the response once a drain has begun — a
@@ -1316,13 +1678,80 @@ fn serve_conn(inner: &Arc<ServiceInner>, stream: TcpStream) {
                     break;
                 }
             }
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+            Ok(None) => break,
+            // Bad content in an intact frame: typed error response, the
+            // connection survives for the next request.
+            Err(WireError::Malformed(msg)) => {
+                if write_frame(codec, &mut writer, &err_json(&msg)).is_err() {
+                    break;
+                }
+            }
+            // Broken framing (truncated / oversized / wrong magic):
+            // typed error response, then close — resync is impossible.
+            Err(WireError::Fatal(msg)) => {
+                let _ = write_frame(codec, &mut writer, &err_json(&msg));
+                break;
+            }
+            Err(WireError::Io(e))
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
             }
-            Err(_) => break,
+            Err(WireError::Io(_)) => break,
         }
+    }
+}
+
+/// `cmd:"watch"` — stream progress frames for one job over the
+/// connection's codec until the job reaches a terminal state or the
+/// daemon drains. Frames are `{"ok":true,"stream":"progress",...}`
+/// status objects, re-sent on every state/episode/round change and at
+/// least every 500ms as a keepalive; the final frame is
+/// `{"ok":true,"stream":"end","state":<terminal>}`.
+fn stream_watch(
+    inner: &Arc<ServiceInner>,
+    codec: &dyn WireCodec,
+    writer: &mut TcpStream,
+    req: &Json,
+) -> Result<()> {
+    if req.get("job").is_none() {
+        return write_frame(codec, writer, &err_json("watch wants a 'job' field"));
+    }
+    let id = match field_u64(req, "job", 0) {
+        Ok(id) => id,
+        Err(e) => return write_frame(codec, writer, &err_json(&format!("{e:#}"))),
+    };
+    let keepalive = Duration::from_millis(500);
+    let mut last: Option<(&'static str, usize, usize)> = None;
+    let mut last_emit = Instant::now();
+    loop {
+        let (mut frame, key, terminal) = {
+            let reg = inner.registry.lock();
+            let Some(e) = reg.jobs.get(&id) else {
+                drop(reg);
+                return write_frame(codec, writer, &err_json(&format!("no such job {id}")));
+            };
+            let mut j = ok_json();
+            merge_status(&mut j, e);
+            let key = (e.state.label(), e.progress.episodes_done, e.progress.rounds);
+            (j, key, e.state.is_terminal())
+        };
+        if last != Some(key) || last_emit.elapsed() >= keepalive {
+            frame.set("stream", Json::Str("progress".into()));
+            write_frame(codec, writer, &frame)?;
+            last = Some(key);
+            last_emit = Instant::now();
+        }
+        if terminal || inner.shutdown.load(Ordering::SeqCst) {
+            let mut end = ok_json();
+            end.set("stream", Json::Str("end".into()))
+                .set("job", Json::Num(id as f64))
+                .set("state", Json::Str(key.0.into()));
+            return write_frame(codec, writer, &end);
+        }
+        std::thread::sleep(Duration::from_millis(50));
     }
 }
 
@@ -1331,28 +1760,51 @@ fn serve_conn(inner: &Arc<ServiceInner>, stream: TcpStream) {
 /// A blocking client for the `edc serve` protocol (one connection, any
 /// number of sequential requests). Powers the `edc submit | status |
 /// result | cancel | shutdown` subcommands and the integration tests.
+///
+/// The wire codec is chosen at [`connect_with`](Client::connect_with)
+/// time (`--wire json|binary`); the daemon negotiates it from the first
+/// frame, so nothing else changes. [`connect`](Client::connect) keeps
+/// the JSON default — existing callers are wire-compatible with every
+/// earlier daemon.
 pub struct Client {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
+    codec: &'static dyn WireCodec,
+    carry: Vec<u8>,
 }
 
 impl Client {
-    /// Connect to a daemon at `host:port`.
+    /// Connect to a daemon at `host:port` speaking the default
+    /// newline-JSON codec.
     pub fn connect(addr: &str) -> Result<Client> {
+        Client::connect_with(addr, WireKind::Json)
+    }
+
+    /// Connect speaking a specific wire codec (`--wire json|binary`).
+    pub fn connect_with(addr: &str, wire: WireKind) -> Result<Client> {
+        let codec = wire::codec_for(wire)?;
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to edc serve at {addr} (is it running?)"))?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { writer: stream, reader })
+        Ok(Client { writer: stream, reader, codec, carry: Vec::new() })
+    }
+
+    /// The negotiated wire codec's name (`"json"` / `"binary"`).
+    pub fn wire(&self) -> &'static str {
+        self.codec.name()
     }
 
     /// Send one request object, read one response object.
     pub fn request(&mut self, req: &Json) -> Result<Json> {
-        writeln!(self.writer, "{req}")?;
+        let frame = self.codec.encode(req)?;
+        self.writer.write_all(&frame)?;
         self.writer.flush()?;
-        let mut lin = String::new();
-        let n = self.reader.read_line(&mut lin)?;
-        ensure!(n > 0, "daemon closed the connection");
-        json::parse(lin.trim()).map_err(|e| anyhow!("daemon sent invalid JSON: {e}"))
+        match self.codec.read_frame(&mut self.reader, &mut self.carry) {
+            Ok(Some(resp)) => Ok(resp),
+            Ok(None) => bail!("daemon closed the connection"),
+            Err(WireError::Io(e)) => Err(anyhow!(e).context("reading the daemon's response")),
+            Err(e) => bail!("daemon sent an unreadable frame: {e}"),
+        }
     }
 
     pub fn ping(&mut self) -> Result<Json> {
@@ -1438,6 +1890,57 @@ impl Client {
         Ok(resp)
     }
 
+    /// Stream a job's progress frames until its `end` frame (terminal
+    /// state or daemon drain), returning every frame received —
+    /// `stream:"progress"` objects then one `stream:"end"`. Total
+    /// silence for longer than `timeout` fails (the daemon keepalives
+    /// every ~500ms, so that is a dead daemon, not jitter).
+    pub fn watch(&mut self, job: u64, timeout: Duration) -> Result<Vec<Json>> {
+        let mut req = cmd_obj("watch");
+        req.set("job", Json::Num(job as f64));
+        let frame = self.codec.encode(&req)?;
+        self.writer.write_all(&frame)?;
+        self.writer.flush()?;
+        // Bounded reads so a wedged daemon cannot hang us forever; the
+        // timeout is restored before returning either way.
+        self.reader
+            .get_ref()
+            .set_read_timeout(Some(Duration::from_millis(500)))?;
+        let mut last_frame = Instant::now();
+        let mut frames = Vec::new();
+        let out = loop {
+            match self.codec.read_frame(&mut self.reader, &mut self.carry) {
+                Ok(Some(f)) => {
+                    if f.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+                        break Err(anyhow!(
+                            "daemon error: {}",
+                            f.str_or("error", "malformed response")
+                        ));
+                    }
+                    last_frame = Instant::now();
+                    let done = f.str_or("stream", "") == "end";
+                    frames.push(f);
+                    if done {
+                        break Ok(std::mem::take(&mut frames));
+                    }
+                }
+                Ok(None) => break Err(anyhow!("daemon closed the connection mid-watch")),
+                Err(WireError::Io(e))
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    if last_frame.elapsed() >= timeout {
+                        break Err(anyhow!(
+                            "watch of job {job} saw no frame within {timeout:?}"
+                        ));
+                    }
+                }
+                Err(e) => break Err(anyhow!("daemon sent an unreadable frame: {e}")),
+            }
+        };
+        self.reader.get_ref().set_read_timeout(None)?;
+        out
+    }
+
     /// Request a graceful shutdown (queued + running jobs drain into
     /// resumable snapshots).
     pub fn shutdown(&mut self) -> Result<Json> {
@@ -1447,16 +1950,17 @@ impl Client {
     }
 
     /// Poll `status` until the job reaches a terminal state (`done`,
-    /// `failed`, `cancelled`), returning that status object. Note that a
-    /// daemon drain is not terminal — a drained job returns to `queued`
-    /// and this keeps polling until the daemon closes the connection or
-    /// the timeout fires; poll `status` directly to observe a drain.
+    /// `failed`, `cancelled`, `cancelled-queued`), returning that status
+    /// object. Note that a daemon drain is not terminal — a drained job
+    /// returns to `queued` and this keeps polling until the daemon
+    /// closes the connection or the timeout fires; poll `status`
+    /// directly to observe a drain.
     pub fn wait_done(&mut self, job: u64, timeout: Duration) -> Result<Json> {
         let start = Instant::now();
         loop {
             let s = self.status(Some(job))?;
             match s.str_or("state", "").as_str() {
-                "done" | "failed" | "cancelled" => return Ok(s),
+                "done" | "failed" | "cancelled" | "cancelled-queued" => return Ok(s),
                 _ => {}
             }
             ensure!(
@@ -1478,6 +1982,7 @@ fn cmd_obj(cmd: &str) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json;
 
     #[test]
     fn job_spec_parses_defaults_and_rejects_bad_fields() {
@@ -1546,8 +2051,60 @@ mod tests {
             JobState::Done,
             JobState::Failed,
             JobState::Cancelled,
+            JobState::CancelledQueued,
         ];
         let labels: Vec<&str> = all.iter().map(|s| s.label()).collect();
-        assert_eq!(labels, vec!["queued", "running", "done", "failed", "cancelled"]);
+        assert_eq!(
+            labels,
+            vec!["queued", "running", "done", "failed", "cancelled", "cancelled-queued"]
+        );
+        let terminal: Vec<bool> = all.iter().map(|s| s.is_terminal()).collect();
+        assert_eq!(terminal, vec![false, false, true, true, true, true]);
+    }
+
+    #[test]
+    fn priority_parses_orders_and_labels() {
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(p.label()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        let req = json::parse(r#"{"cmd":"submit","priority":"high"}"#).unwrap();
+        let JobSpec::Search(s) = JobSpec::from_request(&req).unwrap() else {
+            panic!("search");
+        };
+        assert_eq!(s.priority, Priority::High);
+        let bad = json::parse(r#"{"cmd":"submit","priority":"urgent"}"#).unwrap();
+        assert!(JobSpec::from_request(&bad).is_err());
+        // Sweeps ignore the knob: no round boundary to preempt at.
+        let sweep = json::parse(r#"{"cmd":"submit","kind":"sweep"}"#).unwrap();
+        assert_eq!(JobSpec::from_request(&sweep).unwrap().priority(), Priority::Normal);
+    }
+
+    #[test]
+    fn pending_queue_pops_by_band_and_front_pushes_win_their_band() {
+        let mut q = PendingQueue::new(8);
+        q.push_back(Priority::Normal, 1);
+        q.push_back(Priority::Low, 2);
+        q.push_back(Priority::High, 3);
+        q.push_back(Priority::Normal, 4);
+        // A preempted normal job re-enqueued at the front of its band
+        // runs before job 1, but still after every high job.
+        q.push_front(Priority::Normal, 5);
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.ids().collect::<Vec<_>>(), vec![3, 5, 1, 4, 2]);
+        q.remove(1);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_highest()).collect();
+        assert_eq!(order, vec![3, 5, 4, 2]);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn busy_rejections_carry_code_and_retry_hint() {
+        let j = busy_json("queue full", "busy", 250);
+        assert_eq!(j.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert_eq!(j.str_or("code", ""), "busy");
+        assert_eq!(j.num_or("retry_after_ms", 0.0) as u64, 250);
+        assert!(ensure_ok(&j).is_err());
     }
 }

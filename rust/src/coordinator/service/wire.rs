@@ -1,0 +1,595 @@
+//! Pluggable wire codecs for the `edc serve` protocol, plus the
+//! deterministic fault-injection transport the protocol-conformance
+//! suite drives every codec through.
+//!
+//! A [`WireCodec`] turns one request/response [`Json`] tree into one
+//! *frame* of bytes and back. Two codecs exist:
+//!
+//! - [`JsonWire`] — the historical newline-delimited JSON framing (one
+//!   object per line). Always compiled; every connection that does not
+//!   announce otherwise speaks it, so pre-codec clients keep working
+//!   unchanged.
+//! - [`BinaryWire`] (`wire-binary` feature, on by default) — a
+//!   length-prefixed compact framing: the [`WIRE_MAGIC`] `EDCW`, a
+//!   little-endian `u32` payload length, then the payload encoded with
+//!   the snapshot layer's v4 binary container
+//!   ([`snapshot::BinaryCodec`](crate::snapshot)), so numeric bulk in a
+//!   message — result curves, warm-start payloads, archive tensors —
+//!   rides as 8-byte-aligned typed sections instead of decimal text.
+//!
+//! The daemon negotiates per connection from the first bytes a client
+//! sends ([`detect`]): a frame opening with the `EDCW` magic selects the
+//! binary codec, anything else is newline-JSON. The codec is fixed for
+//! the life of the connection; bytes in the wrong framing after that are
+//! a typed [`WireError::Fatal`], answered and then closed.
+//!
+//! Error taxonomy (what the conformance matrix in
+//! `tests/service_protocol.rs` pins): a frame that *parsed as a unit*
+//! but carries invalid content is [`WireError::Malformed`] — the daemon
+//! answers with a typed error frame and the connection survives. Broken
+//! *framing* (truncated mid-frame, oversized, wrong magic) is
+//! [`WireError::Fatal`] — there is no way to resynchronize, so the
+//! daemon answers once and closes. Socket conditions are
+//! [`WireError::Io`]; `WouldBlock`/`TimedOut` are how the daemon's read
+//! timeout surfaces mid-frame, and `read_frame`'s caller just retries
+//! with the same carry buffer — partial frames are never dropped, which
+//! is what keeps slow-loris clients correct instead of wedged.
+
+use crate::snapshot::{self, Format};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use std::fmt;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+/// First bytes of every binary-codec frame. Distinct from the snapshot
+/// container magic (`EDC4`): this marks a *wire frame*, whose payload
+/// then carries its own container magic.
+pub const WIRE_MAGIC: [u8; 4] = *b"EDCW";
+
+/// Hard cap on one frame's bytes (payload for binary, line for JSON).
+/// A frame announcing or reaching more than this is rejected with a
+/// typed error before it can balloon daemon memory.
+pub const MAX_FRAME: usize = 8 * 1024 * 1024;
+
+/// Which wire codec a client speaks (`--wire json|binary`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireKind {
+    /// Newline-delimited JSON text, one object per line.
+    #[default]
+    Json,
+    /// `EDCW` magic + u32 length + v4-container payload.
+    Binary,
+}
+
+impl WireKind {
+    /// Parse a `--wire` value.
+    pub fn parse(s: &str) -> anyhow::Result<WireKind> {
+        match s {
+            "json" => Ok(WireKind::Json),
+            "binary" => Ok(WireKind::Binary),
+            other => anyhow::bail!("unknown wire codec `{other}` (expected `json` or `binary`)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            WireKind::Json => "json",
+            WireKind::Binary => "binary",
+        }
+    }
+}
+
+/// What went wrong while reading one frame. See the module docs for the
+/// recover-vs-close contract each variant implies.
+#[derive(Debug)]
+pub enum WireError {
+    /// Socket-level error. `WouldBlock`/`TimedOut` mean "no complete
+    /// frame yet" under a read timeout — retry with the same buffer.
+    Io(std::io::Error),
+    /// The frame's *content* is invalid but the framing is intact:
+    /// answer with a typed error frame and keep the connection.
+    Malformed(String),
+    /// The *framing* is broken (truncated, oversized, wrong magic):
+    /// answer with a typed error frame, then close.
+    Fatal(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io error: {e}"),
+            WireError::Malformed(m) | WireError::Fatal(m) => f.write_str(m),
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// One codec = one framing of request/response trees on the socket
+/// (the same trait shape as the snapshot layer's `SnapshotCodec`:
+/// name, encode, decode — transport-agnostic and feature-pluggable).
+pub trait WireCodec: Send + Sync {
+    /// Short name for logs, error messages and `--wire` round-trips.
+    fn name(&self) -> &'static str;
+    fn kind(&self) -> WireKind;
+    /// Serialize one message into one complete frame of bytes.
+    fn encode(&self, msg: &Json) -> anyhow::Result<Vec<u8>>;
+    /// Read one frame. `carry` holds partial-frame bytes across calls:
+    /// when the reader times out mid-frame this returns
+    /// [`WireError::Io`] and the caller retries with the same buffer,
+    /// so trickled writes reassemble instead of being dropped.
+    /// `Ok(None)` is a clean end-of-stream between frames.
+    fn read_frame(
+        &self,
+        r: &mut dyn BufRead,
+        carry: &mut Vec<u8>,
+    ) -> Result<Option<Json>, WireError>;
+}
+
+/// Codec instance for a kind. The binary codec only exists when the
+/// `wire-binary` feature is compiled in; asking for it otherwise is a
+/// readable error (the daemon answers it in JSON framing).
+pub fn codec_for(kind: WireKind) -> anyhow::Result<&'static dyn WireCodec> {
+    match kind {
+        WireKind::Json => Ok(&JsonWire),
+        #[cfg(feature = "wire-binary")]
+        WireKind::Binary => Ok(&BinaryWire),
+        #[cfg(not(feature = "wire-binary"))]
+        WireKind::Binary => anyhow::bail!(
+            "this build has no binary wire codec (rebuild with the `wire-binary` feature)"
+        ),
+    }
+}
+
+/// Negotiate a connection's codec from its first bytes: the `EDCW`
+/// magic selects binary framing, anything else is newline-JSON (a JSON
+/// request always opens with `{` or whitespace, so one byte decides).
+pub fn detect(first: &[u8]) -> WireKind {
+    if first.first() == Some(&WIRE_MAGIC[0]) {
+        WireKind::Binary
+    } else {
+        WireKind::Json
+    }
+}
+
+/// Append available bytes (up to `cap` total in `carry`) from `r`.
+/// Returns `Ok(0)` on end-of-stream, `Err` with `WouldBlock`/`TimedOut`
+/// when a read timeout fires with nothing buffered.
+fn read_some(r: &mut dyn BufRead, carry: &mut Vec<u8>, cap: usize) -> std::io::Result<usize> {
+    let chunk = r.fill_buf()?;
+    if chunk.is_empty() {
+        return Ok(0);
+    }
+    let room = cap.saturating_sub(carry.len()).max(1);
+    let take = chunk.len().min(room);
+    carry.extend_from_slice(&chunk[..take]);
+    r.consume(take);
+    Ok(take)
+}
+
+// ---------------------------------------------------------------------
+// Newline-delimited JSON (the default, wire-compatible with PR 4)
+// ---------------------------------------------------------------------
+
+/// One JSON object per `\n`-terminated line — byte-identical on the
+/// wire to the pre-codec protocol, so it is the negotiation default.
+pub struct JsonWire;
+
+impl WireCodec for JsonWire {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn kind(&self) -> WireKind {
+        WireKind::Json
+    }
+
+    fn encode(&self, msg: &Json) -> anyhow::Result<Vec<u8>> {
+        let mut bytes = msg.to_string().into_bytes();
+        bytes.push(b'\n');
+        anyhow::ensure!(
+            bytes.len() <= MAX_FRAME,
+            "frame of {} bytes exceeds the {MAX_FRAME}-byte wire limit",
+            bytes.len()
+        );
+        Ok(bytes)
+    }
+
+    fn read_frame(
+        &self,
+        r: &mut dyn BufRead,
+        carry: &mut Vec<u8>,
+    ) -> Result<Option<Json>, WireError> {
+        loop {
+            // A binary frame on a JSON connection can never parse; name
+            // the actual mistake instead of "invalid JSON".
+            if carry.starts_with(&WIRE_MAGIC) {
+                return Err(WireError::Fatal(
+                    "codec mismatch: a binary (EDCW) frame arrived on a connection \
+                     negotiated as newline-JSON; the codec is fixed by the first frame \
+                     of the connection — reconnect to switch"
+                        .to_string(),
+                ));
+            }
+            if let Some(pos) = carry.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = carry.drain(..=pos).collect();
+                let text = match std::str::from_utf8(&line[..line.len() - 1]) {
+                    Ok(t) => t.trim(),
+                    Err(_) => {
+                        return Err(WireError::Malformed(
+                            "request line is not valid UTF-8; the JSON wire protocol is \
+                             one UTF-8 JSON object per line — see docs/serve.md"
+                                .to_string(),
+                        ))
+                    }
+                };
+                if text.is_empty() {
+                    continue;
+                }
+                return match json::parse(text) {
+                    Ok(j) => Ok(Some(j)),
+                    Err(e) => Err(WireError::Malformed(format!(
+                        "request is not valid JSON ({e}); the protocol is one JSON object \
+                         per line — see docs/serve.md"
+                    ))),
+                };
+            }
+            if carry.len() > MAX_FRAME {
+                return Err(WireError::Fatal(format!(
+                    "request line exceeds the {MAX_FRAME}-byte frame limit without a \
+                     newline; closing the connection"
+                )));
+            }
+            match read_some(r, carry, MAX_FRAME + 1) {
+                Ok(0) => {
+                    return if carry.iter().all(|b| b.is_ascii_whitespace()) {
+                        Ok(None)
+                    } else {
+                        Err(WireError::Fatal(format!(
+                            "connection closed mid-frame: {} bytes of an unterminated \
+                             request line (truncated frame)",
+                            carry.len()
+                        )))
+                    };
+                }
+                Ok(_) => {}
+                Err(e) => return Err(WireError::Io(e)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Length-prefixed binary (wire-binary feature)
+// ---------------------------------------------------------------------
+
+/// `EDCW` + little-endian `u32` payload length + the payload encoded by
+/// the snapshot layer's v4 binary container, so typed numeric leaves
+/// (`Json::F32s`/`F64s`/`U32s`) travel as aligned little-endian
+/// sections — the same blob conventions resumable snapshots use.
+#[cfg(feature = "wire-binary")]
+pub struct BinaryWire;
+
+#[cfg(feature = "wire-binary")]
+impl WireCodec for BinaryWire {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn kind(&self) -> WireKind {
+        WireKind::Binary
+    }
+
+    fn encode(&self, msg: &Json) -> anyhow::Result<Vec<u8>> {
+        let payload = snapshot::codec_for(Format::Binary).encode(msg)?;
+        anyhow::ensure!(
+            payload.len() <= MAX_FRAME,
+            "frame payload of {} bytes exceeds the {MAX_FRAME}-byte wire limit",
+            payload.len()
+        );
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&WIRE_MAGIC);
+        #[allow(clippy::cast_possible_truncation)] // ensured <= MAX_FRAME above
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        Ok(frame)
+    }
+
+    fn read_frame(
+        &self,
+        r: &mut dyn BufRead,
+        carry: &mut Vec<u8>,
+    ) -> Result<Option<Json>, WireError> {
+        loop {
+            if carry.len() >= 8 {
+                if carry[..4] != WIRE_MAGIC {
+                    return Err(WireError::Fatal(
+                        "codec mismatch: bytes without the EDCW magic arrived on a \
+                         connection negotiated as binary; the codec is fixed by the \
+                         first frame of the connection — reconnect to switch"
+                            .to_string(),
+                    ));
+                }
+                let len = u32::from_le_bytes([carry[4], carry[5], carry[6], carry[7]]) as usize;
+                if len > MAX_FRAME {
+                    return Err(WireError::Fatal(format!(
+                        "frame announces a {len}-byte payload, over the {MAX_FRAME}-byte \
+                         wire limit; closing the connection"
+                    )));
+                }
+                if carry.len() >= 8 + len {
+                    let tree = snapshot::codec_for(Format::Binary)
+                        .decode(&carry[8..8 + len], "wire frame");
+                    carry.drain(..8 + len);
+                    return match tree {
+                        Ok(j) => Ok(Some(j)),
+                        Err(e) => Err(WireError::Malformed(format!(
+                            "frame payload is not a valid v4 container: {e:#}"
+                        ))),
+                    };
+                }
+            }
+            match read_some(r, carry, 8 + MAX_FRAME) {
+                Ok(0) => {
+                    return if carry.is_empty() {
+                        Ok(None)
+                    } else {
+                        Err(WireError::Fatal(format!(
+                            "connection closed mid-frame: got {} bytes of an incomplete \
+                             binary frame (truncated frame)",
+                            carry.len()
+                        )))
+                    };
+                }
+                Ok(_) => {}
+                Err(e) => return Err(WireError::Io(e)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic fault-injection transport (test harness)
+// ---------------------------------------------------------------------
+
+/// One way to deliver (or mangle) a frame on the wire. The
+/// protocol-conformance matrix applies each of these to each codec and
+/// asserts the daemon's response is always a typed frame or a clean
+/// close — never a hang, panic, or silent drop.
+#[derive(Clone, Debug)]
+pub enum Fault {
+    /// Deliver the frame intact in one write.
+    Clean,
+    /// Write only the first `keep` bytes, then half-close the write
+    /// side (FIN) while keeping the read side open for the response.
+    Truncate { keep: usize },
+    /// Deliver every byte, but in `chunk`-byte writes with a flush
+    /// after each — exercises frame reassembly.
+    SplitWrites { chunk: usize },
+    /// Slow-loris: `chunk`-byte writes separated by `delay` pauses, so
+    /// the frame spans several of the daemon's read-timeout windows.
+    SlowLoris { chunk: usize, delay: Duration },
+    /// Write the first `after` bytes, then tear the whole connection
+    /// down (no response can be read; the daemon must just survive).
+    Disconnect { after: usize },
+    /// Prefix the frame with the binary wire magic — on a JSON
+    /// connection this is a mid-stream codec switch, on a fresh binary
+    /// connection a frame whose length field is garbage.
+    CodecMismatch,
+}
+
+impl Fault {
+    /// A deterministic schedule of `n` faults for a frame of
+    /// `frame_len` bytes, derived from `seed` via `util::rng` — the
+    /// soak leg of the conformance suite replays the exact same byte
+    /// stream for a given seed.
+    pub fn schedule(seed: u64, n: usize, frame_len: usize) -> Vec<Fault> {
+        let mut rng = Rng::new(seed);
+        let cut = |rng: &mut Rng| rng.below(frame_len.max(2)).max(1);
+        (0..n)
+            .map(|_| match rng.below(6) {
+                0 => Fault::Clean,
+                1 => Fault::Truncate { keep: cut(&mut rng) },
+                2 => Fault::SplitWrites { chunk: cut(&mut rng) },
+                3 => Fault::SlowLoris {
+                    chunk: (frame_len / 4).max(1),
+                    delay: Duration::from_millis(5 + rng.below(20) as u64),
+                },
+                4 => Fault::Disconnect { after: cut(&mut rng) },
+                _ => Fault::CodecMismatch,
+            })
+            .collect()
+    }
+}
+
+/// A client-side transport that injects [`Fault`]s into outgoing
+/// frames. Wraps a plain `TcpStream` to the daemon; responses are read
+/// back through the real codecs, so the harness observes exactly what a
+/// well-behaved client would.
+pub struct FaultTransport {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    carry: Vec<u8>,
+}
+
+impl FaultTransport {
+    pub fn connect(addr: &str) -> anyhow::Result<FaultTransport> {
+        let writer = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("connecting fault transport to {addr}: {e}"))?;
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(FaultTransport { writer, reader, carry: Vec::new() })
+    }
+
+    /// Deliver `frame` under `fault`. Write errors after a torn-down
+    /// connection are expected for the disconnect faults and surface to
+    /// the caller as `Err`.
+    pub fn send(&mut self, frame: &[u8], fault: &Fault) -> std::io::Result<()> {
+        match fault {
+            Fault::Clean => {
+                self.writer.write_all(frame)?;
+                self.writer.flush()
+            }
+            Fault::Truncate { keep } => {
+                self.writer.write_all(&frame[..(*keep).min(frame.len())])?;
+                self.writer.flush()?;
+                self.writer.shutdown(Shutdown::Write)
+            }
+            Fault::SplitWrites { chunk } => {
+                for piece in frame.chunks((*chunk).max(1)) {
+                    self.writer.write_all(piece)?;
+                    self.writer.flush()?;
+                }
+                Ok(())
+            }
+            Fault::SlowLoris { chunk, delay } => {
+                for piece in frame.chunks((*chunk).max(1)) {
+                    self.writer.write_all(piece)?;
+                    self.writer.flush()?;
+                    std::thread::sleep(*delay);
+                }
+                Ok(())
+            }
+            Fault::Disconnect { after } => {
+                self.writer.write_all(&frame[..(*after).min(frame.len())])?;
+                self.writer.flush()?;
+                self.writer.shutdown(Shutdown::Both)
+            }
+            Fault::CodecMismatch => {
+                self.writer.write_all(&WIRE_MAGIC)?;
+                self.writer.write_all(frame)?;
+                self.writer.flush()?;
+                // Nothing further follows; half-close so a daemon
+                // waiting for the rest of a "frame" sees EOF, not a hang.
+                self.writer.shutdown(Shutdown::Write)
+            }
+        }
+    }
+
+    /// Bound how long [`FaultTransport::recv`] blocks (`None` = forever).
+    /// The conformance soak sets this so a daemon that wrongly goes
+    /// silent fails the test instead of hanging it.
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.reader.get_ref().set_read_timeout(d)
+    }
+
+    /// Read one response frame in `kind` framing. `Ok(None)` means the
+    /// daemon closed the connection without a frame.
+    pub fn recv(&mut self, kind: WireKind) -> Result<Option<Json>, WireError> {
+        let codec = codec_for(kind)
+            .map_err(|e| WireError::Fatal(format!("{e:#}")))?;
+        codec.read_frame(&mut self.reader, &mut self.carry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn sample() -> Json {
+        let mut j = Json::obj();
+        j.set("cmd", Json::Str("submit".into()))
+            .set("net", Json::Str("lenet5".into()))
+            .set("seeds", Json::Num(4.0))
+            .set("curve", Json::from_f64s(&[1.0, f64::NAN, 0.5]));
+        j
+    }
+
+    fn read_all(codec: &dyn WireCodec, bytes: &[u8]) -> Result<Option<Json>, WireError> {
+        let mut cur = Cursor::new(bytes.to_vec());
+        let mut carry = Vec::new();
+        codec.read_frame(&mut cur, &mut carry)
+    }
+
+    #[test]
+    fn json_frames_round_trip_and_match_the_legacy_line_protocol() {
+        let msg = sample();
+        let frame = JsonWire.encode(&msg).unwrap();
+        assert_eq!(frame, format!("{msg}\n").into_bytes(), "wire-compatible with PR 4");
+        let back = read_all(&JsonWire, &frame).unwrap().unwrap();
+        assert_eq!(back.to_string(), msg.to_string());
+    }
+
+    #[cfg(feature = "wire-binary")]
+    #[test]
+    fn binary_frames_round_trip_bit_identically() {
+        let msg = sample();
+        let frame = BinaryWire.encode(&msg).unwrap();
+        assert_eq!(&frame[..4], &WIRE_MAGIC);
+        let len = u32::from_le_bytes([frame[4], frame[5], frame[6], frame[7]]) as usize;
+        assert_eq!(frame.len(), 8 + len);
+        let back = read_all(&BinaryWire, &frame).unwrap().unwrap();
+        assert_eq!(back.to_string(), msg.to_string(), "value-level equality across codecs");
+    }
+
+    #[cfg(feature = "wire-binary")]
+    #[test]
+    fn detect_negotiates_from_the_first_byte() {
+        assert_eq!(detect(b"{\"cmd\":\"ping\"}"), WireKind::Json);
+        assert_eq!(detect(&WIRE_MAGIC), WireKind::Binary);
+        assert_eq!(detect(b""), WireKind::Json, "default before any byte");
+    }
+
+    #[test]
+    fn truncated_json_line_is_a_fatal_framing_error() {
+        let err = read_all(&JsonWire, b"{\"cmd\":\"pi").unwrap_err();
+        assert!(matches!(err, WireError::Fatal(_)), "{err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn malformed_json_line_is_recoverable() {
+        let err = read_all(&JsonWire, b"not json\n").unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err}");
+        // The carry buffer keeps framing intact: a good frame after a
+        // bad line still parses.
+        let mut cur = Cursor::new(b"bad\n{\"cmd\":\"ping\"}\n".to_vec());
+        let mut carry = Vec::new();
+        assert!(JsonWire.read_frame(&mut cur, &mut carry).is_err());
+        let ok = JsonWire.read_frame(&mut cur, &mut carry).unwrap().unwrap();
+        assert_eq!(ok.str_or("cmd", ""), "ping");
+    }
+
+    #[cfg(feature = "wire-binary")]
+    #[test]
+    fn binary_rejects_oversized_and_truncated_frames_with_typed_errors() {
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&WIRE_MAGIC);
+        frame.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let err = read_all(&BinaryWire, &frame).unwrap_err();
+        assert!(matches!(err, WireError::Fatal(_)), "{err}");
+        assert!(err.to_string().contains("wire limit"), "{err}");
+
+        let whole = BinaryWire.encode(&sample()).unwrap();
+        let err = read_all(&BinaryWire, &whole[..whole.len() - 3]).unwrap_err();
+        assert!(matches!(err, WireError::Fatal(_)), "{err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[cfg(feature = "wire-binary")]
+    #[test]
+    fn codec_mismatch_is_named_in_both_directions() {
+        let mut json_line = b"{\"cmd\":\"ping\"}\n".to_vec();
+        let err = read_all(&BinaryWire, &json_line).unwrap_err();
+        assert!(err.to_string().contains("codec mismatch"), "{err}");
+        let mut magic_first = WIRE_MAGIC.to_vec();
+        magic_first.append(&mut json_line);
+        let err = read_all(&JsonWire, &magic_first).unwrap_err();
+        assert!(err.to_string().contains("codec mismatch"), "{err}");
+    }
+
+    #[test]
+    fn fault_schedules_are_deterministic_in_the_seed() {
+        let a = Fault::schedule(42, 16, 100);
+        let b = Fault::schedule(42, 16, 100);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        let c = Fault::schedule(43, 16, 100);
+        assert_ne!(format!("{a:?}"), format!("{c:?}"), "different seed, different faults");
+    }
+}

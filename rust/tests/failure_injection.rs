@@ -219,6 +219,105 @@ fn panicking_async_actor_fails_only_its_job_and_leaves_a_resumable_snapshot() {
     std::fs::remove_file(&path).ok();
 }
 
+/// A daemon killed in the middle of a preemption drain must come back
+/// from the last COMPLETE snapshot: the drain writes tmp+rename, so a
+/// kill strands a half-written `.tmp` (ignored on rescan) but can never
+/// corrupt the real file. And if the snapshot itself IS unreadable
+/// (truncated by the kill at just the wrong moment, or foreign bytes),
+/// the restarted daemon fails that one job loudly, naming the file,
+/// instead of hanging, resurrecting stale state, or hiding the id.
+#[test]
+fn daemon_killed_during_a_preemption_drain_resumes_from_the_last_complete_snapshot() {
+    use edcompress::coordinator::service::{Client, ServeConfig, Service};
+    use edcompress::util::json::Json;
+    use std::time::{Duration, Instant};
+
+    let long = Duration::from_secs(600);
+    let dir = std::env::temp_dir().join(format!("edc_fail_drain_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let serve = |resume: bool| {
+        Service::start(ServeConfig {
+            dir: dir.clone(),
+            max_concurrent_jobs: 1,
+            resume,
+            ..ServeConfig::default()
+        })
+        .expect("daemon failed to start")
+    };
+    let job = |seed: &str, episodes: f64, priority: &str| {
+        let mut j = Json::obj();
+        j.set("net", Json::Str("lenet5".into()))
+            .set("seeds", Json::Num(1.0))
+            .set("episodes", Json::Num(episodes))
+            .set("chunk", Json::Num(1.0))
+            .set("steps", Json::Num(5.0))
+            .set("seed", Json::Str(seed.into()))
+            .set("dataflows", Json::Str("X:Y".into()))
+            .set("priority", Json::Str(priority.into()));
+        j
+    };
+
+    // A real preemption: high preempts the running low job to disk.
+    let svc = serve(false);
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+    let low = c.submit(&job("51", 6.0, "low")).unwrap();
+    let deadline = Instant::now() + long;
+    loop {
+        let s = c.status(Some(low)).unwrap();
+        if s.str_or("state", "") == "running" && s.num_or("episodes_done", 0.0) >= 1.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "low job never made progress");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let high = c.submit(&job("52", 1.0, "high")).unwrap();
+    let deadline = Instant::now() + long;
+    loop {
+        if c.status(Some(low)).unwrap().num_or("preemptions", 0.0) >= 1.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "low job was never preempted");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // "Kill" the daemon mid-drain: stop it, then strand the artifact an
+    // interrupted snapshot write leaves behind — a half-written `.tmp`
+    // beside the last complete snapshot.
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+    let low_snap = dir.join(format!("job_{low}.json"));
+    assert!(low_snap.exists(), "preemption drain left no snapshot");
+    std::fs::write(dir.join(format!("job_{low}.json.tmp")), b"half-written garbage").unwrap();
+
+    // Restart: the stranded .tmp is ignored, both jobs resume from
+    // their last complete snapshots and finish their full budgets.
+    let svc = serve(true);
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+    assert_eq!(c.wait_done(low, long).unwrap().str_or("state", ""), "done");
+    assert_eq!(c.wait_done(high, long).unwrap().str_or("state", ""), "done");
+    let s = c.status(Some(low)).unwrap();
+    assert_eq!(s.num_or("episodes_done", 0.0), 6.0, "resume lost episodes: {s}");
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+
+    // The truncated-snapshot leg: the job fails loudly, naming the
+    // file, and the daemon stays fully serviceable.
+    let bytes = std::fs::read(&low_snap).unwrap();
+    std::fs::write(&low_snap, &bytes[..bytes.len() / 2]).unwrap();
+    let svc = serve(true);
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+    let s = c.wait_done(low, long).unwrap();
+    assert_eq!(s.str_or("state", ""), "failed", "{s}");
+    assert!(
+        s.str_or("error", "").contains(&format!("job_{low}.json")),
+        "error does not name the file: {s}"
+    );
+    let fresh = c.submit(&job("53", 1.0, "normal")).unwrap();
+    assert_eq!(c.wait_done(fresh, long).unwrap().str_or("state", ""), "done");
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn env_rejects_wrong_action_length() {
     use edcompress::dataflow::Dataflow;

@@ -306,6 +306,99 @@ fn cancel_handler(board: &Board) {
     board.scheduler.notify_all();
 }
 
+// ---------- service registry: cancel vs dequeue ----------
+
+/// The OTHER cancel race: a cancel landing in the window between the
+/// scheduler popping a job off the pending queue (`runner_loop`'s
+/// `pending.pop_highest()`) and the runner claiming it Queued→Running
+/// (`run_job`'s guarded transition). Distilled state:
+///
+/// - `in_queue` mirrors membership in `Registry.pending` (the cancel
+///   handler's `pending.remove(id)` is a no-op after the pop — exactly
+///   like the real `PendingQueue`);
+/// - `state` mirrors `JobState`; a queued-but-never-started cancel goes
+///   to the distinct terminal `CancelledQueued`, per `handle_cancel`'s
+///   no-snapshot Queued arm.
+///
+/// Whatever the interleaving: exactly one terminal state, and a job
+/// that terminates `CancelledQueued` ran zero rounds — the claim must
+/// observe the cancel even though the pop already succeeded.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum QSt {
+    Queued,
+    Running,
+    Done,
+    CancelledQueued,
+}
+
+fn dequeue_runner(slot: &Mutex<(bool, QSt)>, rounds_run: &AtomicUsize) {
+    // Scheduler pop: take the id off the queue. State stays Queued —
+    // the pop and the claim are separate lock acquisitions in the
+    // daemon, which is precisely the window this model explores.
+    {
+        let mut g = slot.lock();
+        if !g.0 {
+            return; // cancel removed it first; nothing to run
+        }
+        g.0 = false;
+    }
+    // Runner claim: only a still-Queued job starts.
+    {
+        let mut g = slot.lock();
+        if g.1 != QSt::Queued {
+            return; // cancelled in the pop-to-claim window
+        }
+        g.1 = QSt::Running;
+    }
+    rounds_run.fetch_add(1, Ordering::SeqCst);
+    slot.lock().1 = QSt::Done;
+}
+
+fn queued_canceller(slot: &Mutex<(bool, QSt)>) {
+    let mut g = slot.lock();
+    if g.1 == QSt::Queued {
+        // handle_cancel's Queued arm for a job with no snapshot yet:
+        // drop it from the queue (no-op if already popped) and mark the
+        // distinct terminal state.
+        g.0 = false;
+        g.1 = QSt::CancelledQueued;
+    }
+    // Running/Done: the cancel-during-run model above covers those arms.
+}
+
+#[test]
+fn service_cancel_vs_dequeue_never_runs_a_cancelled_queued_job() {
+    loom::model(|| {
+        let slot = Arc::new(Mutex::new((true, QSt::Queued)));
+        let rounds_run = Arc::new(AtomicUsize::new(0));
+        let r = {
+            let slot = Arc::clone(&slot);
+            let rounds_run = Arc::clone(&rounds_run);
+            thread::spawn(move || dequeue_runner(&slot, &rounds_run))
+        };
+        let c = {
+            let slot = Arc::clone(&slot);
+            thread::spawn(move || queued_canceller(&slot))
+        };
+        r.join().unwrap();
+        c.join().unwrap();
+        let (in_queue, st) = *slot.lock();
+        let rounds = rounds_run.load(Ordering::SeqCst);
+        assert!(!in_queue, "the job must leave the queue exactly once");
+        match st {
+            // The runner claimed first: the cancel was a no-op and the
+            // job ran to completion.
+            QSt::Done => assert_eq!(rounds, 1),
+            // The cancel won — before the pop or inside the pop-to-claim
+            // window. Either way the job must never have run.
+            QSt::CancelledQueued => {
+                assert_eq!(rounds, 0, "a cancelled-queued job ran anyway");
+            }
+            other => panic!("non-terminal end state {other:?}"),
+        }
+    });
+}
+
 #[test]
 fn service_cancel_during_run_reaches_exactly_one_terminal_state() {
     loom::model(|| {

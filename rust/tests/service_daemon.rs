@@ -316,6 +316,151 @@ fn binary_daemon_drains_to_v4_and_resume_dir_finishes_bit_identically() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The preemption half of invariant 12: a high-priority submit against
+/// a saturated daemon preempts the running low-priority job to its
+/// snapshot, the high job runs in the freed slot, the low job resumes —
+/// and its eventual final snapshot is byte-identical to an
+/// uninterrupted run of the same spec. Parameterized over both
+/// container formats.
+fn preemption_preserves_bit_identity(format: Format, tag: &str) {
+    let dir = test_dir(&format!("preempt_{tag}"));
+    let svc = Service::start(ServeConfig {
+        dir: dir.clone(),
+        max_concurrent_jobs: 1,
+        format,
+        ..ServeConfig::default()
+    })
+    .expect("daemon failed to start");
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+
+    // A low-priority job long enough (8 rounds of 1 episode) that the
+    // preemption lands well before its final round.
+    let mut low = search_job("31", 1.0, 8.0, 5.0, "X:Y");
+    low.set("priority", Json::Str("low".into()));
+    let low_id = c.submit(&low).unwrap();
+
+    // Let it start and land at least one round, so the preemption
+    // exercises a *mid-run* drain, not a still-queued job.
+    let deadline = Instant::now() + LONG;
+    loop {
+        let s = c.status(Some(low_id)).unwrap();
+        if s.str_or("state", "") == "running" && s.num_or("episodes_done", 0.0) >= 1.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "low job never made progress");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let mut high = search_job("32", 1.0, 1.0, 4.0, "X:Y");
+    high.set("priority", Json::Str("high".into()));
+    let high_id = c.submit(&high).unwrap();
+
+    // The high job must finish; the only runner slot is freed for it by
+    // draining the low job to its snapshot.
+    assert_eq!(c.wait_done(high_id, LONG).unwrap().str_or("state", ""), "done");
+    assert_eq!(c.wait_done(low_id, LONG).unwrap().str_or("state", ""), "done");
+
+    let s = c.status(Some(low_id)).unwrap();
+    assert!(
+        s.num_or("preemptions", 0.0) >= 1.0,
+        "low job was never preempted (status: {s})"
+    );
+    assert_eq!(s.str_or("priority", ""), "low");
+
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+
+    // Byte identity with an uninterrupted run. The daemon job drained
+    // and resumed mid-run in `format`; the standalone reference writes
+    // JSON, so the binary leg compares through a lossless conversion
+    // (bit-lossless both ways, invariant 11).
+    let snap = dir.join(format!("job_{low_id}.json"));
+    let daemon_as_json = match format {
+        Format::Json => std::fs::read(&snap).unwrap(),
+        Format::Binary => {
+            let raw = std::fs::read(&snap).unwrap();
+            assert_eq!(raw[..4], *b"EDC4", "binary daemon wrote a non-v4 snapshot");
+            let (tree, fmt) = snapshot::load(&snap).unwrap();
+            assert_eq!(fmt, Format::Binary);
+            let cmp = std::env::temp_dir()
+                .join(format!("edc_service_preempt_cmp_{tag}_{}.json", std::process::id()));
+            snapshot::save(&cmp, &tree, Format::Json).unwrap();
+            let bytes = std::fs::read(&cmp).unwrap();
+            std::fs::remove_file(&cmp).ok();
+            bytes
+        }
+    };
+    let standalone = standalone_snapshot_bytes(
+        standalone_spec(31, 1, 8, 5, "X:Y"),
+        &format!("preempt_{tag}"),
+    );
+    assert_eq!(
+        daemon_as_json, standalone,
+        "preempted-then-resumed job diverged from an uninterrupted run ({tag})"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn preempted_job_resumes_bit_identically_v3() {
+    preemption_preserves_bit_identity(Format::Json, "v3");
+}
+
+#[test]
+fn preempted_job_resumes_bit_identically_v4() {
+    preemption_preserves_bit_identity(Format::Binary, "v4");
+}
+
+/// Cancelling a queued-but-never-started job is a distinct terminal
+/// state: `cancelled-queued`, no snapshot path pretending to exist, a
+/// `result` error saying it never started — and a `--resume-dir`
+/// restart must not resurrect it.
+#[test]
+fn cancel_on_a_queued_job_reports_a_distinct_state_and_leaves_no_snapshot() {
+    let dir = test_dir("cancel_queued");
+    let svc = serve(&dir, 1, false);
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+
+    // Occupy the only runner slot, then queue a second job behind it.
+    let running = c.submit(&search_job("41", 1.0, 4.0, 5.0, "X:Y")).unwrap();
+    let queued = c.submit(&search_job("42", 1.0, 4.0, 5.0, "X:Y")).unwrap();
+
+    let r = c.cancel(queued).unwrap();
+    assert_eq!(r.str_or("state", ""), "cancelled-queued");
+
+    // Terminal for wait_done, distinct in status, explicit in result.
+    let s = c.wait_done(queued, LONG).unwrap();
+    assert_eq!(s.str_or("state", ""), "cancelled-queued");
+    let err = format!("{:#}", c.result(queued).unwrap_err());
+    assert!(err.contains("before it started"), "result error: {err}");
+    assert!(err.contains("no snapshot"), "result error: {err}");
+
+    // Nothing was ever written for the cancelled job — no snapshot, no
+    // shelved `.cancelled` file.
+    assert!(!dir.join(format!("job_{queued}.json")).exists());
+    assert!(!dir.join(format!("job_{queued}.json.cancelled")).exists());
+
+    assert_eq!(c.wait_done(running, LONG).unwrap().str_or("state", ""), "done");
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+
+    // A restart over the directory re-enqueues the finished job's
+    // snapshot but cannot resurrect the cancelled-queued job (there is
+    // no file), and never reuses its id.
+    let svc2 = serve(&dir, 1, true);
+    let mut c2 = Client::connect(&svc2.addr().to_string()).unwrap();
+    assert!(
+        c2.status(Some(queued)).is_err(),
+        "cancelled-queued job must not survive a restart"
+    );
+    let next = c2.submit(&search_job("43", 1.0, 1.0, 4.0, "X:Y")).unwrap();
+    assert!(next > queued, "restart must not reuse the cancelled job's id");
+    c2.wait_done(next, LONG).unwrap();
+    c2.shutdown().unwrap();
+    svc2.wait().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn sweep_jobs_run_to_a_result_and_clean_up_their_spec_file() {
     let dir = test_dir("sweep");

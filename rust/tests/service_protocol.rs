@@ -1,0 +1,469 @@
+//! Protocol-conformance + fault-injection suite for the `edc serve`
+//! wire layer (`coordinator::service::wire`).
+//!
+//! Every test drives a real daemon over a real TCP socket through the
+//! deterministic [`FaultTransport`], and pins the contract the module
+//! docs promise: a malformed, truncated, oversized or wrong-codec frame
+//! is **always** answered with a typed error frame (recoverable faults
+//! keep the connection, framing faults close it after answering) —
+//! never a hang, a panic, or a silent drop. The matrix runs for both
+//! codecs; the binary legs compile with the default `wire-binary`
+//! feature and vanish cleanly under `--no-default-features`.
+
+use edcompress::coordinator::service::wire::{self, Fault, FaultTransport, WireKind, MAX_FRAME};
+use edcompress::coordinator::service::{Client, ServeConfig, Service};
+use edcompress::util::json::Json;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(600);
+
+fn test_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("edc_proto_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// Daemon with one runner slot and default admission limits.
+fn serve(dir: &PathBuf) -> Service {
+    Service::start(ServeConfig {
+        dir: dir.clone(),
+        max_concurrent_jobs: 1,
+        ..ServeConfig::default()
+    })
+    .expect("daemon failed to start")
+}
+
+fn stop(svc: Service, dir: &PathBuf) {
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+fn ping() -> Json {
+    let mut j = Json::obj();
+    j.set("cmd", Json::Str("ping".into()));
+    j
+}
+
+/// Submit body for a tiny search job (mirrors `edc search` flags).
+fn search_job(seed: &str, seeds: f64, episodes: f64, steps: f64) -> Json {
+    let mut j = Json::obj();
+    j.set("net", Json::Str("lenet5".into()))
+        .set("seeds", Json::Num(seeds))
+        .set("episodes", Json::Num(episodes))
+        .set("chunk", Json::Num(1.0))
+        .set("steps", Json::Num(steps))
+        .set("seed", Json::Str(seed.into()))
+        .set("dataflows", Json::Str("X:Y".into()));
+    j
+}
+
+/// Every codec this build speaks.
+fn codecs() -> Vec<WireKind> {
+    let mut v = vec![WireKind::Json];
+    if cfg!(feature = "wire-binary") {
+        v.push(WireKind::Binary);
+    }
+    v
+}
+
+fn encode(kind: WireKind, msg: &Json) -> Vec<u8> {
+    wire::codec_for(kind).unwrap().encode(msg).unwrap()
+}
+
+/// Deliver one ping under `fault` and require a well-formed pong.
+fn assert_ping_round_trips(addr: &str, kind: WireKind, fault: &Fault) {
+    let mut t = FaultTransport::connect(addr).unwrap();
+    t.send(&encode(kind, &ping()), fault).unwrap();
+    let resp = t
+        .recv(kind)
+        .unwrap_or_else(|e| panic!("{} + {fault:?}: {e}", kind.label()))
+        .unwrap_or_else(|| panic!("{} + {fault:?}: daemon closed without a frame", kind.label()));
+    assert_eq!(resp.str_or("service", ""), "edc-serve", "{} + {fault:?}: {resp}", kind.label());
+}
+
+// ---------------------------------------------------------------------
+// The conformance matrix: request x codec x fault
+// ---------------------------------------------------------------------
+
+#[test]
+fn clean_and_split_write_frames_parse_on_every_codec() {
+    let dir = test_dir("split");
+    let svc = serve(&dir);
+    let addr = svc.addr().to_string();
+    for kind in codecs() {
+        assert_ping_round_trips(&addr, kind, &Fault::Clean);
+        // 1-byte and 3-byte writes exercise reassembly across both the
+        // length header and the payload.
+        assert_ping_round_trips(&addr, kind, &Fault::SplitWrites { chunk: 1 });
+        assert_ping_round_trips(&addr, kind, &Fault::SplitWrites { chunk: 3 });
+    }
+    stop(svc, &dir);
+}
+
+#[test]
+fn slow_loris_frames_spanning_read_timeouts_still_parse() {
+    let dir = test_dir("loris");
+    let svc = serve(&dir);
+    let addr = svc.addr().to_string();
+    for kind in codecs() {
+        // Each pause outlives the daemon's 500ms read timeout, so the
+        // frame spans several timeout windows and the carry buffer must
+        // hold the partial frame across every one of them.
+        let frame_len = encode(kind, &ping()).len();
+        let fault = Fault::SlowLoris {
+            chunk: (frame_len / 3).max(1),
+            delay: Duration::from_millis(650),
+        };
+        assert_ping_round_trips(&addr, kind, &fault);
+    }
+    stop(svc, &dir);
+}
+
+#[test]
+fn malformed_complete_json_gets_a_typed_error_and_the_connection_survives() {
+    let dir = test_dir("malformed_json");
+    let svc = serve(&dir);
+    let mut t = FaultTransport::connect(&svc.addr().to_string()).unwrap();
+
+    t.send(b"this is not json\n", &Fault::Clean).unwrap();
+    let err = t.recv(WireKind::Json).unwrap().expect("no error frame");
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+    assert!(err.str_or("error", "").contains("JSON"), "{err}");
+
+    // Recoverable: the SAME connection still serves a valid request.
+    t.send(&encode(WireKind::Json, &ping()), &Fault::Clean).unwrap();
+    let pong = t.recv(WireKind::Json).unwrap().expect("connection did not survive");
+    assert_eq!(pong.str_or("service", ""), "edc-serve");
+    stop(svc, &dir);
+}
+
+#[cfg(feature = "wire-binary")]
+#[test]
+fn malformed_binary_payload_gets_a_typed_error_and_the_connection_survives() {
+    let dir = test_dir("malformed_bin");
+    let svc = serve(&dir);
+    let mut t = FaultTransport::connect(&svc.addr().to_string()).unwrap();
+
+    // Intact framing (magic + honest length), garbage payload: the
+    // recoverable half of the error taxonomy.
+    let garbage = b"definitely not a v4 container";
+    let mut frame = wire::WIRE_MAGIC.to_vec();
+    frame.extend_from_slice(&(garbage.len() as u32).to_le_bytes());
+    frame.extend_from_slice(garbage);
+    t.send(&frame, &Fault::Clean).unwrap();
+    let err = t.recv(WireKind::Binary).unwrap().expect("no error frame");
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+    assert!(err.str_or("error", "").contains("v4 container"), "{err}");
+
+    t.send(&encode(WireKind::Binary, &ping()), &Fault::Clean).unwrap();
+    let pong = t.recv(WireKind::Binary).unwrap().expect("connection did not survive");
+    assert_eq!(pong.str_or("service", ""), "edc-serve");
+    stop(svc, &dir);
+}
+
+#[test]
+fn truncated_frames_yield_a_typed_error_then_a_clean_close() {
+    let dir = test_dir("truncate");
+    let svc = serve(&dir);
+    let addr = svc.addr().to_string();
+    for kind in codecs() {
+        let frame = encode(kind, &ping());
+        let mut t = FaultTransport::connect(&addr).unwrap();
+        t.send(&frame, &Fault::Truncate { keep: frame.len() - 3 }).unwrap();
+        let err = t
+            .recv(kind)
+            .unwrap_or_else(|e| panic!("{}: {e}", kind.label()))
+            .unwrap_or_else(|| panic!("{}: closed without a typed error", kind.label()));
+        assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+        assert!(err.str_or("error", "").contains("truncated"), "{err}");
+        // Fatal framing fault: after answering, the daemon closes.
+        assert!(
+            matches!(t.recv(kind), Ok(None) | Err(_)),
+            "{}: connection outlived a framing fault",
+            kind.label()
+        );
+    }
+    stop(svc, &dir);
+}
+
+#[test]
+fn an_oversized_json_line_is_rejected_with_the_limit_named() {
+    let dir = test_dir("oversize_json");
+    let svc = serve(&dir);
+    let mut t = FaultTransport::connect(&svc.addr().to_string()).unwrap();
+    // MAX_FRAME+2 bytes with no newline. The daemon may close mid-write,
+    // so the send itself is allowed to fail — the response frame is not.
+    let blob = vec![b'a'; MAX_FRAME + 2];
+    let _ = t.send(&blob, &Fault::Clean);
+    let err = t.recv(WireKind::Json).unwrap().expect("no error frame");
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+    assert!(err.str_or("error", "").contains("frame limit"), "{err}");
+    stop(svc, &dir);
+}
+
+#[cfg(feature = "wire-binary")]
+#[test]
+fn an_oversized_binary_length_is_rejected_from_the_header_alone() {
+    let dir = test_dir("oversize_bin");
+    let svc = serve(&dir);
+    let mut t = FaultTransport::connect(&svc.addr().to_string()).unwrap();
+    // 8 header bytes announcing an over-limit payload: rejected before
+    // any payload byte is read (or allocated).
+    let mut frame = wire::WIRE_MAGIC.to_vec();
+    frame.extend_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+    t.send(&frame, &Fault::Clean).unwrap();
+    let err = t.recv(WireKind::Binary).unwrap().expect("no error frame");
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+    assert!(err.str_or("error", "").contains("wire limit"), "{err}");
+    stop(svc, &dir);
+}
+
+#[test]
+fn mid_frame_disconnects_leave_the_daemon_healthy() {
+    let dir = test_dir("disconnect");
+    let svc = serve(&dir);
+    let addr = svc.addr().to_string();
+    for kind in codecs() {
+        let frame = encode(kind, &ping());
+        let mut t = FaultTransport::connect(&addr).unwrap();
+        let _ = t.send(&frame, &Fault::Disconnect { after: frame.len() - 2 });
+        // The daemon must shrug the torn connection off and keep
+        // serving fresh ones.
+        let mut c = Client::connect(&addr).unwrap();
+        assert_eq!(c.ping().unwrap().str_or("service", ""), "edc-serve");
+    }
+    stop(svc, &dir);
+}
+
+#[test]
+fn a_mid_stream_codec_switch_is_a_named_fatal_error() {
+    let dir = test_dir("mismatch_json");
+    let svc = serve(&dir);
+    let mut t = FaultTransport::connect(&svc.addr().to_string()).unwrap();
+
+    // Negotiate JSON with a clean ping first...
+    t.send(&encode(WireKind::Json, &ping()), &Fault::Clean).unwrap();
+    assert_eq!(
+        t.recv(WireKind::Json).unwrap().unwrap().str_or("service", ""),
+        "edc-serve"
+    );
+    // ...then open a frame with the binary magic on the same connection.
+    t.send(&encode(WireKind::Json, &ping()), &Fault::CodecMismatch).unwrap();
+    let err = t.recv(WireKind::Json).unwrap().expect("no error frame");
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+    assert!(err.str_or("error", "").contains("codec mismatch"), "{err}");
+    assert!(matches!(t.recv(WireKind::Json), Ok(None) | Err(_)));
+    stop(svc, &dir);
+}
+
+#[cfg(feature = "wire-binary")]
+#[test]
+fn json_bytes_on_a_binary_connection_are_a_named_fatal_error() {
+    let dir = test_dir("mismatch_bin");
+    let svc = serve(&dir);
+    let mut t = FaultTransport::connect(&svc.addr().to_string()).unwrap();
+
+    t.send(&encode(WireKind::Binary, &ping()), &Fault::Clean).unwrap();
+    assert_eq!(
+        t.recv(WireKind::Binary).unwrap().unwrap().str_or("service", ""),
+        "edc-serve"
+    );
+    t.send(&encode(WireKind::Json, &ping()), &Fault::Clean).unwrap();
+    let err = t.recv(WireKind::Binary).unwrap().expect("no error frame");
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+    assert!(err.str_or("error", "").contains("codec mismatch"), "{err}");
+    stop(svc, &dir);
+}
+
+/// The soak leg: a seeded schedule of faults replays the exact same
+/// byte streams every run, and after each the daemon must still answer
+/// a well-behaved client. `FaultTransport::recv` is time-bounded so a
+/// daemon that wrongly goes silent fails the test instead of hanging it.
+#[test]
+fn a_seeded_fault_soak_never_wedges_the_daemon() {
+    let dir = test_dir("soak");
+    let svc = serve(&dir);
+    let addr = svc.addr().to_string();
+    let frame = encode(WireKind::Json, &ping());
+    for (i, fault) in Fault::schedule(0xEDC0DE, 24, frame.len()).iter().enumerate() {
+        let mut t = FaultTransport::connect(&addr).unwrap();
+        t.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let _ = t.send(&frame, fault);
+        // A magic-prefixed stream negotiates as binary, so the typed
+        // answer (codec present) or close (feature off) arrives in
+        // whichever framing the daemon actually speaks.
+        let kind = if cfg!(feature = "wire-binary") && matches!(fault, Fault::CodecMismatch) {
+            WireKind::Binary
+        } else {
+            WireKind::Json
+        };
+        // Any typed frame, clean close or torn socket is acceptable
+        // here — the per-fault contracts are pinned above. What the
+        // soak forbids is the daemon wedging.
+        let _ = t.recv(kind);
+        let mut c = Client::connect(&addr).unwrap();
+        assert_eq!(
+            c.ping().unwrap().str_or("service", ""),
+            "edc-serve",
+            "daemon wedged after fault #{i} ({fault:?})"
+        );
+    }
+    stop(svc, &dir);
+}
+
+// ---------------------------------------------------------------------
+// Cross-codec value equivalence
+// ---------------------------------------------------------------------
+
+/// The two codecs are different framings of the SAME value space: any
+/// tree a request or response can carry decodes to value-identical JSON
+/// from either wire (pinned via the canonical `Display` rendering,
+/// which is what snapshot bit-identity is defined over).
+#[cfg(feature = "wire-binary")]
+#[test]
+fn json_and_binary_codecs_round_trip_value_equivalently() {
+    use std::io::Cursor;
+
+    let mut submit = search_job("17", 2.0, 3.0, 6.0);
+    submit
+        .set("cmd", Json::Str("submit".into()))
+        .set("priority", Json::Str("high".into()))
+        .set("curve", Json::from_f64s(&[1.0, 0.5, f64::NAN, 3.25e-9]));
+    let mut status = Json::obj();
+    status
+        .set("ok", Json::Bool(true))
+        .set("state", Json::Str("running".into()))
+        .set("note", Json::Str("unicode survives: μJ/inference ✓".into()))
+        .set("nothing", Json::Null)
+        .set(
+            "jobs",
+            Json::Arr(vec![ping(), search_job("3", 1.0, 1.0, 2.0)]),
+        );
+    for (name, msg) in [("submit", submit), ("status", status)] {
+        let mut rendered = Vec::new();
+        for kind in codecs() {
+            let codec = wire::codec_for(kind).unwrap();
+            let mut cur = Cursor::new(codec.encode(&msg).unwrap());
+            let mut carry = Vec::new();
+            let back = codec.read_frame(&mut cur, &mut carry).unwrap().unwrap();
+            rendered.push(back.to_string());
+        }
+        assert_eq!(rendered[0], msg.to_string(), "{name}: json round-trip drifted");
+        assert_eq!(rendered[0], rendered[1], "{name}: codecs disagree on the value");
+    }
+}
+
+/// Full daemon lifecycle over the binary wire: negotiation from the
+/// first frame, then submit → status → result all in EDCW framing.
+#[cfg(feature = "wire-binary")]
+#[test]
+fn a_binary_client_runs_the_full_lifecycle() {
+    let dir = test_dir("bin_lifecycle");
+    let svc = serve(&dir);
+    let mut c = Client::connect_with(&svc.addr().to_string(), WireKind::Binary).unwrap();
+    assert_eq!(c.wire(), "binary");
+    assert_eq!(c.ping().unwrap().str_or("service", ""), "edc-serve");
+
+    let id = c.submit(&search_job("23", 1.0, 2.0, 4.0)).unwrap();
+    let s = c.wait_done(id, LONG).unwrap();
+    assert_eq!(s.str_or("state", ""), "done");
+    let r = c.result(id).unwrap();
+    assert!(r.str_or("rendered", "").contains("Pareto"));
+    stop(svc, &dir);
+}
+
+// ---------------------------------------------------------------------
+// Backpressure and streaming
+// ---------------------------------------------------------------------
+
+#[test]
+fn a_saturated_queue_returns_typed_busy_while_the_running_job_progresses() {
+    let dir = test_dir("busy");
+    let svc = Service::start(ServeConfig {
+        dir: dir.clone(),
+        max_concurrent_jobs: 1,
+        max_queue_depth: 1,
+        ..ServeConfig::default()
+    })
+    .expect("daemon failed to start");
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+
+    // Fill the runner slot, wait until the job leaves the queue...
+    let running = c.submit(&search_job("61", 1.0, 6.0, 5.0)).unwrap();
+    let deadline = Instant::now() + LONG;
+    loop {
+        if c.status(Some(running)).unwrap().str_or("state", "") == "running" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "first job never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // ...fill the queue (depth 1), then overflow it.
+    let queued = c.submit(&search_job("62", 1.0, 1.0, 4.0)).unwrap();
+    let mut over = search_job("63", 1.0, 1.0, 4.0);
+    over.set("cmd", Json::Str("submit".into()));
+    let resp = c.request(&over).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp}");
+    assert_eq!(resp.str_or("code", ""), "busy", "{resp}");
+    assert!(resp.num_or("retry_after_ms", 0.0) > 0.0, "{resp}");
+    assert!(resp.str_or("error", "").contains("queue is full"), "{resp}");
+
+    // The rejection stalled nothing: both admitted jobs run to done.
+    assert_eq!(c.wait_done(running, LONG).unwrap().str_or("state", ""), "done");
+    assert_eq!(c.wait_done(queued, LONG).unwrap().str_or("state", ""), "done");
+    stop(svc, &dir);
+}
+
+#[test]
+fn the_per_connection_inflight_cap_rejects_with_its_own_code() {
+    let dir = test_dir("inflight");
+    let svc = Service::start(ServeConfig {
+        dir: dir.clone(),
+        max_concurrent_jobs: 1,
+        max_inflight_per_conn: 1,
+        ..ServeConfig::default()
+    })
+    .expect("daemon failed to start");
+    let addr = svc.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    let first = c.submit(&search_job("71", 1.0, 4.0, 5.0)).unwrap();
+    let mut second = search_job("72", 1.0, 1.0, 4.0);
+    second.set("cmd", Json::Str("submit".into()));
+    let resp = c.request(&second).unwrap();
+    assert_eq!(resp.str_or("code", ""), "inflight", "{resp}");
+    assert!(resp.str_or("error", "").contains("in flight"), "{resp}");
+
+    // The cap is per connection, not global: a second client submits.
+    let mut c2 = Client::connect(&addr).unwrap();
+    let other = c2.submit(&search_job("73", 1.0, 1.0, 4.0)).unwrap();
+    assert_eq!(c.wait_done(first, LONG).unwrap().str_or("state", ""), "done");
+    assert_eq!(c2.wait_done(other, LONG).unwrap().str_or("state", ""), "done");
+    stop(svc, &dir);
+}
+
+#[test]
+fn watch_streams_progress_frames_and_a_terminal_end_frame() {
+    let dir = test_dir("watch");
+    let svc = serve(&dir);
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+
+    let id = c.submit(&search_job("81", 2.0, 2.0, 4.0)).unwrap();
+    let frames = c.watch(id, LONG).unwrap();
+    assert!(frames.len() >= 2, "expected progress + end, got {} frames", frames.len());
+    let last = frames.last().unwrap();
+    assert_eq!(last.str_or("stream", ""), "end", "{last}");
+    assert_eq!(last.str_or("state", ""), "done", "{last}");
+    assert_eq!(last.num_or("job", 0.0) as u64, id);
+    for f in &frames[..frames.len() - 1] {
+        assert_eq!(f.str_or("stream", ""), "progress", "{f}");
+        assert!(!f.str_or("state", "").is_empty(), "{f}");
+    }
+    // The stream ended cleanly: the same connection keeps working.
+    let r = c.result(id).unwrap();
+    assert!(r.str_or("rendered", "").contains("Pareto"));
+    stop(svc, &dir);
+}
