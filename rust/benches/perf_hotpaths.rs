@@ -32,10 +32,18 @@
 //! queue rejects a 50-submit burst with typed `busy` errors in O(1)
 //! wall time per rejection without stalling the running job.
 //!
+//! The router section *asserts* the PR-10 fleet claims: a status
+//! round-trip proxied through `edc route` stays within a bounded
+//! constant factor of the direct round-trip, and with one of two
+//! backends killed and quarantined the router keeps accepting submits
+//! at the surviving backend's own rate — the breaker skips the corpse
+//! instead of re-dialing it per request.
+//!
 //! Run with `--test` (e.g. `cargo bench --bench perf_hotpaths -- --test`)
 //! for the CI smoke mode: only the asserted gates run (train kernels,
 //! fleet cache, serve cache, async throughput, snapshot resume, wire
-//! codecs + backpressure), in well under a minute.
+//! codecs + backpressure, router overhead + failover), in well under a
+//! minute.
 #[path = "common.rs"]
 mod common;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -591,6 +599,160 @@ fn bench_wire_codecs_and_backpressure() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The PR-10 router claims (CI gate), in two halves.
+///
+/// **Bounded proxy overhead:** a per-job status round-trip proxied
+/// through `edc route` (fresh backend dial + forwarded request + reply
+/// rewrite) must stay within a generous constant factor of the same
+/// request sent directly to the backend — the router adds a hop, never
+/// a health probe, a lock convoy or a hang on the request path.
+///
+/// **Failover acceptance:** with one of two backends killed and
+/// quarantined, a burst of submits through the router must be accepted
+/// at the surviving backend's own rate (within scheduling noise). The
+/// breaker keeps the dead sibling out of the candidate set entirely;
+/// if every submit re-dialed the corpse, each accept would eat a
+/// connect timeout and this gate would blow up by orders of magnitude.
+fn bench_router_overhead_and_failover() {
+    use edcompress::coordinator::router::{Router, RouterConfig};
+    use edcompress::coordinator::service::{Client, ServeConfig, Service};
+    use edcompress::util::json::Json;
+    use std::time::{Duration, Instant};
+
+    let base = std::env::temp_dir().join(format!("edc_bench_route_{}", std::process::id()));
+    std::fs::remove_dir_all(&base).ok();
+    let backend = |sub: &str| {
+        Service::start(ServeConfig {
+            dir: base.join(sub),
+            max_concurrent_jobs: 1,
+            ..ServeConfig::default()
+        })
+        .expect("backend daemon failed to start")
+    };
+    let svc0 = backend("b0");
+    let svc1 = backend("b1");
+    let svc1_addr = svc1.addr().to_string();
+    let router = Router::start(RouterConfig {
+        dir: base.join("route"),
+        backends: vec![svc0.addr().to_string(), svc1_addr.clone()],
+        breaker_threshold: 1,
+        health_period: Duration::from_millis(50),
+        probe_base: Duration::from_millis(100),
+        probe_cap: Duration::from_millis(400),
+        ..RouterConfig::default()
+    })
+    .expect("router failed to start");
+
+    let tiny = |seed: &str| {
+        let mut j = Json::obj();
+        j.set("net", Json::Str("lenet5".into()))
+            .set("seeds", Json::Num(1.0))
+            .set("episodes", Json::Num(1.0))
+            .set("chunk", Json::Num(1.0))
+            .set("steps", Json::Num(4.0))
+            .set("seed", Json::Str(seed.into()))
+            .set("dataflows", Json::Str("X:Y".into()));
+        j
+    };
+    let long = Duration::from_secs(600);
+    let mut routed = Client::connect(&router.addr().to_string()).expect("connect router");
+    let mut d0 = Client::connect(&svc0.addr().to_string()).expect("connect backend 0");
+    let mut d1 = Client::connect(&svc1_addr).expect("connect backend 1");
+
+    // -------- bounded proxy overhead --------
+    // One tiny job through the router (both backends idle, so the
+    // index tie-break lands it on backend 0), run to completion; its
+    // per-job status then exercises the full proxy path every time.
+    let rid = routed.submit(&tiny("41")).expect("routed submit");
+    let s = routed.wait_done(rid, long).expect("routed job");
+    assert_eq!(s.str_or("state", ""), "done", "routed job failed: {s}");
+    let backend_job = {
+        let s = d0.status(None).expect("backend status");
+        let jobs = s.get("jobs").and_then(|a| a.as_arr()).expect("jobs array");
+        assert_eq!(jobs.len(), 1, "the routed job must land on backend 0");
+        jobs[0].num_or("id", 0.0) as u64
+    };
+
+    const REQS: u32 = 30;
+    d0.status(Some(backend_job)).expect("warm direct");
+    routed.status(Some(rid)).expect("warm routed");
+    let t0 = Instant::now();
+    for _ in 0..REQS {
+        let s = d0.status(Some(backend_job)).expect("direct status");
+        assert_eq!(s.str_or("state", ""), "done");
+    }
+    let t_direct = t0.elapsed();
+    let t0 = Instant::now();
+    for _ in 0..REQS {
+        let s = routed.status(Some(rid)).expect("routed status");
+        assert_eq!(s.str_or("state", ""), "done");
+    }
+    let t_routed = t0.elapsed();
+    println!(
+        "  router overhead: {REQS} proxied status round-trips {t_routed:?} vs direct \
+         {t_direct:?} ({:.1}x)",
+        t_routed.as_secs_f64() / t_direct.as_secs_f64().max(1e-9)
+    );
+    let bound = t_direct * 25 + Duration::from_millis(750);
+    assert!(
+        t_routed < bound,
+        "proxied status {t_routed:?} above the overhead bound {bound:?} (direct {t_direct:?})"
+    );
+
+    // -------- failover acceptance rate --------
+    d0.shutdown().expect("backend 0 shutdown");
+    svc0.wait().expect("backend 0 drain");
+    let deadline = Instant::now() + long;
+    loop {
+        let s = routed.status(None).expect("router status");
+        let backends = s.get("backends").and_then(|a| a.as_arr()).expect("backends");
+        if backends[0].str_or("state", "") == "quarantined" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "backend 0 was never quarantined");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Same burst direct to the surviving backend, then through the
+    // router with the dead sibling still in the fleet.
+    let t0 = Instant::now();
+    let direct_ids: Vec<u64> = (0..3)
+        .map(|i| d1.submit(&tiny(&format!("5{i}"))).expect("direct submit"))
+        .collect();
+    let t_direct_accept = t0.elapsed();
+    let t0 = Instant::now();
+    let routed_ids: Vec<u64> = (0..3)
+        .map(|i| routed.submit_with_retries(&tiny(&format!("6{i}")), 4).expect("routed submit"))
+        .collect();
+    let t_routed_accept = t0.elapsed();
+    println!(
+        "  failover: 3 routed submits accepted in {t_routed_accept:?} with a dead sibling \
+         (direct single-backend burst {t_direct_accept:?})"
+    );
+    assert!(
+        t_routed_accept < t_direct_accept + Duration::from_secs(1),
+        "routed accepts {t_routed_accept:?} fell behind single-backend {t_direct_accept:?} + 1s"
+    );
+    for id in direct_ids {
+        assert_eq!(d1.wait_done(id, long).expect("direct job").str_or("state", ""), "done");
+    }
+    for id in routed_ids {
+        let s = routed.wait_done(id, long).expect("failover job");
+        assert_eq!(s.str_or("state", ""), "done", "failover job did not finish: {s}");
+        assert_eq!(
+            s.str_or("backend", ""),
+            svc1_addr,
+            "failover submit was routed to the dead backend"
+        );
+    }
+
+    routed.shutdown().expect("router shutdown");
+    router.wait().expect("router drain");
+    d1.shutdown().expect("backend 1 shutdown");
+    svc1.wait().expect("backend 1 drain");
+    std::fs::remove_dir_all(&base).ok();
+}
+
 /// The snapshot-container claim (CI gate): resuming a 16-seed fleet
 /// snapshot from the v4 binary container must beat the v3 JSON container
 /// on both resume wall-clock and peak live heap bytes, and the file
@@ -846,6 +1008,8 @@ fn main() {
         bench_snapshot_resume_formats(5);
         banner("wire codecs + backpressure (smoke)");
         bench_wire_codecs_and_backpressure();
+        banner("router overhead + failover (smoke)");
+        bench_router_overhead_and_failover();
         println!("bench smoke OK");
         return;
     }
@@ -889,6 +1053,11 @@ fn main() {
     // control on the serve daemon (asserted).
     banner("wire codecs + backpressure");
     bench_wire_codecs_and_backpressure();
+
+    // 3f. Router proxy overhead and accept-rate under a dead backend
+    // (asserted).
+    banner("router overhead + failover");
+    bench_router_overhead_and_failover();
 
     // 4. All-15-dataflow ranking: batched+cached vs individual.
     banner("dataflow ranking");

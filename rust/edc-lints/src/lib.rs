@@ -1,8 +1,8 @@
 //! Repo-specific invariant lints the compiler can't express.
 //!
-//! `cargo run -p edc-lints` walks `rust/src` and enforces six rules that
-//! guard the determinism and lock-discipline invariants catalogued in
-//! `docs/determinism.md`:
+//! `cargo run -p edc-lints` walks `rust/src` and enforces seven rules
+//! that guard the determinism and lock-discipline invariants catalogued
+//! in `docs/determinism.md`:
 //!
 //! 1. **`map-iteration-in-serialization`** — no `HashMap`/`HashSet` in
 //!    snapshot/report/checkpoint serialization paths (including the
@@ -28,17 +28,27 @@
 //!    `nn/adam.rs`.
 //! 5. **`unwrap-in-request-path`** — no `.unwrap()`/`.expect(` in
 //!    non-test code of `coordinator/service*` (the daemon module tree,
-//!    wire codecs included), `coordinator/sweep.rs`, `cli/`, the
-//!    `snapshot::` codec layer and `util/blob.rs`: a malformed request,
-//!    hostile wire frame or corrupt/truncated snapshot must produce a
-//!    readable error naming the job/file/field/offset, never a panic.
+//!    wire codecs included), `coordinator/router.rs`,
+//!    `coordinator/sweep.rs`, `cli/`, the `snapshot::` codec layer and
+//!    `util/blob.rs`: a malformed request, hostile wire frame or
+//!    corrupt/truncated snapshot must produce a readable error naming
+//!    the job/file/field/offset, never a panic.
 //! 6. **`unbounded-queue-in-service`** — no `VecDeque::new`,
 //!    `BinaryHeap::new`, `LinkedList::new` or unbounded channels inside
-//!    `coordinator/service*`. The daemon's admission control promises
-//!    typed `Busy` rejections at a fixed queue depth; an unbounded
-//!    container there is one refactor away from memory-ballooning
-//!    backlog. Pre-size with `with_capacity` (the bound is enforced at
-//!    admission) or use `util::channel::bounded`.
+//!    `coordinator/service*` or `coordinator/router.rs`. The daemon's
+//!    admission control promises typed `Busy` rejections at a fixed
+//!    queue depth; an unbounded container there is one refactor away
+//!    from memory-ballooning backlog. Pre-size with `with_capacity`
+//!    (the bound is enforced at admission) or use
+//!    `util::channel::bounded`.
+//! 7. **`retry-without-backoff`** — no bare `sleep(` in `coordinator/`
+//!    code. A retry or reconnect loop that sleeps a constant interval
+//!    synchronizes the whole fleet into thundering-herd reconnects the
+//!    moment a daemon restarts; every sleep on a request path must be
+//!    paced by `util::backoff` (decorrelated jitter), which must appear
+//!    on the same logical line (`backoff.next_delay()` /
+//!    `Backoff::new`). Genuinely fixed cadences (health-probe slices,
+//!    status-poll ticks) carry a one-line waiver explaining why.
 //!
 //! The pass is **lexical, not syntactic**: the offline build environment
 //! has no `syn`, so the walker strips comments/strings/char literals and
@@ -59,15 +69,17 @@ pub const RULE_LOCK_SPAN: &str = "lock-guard-spans-energy";
 pub const RULE_HOT_ALLOC: &str = "alloc-in-hot-path";
 pub const RULE_UNWRAP: &str = "unwrap-in-request-path";
 pub const RULE_UNBOUNDED: &str = "unbounded-queue-in-service";
+pub const RULE_RETRY: &str = "retry-without-backoff";
 
 /// All rule names, for `--help`-style output and waiver validation.
-pub const ALL_RULES: [&str; 6] = [
+pub const ALL_RULES: [&str; 7] = [
     RULE_MAP_ITER,
     RULE_ENTROPY,
     RULE_LOCK_SPAN,
     RULE_HOT_ALLOC,
     RULE_UNWRAP,
     RULE_UNBOUNDED,
+    RULE_RETRY,
 ];
 
 /// One finding: a rule fired on a line of a file.
@@ -233,7 +245,10 @@ pub fn sanitize(src: &str) -> String {
 pub fn strip_test_modules(lines: &mut [String]) {
     let mut i = 0;
     while i < lines.len() {
-        if lines[i].trim() != "#[cfg(test)]" {
+        // `#[cfg(all(test, not(loom)))]` is the gate modules use when a
+        // `--cfg loom` build compiles their file: still test-only code.
+        let gate = lines[i].trim();
+        if gate != "#[cfg(test)]" && gate != "#[cfg(all(test, not(loom)))]" {
             i += 1;
             continue;
         }
@@ -356,8 +371,11 @@ pub struct FileClass {
     pub hot_path: bool,
     /// Daemon/sweep/CLI request or IO path (rule 5).
     pub request_path: bool,
-    /// The `edc serve` daemon module tree (rule 6).
+    /// The `edc serve`/`edc route` daemon module trees (rule 6).
     pub service: bool,
+    /// Anything under `coordinator/` (rule 7): retry/poll loops here
+    /// face remote peers and must pace with `util::backoff`.
+    pub coordinator: bool,
 }
 
 /// Classify a `/`-separated path relative to `rust/src`.
@@ -368,8 +386,10 @@ pub fn classify(rel: &str) -> FileClass {
     let snapshot_layer = rel.starts_with("snapshot/") || rel == "util/blob.rs";
     // Prefix, not equality: `coordinator/service.rs` (pre-PR-9 layout)
     // and the `coordinator/service/` module tree (mod.rs, wire.rs, and
-    // whatever grows next) are all the daemon.
-    let service = rel.starts_with("coordinator/service");
+    // whatever grows next) are all the daemon. The PR-10 router fronts
+    // the same protocol, so it carries the same promises.
+    let service =
+        rel.starts_with("coordinator/service") || rel == "coordinator/router.rs";
     FileClass {
         serialization: rel == "coordinator/checkpoint.rs"
             || rel == "coordinator/orchestrator.rs"
@@ -385,6 +405,7 @@ pub fn classify(rel: &str) -> FileClass {
             || snapshot_layer
             || rel.starts_with("cli/"),
         service,
+        coordinator: rel.starts_with("coordinator/"),
     }
 }
 
@@ -735,6 +756,39 @@ fn rule_unbounded_queue_in_service(file: &SourceFile, out: &mut Vec<Violation>) 
     }
 }
 
+/// Rule 7: a `sleep(` in `coordinator/` code that is not paced by
+/// `util::backoff` on the same logical line. Constant-interval retry
+/// or reconnect loops against remote peers herd the whole fleet into
+/// synchronized reconnect storms; `Backoff`'s decorrelated jitter (and
+/// the `Breaker`'s probe schedule built on it) is the sanctioned
+/// pacing. Fixed cadences that are genuinely not retries (health-probe
+/// slices, status-poll ticks) take a waiver comment saying so.
+fn rule_retry_without_backoff(file: &SourceFile, out: &mut Vec<Violation>) {
+    if !file.class.coordinator {
+        return;
+    }
+    for (idx, l) in file.code.iter().enumerate() {
+        // `backoff.next_delay()` / `Backoff::new` on the same line is
+        // the sanctioned pattern; match case-insensitively on the
+        // shared stem so both spellings pass.
+        if l.contains("sleep(") && !l.contains("ackoff") {
+            push_unless_waived(
+                out,
+                file,
+                Violation {
+                    rule: RULE_RETRY,
+                    file: file.rel.clone(),
+                    line: idx + 1,
+                    message: "bare sleep( in coordinator code: pace retry/reconnect \
+                              loops with util::backoff (decorrelated jitter), or waive \
+                              with a comment explaining the fixed cadence"
+                        .to_string(),
+                },
+            );
+        }
+    }
+}
+
 /// Run every rule over one parsed file.
 pub fn lint_file(file: &SourceFile) -> Vec<Violation> {
     let mut out = Vec::new();
@@ -744,6 +798,7 @@ pub fn lint_file(file: &SourceFile) -> Vec<Violation> {
     rule_alloc_in_hot_path(file, &mut out);
     rule_unwrap_in_request_path(file, &mut out);
     rule_unbounded_queue_in_service(file, &mut out);
+    rule_retry_without_backoff(file, &mut out);
     out.sort_by_key(|v| v.line);
     out
 }
@@ -964,6 +1019,35 @@ let f = &'static str_thing; let life = 'a;"##;
         // Comments and strings never fire (lexical pass sanitizes them).
         assert!(lint_as("coordinator/service/wire.rs", "// VecDeque::new would be bad\n")
             .is_empty());
+    }
+
+    #[test]
+    fn retry_without_backoff_rule_polices_coordinator_sleeps() {
+        let bad = "fn poll() {\n    loop {\n        std::thread::sleep(Duration::from_millis(50));\n    }\n}\n";
+        let v = lint_as("coordinator/router.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, RULE_RETRY);
+        assert_eq!(v[0].line, 3);
+        // Sleeps paced by util::backoff are the sanctioned pattern,
+        // whether through an instance or the constructor.
+        assert!(lint_as(
+            "coordinator/service/mod.rs",
+            "fn poll() { std::thread::sleep(backoff.next_delay()); }\n"
+        )
+        .is_empty());
+        assert!(lint_as(
+            "coordinator/router.rs",
+            "fn poll() { std::thread::sleep(Backoff::new(50, 2_000, seed).next_delay()); }\n"
+        )
+        .is_empty());
+        // Outside coordinator/, sleeping is not this rule's business.
+        assert!(lint_as("util/channel.rs", bad).is_empty());
+        // A waiver on the line above covers a genuinely fixed cadence.
+        let waived = "fn tick() {\n    // edc-lints: allow(retry-without-backoff)\n    std::thread::sleep(step);\n}\n";
+        assert!(lint_as("coordinator/router.rs", waived).is_empty());
+        // Test modules are stripped even under the loom-aware gate.
+        let gated = "fn ok() {}\n#[cfg(all(test, not(loom)))]\nmod tests {\n    fn t() { std::thread::sleep(d); }\n}\n";
+        assert!(lint_as("coordinator/router.rs", gated).is_empty());
     }
 
     #[test]

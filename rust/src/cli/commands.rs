@@ -21,6 +21,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "search" => cmd_search(args),
         "sweep" => cmd_sweep(args),
         "serve" => cmd_serve(args),
+        "route" => cmd_route(args),
         "snapshot" => cmd_snapshot(args),
         "submit" => cmd_submit(args),
         "status" => cmd_status(args),
@@ -444,6 +445,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if queue_depth == 0 || inflight == 0 {
         bail!("--queue-depth and --inflight must be at least 1");
     }
+    let defaults = ServeConfig::default();
+    let conns_per_peer = args.usize_or("conns-per-peer", defaults.max_conns_per_peer)?;
+    if conns_per_peer == 0 {
+        bail!("--conns-per-peer must be at least 1");
+    }
+    let idle_ms = args.u64_or("idle-timeout-ms", defaults.idle_timeout.as_millis() as u64)?;
+    if idle_ms == 0 {
+        bail!("--idle-timeout-ms must be at least 1");
+    }
     let cfg = ServeConfig {
         dir: PathBuf::from(&dir),
         port: port as u16,
@@ -453,6 +463,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         format: snapshot::Format::parse(&args.str_or("snapshot-format", "json"))?,
         max_queue_depth: queue_depth,
         max_inflight_per_conn: inflight,
+        bind: args.str_or("bind", &defaults.bind),
+        auth_token: auth_token_flag(args)?,
+        max_conns_per_peer: conns_per_peer,
+        idle_timeout: std::time::Duration::from_millis(idle_ms),
+        ..defaults
     };
     let svc = Service::start(cfg)?;
     println!(
@@ -466,6 +481,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
         svc.addr()
     );
     svc.wait()
+}
+
+/// `edc route`: the fault-tolerant router daemon fronting N `edc serve`
+/// backends with the same wire protocol (docs/serve.md §topology).
+/// Per-backend health checks drive a healthy → degraded → quarantined
+/// circuit breaker with jittered re-probe backoff; submits fail over to
+/// healthy siblings; status/result/watch/cancel proxy through the
+/// routing table; a backend dying mid-job marks its routed jobs failed
+/// naming the backend. A job through the router is byte-identical to
+/// the same job submitted directly (docs/determinism.md §13).
+fn cmd_route(args: &Args) -> Result<()> {
+    use crate::coordinator::router::{Router, RouterConfig};
+    use std::time::Duration;
+    let backends_arg = args.get("backends").ok_or_else(|| {
+        anyhow!("route wants --backends ip:port,ip:port,... (the serve daemons to front)")
+    })?;
+    let backends: Vec<String> = backends_arg
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let port = args.u64_or("port", 0)?;
+    if port > u16::MAX as u64 {
+        bail!("--port must fit in 16 bits");
+    }
+    let mut cfg = RouterConfig::default();
+    cfg.dir = PathBuf::from(args.str_or("dir", cfg.dir.to_str().unwrap_or("reports/route")));
+    cfg.port = port as u16;
+    cfg.bind = args.str_or("bind", &cfg.bind);
+    cfg.backends = backends;
+    cfg.auth_token = auth_token_flag(args)?;
+    cfg.backend_token = match args.get("backend-token-file") {
+        Some(p) => Some(service::load_auth_token(Path::new(p))?),
+        None => None,
+    };
+    cfg.max_conns_per_peer = args.usize_or("conns-per-peer", cfg.max_conns_per_peer)?;
+    if cfg.max_conns_per_peer == 0 {
+        bail!("--conns-per-peer must be at least 1");
+    }
+    let idle_ms = args.u64_or("idle-timeout-ms", cfg.idle_timeout.as_millis() as u64)?;
+    let period_ms = args.u64_or("health-period-ms", cfg.health_period.as_millis() as u64)?;
+    let deadline_ms = args.u64_or("health-deadline-ms", cfg.health_deadline.as_millis() as u64)?;
+    if idle_ms == 0 || period_ms == 0 || deadline_ms == 0 {
+        bail!("--idle-timeout-ms, --health-period-ms and --health-deadline-ms must be at least 1");
+    }
+    cfg.idle_timeout = Duration::from_millis(idle_ms);
+    cfg.health_period = Duration::from_millis(period_ms);
+    cfg.health_deadline = Duration::from_millis(deadline_ms);
+    cfg.max_inflight_per_backend = args.usize_or("inflight-per-backend", cfg.max_inflight_per_backend)?;
+    if cfg.max_inflight_per_backend == 0 {
+        bail!("--inflight-per-backend must be at least 1");
+    }
+    cfg.breaker_threshold = args.u64_or("breaker-threshold", cfg.breaker_threshold as u64)? as u32;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    let n = cfg.backends.len();
+    let threshold = cfg.breaker_threshold;
+    let dir = cfg.dir.display().to_string();
+    let r = Router::start(cfg)?;
+    println!(
+        "edc route listening on {} fronting {n} backend{} (health every {period_ms}ms, \
+         breaker threshold {threshold}; routing table in {dir})",
+        r.addr(),
+        if n == 1 { "" } else { "s" },
+    );
+    println!(
+        "clients: edc submit|status|result|watch|cancel [--addr {}] (or --dir {dir})",
+        r.addr()
+    );
+    r.wait()
 }
 
 /// `edc snapshot info <file>` / `edc snapshot convert <in> <out>
@@ -529,9 +613,26 @@ fn cmd_snapshot(args: &Args) -> Result<()> {
     }
 }
 
+/// Load `--auth-token-file` when given (shared by `serve`, `route` and
+/// every client subcommand; same validation everywhere).
+fn auth_token_flag(args: &Args) -> Result<Option<String>> {
+    match args.get("auth-token-file") {
+        Some(p) => Ok(Some(service::load_auth_token(Path::new(p))?)),
+        None => Ok(None),
+    }
+}
+
+/// `--retries N` for the client subcommands (0 = fail on the first
+/// typed rejection or transport error).
+fn retries_flag(args: &Args) -> Result<u32> {
+    Ok(args.u64_or("retries", 0)?.min(u32::MAX as u64) as u32)
+}
+
 /// Resolve the daemon address for a client subcommand: `--addr` wins,
 /// otherwise the `serve.addr` discovery file the daemon writes into its
-/// snapshot directory (`--dir`, default `reports/serve`).
+/// snapshot directory (`--dir`, default `reports/serve`). A router's
+/// `route.addr` discovery file works the same way (`--dir` pointing at
+/// the router's dir) — the front protocols are identical.
 fn serve_addr(args: &Args) -> Result<String> {
     if let Some(a) = args.get("addr") {
         return Ok(a.to_string());
@@ -549,10 +650,12 @@ fn serve_addr(args: &Args) -> Result<String> {
 }
 
 /// Build a client for the daemon, honouring `--wire json|binary` (the
-/// daemon auto-negotiates per connection, so the flag is client-only).
+/// daemon auto-negotiates per connection, so the flag is client-only)
+/// and `--auth-token-file` for daemons behind the frame-zero handshake.
 fn serve_client(args: &Args) -> Result<service::Client> {
     let wire = service::wire::WireKind::parse(&args.str_or("wire", "json"))?;
-    service::Client::connect_with(&serve_addr(args)?, wire)
+    let token = auth_token_flag(args)?;
+    service::Client::connect_opts(&serve_addr(args)?, wire, token.as_deref())
 }
 
 /// `edc submit`: queue a search (default) or sweep job on a running
@@ -585,7 +688,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
         req.set("priority", Json::Str(p.to_string()));
     }
     let mut client = serve_client(args)?;
-    let job = client.submit(&req)?;
+    let job = client.submit_with_retries(&req, retries_flag(args)?)?;
     println!("job {job} queued ({kind}); poll with: edc status --job {job}");
     Ok(())
 }
@@ -619,15 +722,42 @@ fn print_job_line(j: &Json) {
     println!("{line}");
 }
 
-/// `edc status`: one job (`--job N`) or the whole daemon.
+/// `edc status`: one job (`--job N`) or the whole daemon — against a
+/// serve daemon or a router (whose fleet summary lists every backend's
+/// breaker state). `--retries N` rides the shared jittered-backoff
+/// retry layer.
 fn cmd_status(args: &Args) -> Result<()> {
     let mut client = serve_client(args)?;
+    let retries = retries_flag(args)?;
+    let mut req = service::cmd_obj("status");
     if args.get("job").is_some() {
-        let s = client.status(Some(args.u64_or("job", 0)?))?;
+        req.set("job", Json::Num(args.u64_or("job", 0)? as f64));
+    }
+    let s = client.request_retrying(&req, retries)?;
+    service::ensure_ok(&s)?;
+    if args.get("job").is_some() {
         print_job_line(&s);
         return Ok(());
     }
-    let s = client.status(None)?;
+    if let Some(backends) = s.get("backends").and_then(|a| a.as_arr()) {
+        println!(
+            "edc route at {} — {} backends, {} jobs routed ({} live)",
+            s.str_or("addr", "?"),
+            backends.len(),
+            s.num_or("jobs_routed", 0.0) as usize,
+            s.num_or("jobs_live", 0.0) as usize,
+        );
+        for b in backends {
+            println!(
+                "  backend {}: {} ({} strikes, {} in flight)",
+                b.str_or("addr", "?"),
+                b.str_or("state", "?"),
+                b.num_or("strikes", 0.0) as usize,
+                b.num_or("inflight", 0.0) as usize,
+            );
+        }
+        return Ok(());
+    }
     println!(
         "edc serve at {} — {} pool workers, snapshots in {}",
         s.str_or("addr", "?"),
@@ -666,7 +796,7 @@ fn cmd_watch(args: &Args) -> Result<()> {
     let job = args.u64_or("job", 0)?;
     let timeout = std::time::Duration::from_secs(args.u64_or("timeout-secs", 600)?);
     let mut client = serve_client(args)?;
-    for frame in client.watch(job, timeout)? {
+    for frame in client.watch_retrying(job, timeout, retries_flag(args)?)? {
         if frame.str_or("stream", "") == "end" {
             println!("job {job} finished: {}", frame.str_or("state", "?"));
         } else {
@@ -1072,6 +1202,31 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(dispatch(&argv(&["bogus"])).is_err());
+    }
+
+    #[test]
+    fn route_command_validates_flags_before_binding() {
+        // No backends, empty backend list, unparseable backend address,
+        // and zero-valued knobs are all refused before any socket binds.
+        assert!(dispatch(&argv(&["route"])).is_err());
+        assert!(dispatch(&argv(&["route", "--backends", ","])).is_err());
+        assert!(dispatch(&argv(&["route", "--backends", "not-an-addr"])).is_err());
+        assert!(dispatch(&argv(&[
+            "route", "--backends", "127.0.0.1:1", "--inflight-per-backend", "0",
+        ]))
+        .is_err());
+        assert!(dispatch(&argv(&[
+            "route", "--backends", "127.0.0.1:1", "--health-period-ms", "0",
+        ]))
+        .is_err());
+        assert!(dispatch(&argv(&["route", "--backends", "127.0.0.1:1", "--port", "70000"]))
+            .is_err());
+        // A missing token file is a startup error naming the path.
+        let err = dispatch(&argv(&[
+            "route", "--backends", "127.0.0.1:1", "--auth-token-file", "no/such/token",
+        ]))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no/such/token"));
     }
 
     #[test]

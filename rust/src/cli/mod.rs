@@ -8,13 +8,20 @@
 //! edc sweep   --nets lenet5,vgg16_cifar [--dataflows paper|all|X:Y,..]
 //! edc serve   [--dir reports/serve] [--port 0] [--jobs 2] [--workers 0]
 //!             [--resume-dir reports/serve] [--snapshot-format json|binary]
-//!             [--queue-depth 64] [--inflight 8]
+//!             [--queue-depth 64] [--inflight 8] [--bind 127.0.0.1]
+//!             [--auth-token-file f] [--conns-per-peer 64] [--idle-timeout-ms N]
+//! edc route   --backends ip:port,ip:port [--port 0] [--bind 127.0.0.1]
+//!             [--auth-token-file f] [--backend-token-file f]
+//!             [--health-period-ms 1000] [--health-deadline-ms 2000]
+//!             [--inflight-per-backend 16] [--breaker-threshold 3]
+//!             [--dir reports/route]              # fault-tolerant fleet front
 //! edc snapshot info <file>                       # header/stats of a snapshot
 //! edc snapshot convert <in> <out> [--to json|binary]  # lossless v3 <-> v4
 //! edc submit  [--addr host:port] --net lenet5 [--kind search|sweep]
-//!             [--priority low|normal|high] [--wire json|binary] ...
-//! edc status  [--addr host:port] [--job N] [--wire json|binary]
-//! edc watch   [--addr host:port] --job N         # stream progress frames
+//!             [--priority low|normal|high] [--wire json|binary]
+//!             [--auth-token-file f] [--retries N] ...
+//! edc status  [--addr host:port] [--job N] [--wire json|binary] [--retries N]
+//! edc watch   [--addr host:port] --job N [--retries N]  # stream progress frames
 //! edc result  [--addr host:port] --job N
 //! edc cancel  [--addr host:port] --job N
 //! edc shutdown [--addr host:port]
@@ -69,16 +76,26 @@ pub fn usage() -> &'static str {
                   one worker pool and share fleet cost caches; graceful\n\
                   shutdown drains to resumable snapshots (--dir, --port,\n\
                   --jobs, --workers, --resume-dir, --snapshot-format,\n\
-                  --queue-depth, --inflight; protocol: docs/serve.md)\n\
+                  --queue-depth, --inflight, --bind, --auth-token-file,\n\
+                  --conns-per-peer, --idle-timeout-ms; protocol:\n\
+                  docs/serve.md)\n\
+       route      fault-tolerant router fronting N serve daemons: health\n\
+                  checks, circuit breaker, submit failover, proxied\n\
+                  status/result/watch/cancel (--backends ip:port,..,\n\
+                  --port, --bind, --auth-token-file, --backend-token-file,\n\
+                  --health-period-ms, --health-deadline-ms,\n\
+                  --inflight-per-backend, --breaker-threshold, --dir)\n\
        snapshot   introspect/convert snapshot containers: `snapshot info\n\
                   <file>`, `snapshot convert <in> <out> [--to json|binary]`\n\
                   (v3 JSON <-> v4 binary, bit-lossless, auto-detected)\n\
-       submit     queue a job on a running daemon (--addr or --dir,\n\
-                  --kind search|sweep, --priority low|normal|high,\n\
-                  --wire json|binary, then the search/sweep flags)\n\
-       status     daemon or per-job progress (--addr/--dir, [--job N])\n\
+       submit     queue a job on a running daemon or router (--addr or\n\
+                  --dir, --kind search|sweep, --priority low|normal|high,\n\
+                  --wire json|binary, --auth-token-file, --retries N,\n\
+                  then the search/sweep flags)\n\
+       status     daemon, router or per-job progress (--addr/--dir,\n\
+                  [--job N], [--retries N])\n\
        watch      stream a job's progress frames until it finishes\n\
-                  (--job N, --timeout-secs 600)\n\
+                  (--job N, --timeout-secs 600, [--retries N])\n\
        result     Pareto table + summary of a finished job (--job N)\n\
        cancel     cancel a queued/running job (--job N; running jobs\n\
                   keep a resumable snapshot)\n\

@@ -26,12 +26,20 @@
 //!   persistent bounded worker pool, shares fleet cost caches across
 //!   structurally-identical jobs, and drains to resumable snapshots on
 //!   graceful shutdown (protocol: docs/serve.md).
+//! - [`router`] is the `edc route` daemon: the same wire protocol in
+//!   front of N serve daemons, with per-backend health checks, a
+//!   circuit breaker (healthy → degraded → quarantined with jittered
+//!   re-probe backoff), failover of submits to healthy siblings, and a
+//!   routing table proxying status/result/watch/cancel — a job through
+//!   the router is byte-identical to the same job submitted directly
+//!   (docs/determinism.md §13).
 //! - [`checkpoint`] is the JSON persistence layer for single-search
 //!   outcomes and orchestration snapshots (format: docs/checkpoints.md).
 
 pub mod actor_learner;
 pub mod checkpoint;
 pub mod orchestrator;
+pub mod router;
 pub mod service;
 pub mod sweep;
 

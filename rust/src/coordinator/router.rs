@@ -1,0 +1,1016 @@
+//! `edc route` — a fault-tolerant router daemon in front of N `edc
+//! serve` backends.
+//!
+//! The router speaks the *same* front protocol as a single daemon — the
+//! `EDCA` auth handshake, per-connection wire-codec negotiation, typed
+//! rejections, the idle reaper — by construction: it reuses
+//! [`service`](super::service)'s shared connection front-end
+//! ([`FrontEnd`]). Behind that front it fans `submit`s out over the
+//! compact binary wire to whichever backend is healthiest, and proxies
+//! `status` / `result` / `cancel` / `watch` through a routing table of
+//! router job-id → (backend, backend job-id).
+//!
+//! Robustness model:
+//!
+//! - **Health checking.** A background loop pings every backend on a
+//!   fixed cadence with a hard connect/read deadline, and reconciles the
+//!   routing table against the backend's own job list (so a job that
+//!   finished while nobody was polling still frees its in-flight slot).
+//! - **Circuit breaker.** Each backend owns a
+//!   [`Breaker`](crate::util::backoff::Breaker): consecutive failures
+//!   walk it healthy → degraded → quarantined, and a quarantined backend
+//!   is only re-probed after a decorrelated-jitter backoff — a flapping
+//!   backend cannot make the router flap with it.
+//! - **Failover, never a hang.** Submits skip quarantined and saturated
+//!   backends and fall through to siblings; when *no* backend can take
+//!   the job the client gets a typed `{"code":"degraded"}` with a
+//!   `retry_after_ms` hint. A backend that dies mid-job has its routed
+//!   jobs marked `failed` naming the backend — clients polling `status`
+//!   get a terminal answer, not a timeout.
+//! - **Transparency (invariant 13).** The router adds routing, not
+//!   semantics: a job submitted through the router produces a result and
+//!   snapshot byte-identical to the same spec submitted directly to the
+//!   backend (`tests/service_router.rs`).
+//!
+//! Time never enters the breaker as a wall clock: the router feeds it
+//! milliseconds from its own monotonic start, and the loom model
+//! (`tests/loom_models.rs`) feeds it a counter.
+
+use super::service::wire::{WireCodec, WireKind};
+use super::service::{
+    accept_loop, busy_json, cmd_obj, err_json, field_u64, ok_json, write_frame, Client, FrontEnd,
+};
+use crate::util::backoff::{Breaker, BreakerState};
+use crate::util::json::Json;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{thread, Arc, Mutex};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Name of the address-discovery file the router writes into its
+/// directory (`<dir>/route.addr`), mirroring the daemon's `serve.addr`.
+pub const ROUTE_ADDR_FILE: &str = "route.addr";
+
+/// Router configuration (`edc route` flags map onto this 1:1).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Directory for the address file (`--dir`).
+    pub dir: PathBuf,
+    /// Front port (`--port`, 0 = ephemeral).
+    pub port: u16,
+    /// Front bind address (`--bind`); non-loopback requires a token,
+    /// same rule as the daemon.
+    pub bind: String,
+    /// Backend daemon addresses, `ip:port` (`--backends a,b,...`).
+    pub backends: Vec<String>,
+    /// Token the *front* requires from clients (`--auth-token-file`).
+    pub auth_token: Option<String>,
+    /// Token the router presents to its *backends*
+    /// (`--backend-token-file`) — backends on other machines are
+    /// themselves non-loopback daemons requiring auth.
+    pub backend_token: Option<String>,
+    /// Front per-peer-IP connection cap (`--conns-per-peer`).
+    pub max_conns_per_peer: usize,
+    /// Front idle-connection reaper budget (`--idle-timeout-ms`).
+    pub idle_timeout: Duration,
+    /// Front auth-handshake completion deadline.
+    pub handshake_timeout: Duration,
+    /// Write deadline per proxied watch frame: a stalled watcher is
+    /// dropped instead of pinning the proxy thread.
+    pub watch_write_timeout: Duration,
+    /// Health-check cadence (`--health-period-ms`).
+    pub health_period: Duration,
+    /// Hard deadline on a health probe's connect + ping + status
+    /// (`--health-deadline-ms`); also bounds proxy connection setup.
+    pub health_deadline: Duration,
+    /// Read deadline on proxied requests: a wedged backend is a typed
+    /// error, never a hang.
+    pub proxy_deadline: Duration,
+    /// Routed-jobs-in-flight cap per backend
+    /// (`--inflight-per-backend`); a backend at the cap is skipped.
+    pub max_inflight_per_backend: usize,
+    /// Consecutive failures before a backend is quarantined.
+    pub breaker_threshold: u32,
+    /// Quarantine re-probe backoff bounds (jittered, growing).
+    pub probe_base: Duration,
+    pub probe_cap: Duration,
+    /// Seed of every breaker's jitter stream (never ambient entropy).
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            dir: PathBuf::from("reports/route"),
+            port: 0,
+            bind: "127.0.0.1".to_string(),
+            backends: Vec::new(),
+            auth_token: None,
+            backend_token: None,
+            max_conns_per_peer: 64,
+            idle_timeout: Duration::from_secs(300),
+            handshake_timeout: Duration::from_secs(5),
+            watch_write_timeout: Duration::from_secs(10),
+            health_period: Duration::from_secs(1),
+            health_deadline: Duration::from_secs(2),
+            proxy_deadline: Duration::from_secs(30),
+            max_inflight_per_backend: 16,
+            breaker_threshold: 3,
+            probe_base: Duration::from_millis(500),
+            probe_cap: Duration::from_secs(15),
+            seed: 0,
+        }
+    }
+}
+
+/// The wire the router speaks to its backends: the compact binary
+/// framing when compiled in, the JSON framing otherwise. Codec choice
+/// never changes bytes-on-disk or results (PR 9's codec-equivalence
+/// invariant), so this is purely a bandwidth decision.
+fn backend_wire() -> WireKind {
+    if cfg!(feature = "wire-binary") {
+        WireKind::Binary
+    } else {
+        WireKind::Json
+    }
+}
+
+/// One entry of the routing table: which backend runs a router job.
+struct Route {
+    backend: usize,
+    backend_job: u64,
+    /// Reached a terminal state (observed via a proxied reply, the
+    /// health loop's reconcile sweep, or a failure sweep) — no longer
+    /// counts against the backend's in-flight cap.
+    terminal: bool,
+    /// Set when the *router* declared the job dead (backend died or
+    /// forgot it); `status`/`result`/`watch` answer locally from this,
+    /// naming the backend, instead of proxying into a black hole.
+    failed: Option<String>,
+}
+
+struct RouteState {
+    next_id: u64,
+    routes: BTreeMap<u64, Route>,
+}
+
+/// One backend daemon as the router sees it.
+struct BackendSlot {
+    addr: String,
+    breaker: Breaker,
+}
+
+struct RouterInner {
+    cfg: RouterConfig,
+    addr: SocketAddr,
+    backends: Vec<BackendSlot>,
+    routes: Mutex<RouteState>,
+    shutdown: AtomicBool,
+    peers: Mutex<BTreeMap<IpAddr, usize>>,
+    /// Epoch of the breaker logical clock ([`now_ms`](RouterInner::now_ms)).
+    started: Instant,
+}
+
+/// A running `edc route` daemon. Same lifecycle shape as
+/// [`Service`](super::service::Service): [`start`](Router::start) binds
+/// and spawns, [`wait`](Router::wait) joins after a `shutdown` request.
+pub struct Router {
+    inner: Arc<RouterInner>,
+    accept: Option<thread::JoinHandle<()>>,
+    health: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+}
+
+impl Router {
+    /// Bind the front socket, write the [`ROUTE_ADDR_FILE`], and start
+    /// the acceptor and health-check threads. Refuses to start with no
+    /// backends, and refuses a non-loopback bind without a front token
+    /// (the same rule the daemon enforces).
+    pub fn start(cfg: RouterConfig) -> Result<Router> {
+        ensure!(
+            !cfg.backends.is_empty(),
+            "edc route needs at least one backend (--backends host:port,host:port,...)"
+        );
+        for b in &cfg.backends {
+            ensure!(
+                b.parse::<SocketAddr>().is_ok(),
+                "backend '{b}' is not an ip:port address"
+            );
+        }
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating router dir {}", cfg.dir.display()))?;
+        let listener = TcpListener::bind((cfg.bind.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.bind, cfg.port))?;
+        let addr = listener
+            .local_addr()
+            .context("reading the bound address of the route listener")?;
+        ensure!(
+            addr.ip().is_loopback() || cfg.auth_token.is_some(),
+            "refusing to route on non-loopback {addr} without --auth-token-file; an \
+             unauthenticated router must stay on 127.0.0.1"
+        );
+        let backends = cfg
+            .backends
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| BackendSlot {
+                addr: addr.clone(),
+                breaker: Breaker::new(
+                    cfg.breaker_threshold,
+                    cfg.probe_base,
+                    cfg.probe_cap,
+                    // Distinct jitter stream per backend: quarantined
+                    // backends re-probe decorrelated from each other.
+                    crate::util::rng::seed_stream(cfg.seed, i as u64),
+                ),
+            })
+            .collect();
+        let inner = Arc::new(RouterInner {
+            addr,
+            backends,
+            routes: Mutex::new(RouteState { next_id: 1, routes: BTreeMap::new() }),
+            shutdown: AtomicBool::new(false),
+            peers: Mutex::new(BTreeMap::new()),
+            started: Instant::now(),
+            cfg,
+        });
+        std::fs::write(inner.cfg.dir.join(ROUTE_ADDR_FILE), format!("{addr}\n")).with_context(
+            || {
+                format!(
+                    "writing address file {}",
+                    inner.cfg.dir.join(ROUTE_ADDR_FILE).display()
+                )
+            },
+        )?;
+        let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let inner = Arc::clone(&inner);
+            let conns = Arc::clone(&conns);
+            thread::spawn(move || accept_loop(&inner, listener, &conns))
+        };
+        let health = {
+            let inner = Arc::clone(&inner);
+            thread::spawn(move || health_loop(&inner))
+        };
+        Ok(Router {
+            inner,
+            accept: Some(accept),
+            health: Some(health),
+            conns,
+        })
+    }
+
+    /// The bound front address.
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr
+    }
+
+    /// Initiate shutdown programmatically (equivalent to a `shutdown`
+    /// request). The router's backends are left running — shutting down
+    /// a router never cancels the fleet's jobs.
+    pub fn shutdown(&self) {
+        self.inner.begin_shutdown();
+    }
+
+    /// Block until the acceptor, health loop and every connection
+    /// handler have joined, then remove the [`ROUTE_ADDR_FILE`].
+    pub fn wait(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.health.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock());
+        for h in conns {
+            let _ = h.join();
+        }
+        std::fs::remove_file(self.inner.cfg.dir.join(ROUTE_ADDR_FILE)).ok();
+        Ok(())
+    }
+}
+
+impl FrontEnd for RouterInner {
+    // The router keeps no per-connection state: in-flight bounds are
+    // per *backend*, not per front connection.
+    type Conn = ();
+
+    fn auth_token(&self) -> Option<&str> {
+        self.cfg.auth_token.as_deref()
+    }
+
+    fn handshake_timeout(&self) -> Duration {
+        self.cfg.handshake_timeout
+    }
+
+    fn idle_timeout(&self) -> Duration {
+        self.cfg.idle_timeout
+    }
+
+    fn max_conns_per_peer(&self) -> usize {
+        self.cfg.max_conns_per_peer
+    }
+
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    fn peers(&self) -> &Mutex<BTreeMap<IpAddr, usize>> {
+        &self.peers
+    }
+
+    fn handle_frame(
+        front: &Arc<Self>,
+        req: &Json,
+        codec: &'static dyn WireCodec,
+        writer: &mut TcpStream,
+        _conn: &mut (),
+    ) -> Result<()> {
+        if req.str_or("cmd", "") == "watch" {
+            front.proxy_watch(codec, writer, req)
+        } else {
+            write_frame(codec, writer, &front.handle(req))
+        }
+    }
+}
+
+impl RouterInner {
+    /// Milliseconds since router start — the breakers' logical clock.
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    fn handle(&self, req: &Json) -> Json {
+        match self.handle_inner(req) {
+            Ok(j) => j,
+            Err(e) => err_json(&format!("{e:#}")),
+        }
+    }
+
+    fn handle_inner(&self, req: &Json) -> Result<Json> {
+        let cmd = req.str_or("cmd", "");
+        ensure!(
+            !cmd.is_empty(),
+            "request missing 'cmd' (submit|status|result|cancel|watch|ping|shutdown)"
+        );
+        match cmd.as_str() {
+            "ping" => {
+                let mut j = ok_json();
+                j.set("service", Json::Str("edc-route".into()))
+                    .set("version", Json::Str(env!("CARGO_PKG_VERSION").into()))
+                    .set("backends", Json::Num(self.backends.len() as f64));
+                Ok(j)
+            }
+            "submit" => self.handle_submit(req),
+            "status" => self.handle_status(req),
+            "result" => self.handle_result(req),
+            "cancel" => self.handle_cancel(req),
+            "shutdown" => Ok(self.handle_shutdown()),
+            other => {
+                bail!("unknown cmd '{other}' (submit|status|result|cancel|watch|ping|shutdown)")
+            }
+        }
+    }
+
+    /// A fresh connection to one backend, with the connect bounded by
+    /// the health deadline and reads bounded by the proxy deadline —
+    /// every proxied request is a deadline away from a typed error.
+    fn backend_client(&self, idx: usize) -> Result<Client> {
+        let c = Client::connect_deadline(
+            &self.backends[idx].addr,
+            backend_wire(),
+            self.cfg.backend_token.as_deref(),
+            self.cfg.health_deadline,
+        )?;
+        c.set_request_timeout(Some(self.cfg.proxy_deadline))?;
+        Ok(c)
+    }
+
+    /// Routed jobs not yet known terminal, per backend.
+    fn live_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.backends.len()];
+        let rs = self.routes.lock();
+        for r in rs.routes.values().filter(|r| !r.terminal) {
+            counts[r.backend] += 1;
+        }
+        counts
+    }
+
+    /// Proxy one request to one backend, feeding its breaker: any reply
+    /// (even a typed rejection) is proof of life, a transport failure is
+    /// a strike, and the strike that trips quarantine fails the
+    /// backend's routed jobs over.
+    fn proxy_request(&self, idx: usize, req: &Json) -> Result<Json> {
+        let attempt = self.backend_client(idx).and_then(|mut c| c.request(req));
+        match attempt {
+            Ok(resp) => {
+                self.backends[idx].breaker.on_success();
+                Ok(resp)
+            }
+            Err(e) => {
+                let st = self.backends[idx].breaker.on_failure(self.now_ms());
+                if st == BreakerState::Quarantined {
+                    self.fail_backend_jobs(idx, &format!("stopped answering ({e:#})"));
+                }
+                Err(e.context(format!("backend {}", self.backends[idx].addr)))
+            }
+        }
+    }
+
+    /// Mark every live route on `idx` failed, naming the backend — the
+    /// "no stranded jobs" half of the fault contract: once a backend is
+    /// declared dead, its jobs answer `failed` locally instead of
+    /// timing out one proxy attempt at a time.
+    fn fail_backend_jobs(&self, idx: usize, reason: &str) {
+        let addr = &self.backends[idx].addr;
+        let mut failed = 0usize;
+        let mut rs = self.routes.lock();
+        for r in rs.routes.values_mut().filter(|r| r.backend == idx && !r.terminal) {
+            r.terminal = true;
+            r.failed = Some(format!("backend {addr} {reason}"));
+            failed += 1;
+        }
+        if failed > 0 {
+            log::warn!("router: failed {failed} job(s): backend {addr} {reason}");
+        }
+    }
+
+    /// Record a terminal state observed in a proxied reply, freeing the
+    /// route's in-flight slot.
+    fn observe_state(&self, rid: u64, state: &str) {
+        if matches!(state, "done" | "failed" | "cancelled" | "cancelled-queued") {
+            let mut rs = self.routes.lock();
+            if let Some(r) = rs.routes.get_mut(&rid) {
+                r.terminal = true;
+            }
+        }
+    }
+
+    /// Rewrite a backend reply into the router's job-id space and stamp
+    /// which backend answered.
+    fn rewrite_reply(&self, j: &mut Json, rid: u64, idx: usize) {
+        if j.get("id").is_some() {
+            j.set("id", Json::Num(rid as f64));
+        }
+        if j.get("job").is_some() {
+            j.set("job", Json::Num(rid as f64));
+        }
+        j.set("backend", Json::Str(self.backends[idx].addr.clone()));
+    }
+
+    /// Look a router job id up, yielding `(backend index, backend job
+    /// id, local failure reason)`.
+    fn route_of(&self, req: &Json) -> Result<(u64, usize, u64, Option<String>)> {
+        let rid = field_u64(req, "job", 0)?;
+        let rs = self.routes.lock();
+        let r = rs
+            .routes
+            .get(&rid)
+            .ok_or_else(|| anyhow::anyhow!("no such job {rid}"))?;
+        Ok((rid, r.backend, r.backend_job, r.failed.clone()))
+    }
+
+    fn handle_submit(&self, req: &Json) -> Result<Json> {
+        ensure!(
+            !self.shutdown.load(Ordering::SeqCst),
+            "router is shutting down and not accepting jobs"
+        );
+        // Candidates: backends the breaker admits with in-flight room,
+        // least-loaded first (index breaks ties, so a fresh router is
+        // deterministic).
+        let counts = self.live_counts();
+        let cap = self.cfg.max_inflight_per_backend.max(1);
+        let mut order: Vec<usize> = (0..self.backends.len())
+            .filter(|&i| self.backends[i].breaker.admit() && counts[i] < cap)
+            .collect();
+        order.sort_by_key(|&i| (counts[i], i));
+        let saturated = self.backends.len() - order.len();
+        let mut retry_hint = 0u64;
+        for idx in order {
+            let resp = match self.proxy_request(idx, req) {
+                Ok(resp) => resp,
+                Err(e) => {
+                    log::warn!("router: submit to {} failed: {e:#}", self.backends[idx].addr);
+                    continue; // shed to the next sibling
+                }
+            };
+            if resp.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+                // Typed rejection (busy/inflight) or a spec error. A spec
+                // error is deterministic — every sibling would refuse it
+                // the same way, so answer with it now; a capacity
+                // rejection is worth shopping around.
+                let code = resp.str_or("code", "");
+                if code.is_empty() {
+                    return Ok(resp);
+                }
+                retry_hint = retry_hint.max(resp.num_or("retry_after_ms", 0.0) as u64);
+                continue;
+            }
+            let backend_job = resp.num_or("job", 0.0) as u64;
+            let rid = {
+                let mut rs = self.routes.lock();
+                let rid = rs.next_id;
+                rs.next_id += 1;
+                rs.routes.insert(
+                    rid,
+                    Route { backend: idx, backend_job, terminal: false, failed: None },
+                );
+                rid
+            };
+            let mut out = resp;
+            self.rewrite_reply(&mut out, rid, idx);
+            return Ok(out);
+        }
+        Ok(busy_json(
+            &format!(
+                "no backend accepted the job ({} configured, {} quarantined or at their \
+                 in-flight cap); retry shortly",
+                self.backends.len(),
+                saturated
+            ),
+            "degraded",
+            retry_hint.max(500),
+        ))
+    }
+
+    fn handle_status(&self, req: &Json) -> Result<Json> {
+        if req.get("job").is_none() {
+            return Ok(self.router_status());
+        }
+        let (rid, idx, backend_job, failed) = self.route_of(req)?;
+        if let Some(reason) = failed {
+            return Ok(self.failed_status(rid, idx, &reason));
+        }
+        let mut fwd = cmd_obj("status");
+        fwd.set("job", Json::Num(backend_job as f64));
+        match self.proxy_request(idx, &fwd) {
+            Ok(mut resp) => {
+                self.observe_state(rid, &resp.str_or("state", ""));
+                self.rewrite_reply(&mut resp, rid, idx);
+                Ok(resp)
+            }
+            // The backend did not answer. If that strike tripped the
+            // breaker the route is failed now — answer from it; else a
+            // typed retryable reply (the job may well still be running).
+            Err(e) => match self.route_of(req)?.3 {
+                Some(reason) => Ok(self.failed_status(rid, idx, &reason)),
+                None => Ok(busy_json(
+                    &format!("{e:#}; retry shortly"),
+                    "backend-unreachable",
+                    500,
+                )),
+            },
+        }
+    }
+
+    /// The locally-synthesized status of a failed-over job.
+    fn failed_status(&self, rid: u64, idx: usize, reason: &str) -> Json {
+        let mut j = ok_json();
+        j.set("id", Json::Num(rid as f64))
+            .set("state", Json::Str("failed".into()))
+            .set("error", Json::Str(reason.to_string()))
+            .set("backend", Json::Str(self.backends[idx].addr.clone()));
+        j
+    }
+
+    /// Router-level status: every backend's breaker state, strikes and
+    /// live routed jobs — the fleet dashboard.
+    fn router_status(&self) -> Json {
+        let counts = self.live_counts();
+        let backends: Vec<Json> = self
+            .backends
+            .iter()
+            .zip(&counts)
+            .map(|(b, &live)| {
+                let mut j = Json::obj();
+                j.set("addr", Json::Str(b.addr.clone()))
+                    .set("state", Json::Str(b.breaker.state().label().into()))
+                    .set("strikes", Json::Num(b.breaker.strikes() as f64))
+                    .set("inflight", Json::Num(live as f64));
+                j
+            })
+            .collect();
+        let (routed, live) = {
+            let rs = self.routes.lock();
+            (
+                rs.routes.len(),
+                rs.routes.values().filter(|r| !r.terminal).count(),
+            )
+        };
+        let mut j = ok_json();
+        j.set("service", Json::Str("edc-route".into()))
+            .set("addr", Json::Str(self.addr.to_string()))
+            .set("backends", Json::Arr(backends))
+            .set("jobs_routed", Json::Num(routed as f64))
+            .set("jobs_live", Json::Num(live as f64));
+        j
+    }
+
+    fn handle_result(&self, req: &Json) -> Result<Json> {
+        ensure!(req.get("job").is_some(), "result wants a 'job' field");
+        let (rid, idx, backend_job, failed) = self.route_of(req)?;
+        if let Some(reason) = failed {
+            bail!("job {rid} failed: {reason}");
+        }
+        let mut fwd = cmd_obj("result");
+        fwd.set("job", Json::Num(backend_job as f64));
+        let mut resp = self.proxy_request(idx, &fwd)?;
+        if resp.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+            self.observe_state(rid, "done");
+        }
+        self.rewrite_reply(&mut resp, rid, idx);
+        Ok(resp)
+    }
+
+    fn handle_cancel(&self, req: &Json) -> Result<Json> {
+        ensure!(req.get("job").is_some(), "cancel wants a 'job' field");
+        let (rid, idx, backend_job, failed) = self.route_of(req)?;
+        if let Some(reason) = failed {
+            bail!("job {rid} already failed: {reason}");
+        }
+        let mut fwd = cmd_obj("cancel");
+        fwd.set("job", Json::Num(backend_job as f64));
+        let mut resp = self.proxy_request(idx, &fwd)?;
+        self.observe_state(rid, &resp.str_or("state", ""));
+        self.rewrite_reply(&mut resp, rid, idx);
+        Ok(resp)
+    }
+
+    fn handle_shutdown(&self) -> Json {
+        self.begin_shutdown();
+        let live = {
+            let rs = self.routes.lock();
+            rs.routes.values().filter(|r| !r.terminal).count()
+        };
+        let mut j = ok_json();
+        j.set("shutdown", Json::Bool(true))
+            // Routed jobs keep running on their backends; only the
+            // routing table dies with the router.
+            .set("jobs_live_on_backends", Json::Num(live as f64));
+        j
+    }
+
+    fn begin_shutdown(&self) {
+        if !self.shutdown.swap(true, Ordering::SeqCst) {
+            // Wake the acceptor out of its blocking accept().
+            let _ = TcpStream::connect(self.addr);
+        }
+    }
+
+    /// `cmd:"watch"` proxied: stream the backend's progress frames to
+    /// the front connection, rewritten into router job-id space. The
+    /// front write is deadline-bounded (a stalled watcher is dropped);
+    /// a backend dying mid-stream yields one terminal `failed` end
+    /// frame naming the backend — the watcher never hangs.
+    fn proxy_watch(
+        &self,
+        codec: &'static dyn WireCodec,
+        writer: &mut TcpStream,
+        req: &Json,
+    ) -> Result<()> {
+        if req.get("job").is_none() {
+            return write_frame(codec, writer, &err_json("watch wants a 'job' field"));
+        }
+        let (rid, idx, backend_job, failed) = match self.route_of(req) {
+            Ok(r) => r,
+            Err(e) => return write_frame(codec, writer, &err_json(&format!("{e:#}"))),
+        };
+        writer.set_write_timeout(Some(self.cfg.watch_write_timeout))?;
+        let out = self.proxy_watch_frames(codec, writer, rid, idx, backend_job, failed);
+        writer.set_write_timeout(None)?;
+        out
+    }
+
+    fn proxy_watch_frames(
+        &self,
+        codec: &'static dyn WireCodec,
+        writer: &mut TcpStream,
+        rid: u64,
+        idx: usize,
+        backend_job: u64,
+        failed: Option<String>,
+    ) -> Result<()> {
+        let addr = self.backends[idx].addr.clone();
+        if let Some(reason) = failed {
+            // The job is already failed over: one terminal frame, done.
+            return write_frame(codec, writer, &self.failed_end_frame(rid, idx, &reason));
+        }
+        let mut bc = match self.backend_client(idx) {
+            Ok(c) => c,
+            Err(e) => {
+                let st = self.backends[idx].breaker.on_failure(self.now_ms());
+                if st == BreakerState::Quarantined {
+                    self.fail_backend_jobs(idx, &format!("stopped answering ({e:#})"));
+                }
+                return write_frame(
+                    codec,
+                    writer,
+                    &busy_json(
+                        &format!("backend {addr} did not answer the watch ({e:#}); retry shortly"),
+                        "backend-unreachable",
+                        500,
+                    ),
+                );
+            }
+        };
+        // True iff the abort came from *our* write to the watcher, not
+        // from the backend: a stalled watcher is dropped, not failed over.
+        let mut front_stalled = false;
+        let forward = bc.watch_frames(backend_job, self.cfg.proxy_deadline, |f| {
+            let mut g = f.clone();
+            self.rewrite_reply(&mut g, rid, idx);
+            self.observe_state(rid, &g.str_or("state", ""));
+            write_frame(codec, writer, &g).map_err(|e| {
+                front_stalled = true;
+                e
+            })
+        });
+        match forward {
+            Ok(()) => {
+                self.backends[idx].breaker.on_success();
+                Ok(())
+            }
+            Err(e) if front_stalled => {
+                // The backend is fine; the watcher stalled. Best-effort
+                // typed goodbye (the peer likely is not reading).
+                let mut j = err_json(&format!(
+                    "watch writer stalled past the {:?} write deadline ({e}); dropping the stream",
+                    self.cfg.watch_write_timeout
+                ));
+                j.set("code", Json::Str("deadline".into()));
+                let _ = write_frame(codec, writer, &j);
+                Err(e)
+            }
+            Err(e) => {
+                // The backend died (or went silent) mid-watch: strike it,
+                // fail the job over, and end the stream with a terminal
+                // frame — the watcher must never hang on a dead backend.
+                let st = self.backends[idx].breaker.on_failure(self.now_ms());
+                if st == BreakerState::Quarantined {
+                    self.fail_backend_jobs(idx, &format!("died mid-watch ({e:#})"));
+                }
+                let reason = format!("backend {addr} died mid-watch ({e:#})");
+                {
+                    let mut rs = self.routes.lock();
+                    if let Some(r) = rs.routes.get_mut(&rid) {
+                        r.terminal = true;
+                        if r.failed.is_none() {
+                            r.failed = Some(reason.clone());
+                        }
+                    }
+                }
+                write_frame(codec, writer, &self.failed_end_frame(rid, idx, &reason))
+            }
+        }
+    }
+
+    /// The terminal `end` frame of a failed-over watch.
+    fn failed_end_frame(&self, rid: u64, idx: usize, reason: &str) -> Json {
+        let mut end = ok_json();
+        end.set("stream", Json::Str("end".into()))
+            .set("job", Json::Num(rid as f64))
+            .set("state", Json::Str("failed".into()))
+            .set("error", Json::Str(reason.to_string()))
+            .set("backend", Json::Str(self.backends[idx].addr.clone()));
+        end
+    }
+
+    /// One health pass over one backend: connect + ping + fleet status,
+    /// all inside the health deadline.
+    fn probe(&self, idx: usize) -> Result<Json> {
+        let mut c = self.backend_client(idx)?;
+        c.set_request_timeout(Some(self.cfg.health_deadline))?;
+        c.ping()?;
+        c.status(None)
+    }
+
+    /// Reconcile the routing table against a backend's own job list:
+    /// routes whose backend job reached a terminal state free their
+    /// in-flight slot, and routes the backend no longer knows (it
+    /// restarted without `--resume-dir`) are failed over naming it.
+    fn reconcile(&self, idx: usize, status: &Json) {
+        let Some(Json::Arr(jobs)) = status.get("jobs") else { return };
+        let mut states: BTreeMap<u64, (String, String)> = BTreeMap::new();
+        for j in jobs {
+            states.insert(
+                j.num_or("id", 0.0) as u64,
+                (j.str_or("state", ""), j.str_or("error", "")),
+            );
+        }
+        let addr = &self.backends[idx].addr;
+        let mut rs = self.routes.lock();
+        for r in rs.routes.values_mut().filter(|r| r.backend == idx && !r.terminal) {
+            match states.get(&r.backend_job) {
+                Some((state, err)) => {
+                    if matches!(state.as_str(), "done" | "failed" | "cancelled" | "cancelled-queued")
+                    {
+                        r.terminal = true;
+                        if state == "failed" {
+                            let err = if err.is_empty() { "no error recorded" } else { err };
+                            r.failed =
+                                Some(format!("backend {addr} reports the job failed: {err}"));
+                        }
+                    }
+                }
+                None => {
+                    r.terminal = true;
+                    r.failed = Some(format!(
+                        "backend {addr} no longer knows this job (restarted without \
+                         --resume-dir?)"
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// The per-backend health loop: ping on a fixed cadence, reconcile the
+/// routing table from healthy backends, and walk the breaker state
+/// machine. A quarantined backend is only dialed when its jittered
+/// re-probe backoff has elapsed.
+fn health_loop(inner: &Arc<RouterInner>) {
+    while !inner.shutdown.load(Ordering::SeqCst) {
+        for idx in 0..inner.backends.len() {
+            if inner.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let b = &inner.backends[idx];
+            if b.breaker.state() == BreakerState::Quarantined && !b.breaker.probe_due(inner.now_ms())
+            {
+                continue;
+            }
+            match inner.probe(idx) {
+                Ok(status) => {
+                    let was = b.breaker.state();
+                    b.breaker.on_success();
+                    if was == BreakerState::Quarantined {
+                        log::info!("router: backend {} recovered from quarantine", b.addr);
+                    }
+                    inner.reconcile(idx, &status);
+                }
+                Err(e) => {
+                    let st = b.breaker.on_failure(inner.now_ms());
+                    log::warn!(
+                        "router: health probe of {} failed ({e:#}); backend is {}",
+                        b.addr,
+                        st.label()
+                    );
+                    if st == BreakerState::Quarantined {
+                        inner.fail_backend_jobs(idx, &format!("stopped answering health probes ({e:#})"));
+                    }
+                }
+            }
+        }
+        // Shutdown-responsive wait until the next health pass.
+        let period = inner.cfg.health_period;
+        let mut slept = Duration::ZERO;
+        while slept < period && !inner.shutdown.load(Ordering::SeqCst) {
+            let step = (period - slept).min(Duration::from_millis(50));
+            // Fixed health-probe cadence, not a retry loop: re-probe
+            // pacing for quarantined backends is the Breaker's jittered
+            // backoff, checked via probe_due above.
+            // edc-lints: allow(retry-without-backoff)
+            std::thread::sleep(step);
+            slept += step;
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    fn two_backend_inner() -> Arc<RouterInner> {
+        let cfg = RouterConfig {
+            backends: vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()],
+            breaker_threshold: 1,
+            ..RouterConfig::default()
+        };
+        let backends = cfg
+            .backends
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| BackendSlot {
+                addr: addr.clone(),
+                breaker: Breaker::new(
+                    cfg.breaker_threshold,
+                    cfg.probe_base,
+                    cfg.probe_cap,
+                    i as u64,
+                ),
+            })
+            .collect();
+        Arc::new(RouterInner {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            backends,
+            routes: Mutex::new(RouteState { next_id: 1, routes: BTreeMap::new() }),
+            shutdown: AtomicBool::new(false),
+            peers: Mutex::new(BTreeMap::new()),
+            started: Instant::now(),
+            cfg,
+        })
+    }
+
+    fn insert_route(inner: &RouterInner, rid: u64, backend: usize, backend_job: u64) {
+        let mut rs = inner.routes.lock();
+        rs.next_id = rs.next_id.max(rid + 1);
+        rs.routes
+            .insert(rid, Route { backend, backend_job, terminal: false, failed: None });
+    }
+
+    #[test]
+    fn fail_backend_jobs_marks_only_that_backends_live_routes() {
+        let inner = two_backend_inner();
+        insert_route(&inner, 1, 0, 10);
+        insert_route(&inner, 2, 1, 11);
+        insert_route(&inner, 3, 0, 12);
+        inner.observe_state(3, "done"); // already terminal: left alone
+        inner.fail_backend_jobs(0, "went away");
+
+        let rs = inner.routes.lock();
+        let r1 = &rs.routes[&1];
+        assert!(r1.terminal);
+        let msg = r1.failed.as_deref().unwrap();
+        assert!(msg.contains("127.0.0.1:1"), "failure must name the backend: {msg}");
+        assert!(rs.routes[&2].failed.is_none(), "sibling backend's job untouched");
+        assert!(rs.routes[&3].failed.is_none(), "terminal route not retro-failed");
+    }
+
+    #[test]
+    fn reconcile_frees_finished_and_fails_forgotten_jobs() {
+        let inner = two_backend_inner();
+        insert_route(&inner, 1, 0, 10); // backend will report done
+        insert_route(&inner, 2, 0, 11); // backend will report running
+        insert_route(&inner, 3, 0, 12); // backend forgot it
+        let status = crate::util::json::parse(
+            r#"{"ok":true,"jobs":[{"id":10,"state":"done"},{"id":11,"state":"running"}]}"#,
+        )
+        .unwrap();
+        inner.reconcile(0, &status);
+        assert_eq!(inner.live_counts(), vec![1, 0]);
+        let rs = inner.routes.lock();
+        assert!(rs.routes[&1].terminal && rs.routes[&1].failed.is_none());
+        assert!(!rs.routes[&2].terminal);
+        let msg = rs.routes[&3].failed.as_deref().unwrap();
+        assert!(msg.contains("no longer knows"), "forgotten job fails over: {msg}");
+    }
+
+    #[test]
+    fn submit_with_all_backends_down_is_typed_degraded() {
+        let inner = two_backend_inner();
+        // threshold=1: one strike quarantines.
+        inner.backends[0].breaker.on_failure(0);
+        inner.backends[1].breaker.on_failure(0);
+        let req = crate::util::json::parse(r#"{"cmd":"submit","net":"lenet5"}"#).unwrap();
+        let resp = inner.handle(&req);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert_eq!(resp.str_or("code", ""), "degraded");
+        assert!(resp.num_or("retry_after_ms", 0.0) as u64 >= 500);
+    }
+
+    #[test]
+    fn status_of_failed_over_job_answers_locally() {
+        let inner = two_backend_inner();
+        insert_route(&inner, 7, 1, 42);
+        inner.fail_backend_jobs(1, "died mid-job");
+        let req = crate::util::json::parse(r#"{"cmd":"status","job":7}"#).unwrap();
+        let resp = inner.handle(&req);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(resp.str_or("state", ""), "failed");
+        assert!(resp.str_or("error", "").contains("127.0.0.1:2"));
+        assert_eq!(resp.str_or("backend", ""), "127.0.0.1:2");
+        // result of a failed-over job is a typed error naming the backend.
+        let req = crate::util::json::parse(r#"{"cmd":"result","job":7}"#).unwrap();
+        let resp = inner.handle(&req);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert!(resp.str_or("error", "").contains("died mid-job"));
+    }
+
+    #[test]
+    fn router_status_reports_breaker_states() {
+        let inner = two_backend_inner();
+        insert_route(&inner, 1, 0, 10);
+        inner.backends[1].breaker.on_failure(0);
+        let j = inner.router_status();
+        let Some(Json::Arr(backends)) = j.get("backends") else { panic!("backends array") };
+        assert_eq!(backends.len(), 2);
+        assert_eq!(backends[0].str_or("state", ""), "healthy");
+        assert_eq!(backends[0].num_or("inflight", -1.0) as u64, 1);
+        assert_eq!(backends[1].str_or("state", ""), "quarantined");
+        assert_eq!(j.num_or("jobs_live", 0.0) as u64, 1);
+    }
+
+    #[test]
+    fn router_refuses_empty_or_malformed_backends() {
+        assert!(Router::start(RouterConfig::default()).is_err());
+        let cfg = RouterConfig {
+            backends: vec!["not-an-addr".to_string()],
+            ..RouterConfig::default()
+        };
+        let err = format!("{:#}", Router::start(cfg).unwrap_err());
+        assert!(err.contains("not-an-addr"), "names the bad backend: {err}");
+    }
+}

@@ -88,6 +88,7 @@ use crate::envs::EnvConfig;
 use crate::model::zoo;
 use crate::report::{figures, tables};
 use crate::snapshot::{self, Format};
+use crate::util::backoff::{Backoff, Deadline};
 use crate::util::json::Json;
 use crate::util::pool::{panic_message, WorkPool};
 use crate::util::sync::atomic::{AtomicBool, Ordering};
@@ -95,7 +96,7 @@ use crate::util::sync::{thread, Arc, Condvar, Mutex};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, ErrorKind, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
@@ -144,6 +145,35 @@ pub struct ServeConfig {
     /// submitted at once (`--inflight`). Past it, submit returns
     /// `code:"inflight"`.
     pub max_inflight_per_conn: usize,
+    /// Bind address (`--bind`), loopback by default. Binding anything
+    /// non-loopback without an auth token is refused at startup — an
+    /// open daemon on a routable interface is never an accident here.
+    pub bind: String,
+    /// Shared secret for the frame-zero auth handshake
+    /// (`--auth-token-file`; load with [`load_auth_token`]). When set,
+    /// every connection must open with the `EDCA` handshake *before*
+    /// its first codec frame or be refused with a typed
+    /// `code:"unauthorized"` reply.
+    pub auth_token: Option<String>,
+    /// Per-peer-IP concurrent connection cap (`--conns-per-peer`).
+    /// A peer over the cap gets one typed `code:"conn-limit"` frame and
+    /// an immediate close — no handler thread is spawned for it.
+    pub max_conns_per_peer: usize,
+    /// Idle-connection reaper (`--idle-timeout-ms`): a connection that
+    /// goes this long without completing a frame is answered with one
+    /// typed `code:"deadline"` frame and closed, so a stalled or
+    /// slow-loris peer cannot pin a handler slot. (A peer trickling
+    /// bytes faster than the read-timeout window is still bounded by
+    /// the 8 MiB frame cap.)
+    pub idle_timeout: Duration,
+    /// Deadline for completing the frame-zero handshake once its first
+    /// byte arrived; a truncated or stalled handshake is answered with
+    /// a typed reply instead of waiting forever.
+    pub handshake_timeout: Duration,
+    /// Write deadline for `watch` progress frames: a watcher that stops
+    /// reading is dropped with one best-effort `code:"deadline"` frame
+    /// instead of blocking the stream handler.
+    pub watch_write_timeout: Duration,
 }
 
 impl Default for ServeConfig {
@@ -157,8 +187,59 @@ impl Default for ServeConfig {
             format: Format::Json,
             max_queue_depth: 64,
             max_inflight_per_conn: 8,
+            bind: "127.0.0.1".to_string(),
+            auth_token: None,
+            max_conns_per_peer: 64,
+            idle_timeout: Duration::from_secs(300),
+            handshake_timeout: Duration::from_secs(5),
+            watch_write_timeout: Duration::from_secs(10),
         }
     }
+}
+
+/// Read and validate an `--auth-token-file`. One trailing newline
+/// (`\n` or `\r\n`) is tolerated — tokens get written by `echo` — but
+/// an empty file (or one that is empty after stripping it) is a startup
+/// error naming the path and byte offset, never an empty token; and a
+/// control or non-UTF-8 byte is rejected naming its exact offset, the
+/// same `path: byte N` shape the `--resume-dir` rescan errors use.
+pub fn load_auth_token(path: &Path) -> Result<String> {
+    let mut bytes = std::fs::read(path)
+        .with_context(|| format!("reading auth token file {}", path.display()))?;
+    if bytes.last() == Some(&b'\n') {
+        bytes.pop();
+        if bytes.last() == Some(&b'\r') {
+            bytes.pop();
+        }
+    }
+    ensure!(
+        !bytes.is_empty(),
+        "auth token file {}: empty token at byte 0 (an empty file is a startup error, \
+         not an empty token)",
+        path.display()
+    );
+    ensure!(
+        bytes.len() <= wire::MAX_TOKEN,
+        "auth token file {}: token of {} bytes exceeds the {}-byte cap",
+        path.display(),
+        bytes.len(),
+        wire::MAX_TOKEN
+    );
+    if let Some(off) = bytes.iter().position(|b| b.is_ascii_control()) {
+        bail!(
+            "auth token file {}: control byte 0x{:02x} at byte {off} (tokens are one \
+             line of printable text; is this a binary file?)",
+            path.display(),
+            bytes[off]
+        );
+    }
+    String::from_utf8(bytes).map_err(|e| {
+        let off = e.utf8_error().valid_up_to();
+        anyhow!(
+            "auth token file {}: invalid UTF-8 at byte {off}",
+            path.display()
+        )
+    })
 }
 
 // ---------- job specs ----------
@@ -432,7 +513,7 @@ fn parse_dataflows_field(req: &Json) -> Result<Vec<Dataflow>> {
 /// Unsigned-integer request field: accepts a JSON number (integral, in
 /// f64's exact range) or a decimal string (for full-range u64 seeds,
 /// matching the checkpoint convention).
-fn field_u64(j: &Json, key: &str, default: u64) -> Result<u64> {
+pub(crate) fn field_u64(j: &Json, key: &str, default: u64) -> Result<u64> {
     match j.get(key) {
         None => Ok(default),
         Some(Json::Num(v)) if *v >= 0.0 && v.fract() == 0.0 && *v < 9.007_199_254_740_992e15 => {
@@ -603,6 +684,8 @@ struct ServiceInner {
     shutdown: AtomicBool,
     pool: WorkPool,
     caches: SharedCacheRegistry,
+    /// Live connection count per peer IP, for the per-peer cap.
+    peers: Mutex<BTreeMap<IpAddr, usize>>,
 }
 
 /// A running `edc serve` daemon. [`start`](Service::start) binds the
@@ -617,17 +700,23 @@ pub struct Service {
 }
 
 impl Service {
-    /// Bind 127.0.0.1 and start serving. Creates `cfg.dir`, writes the
-    /// [`ADDR_FILE`], and — with `cfg.resume` — re-enqueues every job
-    /// snapshot found in the directory.
+    /// Bind `cfg.bind` (loopback by default) and start serving. Creates
+    /// `cfg.dir`, writes the [`ADDR_FILE`], and — with `cfg.resume` —
+    /// re-enqueues every job snapshot found in the directory. A
+    /// non-loopback bind without an auth token is refused.
     pub fn start(cfg: ServeConfig) -> Result<Service> {
         std::fs::create_dir_all(&cfg.dir)
             .with_context(|| format!("creating snapshot dir {}", cfg.dir.display()))?;
-        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
-            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        let listener = TcpListener::bind((cfg.bind.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.bind, cfg.port))?;
         let addr = listener
             .local_addr()
             .context("reading the bound address of the serve listener")?;
+        ensure!(
+            addr.ip().is_loopback() || cfg.auth_token.is_some(),
+            "refusing to serve on non-loopback {addr} without --auth-token-file; an \
+             unauthenticated daemon must stay on 127.0.0.1"
+        );
         let workers = if cfg.workers == 0 {
             std::thread::available_parallelism().map_or(4, |n| n.get())
         } else {
@@ -644,6 +733,7 @@ impl Service {
             shutdown: AtomicBool::new(false),
             pool: WorkPool::new(workers),
             caches: SharedCacheRegistry::new(),
+            peers: Mutex::new(BTreeMap::new()),
             cfg,
         });
         std::fs::write(inner.cfg.dir.join(ADDR_FILE), format!("{addr}\n")).with_context(|| {
@@ -715,13 +805,13 @@ impl Service {
 
 // ---------- request handling ----------
 
-fn ok_json() -> Json {
+pub(crate) fn ok_json() -> Json {
     let mut j = Json::obj();
     j.set("ok", Json::Bool(true));
     j
 }
 
-fn err_json(msg: &str) -> Json {
+pub(crate) fn err_json(msg: &str) -> Json {
     let mut j = Json::obj();
     j.set("ok", Json::Bool(false)).set("error", Json::Str(msg.to_string()));
     j
@@ -731,7 +821,7 @@ fn err_json(msg: &str) -> Json {
 /// `code` (`"busy"` = queue full, `"inflight"` = per-connection cap) and
 /// a flat `retry_after_ms` hint. Producing it is O(1) — admission
 /// control must stay cheap precisely when the daemon is saturated.
-fn busy_json(msg: &str, code: &str, retry_after_ms: u64) -> Json {
+pub(crate) fn busy_json(msg: &str, code: &str, retry_after_ms: u64) -> Json {
     let mut j = err_json(msg);
     j.set("code", Json::Str(code.to_string()))
         .set("retry_after_ms", Json::Num(retry_after_ms as f64));
@@ -741,7 +831,7 @@ fn busy_json(msg: &str, code: &str, retry_after_ms: u64) -> Json {
 /// Per-connection request context: which jobs this connection submitted,
 /// for the in-flight admission cap.
 #[derive(Default)]
-struct ConnState {
+pub(crate) struct ConnState {
     submitted: Vec<u64>,
 }
 
@@ -1594,18 +1684,148 @@ fn runner_loop(inner: &Arc<ServiceInner>) {
     }
 }
 
-fn accept_loop(
-    inner: &Arc<ServiceInner>,
+/// What the shared connection front-end — auth handshake, codec
+/// negotiation, frame loop, per-peer caps, idle reaper — needs from the
+/// daemon behind it. Implemented by the serve daemon's [`ServiceInner`]
+/// and the router's inner state, so a router front is byte-identical to
+/// a daemon front by construction (invariant 13 leans on this).
+pub(crate) trait FrontEnd: Send + Sync + 'static {
+    /// Per-connection handler state (the serve daemon tracks submitted
+    /// job ids here for its in-flight cap; the router needs none).
+    type Conn: Default + Send;
+    /// The shared secret connections must present in the `EDCA`
+    /// frame-zero handshake, if any.
+    fn auth_token(&self) -> Option<&str>;
+    /// Deadline for completing the handshake once its first byte arrived.
+    fn handshake_timeout(&self) -> Duration;
+    /// Idle-connection reaper budget (no completed frame for this long).
+    fn idle_timeout(&self) -> Duration;
+    /// Per-peer-IP concurrent connection cap.
+    fn max_conns_per_peer(&self) -> usize;
+    /// Whether the daemon has begun draining (connections stop looping).
+    fn shutting_down(&self) -> bool;
+    /// Live connection count per peer IP, for the per-peer cap.
+    fn peers(&self) -> &Mutex<BTreeMap<IpAddr, usize>>;
+    /// Handle one decoded frame: write exactly one response frame —
+    /// or, for streaming commands, a frame sequence — to `writer`.
+    /// `Err` drops the connection. (An associated fn taking the `Arc`
+    /// rather than a method: streaming handlers hold the daemon across
+    /// the stream, and `&Arc<Self>` is not a stable receiver type.)
+    fn handle_frame(
+        front: &Arc<Self>,
+        req: &Json,
+        codec: &'static dyn WireCodec,
+        writer: &mut TcpStream,
+        conn: &mut Self::Conn,
+    ) -> Result<()>;
+}
+
+impl FrontEnd for ServiceInner {
+    type Conn = ConnState;
+
+    fn auth_token(&self) -> Option<&str> {
+        self.cfg.auth_token.as_deref()
+    }
+
+    fn handshake_timeout(&self) -> Duration {
+        self.cfg.handshake_timeout
+    }
+
+    fn idle_timeout(&self) -> Duration {
+        self.cfg.idle_timeout
+    }
+
+    fn max_conns_per_peer(&self) -> usize {
+        self.cfg.max_conns_per_peer
+    }
+
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    fn peers(&self) -> &Mutex<BTreeMap<IpAddr, usize>> {
+        &self.peers
+    }
+
+    fn handle_frame(
+        front: &Arc<Self>,
+        req: &Json,
+        codec: &'static dyn WireCodec,
+        writer: &mut TcpStream,
+        conn: &mut ConnState,
+    ) -> Result<()> {
+        if req.str_or("cmd", "") == "watch" {
+            stream_watch(front, codec, writer, req)
+        } else {
+            write_frame(codec, writer, &front.handle(req, conn))
+        }
+    }
+}
+
+/// Releases one slot of a peer's connection budget when the handler
+/// thread finishes (however it finishes — RAII, not an epilogue call).
+struct PeerSlot<F: FrontEnd> {
+    front: Arc<F>,
+    ip: IpAddr,
+}
+
+impl<F: FrontEnd> Drop for PeerSlot<F> {
+    fn drop(&mut self) {
+        let mut peers = self.front.peers().lock();
+        if let Some(n) = peers.get_mut(&self.ip) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                peers.remove(&self.ip);
+            }
+        }
+    }
+}
+
+pub(crate) fn accept_loop<F: FrontEnd>(
+    front: &Arc<F>,
     listener: TcpListener,
     conns: &Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
 ) {
     for stream in listener.incoming() {
-        if inner.shutdown.load(Ordering::SeqCst) {
+        if front.shutting_down() {
             break;
         }
         let Ok(stream) = stream else { continue };
-        let inner = Arc::clone(inner);
-        let h = thread::spawn(move || serve_conn(&inner, stream));
+        let Ok(peer) = stream.peer_addr() else { continue };
+        // Per-peer connection cap, charged before a handler thread ever
+        // exists: an over-limit peer costs one typed frame, not a slot.
+        let ip = peer.ip();
+        let cap = front.max_conns_per_peer().max(1);
+        let admitted = {
+            let mut peers = front.peers().lock();
+            let n = peers.entry(ip).or_insert(0);
+            if *n >= cap {
+                false
+            } else {
+                *n += 1;
+                true
+            }
+        };
+        if !admitted {
+            let mut refused = stream;
+            let _ = refused.set_write_timeout(Some(Duration::from_millis(500)));
+            let _ = write_frame(
+                &wire::JsonWire,
+                &mut refused,
+                &busy_json(
+                    &format!("peer {ip} is at its connection cap ({cap}); close one or retry"),
+                    "conn-limit",
+                    500,
+                ),
+            );
+            continue;
+        }
+        let slot = PeerSlot { front: Arc::clone(front), ip };
+        let front = Arc::clone(front);
+        let h = thread::spawn(move || {
+            let _slot = slot;
+            serve_conn(&front, stream);
+        });
         let mut conns = conns.lock();
         // Reap finished connection handlers so a long-lived daemon's
         // handle list stays proportional to *live* connections, not to
@@ -1616,30 +1836,176 @@ fn accept_loop(
 }
 
 /// Encode and send one frame in the connection's codec.
-fn write_frame(codec: &dyn WireCodec, w: &mut TcpStream, msg: &Json) -> Result<()> {
+pub(crate) fn write_frame(codec: &dyn WireCodec, w: &mut TcpStream, msg: &Json) -> Result<()> {
     let frame = codec.encode(msg)?;
     w.write_all(&frame)?;
     w.flush()?;
     Ok(())
 }
 
-fn serve_conn(inner: &Arc<ServiceInner>, stream: TcpStream) {
+/// Pull more handshake bytes into `carry` (bounded by the handshake
+/// frame's maximum size), honoring the read-timeout window, the daemon
+/// shutdown flag and the handshake deadline.
+fn pull_handshake_bytes<F: FrontEnd>(
+    front: &F,
+    reader: &mut impl BufRead,
+    carry: &mut Vec<u8>,
+    deadline: &Deadline,
+) -> Result<(), WireError> {
+    if deadline.expired() {
+        return Err(WireError::Deadline(format!(
+            "handshake not completed in time ({} bytes arrived); closing the connection",
+            carry.len()
+        )));
+    }
+    match reader.fill_buf() {
+        Ok([]) => {
+            if carry.is_empty() {
+                // Closed before the first byte: nothing to answer.
+                Err(WireError::Io(std::io::Error::from(ErrorKind::UnexpectedEof)))
+            } else {
+                Err(WireError::Unauthorized(format!(
+                    "connection closed mid-handshake after {} bytes (truncated auth frame)",
+                    carry.len()
+                )))
+            }
+        }
+        Ok(chunk) => {
+            let room = (6 + wire::MAX_TOKEN).saturating_sub(carry.len()).max(1);
+            let take = chunk.len().min(room);
+            carry.extend_from_slice(&chunk[..take]);
+            reader.consume(take);
+            Ok(())
+        }
+        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+            if front.shutting_down() {
+                Err(WireError::Io(e))
+            } else {
+                Ok(()) // re-poll; the deadline bounds the total wait
+            }
+        }
+        Err(e) => Err(WireError::Io(e)),
+    }
+}
+
+/// Frame zero: the optional token handshake ([`wire::AUTH_MAGIC`]
+/// `EDCA` + u16 LE length + token), verified *before* codec
+/// negotiation. On success the handshake bytes are drained from `carry`
+/// and any surplus bytes stay there for [`wire::detect`]. All failures
+/// are typed: wrong/missing/unexpected token is `Unauthorized`, a
+/// stalled handshake is `Deadline` — never a hang, never a silent drop.
+fn auth_handshake<F: FrontEnd>(
+    front: &F,
+    reader: &mut impl BufRead,
+    carry: &mut Vec<u8>,
+) -> Result<(), WireError> {
+    let expected = front.auth_token();
+    // With no token required, a quiet pre-first-byte connection is an
+    // *idle* one (reaped on the generous idle budget), not a stalled
+    // handshake; with a token, the short handshake deadline applies.
+    let budget = if expected.is_some() { front.handshake_timeout() } else { front.idle_timeout() };
+    let deadline = Deadline::after(budget);
+    // `EDCA` and the binary codec's `EDCW` share three bytes, so keep
+    // pulling until the prefix diverges from the handshake magic or all
+    // four magic bytes are in hand.
+    loop {
+        let n = carry.len().min(wire::AUTH_MAGIC.len());
+        if carry[..n] != wire::AUTH_MAGIC[..n] {
+            // Not a handshake: these are codec bytes.
+            return match expected {
+                None => Ok(()),
+                Some(_) => Err(WireError::Unauthorized(
+                    "this daemon requires authentication: send the EDCA token handshake \
+                     (--auth-token-file) before the first codec frame"
+                        .to_string(),
+                )),
+            };
+        }
+        if n == wire::AUTH_MAGIC.len() {
+            break;
+        }
+        pull_handshake_bytes(front, reader, carry, &deadline)?;
+    }
+    let Some(expected) = expected else {
+        return Err(WireError::Unauthorized(
+            "this daemon was started without --auth-token-file and does not expect an \
+             EDCA auth handshake; connect without one"
+                .to_string(),
+        ));
+    };
+    while carry.len() < 6 {
+        pull_handshake_bytes(front, reader, carry, &deadline)?;
+    }
+    let len = u16::from_le_bytes([carry[4], carry[5]]) as usize;
+    if len == 0 || len > wire::MAX_TOKEN {
+        return Err(WireError::Unauthorized(format!(
+            "auth handshake announces a {len}-byte token (want 1..={})",
+            wire::MAX_TOKEN
+        )));
+    }
+    while carry.len() < 6 + len {
+        pull_handshake_bytes(front, reader, carry, &deadline)?;
+    }
+    let ok = wire::token_eq(&carry[6..6 + len], expected.as_bytes());
+    carry.drain(..6 + len);
+    if ok {
+        Ok(())
+    } else {
+        Err(WireError::Unauthorized("auth token mismatch".to_string()))
+    }
+}
+
+pub(crate) fn serve_conn<F: FrontEnd>(front: &Arc<F>, stream: TcpStream) {
     // A read timeout lets the handler notice daemon shutdown even while
     // a client holds an idle connection open.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
-    // Negotiate the codec from the first bytes without consuming them:
-    // the binary framing opens every frame with the EDCW magic, JSON
-    // requests open with '{'. The codec is then fixed for the life of
-    // the connection.
+    // Partial-frame bytes carried across read timeouts — a slow-loris
+    // writer trickling one frame over many 500ms windows still gets it
+    // reassembled, never dropped. The handshake shares the buffer: any
+    // surplus bytes it pulled flow straight into codec negotiation.
+    let mut carry: Vec<u8> = Vec::new();
+    // Frame zero: the token handshake, before any codec byte. Failures
+    // are answered in the always-compiled JSON framing — by definition
+    // no codec has been negotiated yet.
+    match auth_handshake(&**front, &mut reader, &mut carry) {
+        Ok(()) => {}
+        Err(WireError::Unauthorized(msg)) => {
+            let mut j = err_json(&msg);
+            j.set("code", Json::Str("unauthorized".into()));
+            let _ = write_frame(&wire::JsonWire, &mut writer, &j);
+            return;
+        }
+        Err(WireError::Deadline(msg)) => {
+            let mut j = err_json(&msg);
+            j.set("code", Json::Str("deadline".into()));
+            let _ = write_frame(&wire::JsonWire, &mut writer, &j);
+            return;
+        }
+        Err(_) => return,
+    }
+    // Negotiate the codec from the first payload byte without consuming
+    // it: the binary framing opens every frame with the EDCW magic,
+    // JSON requests open with '{'. The codec is then fixed for the life
+    // of the connection.
+    let started = Instant::now();
     let kind = loop {
+        if let Some(first) = carry.first() {
+            break wire::detect(std::slice::from_ref(first));
+        }
         match reader.fill_buf() {
             Ok([]) => return, // closed before the first byte
             Ok(first) => break wire::detect(first),
             Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                if inner.shutdown.load(Ordering::SeqCst) {
+                if front.shutting_down() {
+                    return;
+                }
+                if started.elapsed() >= front.idle_timeout() {
+                    let mut j = err_json("connection idle past the daemon's idle timeout; closing");
+                    j.set("code", Json::Str("deadline".into()));
+                    let _ = write_frame(&wire::JsonWire, &mut writer, &j);
                     return;
                 }
             }
@@ -1655,26 +2021,23 @@ fn serve_conn(inner: &Arc<ServiceInner>, stream: TcpStream) {
             return;
         }
     };
-    let mut conn = ConnState::default();
-    // Partial-frame bytes carried across read timeouts — a slow-loris
-    // writer trickling one frame over many 500ms windows still gets it
-    // reassembled, never dropped.
-    let mut carry: Vec<u8> = Vec::new();
+    let mut conn = F::Conn::default();
+    // The idle reaper's clock: reset on every *completed* frame, so both
+    // a silent connection and a stalled mid-frame slow-loris hit the
+    // deadline (a peer trickling bytes inside every read-timeout window
+    // is instead bounded by the MAX_FRAME cap).
+    let mut last_frame_at = Instant::now();
     loop {
         match codec.read_frame(&mut reader, &mut carry) {
             Ok(Some(req)) => {
-                let wrote = if req.str_or("cmd", "") == "watch" {
-                    stream_watch(inner, codec, &mut writer, &req)
-                } else {
-                    write_frame(codec, &mut writer, &inner.handle(&req, &mut conn))
-                };
-                if wrote.is_err() {
+                last_frame_at = Instant::now();
+                if F::handle_frame(front, &req, codec, &mut writer, &mut conn).is_err() {
                     break;
                 }
                 // Close after the response once a drain has begun — a
                 // client polling faster than the read timeout must not
                 // keep this handler (and Service::wait) alive.
-                if inner.shutdown.load(Ordering::SeqCst) {
+                if front.shutting_down() {
                     break;
                 }
             }
@@ -1692,10 +2055,28 @@ fn serve_conn(inner: &Arc<ServiceInner>, stream: TcpStream) {
                 let _ = write_frame(codec, &mut writer, &err_json(&msg));
                 break;
             }
+            // Codecs never produce these two mid-stream today (they are
+            // the handshake/reaper taxonomy), but the contract is the
+            // same as Fatal: answer once, close.
+            Err(WireError::Unauthorized(msg)) | Err(WireError::Deadline(msg)) => {
+                let _ = write_frame(codec, &mut writer, &err_json(&msg));
+                break;
+            }
             Err(WireError::Io(e))
                 if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
             {
-                if inner.shutdown.load(Ordering::SeqCst) {
+                if front.shutting_down() {
+                    break;
+                }
+                if last_frame_at.elapsed() >= front.idle_timeout() {
+                    // Idle reaper: one typed frame, then close — a
+                    // stalled peer can't pin this handler slot.
+                    let mut j = err_json(&format!(
+                        "no complete frame for {:?} (idle timeout); closing the connection",
+                        front.idle_timeout()
+                    ));
+                    j.set("code", Json::Str("deadline".into()));
+                    let _ = write_frame(codec, &mut writer, &j);
                     break;
                 }
             }
@@ -1723,6 +2104,32 @@ fn stream_watch(
         Ok(id) => id,
         Err(e) => return write_frame(codec, writer, &err_json(&format!("{e:#}"))),
     };
+    // Bound every progress write: a watcher that stops reading fills the
+    // socket buffer and would otherwise block this handler forever. On a
+    // stalled write we try to leave one typed frame behind (best-effort
+    // — the peer likely is not reading) and drop the stream.
+    writer.set_write_timeout(Some(inner.cfg.watch_write_timeout))?;
+    let out = stream_watch_frames(inner, codec, writer, id);
+    if let Err(e) = &out {
+        let mut j = err_json(&format!(
+            "watch writer stalled past the {:?} write deadline ({e}); dropping the stream",
+            inner.cfg.watch_write_timeout
+        ));
+        j.set("code", Json::Str("deadline".into()));
+        let _ = write_frame(codec, writer, &j);
+    }
+    writer.set_write_timeout(None)?;
+    out
+}
+
+/// The watch frame loop proper (split out so [`stream_watch`] can wrap
+/// it with the write-deadline arm/restore).
+fn stream_watch_frames(
+    inner: &Arc<ServiceInner>,
+    codec: &dyn WireCodec,
+    writer: &mut TcpStream,
+    id: u64,
+) -> Result<()> {
     let keepalive = Duration::from_millis(500);
     let mut last: Option<(&'static str, usize, usize)> = None;
     let mut last_emit = Instant::now();
@@ -1751,6 +2158,8 @@ fn stream_watch(
                 .set("state", Json::Str(key.0.into()));
             return write_frame(codec, writer, &end);
         }
+        // Fixed 50ms status-poll cadence, not a reconnect/retry loop.
+        // edc-lints: allow(retry-without-backoff)
         std::thread::sleep(Duration::from_millis(50));
     }
 }
@@ -1771,6 +2180,24 @@ pub struct Client {
     reader: BufReader<TcpStream>,
     codec: &'static dyn WireCodec,
     carry: Vec<u8>,
+    /// What [`reconnect`](Client::reconnect) re-dials: the original
+    /// address, codec kind and auth token.
+    addr: String,
+    token: Option<String>,
+    /// Seed of the retry backoff's jitter stream (never ambient
+    /// entropy; defaults to a hash of the address).
+    retry_seed: u64,
+}
+
+/// Deterministic per-address jitter seed (FNV-1a over the address), so
+/// clients of different daemons decorrelate without ambient entropy.
+fn retry_seed_for(addr: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in addr.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 impl Client {
@@ -1782,16 +2209,89 @@ impl Client {
 
     /// Connect speaking a specific wire codec (`--wire json|binary`).
     pub fn connect_with(addr: &str, wire: WireKind) -> Result<Client> {
+        Client::connect_opts(addr, wire, None)
+    }
+
+    /// Connect with every knob: codec and — for daemons started with
+    /// `--auth-token-file` — the shared token, sent as the `EDCA`
+    /// frame-zero handshake before anything else.
+    pub fn connect_opts(addr: &str, wire: WireKind, token: Option<&str>) -> Result<Client> {
         let codec = wire::codec_for(wire)?;
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to edc serve at {addr} (is it running?)"))?;
+        Client::finish_connect(stream, addr, codec, token)
+    }
+
+    /// Connect with a hard deadline on the TCP connect itself — the
+    /// router's health probe, where a dead backend must cost at most
+    /// the deadline, never a kernel-default connect timeout.
+    pub fn connect_deadline(
+        addr: &str,
+        wire: WireKind,
+        token: Option<&str>,
+        deadline: Duration,
+    ) -> Result<Client> {
+        let codec = wire::codec_for(wire)?;
+        let sock: SocketAddr = addr
+            .parse()
+            .with_context(|| format!("'{addr}' is not an ip:port address"))?;
+        let stream = TcpStream::connect_timeout(&sock, deadline)
+            .with_context(|| format!("connecting to edc serve at {addr} (is it running?)"))?;
+        Client::finish_connect(stream, addr, codec, token)
+    }
+
+    fn finish_connect(
+        stream: TcpStream,
+        addr: &str,
+        codec: &'static dyn WireCodec,
+        token: Option<&str>,
+    ) -> Result<Client> {
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { writer: stream, reader, codec, carry: Vec::new() })
+        let mut client = Client {
+            writer: stream,
+            reader,
+            codec,
+            carry: Vec::new(),
+            addr: addr.to_string(),
+            token: token.map(str::to_string),
+            retry_seed: retry_seed_for(addr),
+        };
+        if let Some(token) = client.token.clone() {
+            let frame = wire::encode_auth(&token)?;
+            client.writer.write_all(&frame)?;
+            client.writer.flush()?;
+        }
+        Ok(client)
     }
 
     /// The negotiated wire codec's name (`"json"` / `"binary"`).
     pub fn wire(&self) -> &'static str {
         self.codec.name()
+    }
+
+    /// Override the jitter seed of this client's retry backoff (default:
+    /// a hash of the address). Callers running many clients pass
+    /// distinct seeds so their retry storms decorrelate.
+    pub fn set_retry_seed(&mut self, seed: u64) {
+        self.retry_seed = seed;
+    }
+
+    /// Bound how long [`request`](Client::request) blocks on the reply
+    /// (`None` = forever). A health probe sets this so a wedged daemon
+    /// is a timely `Err`, not a hang.
+    pub fn set_request_timeout(&self, d: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(d)?;
+        Ok(())
+    }
+
+    /// Drop the connection and dial the same address again (same codec,
+    /// same token, same jitter seed). Used by the retrying wrappers.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let seed = self.retry_seed;
+        let mut fresh = Client::connect_opts(&self.addr, self.codec.kind(), self.token.as_deref())?;
+        fresh.retry_seed = seed;
+        *self = fresh;
+        Ok(())
     }
 
     /// Send one request object, read one response object.
@@ -1851,15 +2351,63 @@ impl Client {
     /// std::fs::remove_dir_all(&dir).ok();
     /// ```
     pub fn submit(&mut self, fields: &Json) -> Result<u64> {
+        self.submit_with_retries(fields, 0)
+    }
+
+    /// [`submit`](Client::submit) with up to `retries` retries
+    /// (`edc submit --retries N`): typed `busy`/`inflight`/`degraded`/
+    /// `conn-limit` rejections honor the daemon's `retry_after_ms` hint
+    /// as a floor under decorrelated-jitter backoff, and transport
+    /// failures reconnect. Transport-failure retries are at-least-once:
+    /// if the daemon accepted the submit but the reply was lost, the
+    /// retry enqueues a second (deterministic, so identical) job.
+    pub fn submit_with_retries(&mut self, fields: &Json, retries: u32) -> Result<u64> {
         let mut req = fields.clone();
         ensure!(
             matches!(req, Json::Obj(_)),
             "submit fields must be a JSON object"
         );
         req.set("cmd", Json::Str("submit".into()));
-        let resp = self.request(&req)?;
+        let resp = self.request_retrying(&req, retries)?;
         ensure_ok(&resp)?;
         Ok(resp.num_or("job", 0.0) as u64)
+    }
+
+    /// [`request`](Client::request) retried up to `retries` times with
+    /// decorrelated-jitter backoff — the shared retry layer under
+    /// `submit --retries`, `status --retries` and the `watch`
+    /// reconnect. A typed rejection's `retry_after_ms` hint floors the
+    /// next delay; a transport failure redials the daemon.
+    pub fn request_retrying(&mut self, req: &Json, retries: u32) -> Result<Json> {
+        let mut backoff =
+            Backoff::new(Duration::from_millis(50), Duration::from_secs(2), self.retry_seed);
+        let mut attempt: u32 = 0;
+        loop {
+            match self.request(req) {
+                Ok(resp) => {
+                    let code = resp.str_or("code", "");
+                    let retryable =
+                        matches!(code.as_str(), "busy" | "inflight" | "degraded" | "conn-limit");
+                    if !(retryable && attempt < retries) {
+                        return Ok(resp);
+                    }
+                    attempt += 1;
+                    let hint = resp.num_or("retry_after_ms", 0.0) as u64;
+                    std::thread::sleep(backoff.next_delay_after(hint));
+                }
+                Err(e) => {
+                    if attempt >= retries {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    std::thread::sleep(backoff.next_delay());
+                    // A failed redial leaves the stale connection in
+                    // place; the next request() fails fast and consumes
+                    // another attempt, so the loop stays bounded.
+                    let _ = self.reconnect();
+                }
+            }
+        }
     }
 
     /// Status of one job (`Some(id)`) or the whole daemon (`None`).
@@ -1896,6 +2444,25 @@ impl Client {
     /// silence for longer than `timeout` fails (the daemon keepalives
     /// every ~500ms, so that is a dead daemon, not jitter).
     pub fn watch(&mut self, job: u64, timeout: Duration) -> Result<Vec<Json>> {
+        let mut frames = Vec::new();
+        self.watch_frames(job, timeout, |f| {
+            frames.push(f.clone());
+            Ok(())
+        })?;
+        Ok(frames)
+    }
+
+    /// Streaming form of [`watch`](Client::watch): `on_frame` is called
+    /// with each frame (progress frames, then the terminal `end` frame)
+    /// as it arrives — this is what the router's watch proxy forwards
+    /// from. An `Err` from `on_frame` (e.g. the downstream writer
+    /// stalled) aborts the stream and is returned as-is.
+    pub fn watch_frames(
+        &mut self,
+        job: u64,
+        timeout: Duration,
+        mut on_frame: impl FnMut(&Json) -> Result<()>,
+    ) -> Result<()> {
         let mut req = cmd_obj("watch");
         req.set("job", Json::Num(job as f64));
         let frame = self.codec.encode(&req)?;
@@ -1907,7 +2474,6 @@ impl Client {
             .get_ref()
             .set_read_timeout(Some(Duration::from_millis(500)))?;
         let mut last_frame = Instant::now();
-        let mut frames = Vec::new();
         let out = loop {
             match self.codec.read_frame(&mut self.reader, &mut self.carry) {
                 Ok(Some(f)) => {
@@ -1919,9 +2485,11 @@ impl Client {
                     }
                     last_frame = Instant::now();
                     let done = f.str_or("stream", "") == "end";
-                    frames.push(f);
+                    if let Err(e) = on_frame(&f) {
+                        break Err(e);
+                    }
                     if done {
-                        break Ok(std::mem::take(&mut frames));
+                        break Ok(());
                     }
                 }
                 Ok(None) => break Err(anyhow!("daemon closed the connection mid-watch")),
@@ -1941,6 +2509,43 @@ impl Client {
         out
     }
 
+    /// [`watch`](Client::watch), redialing up to `retries` times on a
+    /// dropped stream (the same decorrelated-jitter backoff as
+    /// [`request_retrying`](Client::request_retrying)): a router
+    /// failing over mid-stream resumes the watch on a fresh
+    /// connection. Frames from every attempt are concatenated; the
+    /// caller still sees exactly one terminal `end` frame.
+    pub fn watch_retrying(
+        &mut self,
+        job: u64,
+        timeout: Duration,
+        retries: u32,
+    ) -> Result<Vec<Json>> {
+        let mut backoff = Backoff::new(
+            Duration::from_millis(50),
+            Duration::from_secs(2),
+            self.retry_seed ^ job,
+        );
+        let mut attempt: u32 = 0;
+        let mut all: Vec<Json> = Vec::new();
+        loop {
+            match self.watch(job, timeout) {
+                Ok(mut frames) => {
+                    all.append(&mut frames);
+                    return Ok(all);
+                }
+                Err(e) => {
+                    if attempt >= retries {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    std::thread::sleep(backoff.next_delay());
+                    let _ = self.reconnect();
+                }
+            }
+        }
+    }
+
     /// Request a graceful shutdown (queued + running jobs drain into
     /// resumable snapshots).
     pub fn shutdown(&mut self) -> Result<Json> {
@@ -1957,6 +2562,14 @@ impl Client {
     /// directly to observe a drain.
     pub fn wait_done(&mut self, job: u64, timeout: Duration) -> Result<Json> {
         let start = Instant::now();
+        // Jittered poll cadence (25..250ms): N clients waiting on the
+        // same daemon spread their status polls instead of beating on
+        // it in lockstep.
+        let mut backoff = Backoff::new(
+            Duration::from_millis(25),
+            Duration::from_millis(250),
+            self.retry_seed ^ job,
+        );
         loop {
             let s = self.status(Some(job))?;
             match s.str_or("state", "").as_str() {
@@ -1968,12 +2581,12 @@ impl Client {
                 "job {job} did not finish within {timeout:?} (last state: {})",
                 s.str_or("state", "?")
             );
-            std::thread::sleep(Duration::from_millis(50));
+            std::thread::sleep(backoff.next_delay());
         }
     }
 }
 
-fn cmd_obj(cmd: &str) -> Json {
+pub(crate) fn cmd_obj(cmd: &str) -> Json {
     let mut j = Json::obj();
     j.set("cmd", Json::Str(cmd.to_string()));
     j
@@ -2106,5 +2719,55 @@ mod tests {
         assert_eq!(j.str_or("code", ""), "busy");
         assert_eq!(j.num_or("retry_after_ms", 0.0) as u64, 250);
         assert!(ensure_ok(&j).is_err());
+    }
+
+    fn tmp_token_file(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("edc-auth-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn auth_token_file_tolerates_one_trailing_newline() {
+        let p = tmp_token_file("plain", b"s3cret");
+        assert_eq!(load_auth_token(&p).unwrap(), "s3cret");
+        let p = tmp_token_file("unix", b"s3cret\n");
+        assert_eq!(load_auth_token(&p).unwrap(), "s3cret");
+        let p = tmp_token_file("dos", b"s3cret\r\n");
+        assert_eq!(load_auth_token(&p).unwrap(), "s3cret");
+    }
+
+    #[test]
+    fn auth_token_file_errors_name_path_and_byte_offset() {
+        // Empty file (or newline-only file) is a startup error naming
+        // byte 0, not an empty token.
+        for bytes in [&b""[..], b"\n"] {
+            let p = tmp_token_file("empty", bytes);
+            let msg = format!("{:#}", load_auth_token(&p).unwrap_err());
+            assert!(msg.contains(&p.display().to_string()), "no path in: {msg}");
+            assert!(msg.contains("byte 0"), "no offset in: {msg}");
+            assert!(msg.contains("startup error"), "wrong framing: {msg}");
+        }
+        // An interior control byte is named by its exact offset.
+        let p = tmp_token_file("ctl", b"abc\x01def");
+        let msg = format!("{:#}", load_auth_token(&p).unwrap_err());
+        assert!(msg.contains(&p.display().to_string()), "no path in: {msg}");
+        assert!(msg.contains("byte 3"), "no offset in: {msg}");
+        // Invalid UTF-8 names the first bad byte.
+        let p = tmp_token_file("utf8", b"ok\xffno");
+        let msg = format!("{:#}", load_auth_token(&p).unwrap_err());
+        assert!(msg.contains("byte 2"), "no offset in: {msg}");
+        // A missing file names the path too.
+        let gone = std::env::temp_dir().join("edc-auth-test-definitely-missing");
+        let msg = format!("{:#}", load_auth_token(&gone).unwrap_err());
+        assert!(msg.contains(&gone.display().to_string()), "no path in: {msg}");
+    }
+
+    #[test]
+    fn retry_seeds_are_deterministic_per_address() {
+        assert_eq!(retry_seed_for("127.0.0.1:7070"), retry_seed_for("127.0.0.1:7070"));
+        assert_ne!(retry_seed_for("127.0.0.1:7070"), retry_seed_for("127.0.0.1:7071"));
     }
 }

@@ -34,6 +34,17 @@
 //! timeout surfaces mid-frame, and `read_frame`'s caller just retries
 //! with the same carry buffer — partial frames are never dropped, which
 //! is what keeps slow-loris clients correct instead of wedged.
+//!
+//! Two transport-robustness variants extend the taxonomy (PR 10): a
+//! failed frame-zero token handshake is [`WireError::Unauthorized`]
+//! (answered once in JSON framing — no codec is negotiated yet — then
+//! closed), and an elapsed read/write deadline (idle connection,
+//! unfinished handshake, stalled `watch` reader) is
+//! [`WireError::Deadline`] — answered once on a best-effort basis, then
+//! closed, so a slow or dead peer can never pin a connection slot. The
+//! handshake itself is [`AUTH_MAGIC`] `EDCA` + a little-endian `u16`
+//! token length + the token bytes, sent *before* the first codec frame;
+//! [`token_eq`] compares tokens in constant time over the content.
 
 use crate::snapshot::{self, Format};
 use crate::util::json::{self, Json};
@@ -52,6 +63,50 @@ pub const WIRE_MAGIC: [u8; 4] = *b"EDCW";
 /// A frame announcing or reaching more than this is rejected with a
 /// typed error before it can balloon daemon memory.
 pub const MAX_FRAME: usize = 8 * 1024 * 1024;
+
+/// First bytes of the optional frame-zero auth handshake. Distinct from
+/// both the wire-frame magic (`EDCW`) and the snapshot-container magic
+/// (`EDC4`): this precedes codec negotiation entirely.
+pub const AUTH_MAGIC: [u8; 4] = *b"EDCA";
+
+/// Hard cap on the auth token's byte length. The handshake length field
+/// is a `u16`, but a daemon should never buffer anywhere near that for
+/// an unauthenticated peer.
+pub const MAX_TOKEN: usize = 4096;
+
+/// Encode the frame-zero auth handshake: [`AUTH_MAGIC`] `EDCA`, a
+/// little-endian `u16` token byte length, then the token bytes. Sent by
+/// the client before its first codec frame; the daemon reads and
+/// verifies it before [`detect`] ever sees a byte.
+pub fn encode_auth(token: &str) -> anyhow::Result<Vec<u8>> {
+    let bytes = token.as_bytes();
+    anyhow::ensure!(
+        !bytes.is_empty() && bytes.len() <= MAX_TOKEN,
+        "auth token must be 1..={MAX_TOKEN} bytes, got {}",
+        bytes.len()
+    );
+    let mut frame = Vec::with_capacity(6 + bytes.len());
+    frame.extend_from_slice(&AUTH_MAGIC);
+    #[allow(clippy::cast_possible_truncation)] // ensured <= MAX_TOKEN above
+    frame.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+    frame.extend_from_slice(bytes);
+    Ok(frame)
+}
+
+/// Constant-time-over-content token comparison: the byte length is
+/// public (the handshake carries it in the clear), but every content
+/// byte is XOR-folded so the comparison's timing leaks nothing about
+/// *which* byte first differs.
+pub fn token_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut diff: u8 = 0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        diff |= x ^ y;
+    }
+    diff == 0
+}
 
 /// Which wire codec a client speaks (`--wire json|binary`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -94,13 +149,25 @@ pub enum WireError {
     /// The *framing* is broken (truncated, oversized, wrong magic):
     /// answer with a typed error frame, then close.
     Fatal(String),
+    /// The frame-zero token handshake failed (absent where required,
+    /// malformed, oversized, or a token mismatch): answer once with a
+    /// typed error frame in JSON framing (no codec is negotiated before
+    /// the handshake completes), then close.
+    Unauthorized(String),
+    /// A read or write deadline elapsed (idle connection, unfinished
+    /// handshake, stalled watch reader): best-effort typed error frame,
+    /// then close — the peer must never pin a connection slot.
+    Deadline(String),
 }
 
 impl fmt::Display for WireError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             WireError::Io(e) => write!(f, "io error: {e}"),
-            WireError::Malformed(m) | WireError::Fatal(m) => f.write_str(m),
+            WireError::Malformed(m)
+            | WireError::Fatal(m)
+            | WireError::Unauthorized(m)
+            | WireError::Deadline(m) => f.write_str(m),
         }
     }
 }
@@ -451,6 +518,9 @@ impl FaultTransport {
                 for piece in frame.chunks((*chunk).max(1)) {
                     self.writer.write_all(piece)?;
                     self.writer.flush()?;
+                    // Deliberately-paced hostile writer (fault injection),
+                    // not a retry loop.
+                    // edc-lints: allow(retry-without-backoff)
                     std::thread::sleep(*delay);
                 }
                 Ok(())
@@ -582,6 +652,26 @@ mod tests {
         magic_first.append(&mut json_line);
         let err = read_all(&JsonWire, &magic_first).unwrap_err();
         assert!(err.to_string().contains("codec mismatch"), "{err}");
+    }
+
+    #[test]
+    fn auth_handshake_layout_and_limits() {
+        let frame = encode_auth("sekrit").unwrap();
+        assert_eq!(&frame[..4], &AUTH_MAGIC);
+        assert_eq!(u16::from_le_bytes([frame[4], frame[5]]), 6);
+        assert_eq!(&frame[6..], b"sekrit");
+        assert!(encode_auth("").is_err(), "empty token is never sendable");
+        assert!(encode_auth(&"x".repeat(MAX_TOKEN + 1)).is_err());
+        assert_eq!(encode_auth(&"x".repeat(MAX_TOKEN)).unwrap().len(), 6 + MAX_TOKEN);
+    }
+
+    #[test]
+    fn token_eq_matches_exact_bytes_only() {
+        assert!(token_eq(b"abc", b"abc"));
+        assert!(!token_eq(b"abc", b"abd"));
+        assert!(!token_eq(b"abc", b"ab"));
+        assert!(!token_eq(b"", b"a"));
+        assert!(token_eq(b"", b""));
     }
 
     #[test]

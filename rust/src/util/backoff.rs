@@ -1,0 +1,312 @@
+//! Deadlines, decorrelated-jitter retry backoff, and the per-backend
+//! circuit breaker the router daemon drives its health state machine
+//! with.
+//!
+//! Everything here is deterministic given a seed: jitter comes from
+//! [`util::rng::Rng`](crate::util::rng) (never ambient entropy — lint
+//! rule 2), and the [`Breaker`] takes time as a caller-supplied logical
+//! clock in milliseconds rather than sampling `Instant::now` itself.
+//! That split is what lets `tests/loom_models.rs` model-check the
+//! healthy → degraded → quarantined transitions with a counter for a
+//! clock, while the router's health loop feeds it real elapsed
+//! milliseconds. The breaker's interior state lives behind the
+//! [`util::sync`](crate::util::sync) shim so loom sees the real lock
+//! protocol, not a transliteration.
+//!
+//! The retry policy is "decorrelated jitter" (the AWS architecture-blog
+//! variant): each delay is uniform in `[base, 3 * previous]`, clamped to
+//! `[base, cap]`. Compared with plain exponential backoff it decorrelates
+//! a thundering herd of clients that all saw the same `retry_after_ms`
+//! hint, while still growing the expected delay geometrically.
+
+use crate::util::rng::Rng;
+use crate::util::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A point in time a blocking operation must not run past.
+///
+/// Thin wrapper over `Instant` so call sites read as intent
+/// (`deadline.expired()`) and so the remaining budget can be handed to
+/// `set_read_timeout`-style APIs without re-deriving it.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `d` from now.
+    pub fn after(d: Duration) -> Deadline {
+        Deadline { at: Instant::now() + d }
+    }
+
+    /// Time left before the deadline, zero once passed.
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(Instant::now())
+    }
+
+    /// Whether the deadline has passed.
+    pub fn expired(&self) -> bool {
+        self.remaining() == Duration::ZERO
+    }
+
+    /// `remaining()` clamped below by one millisecond, for APIs where a
+    /// zero timeout means "wait forever" (`set_read_timeout`).
+    pub fn remaining_or_min(&self) -> Duration {
+        self.remaining().max(Duration::from_millis(1))
+    }
+}
+
+/// Decorrelated-jitter retry delays: each delay is uniform in
+/// `[base, 3 * previous]`, clamped to `[base, cap]`.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base_ms: u64,
+    cap_ms: u64,
+    prev_ms: u64,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// `base`/`cap` bound every delay; `seed` makes the jitter stream
+    /// replayable (clients derive it from their RNG, tests pin it).
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        let base_ms = (base.as_millis() as u64).max(1);
+        let cap_ms = (cap.as_millis() as u64).max(base_ms);
+        Backoff { base_ms, cap_ms, prev_ms: base_ms, rng: Rng::new(seed) }
+    }
+
+    /// Next delay in the decorrelated-jitter sequence.
+    pub fn next_delay(&mut self) -> Duration {
+        let hi = (self.prev_ms.saturating_mul(3)).clamp(self.base_ms + 1, self.cap_ms.max(self.base_ms + 1));
+        let pick = self.rng.range(self.base_ms as f64, hi as f64) as u64;
+        self.prev_ms = pick.clamp(self.base_ms, self.cap_ms);
+        Duration::from_millis(self.prev_ms)
+    }
+
+    /// Next delay, but never shorter than a server-supplied
+    /// `retry_after_ms` hint — honoring the daemon's own estimate of
+    /// when capacity frees up while keeping the jitter on top.
+    pub fn next_delay_after(&mut self, retry_after_ms: u64) -> Duration {
+        // Let the hint also raise the floor of future delays, so a
+        // client retrying against a saturated queue ramps from the
+        // server's estimate instead of from `base`.
+        self.prev_ms = self.prev_ms.max(retry_after_ms.min(self.cap_ms));
+        self.next_delay().max(Duration::from_millis(retry_after_ms))
+    }
+
+    /// Reset to the base delay (after a success).
+    pub fn reset(&mut self) {
+        self.prev_ms = self.base_ms;
+    }
+}
+
+/// Health of one routed backend, as the router's circuit breaker sees
+/// it. Transitions (all driven by [`Breaker`]):
+///
+/// ```text
+/// Healthy --failure--> Degraded --failure (strikes >= threshold)--> Quarantined
+///    ^                    |                                             |
+///    +----- success ------+<------- probe success (via on_success) -----+
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Recent probes and requests succeeded; route freely.
+    Healthy,
+    /// Under the strike threshold: still admitted, but suspect.
+    Degraded,
+    /// Tripped: no traffic until a jittered-backoff probe succeeds.
+    Quarantined,
+}
+
+impl BreakerState {
+    pub fn label(self) -> &'static str {
+        match self {
+            BreakerState::Healthy => "healthy",
+            BreakerState::Degraded => "degraded",
+            BreakerState::Quarantined => "quarantined",
+        }
+    }
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    strikes: u32,
+    /// Logical-clock instant (ms) at which a quarantined backend may be
+    /// re-probed. Meaningless outside `Quarantined`.
+    probe_at_ms: u64,
+    backoff: Backoff,
+}
+
+/// Circuit breaker for one backend: counts consecutive failures,
+/// quarantines at a threshold, and schedules re-probes with
+/// decorrelated-jitter exponential backoff.
+///
+/// Time is a caller-supplied monotone `now_ms`; the breaker never reads
+/// a clock. Interior mutability is a [`util::sync::Mutex`]
+/// (crate::util::sync), so the health loop, the routing path, and the
+/// loom model all contend on the real lock.
+pub struct Breaker {
+    inner: Mutex<BreakerInner>,
+    threshold: u32,
+}
+
+impl Breaker {
+    /// `threshold` consecutive failures trip the breaker; probe delays
+    /// jitter in `[probe_base, probe_cap]`, growing per failed probe.
+    pub fn new(threshold: u32, probe_base: Duration, probe_cap: Duration, seed: u64) -> Breaker {
+        Breaker {
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Healthy,
+                strikes: 0,
+                probe_at_ms: 0,
+                backoff: Backoff::new(probe_base, probe_cap, seed),
+            }),
+            threshold: threshold.max(1),
+        }
+    }
+
+    /// A request or probe succeeded: fully reset to `Healthy`.
+    pub fn on_success(&self) {
+        let mut g = self.inner.lock();
+        g.state = BreakerState::Healthy;
+        g.strikes = 0;
+        g.backoff.reset();
+    }
+
+    /// A request or probe failed at logical time `now_ms`. Returns the
+    /// state after the transition, so callers can act on the
+    /// degraded→quarantined edge (e.g. fail over in-flight jobs).
+    pub fn on_failure(&self, now_ms: u64) -> BreakerState {
+        let mut g = self.inner.lock();
+        g.strikes = g.strikes.saturating_add(1);
+        if g.strikes >= self.threshold {
+            g.state = BreakerState::Quarantined;
+            let delay = g.backoff.next_delay();
+            g.probe_at_ms = now_ms.saturating_add(delay.as_millis() as u64);
+        } else {
+            g.state = BreakerState::Degraded;
+        }
+        g.state
+    }
+
+    /// Whether new work may be routed here (`Healthy` or `Degraded`).
+    pub fn admit(&self) -> bool {
+        self.inner.lock().state != BreakerState::Quarantined
+    }
+
+    /// Whether a quarantined backend's backoff has elapsed and it should
+    /// be pinged again. Always false outside `Quarantined`.
+    pub fn probe_due(&self, now_ms: u64) -> bool {
+        let g = self.inner.lock();
+        g.state == BreakerState::Quarantined && now_ms >= g.probe_at_ms
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().state
+    }
+
+    /// Consecutive-failure count (diagnostics / `status` reporting).
+    pub fn strikes(&self) -> u32 {
+        self.inner.lock().strikes
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::after(Duration::from_millis(20));
+        assert!(!d.expired());
+        assert!(d.remaining() <= Duration::from_millis(20));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Duration::ZERO);
+        assert_eq!(d.remaining_or_min(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_deterministic() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(500);
+        let mut a = Backoff::new(base, cap, 42);
+        let mut b = Backoff::new(base, cap, 42);
+        let mut grew = false;
+        for _ in 0..32 {
+            let da = a.next_delay();
+            assert_eq!(da, b.next_delay(), "same seed, same jitter stream");
+            assert!((base..=cap).contains(&da), "delay {da:?} outside [{base:?}, {cap:?}]");
+            grew |= da > base;
+        }
+        assert!(grew, "decorrelated jitter should grow past the base at least once");
+        let mut c = Backoff::new(base, cap, 43);
+        let diverges = (0..8).any(|_| a.next_delay() != c.next_delay());
+        assert!(diverges, "different seeds should decorrelate");
+    }
+
+    #[test]
+    fn backoff_honors_retry_after_hint() {
+        let mut b = Backoff::new(Duration::from_millis(5), Duration::from_secs(2), 7);
+        let d = b.next_delay_after(250);
+        assert!(d >= Duration::from_millis(250), "hint is a floor, got {d:?}");
+        assert!(d <= Duration::from_secs(2));
+        // The hint also ratchets the sequence: the next plain delay
+        // jitters from the hinted floor, not from base.
+        assert!(b.next_delay() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn backoff_reset_returns_to_base() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 1);
+        for _ in 0..8 {
+            b.next_delay();
+        }
+        b.reset();
+        // First post-reset delay is drawn from [base, 3*base].
+        assert!(b.next_delay() <= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn breaker_trips_at_threshold_and_reprobes_after_backoff() {
+        let br = Breaker::new(3, Duration::from_millis(100), Duration::from_secs(5), 11);
+        assert_eq!(br.state(), BreakerState::Healthy);
+        assert!(br.admit());
+
+        assert_eq!(br.on_failure(0), BreakerState::Degraded);
+        assert!(br.admit(), "degraded still admits");
+        assert_eq!(br.on_failure(10), BreakerState::Degraded);
+        assert_eq!(br.on_failure(20), BreakerState::Quarantined);
+        assert!(!br.admit(), "quarantined sheds traffic");
+        assert_eq!(br.strikes(), 3);
+
+        // The probe is not due immediately: the jittered delay is at
+        // least the 100 ms base.
+        assert!(!br.probe_due(20));
+        assert!(!br.probe_due(119));
+        assert!(br.probe_due(20 + 5_000), "due once the cap has elapsed");
+
+        // A failed probe re-quarantines with a longer (bounded) delay.
+        assert_eq!(br.on_failure(6_000), BreakerState::Quarantined);
+        assert!(!br.probe_due(6_000));
+
+        // A successful probe fully resets.
+        br.on_success();
+        assert_eq!(br.state(), BreakerState::Healthy);
+        assert!(br.admit());
+        assert_eq!(br.strikes(), 0);
+        assert!(!br.probe_due(u64::MAX), "probe_due is only meaningful in quarantine");
+    }
+
+    #[test]
+    fn breaker_success_resets_strike_count_mid_degrade() {
+        let br = Breaker::new(3, Duration::from_millis(50), Duration::from_secs(1), 2);
+        br.on_failure(0);
+        br.on_failure(1);
+        br.on_success();
+        // Two more failures only reach Degraded again: strikes restarted.
+        assert_eq!(br.on_failure(2), BreakerState::Degraded);
+        assert_eq!(br.on_failure(3), BreakerState::Degraded);
+        assert_eq!(br.on_failure(4), BreakerState::Quarantined);
+    }
+}

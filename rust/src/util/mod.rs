@@ -5,6 +5,7 @@
 //! only carries a small vendored set (`xla`, `anyhow`, `thiserror`,
 //! `log`, ...). `rand`, `serde`, `proptest` and `criterion` are therefore
 //! re-implemented here at the scale this project needs.
+pub mod backoff;
 pub mod blob;
 pub mod channel;
 pub mod json;

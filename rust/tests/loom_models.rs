@@ -27,10 +27,12 @@ use edcompress::dataflow::Dataflow;
 use edcompress::energy::cache::{SharedCostCache, SlotKey};
 use edcompress::energy::EnergyConfig;
 use edcompress::model::zoo;
+use edcompress::util::backoff::{Breaker, BreakerState};
 use edcompress::util::channel;
 use edcompress::util::pool::WorkPool;
 use edcompress::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use edcompress::util::sync::{thread, Arc, Condvar, Mutex};
+use std::time::Duration;
 
 // ---------- WorkPool: enqueue vs drain ----------
 
@@ -396,6 +398,90 @@ fn service_cancel_vs_dequeue_never_runs_a_cancelled_queued_job() {
             }
             other => panic!("non-terminal end state {other:?}"),
         }
+    });
+}
+
+// ---------- util::backoff: the router's circuit breaker ----------
+
+/// The router's per-backend [`Breaker`] under racing health probes and
+/// request outcomes — the REAL breaker on the real `util::sync::Mutex`,
+/// with a counter for a clock (the breaker never reads one itself).
+///
+/// One thread reports two consecutive failures (the health loop), one
+/// reports a success (a proxied request that got through), and one
+/// observes (`admit`/`state`/`probe_due`, the submit path). Whatever
+/// the interleaving:
+///
+/// - the final state is consistent with the strike count under a
+///   threshold of 2: `Healthy` ⇔ 0 strikes, `Degraded` ⇔ 1,
+///   `Quarantined` ⇔ 2;
+/// - a quarantined breaker never admits, and its re-probe is due only
+///   after the jittered backoff (≥ `probe_base`) past the tripping
+///   failure — never immediately;
+/// - a non-quarantined breaker admits and never reports a probe due.
+#[test]
+fn breaker_state_strikes_and_probe_schedule_stay_consistent_under_races() {
+    loom::model(|| {
+        let b = Arc::new(Breaker::new(
+            2,
+            Duration::from_millis(100),
+            Duration::from_millis(400),
+            7,
+        ));
+        let failer = {
+            let b = Arc::clone(&b);
+            thread::spawn(move || {
+                b.on_failure(10);
+                b.on_failure(20)
+            })
+        };
+        let succeeder = {
+            let b = Arc::clone(&b);
+            thread::spawn(move || b.on_success())
+        };
+        let observer = {
+            let b = Arc::clone(&b);
+            thread::spawn(move || {
+                // Mid-race reads must be internally consistent even when
+                // immediately stale: quarantined implies inadmissible.
+                let admitted = b.admit();
+                if !admitted {
+                    assert_eq!(b.state(), BreakerState::Quarantined);
+                }
+                let _ = b.probe_due(15);
+            })
+        };
+        let tripped = failer.join().unwrap();
+        succeeder.join().unwrap();
+        observer.join().unwrap();
+
+        let (state, strikes) = (b.state(), b.strikes());
+        match state {
+            // The success landed last: full reset.
+            BreakerState::Healthy => assert_eq!(strikes, 0),
+            // The success split the two failures.
+            BreakerState::Degraded => {
+                assert_eq!(strikes, 1);
+                assert!(b.admit());
+                assert!(!b.probe_due(u64::MAX), "probe_due outside quarantine");
+            }
+            // Both failures ran unreset; the second (at t=20) tripped it.
+            BreakerState::Quarantined => {
+                assert_eq!(strikes, 2);
+                assert_eq!(tripped, BreakerState::Quarantined);
+                assert!(!b.admit(), "quarantined must not admit traffic");
+                assert!(
+                    !b.probe_due(20 + 99),
+                    "re-probe due before the >=100ms jittered backoff elapsed"
+                );
+                assert!(b.probe_due(u64::MAX), "re-probe must eventually come due");
+            }
+        }
+        // A success from any state is a full reset to admitting traffic.
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Healthy);
+        assert_eq!(b.strikes(), 0);
+        assert!(b.admit() && !b.probe_due(u64::MAX));
     });
 }
 

@@ -411,6 +411,80 @@ fn preempted_job_resumes_bit_identically_v4() {
     preemption_preserves_bit_identity(Format::Binary, "v4");
 }
 
+/// Invariant 12 composed with invariant 13: a high-priority submit
+/// *through the router* still triggers preemption-to-snapshot on the
+/// chosen backend, and the preempted job's resumed snapshot is
+/// byte-identical to an uninterrupted run — the router adds routing,
+/// not scheduling semantics.
+#[test]
+fn preemption_still_fires_behind_the_router_and_stays_bit_identical() {
+    use edcompress::coordinator::router::{Router, RouterConfig};
+
+    let dir = test_dir("preempt_routed");
+    let rdir = test_dir("preempt_routed_router");
+    let svc = serve(&dir, 1, false);
+    let router = Router::start(RouterConfig {
+        dir: rdir.clone(),
+        backends: vec![svc.addr().to_string()],
+        health_period: Duration::from_millis(50),
+        ..RouterConfig::default()
+    })
+    .expect("router failed to start");
+    let mut c = Client::connect(&router.addr().to_string()).unwrap();
+
+    let mut low = search_job("33", 1.0, 8.0, 5.0, "X:Y");
+    low.set("priority", Json::Str("low".into()));
+    let low_rid = c.submit(&low).unwrap();
+
+    // Mid-run, not still-queued, before the high job lands.
+    let deadline = Instant::now() + LONG;
+    loop {
+        let s = c.status(Some(low_rid)).unwrap();
+        if s.str_or("state", "") == "running" && s.num_or("episodes_done", 0.0) >= 1.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "low job never made progress");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let mut high = search_job("34", 1.0, 1.0, 4.0, "X:Y");
+    high.set("priority", Json::Str("high".into()));
+    let high_rid = c.submit(&high).unwrap();
+
+    assert_eq!(c.wait_done(high_rid, LONG).unwrap().str_or("state", ""), "done");
+    assert_eq!(c.wait_done(low_rid, LONG).unwrap().str_or("state", ""), "done");
+
+    // The proxied status carries the backend's scheduling counters in
+    // the router's id space, plus the backend that ran the job.
+    let s = c.status(Some(low_rid)).unwrap();
+    assert!(
+        s.num_or("preemptions", 0.0) >= 1.0,
+        "low job was never preempted behind the router (status: {s})"
+    );
+    assert_eq!(s.num_or("id", 0.0) as u64, low_rid);
+    assert_eq!(s.str_or("backend", ""), svc.addr().to_string());
+
+    router.shutdown();
+    router.wait().unwrap();
+    let mut d = Client::connect(&svc.addr().to_string()).unwrap();
+    d.shutdown().unwrap();
+    svc.wait().unwrap();
+
+    // Byte identity: the low job was the backend's first submit, so its
+    // snapshot is job_1.json regardless of router ids.
+    let daemon = std::fs::read(dir.join("job_1.json")).unwrap();
+    let standalone = standalone_snapshot_bytes(
+        standalone_spec(33, 1, 8, 5, "X:Y"),
+        "preempt_routed",
+    );
+    assert_eq!(
+        daemon, standalone,
+        "preempted-then-resumed routed job diverged from an uninterrupted run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
 /// Cancelling a queued-but-never-started job is a distinct terminal
 /// state: `cancelled-queued`, no snapshot path pretending to exist, a
 /// `result` error saying it never started — and a `--resume-dir`

@@ -1,0 +1,637 @@
+//! Fault-tolerance conformance suite for the `edc route` router daemon
+//! (coordinator::router) over real TCP sockets and real `edc serve`
+//! backends.
+//!
+//! This extends PR 9's `FaultTransport` matrix across the
+//! router↔backend link and pins the PR 10 robustness contract:
+//!
+//! - **Transparency (invariant 13).** A job submitted through the
+//!   router produces a result and snapshot byte-identical to the same
+//!   spec submitted directly to a daemon (and to a standalone run).
+//! - **Typed failure, never a hang.** Token mismatch, truncated
+//!   handshake, a backend killed mid-job or mid-watch, a flapping
+//!   backend, and all-backends-down each produce a typed reply
+//!   (`unauthorized` / `deadline` / `failed` naming the backend /
+//!   `degraded` with `retry_after_ms`) within a bounded time.
+//! - **No stranded jobs.** A dead backend's routed jobs answer
+//!   `failed` locally, naming the backend; siblings keep accepting.
+//!
+//! Every leg runs for both wire codecs where framing matters; the
+//! binary legs vanish cleanly under `--no-default-features`.
+
+use edcompress::coordinator::orchestrator::{Orchestrator, OrchestratorSpec};
+use edcompress::coordinator::router::{Router, RouterConfig, ROUTE_ADDR_FILE};
+use edcompress::coordinator::service::wire::{self, Fault, FaultTransport, WireKind};
+use edcompress::coordinator::service::{Client, ServeConfig, Service};
+use edcompress::dataflow::Dataflow;
+use edcompress::model::zoo;
+use edcompress::util::json::Json;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(600);
+
+fn test_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("edc_router_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// A one-slot backend daemon in `dir`.
+fn backend(dir: &PathBuf) -> Service {
+    Service::start(ServeConfig {
+        dir: dir.clone(),
+        max_concurrent_jobs: 1,
+        ..ServeConfig::default()
+    })
+    .expect("backend daemon failed to start")
+}
+
+/// Router config with test-friendly fault-detection latencies: one
+/// strike quarantines, health passes every 50ms, re-probes start due
+/// within ~200ms.
+fn fast_router_cfg(dir: &PathBuf, backends: Vec<String>) -> RouterConfig {
+    RouterConfig {
+        dir: dir.clone(),
+        backends,
+        breaker_threshold: 1,
+        health_period: Duration::from_millis(50),
+        health_deadline: Duration::from_secs(2),
+        probe_base: Duration::from_millis(50),
+        probe_cap: Duration::from_millis(200),
+        ..RouterConfig::default()
+    }
+}
+
+/// Submit body for a tiny search job (mirrors `edc search` flags).
+fn search_job(seed: &str, seeds: f64, episodes: f64, steps: f64, dataflows: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("net", Json::Str("lenet5".into()))
+        .set("seeds", Json::Num(seeds))
+        .set("episodes", Json::Num(episodes))
+        .set("chunk", Json::Num(1.0))
+        .set("steps", Json::Num(steps))
+        .set("seed", Json::Str(seed.into()))
+        .set("dataflows", Json::Str(dataflows.into()));
+    j
+}
+
+/// The exact spec a daemon job resolves to, for standalone comparison.
+fn standalone_spec(seed: u64, episodes: usize, steps: usize) -> OrchestratorSpec {
+    let mut spec = OrchestratorSpec::new(zoo::by_name("lenet5").unwrap(), 1, seed);
+    spec.dataflows = Dataflow::parse_list("X:Y").unwrap();
+    spec.env.max_steps = steps;
+    spec.search.episodes = episodes;
+    spec.chunk_episodes = 1;
+    spec
+}
+
+/// Run the spec standalone (private pool + cache) and return the bytes
+/// of its final snapshot.
+fn standalone_snapshot_bytes(spec: OrchestratorSpec, tag: &str) -> Vec<u8> {
+    let path =
+        std::env::temp_dir().join(format!("edc_router_cmp_{tag}_{}.json", std::process::id()));
+    std::fs::remove_file(&path).ok();
+    let mut orch = Orchestrator::new(spec);
+    orch.snapshot_path = Some(path.clone());
+    orch.run().expect("standalone run failed");
+    let bytes = std::fs::read(&path).expect("standalone snapshot missing");
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+/// Every codec this build speaks.
+fn codecs() -> Vec<WireKind> {
+    let mut v = vec![WireKind::Json];
+    if cfg!(feature = "wire-binary") {
+        v.push(WireKind::Binary);
+    }
+    v
+}
+
+fn encode(kind: WireKind, msg: &Json) -> Vec<u8> {
+    wire::codec_for(kind).unwrap().encode(msg).unwrap()
+}
+
+fn ping() -> Json {
+    let mut j = Json::obj();
+    j.set("cmd", Json::Str("ping".into()));
+    j
+}
+
+/// Poll the router's fleet status until `pred` holds on the backend
+/// summary array, failing the test after `LONG`.
+fn wait_backend_state(c: &mut Client, idx: usize, want: &str) {
+    let deadline = Instant::now() + LONG;
+    loop {
+        let s = c.status(None).expect("router status failed");
+        let backends = s.get("backends").and_then(|a| a.as_arr()).expect("no backends array");
+        if backends[idx].str_or("state", "") == want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "backend {idx} never became {want} (status: {s})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Invariant 13: router transparency
+// ---------------------------------------------------------------------
+
+/// A job through the router is byte-identical to the same spec run
+/// standalone, its watch stream ends in `done`, and the `result`
+/// rendering equals the direct daemon's. Parameterized over the front
+/// codec (the router↔backend leg always speaks the build's best wire).
+#[test]
+fn routed_jobs_are_byte_identical_to_direct_runs_on_every_codec() {
+    let bdir = test_dir("ident_backend");
+    let rdir = test_dir("ident_router");
+    let svc = backend(&bdir);
+    let router = Router::start(fast_router_cfg(&rdir, vec![svc.addr().to_string()])).unwrap();
+    assert!(rdir.join(ROUTE_ADDR_FILE).exists(), "router must write its addr file");
+
+    for (i, kind) in codecs().into_iter().enumerate() {
+        let seed = 91 + i as u64;
+        let mut c = Client::connect_with(&router.addr().to_string(), kind).unwrap();
+        assert_eq!(c.ping().unwrap().str_or("service", ""), "edc-route");
+
+        let rid = c.submit(&search_job(&seed.to_string(), 1.0, 2.0, 4.0, "X:Y")).unwrap();
+        // Watch through the router: progress frames then a terminal
+        // end frame, all rewritten into router id space.
+        let frames = c.watch(rid, LONG).unwrap();
+        let last = frames.last().expect("watch returned no frames");
+        assert_eq!(last.str_or("stream", ""), "end", "{last}");
+        assert_eq!(last.str_or("state", ""), "done", "{last}");
+        assert_eq!(last.num_or("job", 0.0) as u64, rid, "end frame not in router id space");
+
+        let s = c.wait_done(rid, LONG).unwrap();
+        assert_eq!(s.str_or("state", ""), "done");
+        assert_eq!(s.num_or("id", 0.0) as u64, rid, "status not in router id space");
+        assert!(!s.str_or("backend", "").is_empty(), "status must name the backend");
+
+        // The result through the router renders exactly what a direct
+        // client sees (modulo the id fields the router rewrites).
+        let routed = c.result(rid).unwrap();
+        let backend_job = {
+            let mut direct = Client::connect(&svc.addr().to_string()).unwrap();
+            let jobs = direct.status(None).unwrap();
+            let jobs = jobs.get("jobs").and_then(|a| a.as_arr()).unwrap().to_vec();
+            assert_eq!(jobs.len(), i + 1, "one backend job per routed submit");
+            jobs[i].num_or("id", 0.0) as u64
+        };
+        let direct_result = Client::connect(&svc.addr().to_string())
+            .unwrap()
+            .result(backend_job)
+            .unwrap();
+        assert_eq!(
+            routed.str_or("rendered", ""),
+            direct_result.str_or("rendered", ""),
+            "routed result rendering diverged from the direct daemon's"
+        );
+
+        // Byte identity of the snapshot on the backend's disk.
+        let daemon = std::fs::read(bdir.join(format!("job_{backend_job}.json"))).unwrap();
+        let standalone = standalone_snapshot_bytes(
+            standalone_spec(seed, 2, 4),
+            &format!("ident_{}", kind.label()),
+        );
+        assert_eq!(
+            daemon,
+            standalone,
+            "routed job diverged from a standalone run ({} front)",
+            kind.label()
+        );
+    }
+
+    router.shutdown();
+    router.wait().unwrap();
+    assert!(!rdir.join(ROUTE_ADDR_FILE).exists(), "router addr file must be cleaned up");
+    let mut c = Client::connect(&svc.addr().to_string()).unwrap();
+    c.shutdown().unwrap();
+    svc.wait().unwrap();
+    std::fs::remove_dir_all(&bdir).ok();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Authenticated front: token mismatch and handshake truncation
+// ---------------------------------------------------------------------
+
+/// Wrong token, missing handshake, and good token against an
+/// authenticated router front. Failures are answered in the
+/// always-compiled JSON framing (no codec is negotiated yet), typed
+/// `unauthorized`, then closed.
+#[test]
+fn token_mismatch_and_missing_handshake_get_typed_unauthorized() {
+    let rdir = test_dir("auth_front");
+    let mut cfg = fast_router_cfg(&rdir, vec!["127.0.0.1:1".to_string()]);
+    cfg.auth_token = Some("sesame".to_string());
+    let router = Router::start(cfg).unwrap();
+    let addr = router.addr().to_string();
+
+    // Wrong token: typed unauthorized, then close.
+    let mut t = FaultTransport::connect(&addr).unwrap();
+    t.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    t.send(&wire::encode_auth("wrong-token").unwrap(), &Fault::Clean).unwrap();
+    let err = t.recv(WireKind::Json).unwrap().expect("no unauthorized frame");
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+    assert_eq!(err.str_or("code", ""), "unauthorized", "{err}");
+    assert!(matches!(t.recv(WireKind::Json), Ok(None) | Err(_)), "connection must close");
+
+    // No handshake at all — straight to a codec frame: typed
+    // unauthorized telling the client what is missing.
+    for kind in codecs() {
+        let mut t = FaultTransport::connect(&addr).unwrap();
+        t.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        t.send(&encode(kind, &ping()), &Fault::Clean).unwrap();
+        let err = t.recv(WireKind::Json).unwrap().expect("no unauthorized frame");
+        assert_eq!(err.str_or("code", ""), "unauthorized", "{} front: {err}", kind.label());
+        assert!(
+            err.str_or("error", "").contains("EDCA"),
+            "error must name the handshake: {err}"
+        );
+    }
+
+    // The right token admits a normal client on either codec.
+    for kind in codecs() {
+        let mut c = Client::connect_opts(&addr, kind, Some("sesame")).unwrap();
+        assert_eq!(c.ping().unwrap().str_or("service", ""), "edc-route");
+    }
+
+    router.shutdown();
+    router.wait().unwrap();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+/// A truncated or stalled handshake is answered with a typed
+/// `deadline` reply once the handshake budget elapses — never a hang.
+#[test]
+fn a_truncated_handshake_is_answered_with_a_typed_deadline() {
+    let rdir = test_dir("auth_trunc");
+    let mut cfg = fast_router_cfg(&rdir, vec!["127.0.0.1:1".to_string()]);
+    cfg.auth_token = Some("sesame".to_string());
+    cfg.handshake_timeout = Duration::from_millis(300);
+    let router = Router::start(cfg).unwrap();
+
+    // Send the magic and half the length header, then go silent.
+    let frame = wire::encode_auth("sesame").unwrap();
+    let mut t = FaultTransport::connect(&router.addr().to_string()).unwrap();
+    t.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    t.send(&frame[..5], &Fault::Clean).unwrap();
+    let start = Instant::now();
+    let err = t.recv(WireKind::Json).unwrap().expect("no deadline frame");
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+    assert_eq!(err.str_or("code", ""), "deadline", "{err}");
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "deadline reply took {:?} — the handshake budget is 300ms",
+        start.elapsed()
+    );
+
+    router.shutdown();
+    router.wait().unwrap();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Backend death: mid-job, mid-watch, and failover to siblings
+// ---------------------------------------------------------------------
+
+/// Kill a backend while it runs a routed job: the health loop
+/// quarantines it, the routed job answers `failed` naming the backend
+/// (status, result and watch alike), the sibling keeps accepting, and
+/// the fleet status shows the quarantine.
+#[test]
+fn a_backend_dying_mid_job_fails_its_jobs_over_and_siblings_keep_accepting() {
+    let b0dir = test_dir("death_b0");
+    let b1dir = test_dir("death_b1");
+    let rdir = test_dir("death_router");
+    let svc0 = backend(&b0dir);
+    let svc1 = backend(&b1dir);
+    let router = Router::start(fast_router_cfg(
+        &rdir,
+        vec![svc0.addr().to_string(), svc1.addr().to_string()],
+    ))
+    .unwrap();
+    let mut c = Client::connect(&router.addr().to_string()).unwrap();
+
+    // Both backends idle: the first submit lands on backend 0 (lowest
+    // index breaks the tie deterministically).
+    let rid = c.submit(&search_job("71", 1.0, 8.0, 5.0, "X:Y")).unwrap();
+    let s = c.status(Some(rid)).unwrap();
+    assert_eq!(s.str_or("backend", ""), svc0.addr().to_string());
+
+    // Kill backend 0 (graceful drain, then the port closes for good).
+    let mut direct = Client::connect(&svc0.addr().to_string()).unwrap();
+    direct.shutdown().unwrap();
+    svc0.wait().unwrap();
+
+    // The health loop quarantines it and fails the routed job over.
+    // While the strike count races the poll, a status may come back as
+    // a typed `backend-unreachable` error — retryable, never a hang.
+    wait_backend_state(&mut c, 0, "quarantined");
+    let deadline = Instant::now() + LONG;
+    let failed = loop {
+        match c.status(Some(rid)) {
+            Ok(s) if s.str_or("state", "") == "failed" => break s,
+            Ok(_) | Err(_) => {}
+        }
+        assert!(Instant::now() < deadline, "routed job never failed over");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let err = failed.str_or("error", "");
+    assert!(
+        err.contains(&svc0.addr().to_string()),
+        "failure must name the dead backend: {err}"
+    );
+
+    // result and watch answer from the same local verdict — no hang.
+    let rerr = format!("{:#}", c.result(rid).unwrap_err());
+    assert!(rerr.contains(&svc0.addr().to_string()), "result error: {rerr}");
+    let frames = c.watch(rid, Duration::from_secs(30)).unwrap();
+    let last = frames.last().expect("watch of a failed job returned no frames");
+    assert_eq!(last.str_or("stream", ""), "end", "{last}");
+    assert_eq!(last.str_or("state", ""), "failed", "{last}");
+    assert!(last.str_or("error", "").contains(&svc0.addr().to_string()), "{last}");
+
+    // The sibling still accepts work routed around the corpse.
+    let rid2 = c.submit(&search_job("72", 1.0, 1.0, 4.0, "X:Y")).unwrap();
+    let s = c.status(Some(rid2)).unwrap();
+    assert_eq!(s.str_or("backend", ""), svc1.addr().to_string());
+    assert_eq!(c.wait_done(rid2, LONG).unwrap().str_or("state", ""), "done");
+
+    router.shutdown();
+    router.wait().unwrap();
+    let mut d1 = Client::connect(&svc1.addr().to_string()).unwrap();
+    d1.shutdown().unwrap();
+    svc1.wait().unwrap();
+    std::fs::remove_dir_all(&b0dir).ok();
+    std::fs::remove_dir_all(&b1dir).ok();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+/// A small TCP forwarder whose "up" switch the test flips: when up it
+/// pipes bytes to the real backend, when down it accepts and
+/// immediately closes — a backend that flaps without ever rebinding a
+/// port (rebinding races TIME_WAIT and would flake).
+struct Flapper {
+    addr: String,
+    up: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Flapper {
+    fn start(backend_addr: String) -> Flapper {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let up = Arc::new(AtomicBool::new(true));
+        let stop = Arc::new(AtomicBool::new(false));
+        listener.set_nonblocking(true).unwrap();
+        {
+            let (up, stop) = (Arc::clone(&up), Arc::clone(&stop));
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((client, _)) => {
+                            if !up.load(Ordering::SeqCst) {
+                                drop(client); // "dead" backend: refuse by closing
+                                continue;
+                            }
+                            let Ok(server) = TcpStream::connect(&backend_addr) else {
+                                drop(client);
+                                continue;
+                            };
+                            let (mut c2s_r, mut c2s_w) =
+                                (client.try_clone().unwrap(), server.try_clone().unwrap());
+                            std::thread::spawn(move || {
+                                let _ = std::io::copy(&mut c2s_r, &mut c2s_w);
+                                let _ = c2s_w.shutdown(std::net::Shutdown::Write);
+                            });
+                            let (mut s2c_r, mut s2c_w) = (server, client);
+                            std::thread::spawn(move || {
+                                let _ = std::io::copy(&mut s2c_r, &mut s2c_w);
+                                let _ = s2c_w.shutdown(std::net::Shutdown::Write);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        Flapper { addr, up, stop }
+    }
+
+    fn set_up(&self, up: bool) {
+        self.up.store(up, Ordering::SeqCst);
+    }
+}
+
+impl Drop for Flapper {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// A flapping backend walks the full breaker cycle: healthy →
+/// quarantined while down (submits answer typed `degraded` with a
+/// `retry_after_ms`, immediately — not after a connect timeout), then
+/// a due re-probe finds it back up and the router routes to it again.
+#[test]
+fn a_flapping_backend_is_quarantined_then_recovered_by_a_reprobe() {
+    let bdir = test_dir("flap_backend");
+    let rdir = test_dir("flap_router");
+    let svc = backend(&bdir);
+    let flap = Flapper::start(svc.addr().to_string());
+    let router = Router::start(fast_router_cfg(&rdir, vec![flap.addr.clone()])).unwrap();
+    let mut c = Client::connect(&router.addr().to_string()).unwrap();
+
+    wait_backend_state(&mut c, 0, "healthy");
+
+    // Down: the next health probe quarantines it (threshold 1).
+    flap.set_up(false);
+    wait_backend_state(&mut c, 0, "quarantined");
+
+    // All backends down ⇒ typed degraded with a retry hint, instantly
+    // (the breaker sheds the backend before any dial).
+    let mut req = search_job("81", 1.0, 1.0, 4.0, "X:Y");
+    req.set("cmd", Json::Str("submit".into()));
+    let start = Instant::now();
+    let resp = c.request(&req).unwrap();
+    assert!(start.elapsed() < Duration::from_secs(5), "degraded reply must be prompt");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp}");
+    assert_eq!(resp.str_or("code", ""), "degraded", "{resp}");
+    assert!(resp.num_or("retry_after_ms", 0.0) > 0.0, "{resp}");
+
+    // Back up: a due re-probe (jittered 50..200ms backoff) recovers it.
+    flap.set_up(true);
+    wait_backend_state(&mut c, 0, "healthy");
+    let rid = c.submit(&search_job("82", 1.0, 1.0, 4.0, "X:Y")).unwrap();
+    assert_eq!(c.wait_done(rid, LONG).unwrap().str_or("state", ""), "done");
+
+    router.shutdown();
+    router.wait().unwrap();
+    let mut d = Client::connect(&svc.addr().to_string()).unwrap();
+    d.shutdown().unwrap();
+    svc.wait().unwrap();
+    std::fs::remove_dir_all(&bdir).ok();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+/// `submit --retries` through the router: a saturated fleet's typed
+/// `degraded` (with its `retry_after_ms` floor) is retried with
+/// decorrelated jitter until a slot frees, and the job then runs to
+/// `done`. The shared retry layer also reconnect-retries `watch`.
+#[test]
+fn submit_retries_ride_out_a_saturated_fleet() {
+    let bdir = test_dir("retry_backend");
+    let rdir = test_dir("retry_router");
+    let svc = backend(&bdir);
+    let mut cfg = fast_router_cfg(&rdir, vec![svc.addr().to_string()]);
+    cfg.max_inflight_per_backend = 1;
+    let router = Router::start(cfg).unwrap();
+    let mut c = Client::connect(&router.addr().to_string()).unwrap();
+
+    let first = c.submit(&search_job("85", 1.0, 2.0, 4.0, "X:Y")).unwrap();
+    // The cap is full: a plain submit is a typed degraded rejection...
+    let mut over = search_job("86", 1.0, 1.0, 4.0, "X:Y");
+    over.set("cmd", Json::Str("submit".into()));
+    let resp = c.request(&over).unwrap();
+    assert_eq!(resp.str_or("code", ""), "degraded", "{resp}");
+    // ...but a retrying submit waits the hint out and lands once the
+    // first job finishes (the health loop's reconcile frees the slot).
+    let second = c
+        .submit_with_retries(&search_job("86", 1.0, 1.0, 4.0, "X:Y"), 200)
+        .expect("retrying submit never landed");
+    assert_eq!(c.wait_done(first, LONG).unwrap().str_or("state", ""), "done");
+    assert_eq!(c.wait_done(second, LONG).unwrap().str_or("state", ""), "done");
+
+    router.shutdown();
+    router.wait().unwrap();
+    let mut d = Client::connect(&svc.addr().to_string()).unwrap();
+    d.shutdown().unwrap();
+    svc.wait().unwrap();
+    std::fs::remove_dir_all(&bdir).ok();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Front conformance: per-peer caps and the fault soak
+// ---------------------------------------------------------------------
+
+/// The router front enforces the same per-peer connection cap as the
+/// daemon front (they are the same code): the connection over the cap
+/// gets one typed `conn-limit` frame and a close.
+#[test]
+fn the_router_front_enforces_the_per_peer_connection_cap() {
+    let rdir = test_dir("conn_cap");
+    let mut cfg = fast_router_cfg(&rdir, vec!["127.0.0.1:1".to_string()]);
+    cfg.max_conns_per_peer = 2;
+    let router = Router::start(cfg).unwrap();
+    let addr = router.addr().to_string();
+
+    let mut a = Client::connect(&addr).unwrap();
+    let mut b = Client::connect(&addr).unwrap();
+    assert_eq!(a.ping().unwrap().str_or("service", ""), "edc-route");
+    assert_eq!(b.ping().unwrap().str_or("service", ""), "edc-route");
+
+    let mut t = FaultTransport::connect(&addr).unwrap();
+    t.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let err = t.recv(WireKind::Json).unwrap().expect("no conn-limit frame");
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false), "{err}");
+    assert_eq!(err.str_or("code", ""), "conn-limit", "{err}");
+    assert!(matches!(t.recv(WireKind::Json), Ok(None) | Err(_)));
+
+    // Freeing a slot readmits the peer.
+    drop(a);
+    let deadline = Instant::now() + LONG;
+    loop {
+        let mut fresh = Client::connect(&addr).unwrap();
+        if let Ok(pong) = fresh.ping() {
+            assert_eq!(pong.str_or("service", ""), "edc-route");
+            break;
+        }
+        assert!(Instant::now() < deadline, "slot never freed after a disconnect");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    router.shutdown();
+    router.wait().unwrap();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+/// PR 9's seeded fault soak, aimed at the router front: after every
+/// deterministic byte-level fault the router still answers a
+/// well-behaved client — it never wedges, even with all its backends
+/// dead the whole time.
+#[test]
+fn a_seeded_fault_soak_never_wedges_the_router() {
+    let rdir = test_dir("soak");
+    let router = Router::start(fast_router_cfg(&rdir, vec!["127.0.0.1:1".to_string()])).unwrap();
+    let addr = router.addr().to_string();
+    let frame = encode(WireKind::Json, &ping());
+    for (i, fault) in Fault::schedule(0xEDC10, 24, frame.len()).iter().enumerate() {
+        let mut t = FaultTransport::connect(&addr).unwrap();
+        t.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let _ = t.send(&frame, fault);
+        let kind = if cfg!(feature = "wire-binary") && matches!(fault, Fault::CodecMismatch) {
+            WireKind::Binary
+        } else {
+            WireKind::Json
+        };
+        // Typed frame, clean close or torn socket are all fine; a wedge
+        // is not.
+        let _ = t.recv(kind);
+        let mut c = Client::connect(&addr).unwrap();
+        assert_eq!(
+            c.ping().unwrap().str_or("service", ""),
+            "edc-route",
+            "router wedged after fault #{i} ({fault:?})"
+        );
+    }
+    router.shutdown();
+    router.wait().unwrap();
+    std::fs::remove_dir_all(&rdir).ok();
+}
+
+/// Unknown job ids and malformed requests against the router get
+/// readable typed errors, and the same connection keeps serving — the
+/// router front inherits the daemon front's error taxonomy.
+#[test]
+fn unknown_jobs_and_malformed_requests_get_readable_errors() {
+    let rdir = test_dir("malformed");
+    let router = Router::start(fast_router_cfg(&rdir, vec!["127.0.0.1:1".to_string()])).unwrap();
+    let mut c = Client::connect(&router.addr().to_string()).unwrap();
+
+    let err = format!("{:#}", c.status(Some(999)).unwrap_err());
+    assert!(err.contains("no such job"), "status error: {err}");
+    let err = format!("{:#}", c.result(999).unwrap_err());
+    assert!(err.contains("no such job"), "result error: {err}");
+    let err = format!("{:#}", c.cancel(999).unwrap_err());
+    assert!(err.contains("no such job"), "cancel error: {err}");
+
+    let mut bad = Json::obj();
+    bad.set("cmd", Json::Str("frobnicate".into()));
+    let resp = c.request(&bad).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp}");
+    assert!(resp.str_or("error", "").contains("frobnicate"), "{resp}");
+
+    // Watch of an unknown job: one typed error frame, no hang.
+    let frames = c.watch(999, Duration::from_secs(30));
+    assert!(frames.is_err(), "watch of an unknown job must error");
+
+    // The connection survived all of it.
+    assert_eq!(c.ping().unwrap().str_or("service", ""), "edc-route");
+
+    router.shutdown();
+    router.wait().unwrap();
+    std::fs::remove_dir_all(&rdir).ok();
+}
